@@ -1,0 +1,55 @@
+//! Expert-behaviour analysis (Figures 4/5/6 in miniature): task-level load
+//! distribution, token-level FFN activations, and the gating-residual
+//! effect — all from the native engine in a few seconds.
+//!
+//!     cargo run --release --example expert_analysis
+
+use moepp::bench::workload::task_streams;
+use moepp::config::MoeConfig;
+use moepp::coordinator::engine::MoeEngine;
+use moepp::moe::weights::StackWeights;
+use moepp::stats::{gating, load, token_level};
+use moepp::tensor::Tensor;
+use moepp::training::data::Corpus;
+use moepp::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = MoeConfig::preset("sm-8e");
+    let engine = MoeEngine::native(cfg.clone(), 0);
+    let mut rng = Rng::new(11);
+
+    // --- Fig. 4: expert-load distribution per task ------------------------
+    let tasks = task_streams(
+        &mut rng,
+        &["arc-easy", "arc-challenge", "sciq"],
+        256,
+        cfg.d_model,
+    );
+    let loads = load::task_level_load(&engine, &tasks)?;
+    println!("{}", load::render_layer_report(&cfg, &loads, 0));
+
+    // --- Fig. 5: FFN activations per token by frequency -------------------
+    let w = StackWeights::init(0, &cfg);
+    let corpus = Corpus::new(cfg.vocab_size, 4, 1234);
+    let embed = Tensor::randn(&mut rng, &[cfg.vocab_size, cfg.d_model], 1.0);
+    let seqs: Vec<Vec<i32>> =
+        (0..32).map(|i| corpus.sample(i % 4, 64, &mut rng)).collect();
+    let acts = token_level::token_level_activations(&w, &cfg, &embed, &seqs)?;
+    let rows = acts.rows();
+    println!("top-frequency tokens (token, freq, mean FFN/layer):");
+    for (tok, freq, mean) in rows.iter().take(8) {
+        println!("  {tok:>4} {freq:>5} {mean:.3}");
+    }
+
+    // --- Fig. 6: gating residuals stabilise routing -----------------------
+    let x = Tensor::randn(&mut rng, &[256, cfg.d_model], 1.0);
+    let with = gating::trace(&w, &cfg, &x, true)?;
+    let without = gating::trace(&w, &cfg, &x, false)?;
+    println!(
+        "\ngating residuals: mean top-1 routing variance {:.5} (w/) vs \
+         {:.5} (w/o)",
+        gating::mean_top1_variance(&with),
+        gating::mean_top1_variance(&without)
+    );
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Serving example: dynamic batching + MoE++ engine, with the AOT-compiled
+//! Pallas expert kernel on the PJRT backend when artifacts are present
+//! (falls back to the native backend otherwise).
+//!
+//!     make artifacts && cargo run --release --example serve_moe
+
+use std::time::{Duration, Instant};
+
+use moepp::bench::workload::request_sizes;
+use moepp::config::MoeConfig;
+use moepp::coordinator::batcher::{Batcher, BatcherConfig, Request};
+use moepp::coordinator::engine::MoeEngine;
+use moepp::coordinator::metrics::{LatencyStats, ServingMetrics};
+use moepp::runtime::Runtime;
+use moepp::tensor::Tensor;
+use moepp::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = MoeConfig::preset("test");
+    // Prefer the PJRT backend (AOT Pallas kernel) when artifacts exist.
+    let engine = match Runtime::open("artifacts") {
+        Ok(rt) => {
+            println!("backend: PJRT (AOT Pallas expert kernel)");
+            MoeEngine::pjrt(cfg.clone(), 0, std::sync::Arc::new(rt))?
+        }
+        Err(_) => {
+            println!("backend: native (run `make artifacts` for PJRT)");
+            MoeEngine::native(cfg.clone(), 0)
+        }
+    };
+
+    let mut batcher = Batcher::new(
+        BatcherConfig {
+            max_tokens: 128,
+            max_wait: Duration::from_millis(2),
+        },
+        cfg.d_model,
+    );
+    let mut rng = Rng::new(1);
+    let mut metrics = ServingMetrics::default();
+    let mut latency = LatencyStats::new(4096);
+    let mut inflight = std::collections::HashMap::new();
+
+    // A trace of 300 requests: mostly short decode-like, some long
+    // prefill-like (see bench::workload).
+    for (id, n) in request_sizes(&mut rng, 300, cfg.seq_len)
+        .into_iter()
+        .enumerate()
+    {
+        let id = id as u64;
+        inflight.insert(id, Instant::now());
+        batcher.push(Request {
+            id,
+            tokens: Tensor::randn(&mut rng, &[n, cfg.d_model], 1.0),
+            task: None,
+        });
+        metrics.requests += 1;
+        while batcher.ready(Instant::now()) {
+            let batch = batcher.next_batch().unwrap();
+            let (y, stats) = engine.forward_stack(&batch.tokens)?;
+            metrics.batches += 1;
+            metrics.merge_forward(&stats);
+            for (rid, _out) in batch.scatter(&y) {
+                latency.record(inflight.remove(&rid).unwrap().elapsed());
+            }
+        }
+    }
+    while let Some(batch) = batcher.next_batch() {
+        let (y, stats) = engine.forward_stack(&batch.tokens)?;
+        metrics.batches += 1;
+        metrics.merge_forward(&stats);
+        for (rid, _out) in batch.scatter(&y) {
+            latency.record(inflight.remove(&rid).unwrap().elapsed());
+        }
+    }
+
+    println!("{}", metrics.report());
+    println!(
+        "latency p50 {:.2}ms  p95 {:.2}ms  mean {:.2}ms",
+        latency.quantile(0.5) * 1e3,
+        latency.quantile(0.95) * 1e3,
+        latency.mean() * 1e3
+    );
+    assert!(inflight.is_empty(), "all requests answered");
+    Ok(())
+}

@@ -1,0 +1,314 @@
+"""AOT lowering: every computation the Rust runtime executes, emitted as HLO
+*text* plus a manifest.json describing parameter order, shapes and dtypes.
+
+HLO text — NOT `HloModuleProto.serialize()` — is the interchange format: the
+image's xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit instruction
+ids); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+Artifacts per model variant (variant = preset x {moepp, vanilla}):
+    {tag}_init        (seed i32)                  -> params ++ opt_state
+    {tag}_fwd         (params..., tokens)         -> logits ++ aux stats
+    {tag}_train_step  (params..., opt..., tokens) -> params' ++ opt' ++ metrics
+    {tag}_eval        (params..., tokens)         -> (ce,)
+Shared kernels:
+    expert_ffn_{preset}_b{B}  (x[B,D], w1, w3, w2) -> y[B,D]   (serving path)
+    router_probe_{preset}     (x, w, prev, wg)     -> (probs, scores)
+
+Python runs once at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import MoEConfig, parse_spec, preset, spec_tag
+from .kernels.expert_ffn import expert_ffn
+from .kernels.gating import router_scores_softmax
+from .model import count_activated_params, init_params
+from .train_step import (init_opt_state, make_eval_fn, make_fwd_fn,
+                         make_init_fn, make_train_step_fn)
+
+# Batch sizes baked into the training/eval artifacts (XLA shapes are static).
+TRAIN_BATCH = {"test": 4, "sm-8e": 8, "sm-16e": 8, "sm-32e": 8,
+               "md-16e": 4, "e2e": 8}
+# Expert-FFN bucket sizes for the L3 serving hot path; the engine pads each
+# expert micro-batch up to the nearest bucket.
+FFN_BUCKETS = [8, 16, 32, 64, 128]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return sanitize_hlo_text(comp.as_hlo_text())
+
+
+def sanitize_hlo_text(text: str) -> str:
+    """Strip HLO attributes newer than the consumer's XLA (0.5.1) parser.
+
+    `topk(..., k=K, largest=true)`: the old parser knows `topk` with `k`
+    but not `largest`; descending order was the only behaviour then, so
+    dropping the attribute preserves semantics. (jax.lax.top_k only ever
+    emits largest=true.)
+    """
+    assert "largest=false" not in text, "topk largest=false unsupported"
+    return text.replace(", largest=true", "")
+
+
+def _leaf_specs(tree, prefix, include_empty=False):
+    """Flatten a pytree into [(name, shape, dtype)] in traversal order.
+
+    Zero-element leaves (e.g. the vanilla variant's empty constant-expert
+    slots) are excluded by default: XLA prunes zero-sized parameters from
+    *some* compiled programs but not others, so they must never cross the
+    PJRT boundary at all.
+    """
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    specs = []
+    for path, leaf in flat:
+        if leaf.size == 0 and not include_empty:
+            continue
+        name = prefix + jax.tree_util.keystr(path)
+        specs.append({
+            "name": name,
+            "shape": list(leaf.shape),
+            "dtype": str(leaf.dtype),
+        })
+    return specs
+
+
+def _filtered_flatten_utils(tree_shape):
+    """(nonzero ShapeDtypeStructs, keep-list, unflatten, filter) for a
+    pytree whose zero-element leaves are elided at the artifact boundary."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree_shape)
+    keep = [leaf.size > 0 for leaf in leaves]
+    nonzero = [jax.ShapeDtypeStruct(l.shape, l.dtype)
+               for l, k in zip(leaves, keep) if k]
+
+    def unflatten(args):
+        assert len(args) == sum(keep)
+        it = iter(args)
+        full = [next(it) if k else jnp.zeros(l.shape, l.dtype)
+                for l, k in zip(leaves, keep)]
+        return jax.tree_util.tree_unflatten(treedef, full)
+
+    def filter_out(tree):
+        out_leaves = jax.tree_util.tree_leaves(tree)
+        return tuple(v for v, k in zip(out_leaves, keep) if k)
+
+    return nonzero, keep, unflatten, filter_out
+
+
+class Emitter:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.manifest = {"artifacts": {}, "configs": {}}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name, fn, example_args, input_specs, output_names):
+        """Lower fn at example_args; write HLO text + manifest entry."""
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        flat_out, _ = jax.tree_util.tree_flatten(
+            jax.eval_shape(fn, *example_args))
+        self.manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": input_specs,
+            "outputs": [
+                {"name": output_names[i] if i < len(output_names)
+                 else f"out{i}",
+                 "shape": list(o.shape), "dtype": str(o.dtype)}
+                for i, o in enumerate(flat_out)
+            ],
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        }
+        print(f"  {name}: {len(text)} chars, "
+              f"{len(input_specs)} in / {len(flat_out)} out", flush=True)
+
+    def save_manifest(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        print(f"wrote {path}")
+
+
+def emit_model_artifacts(em: Emitter, cfg: MoEConfig, tag: str):
+    """init / fwd / train_step / eval for one model variant."""
+    batch = TRAIN_BATCH[cfg.name]
+    tokens_spec = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+
+    # Abstract params/opt trees (shapes only — no real init at lower time).
+    params_shape = jax.eval_shape(lambda s: init_params(
+        jax.random.PRNGKey(s), cfg), jnp.zeros((), jnp.int32))
+    opt_shape = jax.eval_shape(init_opt_state, params_shape)
+
+    p_specs = _leaf_specs(params_shape, "params")
+    o_specs = _leaf_specs(opt_shape, "opt")
+    p_flat, _p_keep, p_unflatten, p_filter = \
+        _filtered_flatten_utils(params_shape)
+    o_flat, _o_keep, o_unflatten, o_filter = \
+        _filtered_flatten_utils(opt_shape)
+
+    tok_spec = {"name": "tokens", "shape": [batch, cfg.seq_len],
+                "dtype": "int32"}
+
+    # --- init: seed -> params ++ opt ---------------------------------------
+    init_fn = make_init_fn(cfg)
+
+    def init_flat(seed):
+        params, opt = init_fn(seed)
+        return p_filter(params) + o_filter(opt)
+
+    em.emit(f"{tag}_init", init_flat,
+            (jax.ShapeDtypeStruct((), jnp.int32),),
+            [{"name": "seed", "shape": [], "dtype": "int32"}],
+            [s["name"] for s in p_specs] + [s["name"] for s in o_specs])
+
+    # --- fwd: params ++ tokens -> logits ++ stats ---------------------------
+    fwd_fn = make_fwd_fn(cfg)
+
+    def fwd_flat(*args):
+        params = p_unflatten(args[:len(p_flat)])
+        tokens = args[-1]
+        return fwd_fn(params, tokens)
+
+    em.emit(f"{tag}_fwd", fwd_flat, tuple(p_flat) + (tokens_spec,),
+            p_specs + [tok_spec],
+            ["logits", "expert_counts", "dropped", "ffn_per_token",
+             "top1_prob", "top2_prob", "balance_loss"])
+
+    # --- train_step ---------------------------------------------------------
+    step_fn = make_train_step_fn(cfg)
+
+    def step_flat(*args):
+        params = p_unflatten(args[:len(p_flat)])
+        opt = o_unflatten(args[len(p_flat):len(p_flat) + len(o_flat)])
+        tokens = args[-1]
+        new_p, new_o, metrics = step_fn(params, opt, tokens)
+        return p_filter(new_p) + o_filter(new_o) + tuple(metrics)
+
+    em.emit(f"{tag}_train_step", step_flat,
+            tuple(p_flat) + tuple(o_flat) + (tokens_spec,),
+            p_specs + o_specs + [tok_spec],
+            [s["name"] for s in p_specs] + [s["name"] for s in o_specs]
+            + ["loss", "ce", "balance", "grad_norm", "lr", "dropped",
+               "ffn_per_token"])
+
+    # --- eval ----------------------------------------------------------------
+    eval_fn = make_eval_fn(cfg)
+
+    def eval_flat(*args):
+        params = p_unflatten(args[:len(p_flat)])
+        return eval_fn(params, args[-1])
+
+    em.emit(f"{tag}_eval", eval_flat, tuple(p_flat) + (tokens_spec,),
+            p_specs + [tok_spec], ["ce"])
+
+    total, activated = count_activated_params(cfg)
+    self_cfg = json.loads(cfg.to_json())
+    self_cfg.update({
+        "train_batch": batch,
+        "n_params_analytic": total,
+        "n_activated_analytic": activated,
+        "param_order": [s["name"] for s in p_specs],
+        "opt_order": [s["name"] for s in o_specs],
+        "ffn_capacity": cfg.capacities(batch * cfg.seq_len)[0],
+        "zc_capacity": cfg.capacities(batch * cfg.seq_len)[1],
+    })
+    em.manifest["configs"][tag] = self_cfg
+
+
+def emit_kernel_artifacts(em: Emitter, cfg: MoEConfig, pname: str):
+    """Standalone expert-FFN buckets + router probe for preset dims."""
+    d, f, n = cfg.d_model, cfg.d_ff, cfg.n_experts
+    for b in FFN_BUCKETS:
+        em.emit(
+            f"expert_ffn_{pname}_b{b}",
+            lambda x, w1, w3, w2: (expert_ffn(x, w1, w3, w2),),
+            (jax.ShapeDtypeStruct((b, d), jnp.float32),
+             jax.ShapeDtypeStruct((d, f), jnp.float32),
+             jax.ShapeDtypeStruct((d, f), jnp.float32),
+             jax.ShapeDtypeStruct((f, d), jnp.float32)),
+            [{"name": "x", "shape": [b, d], "dtype": "float32"},
+             {"name": "w1", "shape": [d, f], "dtype": "float32"},
+             {"name": "w3", "shape": [d, f], "dtype": "float32"},
+             {"name": "w2", "shape": [f, d], "dtype": "float32"}],
+            ["y"],
+        )
+    t = 64
+    em.emit(
+        f"router_probe_{pname}",
+        lambda x, w, prev, wg: router_scores_softmax(
+            x, w, prev, wg, use_residual=True),
+        (jax.ShapeDtypeStruct((t, d), jnp.float32),
+         jax.ShapeDtypeStruct((n, d), jnp.float32),
+         jax.ShapeDtypeStruct((t, n), jnp.float32),
+         jax.ShapeDtypeStruct((n, n), jnp.float32)),
+        [{"name": "x", "shape": [t, d], "dtype": "float32"},
+         {"name": "w", "shape": [n, d], "dtype": "float32"},
+         {"name": "prev", "shape": [t, n], "dtype": "float32"},
+         {"name": "wg", "shape": [n, n], "dtype": "float32"}],
+        ["probs", "scores"],
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--presets", default="test,e2e",
+                    help="comma-separated preset names")
+    ap.add_argument("--variants", default="moepp,vanilla")
+    ap.add_argument("--kernels-for", default="test,e2e",
+                    help="presets to emit standalone kernel buckets for")
+    ap.add_argument("--specs", default="",
+                    help="extra full specs (see configs.parse_spec), "
+                         "semicolon-separated, e.g. 'test@tau=0.25;test@gr=0'")
+    args = ap.parse_args()
+
+    em = Emitter(args.out)
+    # Merge into an existing manifest so selective rebuilds work.
+    man_path = os.path.join(args.out, "manifest.json")
+    if os.path.exists(man_path):
+        with open(man_path) as f:
+            em.manifest = json.load(f)
+
+    for pname in args.presets.split(","):
+        if not pname:
+            continue
+        for variant in args.variants.split(","):
+            key = pname if variant == "moepp" else f"{pname}:{variant}"
+            cfg = preset(key)
+            tag = f"{pname}_{variant}"
+            print(f"[aot] {tag}", flush=True)
+            emit_model_artifacts(em, cfg, tag)
+    for spec in args.specs.split(";"):
+        spec = spec.strip()
+        if not spec:
+            continue
+        cfg = parse_spec(spec)
+        tag = spec_tag(spec)
+        print(f"[aot] {tag} (spec '{spec}')", flush=True)
+        emit_model_artifacts(em, cfg, tag)
+    for pname in args.kernels_for.split(","):
+        if not pname:
+            continue
+        print(f"[aot] kernels {pname}", flush=True)
+        emit_kernel_artifacts(em, preset(pname), pname)
+    em.save_manifest()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+# L1: Pallas kernels for the MoE++ compute hot-spots.
+from .expert_ffn import expert_ffn  # noqa: F401
+from .gating import router_scores_softmax  # noqa: F401
+from .zc_experts import constant_expert  # noqa: F401

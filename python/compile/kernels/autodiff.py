@@ -1,0 +1,101 @@
+"""Differentiable wrappers for the Pallas kernels.
+
+Interpret-mode `pallas_call` has no reverse-mode rule, so each kernel gets a
+`jax.custom_vjp`: the forward pass runs the Pallas kernel (which therefore
+appears in the lowered HLO of fwd/serving artifacts), and the backward pass
+is the exact `jax.vjp` of the pure-jnp reference — mathematically identical
+since the kernels are bit-faithful reimplementations of the refs (asserted
+by python/tests/test_kernels.py).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .expert_ffn import grouped_expert_ffn
+from .gating import router_scores_softmax
+from .zc_experts import constant_expert
+
+
+# --- grouped expert FFN ------------------------------------------------------
+
+def _grouped_ffn_ref(x, w1, w3, w2):
+    return jax.vmap(ref.expert_ffn_ref)(x, w1, w3, w2)
+
+
+@jax.custom_vjp
+def grouped_expert_ffn_ad(x, w1, w3, w2):
+    """Differentiable grouped SwiGLU FFN: x [N, C, D] -> y [N, C, D]."""
+    return grouped_expert_ffn(x, w1, w3, w2)
+
+
+def _gffn_fwd(x, w1, w3, w2):
+    return grouped_expert_ffn(x, w1, w3, w2), (x, w1, w3, w2)
+
+
+def _gffn_bwd(res, g):
+    _, vjp = jax.vjp(_grouped_ffn_ref, *res)
+    return vjp(g)
+
+
+grouped_expert_ffn_ad.defvjp(_gffn_fwd, _gffn_bwd)
+
+
+# --- pathway-aware router ----------------------------------------------------
+
+def _router_ref(x, w, prev, wg, use_residual):
+    scores = ref.router_scores_ref(
+        x, w, prev if use_residual else None, wg if use_residual else None
+    )
+    return jax.nn.softmax(scores, axis=-1), scores
+
+
+def make_router_ad(use_residual: bool):
+    """Build a differentiable router for a fixed residual setting."""
+
+    @jax.custom_vjp
+    def router_ad(x, w, prev, wg):
+        probs, scores = router_scores_softmax(
+            x, w, prev, wg, use_residual=use_residual
+        )
+        return probs, scores
+
+    def fwd(x, w, prev, wg):
+        return router_ad(x, w, prev, wg), (x, w, prev, wg)
+
+    def bwd(res, g):
+        _, vjp = jax.vjp(
+            lambda x, w, prev, wg: _router_ref(x, w, prev, wg, use_residual),
+            *res,
+        )
+        return vjp(g)
+
+    router_ad.defvjp(fwd, bwd)
+    return router_ad
+
+
+_ROUTER_AD = {True: make_router_ad(True), False: make_router_ad(False)}
+
+
+def router_scores_softmax_ad(x, w, prev, wg, use_residual):
+    return _ROUTER_AD[bool(use_residual)](x, w, prev, wg)
+
+
+# --- constant expert ---------------------------------------------------------
+
+@jax.custom_vjp
+def constant_expert_ad(x, wc, v):
+    """Differentiable constant expert (Eq. 5)."""
+    return constant_expert(x, wc, v)
+
+
+def _const_fwd(x, wc, v):
+    return constant_expert(x, wc, v), (x, wc, v)
+
+
+def _const_bwd(res, g):
+    _, vjp = jax.vjp(ref.constant_expert_ref, *res)
+    return vjp(g)
+
+
+constant_expert_ad.defvjp(_const_fwd, _const_bwd)

@@ -1,0 +1,171 @@
+"""L1 Pallas kernel: the SwiGLU FFN expert — the MoE compute hot-spot.
+
+TPU design (see DESIGN.md §8, Hardware-Adaptation):
+
+The paper's efficiency analysis is GPU-framed (each expert FFN is a pair of
+GEMMs on an A100). On TPU the same insight maps to: tile the token batch so
+an x-tile, the weight tiles, and the accumulator live in VMEM, and feed the
+MXU with 128x128-shaped matmuls. The grid walks token tiles in the first
+dimension and F-tiles in the second; the up-projections (w1/w3) stream
+F-tiles through VMEM while the partial down-projection accumulates into a
+[B_TILE, D] scratch accumulator — a single HBM pass over the weights per
+token tile.
+
+`interpret=True` is mandatory here: the CPU PJRT plugin cannot execute the
+Mosaic custom-call a real TPU lowering would emit. Numerics are identical;
+TPU efficiency is estimated from the BlockSpec footprint (EXPERIMENTS.md
+§Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# Default tile sizes chosen for TPU VMEM (~16 MiB/core):
+#   x tile   [128, D]          f32: 128*D*4
+#   w1/w3    [D, 512] each     f32: D*512*4 * 2
+#   w2 tile  [512, D]          f32: 512*D*4
+#   acc      [128, D]          f32: 128*D*4
+# At D=1024 this is ~6.5 MiB — comfortably resident, double-bufferable.
+B_TILE = 128
+F_TILE = 512
+
+
+def _ffn_kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref, acc_ref, *, n_f_tiles):
+    """One (token-tile, F-tile) grid step of the SwiGLU expert.
+
+    x_ref   [B_t, D]   — token tile (resident across the F loop)
+    w1_ref  [D, F_t]   — gate up-projection tile
+    w3_ref  [D, F_t]   — linear up-projection tile
+    w2_ref  [F_t, D]   — down-projection tile
+    acc_ref [B_t, D]   — VMEM scratch accumulator
+    """
+    f_idx = pl.program_id(1)
+
+    @pl.when(f_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    # Up-projections for this F tile; MXU-shaped matmuls.
+    h_gate = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    h_lin = jnp.dot(x, w3_ref[...], preferred_element_type=jnp.float32)
+    h = h_gate * jax.nn.sigmoid(h_gate) * h_lin  # SwiGLU
+    # Partial down-projection accumulates across F tiles.
+    acc_ref[...] += jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(f_idx == n_f_tiles - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+def _pick_tile(total, preferred):
+    """Largest divisor of `total` that is <= preferred (tiles must divide)."""
+    t = min(preferred, total)
+    while total % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("b_tile", "f_tile"))
+def expert_ffn(x, w1, w3, w2, *, b_tile=None, f_tile=None):
+    """SwiGLU FFN expert via Pallas. x [B, D] -> y [B, D].
+
+    Equivalent to ref.expert_ffn_ref; tiling is an implementation detail.
+    """
+    b, d = x.shape
+    f = w1.shape[1]
+    bt = _pick_tile(b, b_tile or B_TILE)
+    ft = _pick_tile(f, f_tile or F_TILE)
+    n_f_tiles = f // ft
+
+    grid = (b // bt, n_f_tiles)
+    return pl.pallas_call(
+        functools.partial(_ffn_kernel, n_f_tiles=n_f_tiles),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),   # x: token tile
+            pl.BlockSpec((d, ft), lambda i, j: (0, j)),   # w1: F tile
+            pl.BlockSpec((d, ft), lambda i, j: (0, j)),   # w3: F tile
+            pl.BlockSpec((ft, d), lambda i, j: (j, 0)),   # w2: F tile
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        scratch_shapes=[pltpu_scratch(bt, d)],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(x, w1, w3, w2)
+
+
+def pltpu_scratch(bt, d):
+    """Scratch shape helper compatible across jax versions."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM((bt, d), jnp.float32)
+
+
+def _grouped_ffn_kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref, acc_ref, *,
+                        n_f_tiles):
+    """Grid step (expert e, token-tile i, F-tile j) of the grouped expert FFN.
+
+    Identical arithmetic to `_ffn_kernel`; the leading grid dimension walks
+    experts, so each expert's capacity buffer is processed with that expert's
+    weight tiles. This is the shape the MoE++ layer's dense dispatch feeds:
+    x [N_FFN, C, D] -> y [N_FFN, C, D].
+    """
+    f_idx = pl.program_id(2)
+
+    @pl.when(f_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]  # [B_t, D] — squeeze the expert block dim
+    h_gate = jnp.dot(x, w1_ref[0], preferred_element_type=jnp.float32)
+    h_lin = jnp.dot(x, w3_ref[0], preferred_element_type=jnp.float32)
+    h = h_gate * jax.nn.sigmoid(h_gate) * h_lin
+    acc_ref[...] += jnp.dot(h, w2_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(f_idx == n_f_tiles - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("b_tile", "f_tile"))
+def grouped_expert_ffn(x, w1, w3, w2, *, b_tile=None, f_tile=None):
+    """All experts' SwiGLU FFNs in one Pallas call.
+
+    x [N, C, D] (per-expert capacity buffers), w1/w3 [N, D, F], w2 [N, F, D]
+    -> y [N, C, D]. Equivalent to vmapping expert_ffn over the expert dim.
+    """
+    n, c, d = x.shape
+    f = w1.shape[2]
+    bt = _pick_tile(c, b_tile or B_TILE)
+    ft = _pick_tile(f, f_tile or F_TILE)
+    n_f_tiles = f // ft
+
+    grid = (n, c // bt, n_f_tiles)
+    return pl.pallas_call(
+        functools.partial(_grouped_ffn_kernel, n_f_tiles=n_f_tiles),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, d), lambda e, i, j: (e, i, 0)),
+            pl.BlockSpec((1, d, ft), lambda e, i, j: (e, 0, j)),
+            pl.BlockSpec((1, d, ft), lambda e, i, j: (e, 0, j)),
+            pl.BlockSpec((1, ft, d), lambda e, i, j: (e, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, d), lambda e, i, j: (e, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c, d), jnp.float32),
+        scratch_shapes=[pltpu_scratch(bt, d)],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(x, w1, w3, w2)
+
+
+def vmem_footprint_bytes(d, b_tile=B_TILE, f_tile=F_TILE, bytes_per=4):
+    """Estimated VMEM residency of one grid step (for the §Perf audit)."""
+    x = b_tile * d
+    w = 2 * d * f_tile + f_tile * d
+    acc = b_tile * d
+    out = b_tile * d
+    return (x + w + acc + out) * bytes_per

@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: the pathway-aware router (Eq. 6) — fused score matmul,
+gating-residual add, and softmax.
+
+The router is small (an [N, D] matmul per token) but sits on the critical
+path of every MoE++ layer and must never round-trip to HBM between the score
+computation and the softmax: the kernel keeps the [T_tile, N] score block in
+VMEM across all three steps. Top-k extraction happens outside the kernel
+(jax.lax.top_k) because k is tiny and the data is already reduced to [T, N].
+
+`interpret=True` is mandatory — see expert_ffn.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+T_TILE = 128
+
+
+def _router_kernel(x_ref, w_ref, prev_ref, wg_ref, probs_ref, scores_ref, *,
+                   use_residual):
+    """One token-tile step: scores = x W^T (+ prev Wg^T); probs = softmax.
+
+    x_ref     [T_t, D]
+    w_ref     [N, D]
+    prev_ref  [T_t, N]  — previous layer's raw scores (zeros at layer 0)
+    wg_ref    [N, N]
+    probs_ref [T_t, N]  — softmax output
+    scores_ref[T_t, N]  — raw scores output (threaded to the next layer)
+    """
+    x = x_ref[...]
+    scores = jnp.dot(x, w_ref[...].T, preferred_element_type=jnp.float32)
+    if use_residual:
+        scores = scores + jnp.dot(
+            prev_ref[...], wg_ref[...].T, preferred_element_type=jnp.float32
+        )
+    scores_ref[...] = scores
+    # Numerically-stable softmax, entirely VMEM-resident.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    probs_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _pick_tile(total, preferred):
+    t = min(preferred, total)
+    while total % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("use_residual", "t_tile"))
+def router_scores_softmax(x, w, prev_scores, wg, *, use_residual=True,
+                          t_tile=None):
+    """Pathway-aware router: returns (probs [T, N], raw_scores [T, N]).
+
+    Matches ref.router_scores_ref + softmax. `prev_scores` must be zeros for
+    the first layer (with use_residual=False the residual matmul is elided
+    from the kernel entirely).
+    """
+    t, d = x.shape
+    n = w.shape[0]
+    tt = _pick_tile(t, t_tile or T_TILE)
+    grid = (t // tt,)
+    return pl.pallas_call(
+        functools.partial(_router_kernel, use_residual=use_residual),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tt, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((tt, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tt, n), lambda i: (i, 0)),
+            pl.BlockSpec((tt, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, n), jnp.float32),
+            jax.ShapeDtypeStruct((t, n), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(x, w, prev_scores, wg)

@@ -1,0 +1,88 @@
+"""Pure-jnp reference oracles for every Pallas kernel (L1 correctness ground
+truth) and for the MoE++ layer semantics shared with the Rust implementation.
+
+Everything here is deliberately written in the most direct way possible —
+these functions define *what is correct*; the Pallas kernels and the Rust
+native engine define *how it runs fast*.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def expert_ffn_ref(x, w1, w3, w2):
+    """SwiGLU FFN expert: y = (silu(x @ w1) * (x @ w3)) @ w2.
+
+    Shapes: x [B, D], w1 [D, F], w3 [D, F], w2 [F, D] -> y [B, D].
+    Matches LLaMA-style gated FFN used as the MoE expert (paper Sec. 3).
+    """
+    return (silu(x @ w1) * (x @ w3)) @ w2
+
+
+def router_scores_ref(x, w, prev_scores=None, wg=None):
+    """Pathway-aware router scores, Eq. 6.
+
+    x [T, D]; w [N, D]; prev_scores [T, N] (or None for layer 0);
+    wg [N, N]. Returns raw scores G(x) [T, N] (pre-softmax).
+    """
+    scores = x @ w.T
+    if prev_scores is not None and wg is not None:
+        scores = scores + prev_scores @ wg.T
+    return scores
+
+
+def constant_expert_ref(x, wc, v):
+    """Constant expert, Eq. 5: y = a1*x + a2*v, [a1,a2] = softmax(Wc x).
+
+    x [B, D]; wc [2, D]; v [D]. Returns y [B, D].
+    """
+    alphas = jax.nn.softmax(x @ wc.T, axis=-1)  # [B, 2]
+    return alphas[:, 0:1] * x + alphas[:, 1:2] * v[None, :]
+
+
+def zero_expert_ref(x):
+    """Zero expert, Eq. 3: discard."""
+    return jnp.zeros_like(x)
+
+
+def copy_expert_ref(x):
+    """Copy expert, Eq. 4: identity shortcut."""
+    return x
+
+
+def topk_gates_ref(scores, k):
+    """Softmax over N then keep top-k values (Eq. 1 gating).
+
+    Returns (gates [T, N] with zeros off the top-k, topk_idx [T, k]).
+    Note: per Eq. 1 the softmax is over *all* N experts and the non-top-k
+    entries are zeroed without renormalisation.
+    """
+    probs = jax.nn.softmax(scores, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, k)
+    mask = jnp.zeros_like(probs)
+    mask = jax.vmap(lambda m, i: m.at[i].set(1.0))(mask, top_idx)
+    return probs * mask, top_idx
+
+
+def load_balance_loss_ref(scores, topk_idx, n_ffn, tau):
+    """Heterogeneous load-balance loss, Eq. 7.
+
+    scores [T, N] raw router scores; topk_idx [T, K] selected experts;
+    experts [0, n_ffn) are FFN experts, [n_ffn, N) are zero-computation.
+    eta_i = 1 for FFN experts, tau for ZC experts.
+    L_b = N * sum_i eta_i * f_i * P_i with f_i the fraction of tokens
+    selecting expert i and P_i the mean router probability. The N scaling
+    (as in GShard/Switch aux losses) makes the uniform-router baseline
+    size-independent.
+    """
+    t, n = scores.shape
+    probs = jax.nn.softmax(scores, axis=-1)
+    p = probs.mean(axis=0)  # P_i
+    one_hot = jax.nn.one_hot(topk_idx, n).sum(axis=1)  # [T, N]
+    f = one_hot.mean(axis=0)  # f_i
+    eta = jnp.where(jnp.arange(n) < n_ffn, 1.0, tau)
+    return n * jnp.sum(eta * f * p)

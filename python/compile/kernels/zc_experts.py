@@ -1,0 +1,61 @@
+"""L1 Pallas kernel: the constant expert (Eq. 5), the only zero-computation
+expert with any arithmetic at all.
+
+    y = a1 * x + a2 * v,   [a1, a2] = softmax(Wc x)
+
+Deliberately *not* MXU work: Wc is [2, D], so the score computation is a pair
+of dot products per token (VPU lane work on TPU), followed by a 2-way softmax
+and an axpy. Zero and copy experts have no kernel — they are a masked fill /
+a copy, which the L2 combine and the L3 engine implement directly; that
+absence is precisely the paper's "zero-computation" claim.
+
+`interpret=True` is mandatory — see expert_ffn.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+B_TILE = 256
+
+
+def _const_kernel(x_ref, wc_ref, v_ref, o_ref):
+    """y = a1*x + a2*v with [a1,a2] = softmax(x Wc^T), fused per token tile."""
+    x = x_ref[...]                       # [B_t, D]
+    logits = jnp.dot(x, wc_ref[...].T)   # [B_t, 2] — VPU-scale work
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    alphas = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = alphas[:, 0:1] * x + alphas[:, 1:2] * v_ref[...][None, :]
+
+
+def _pick_tile(total, preferred):
+    t = min(preferred, total)
+    while total % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("b_tile",))
+def constant_expert(x, wc, v, *, b_tile=None):
+    """Constant expert via Pallas. x [B, D], wc [2, D], v [D] -> y [B, D].
+
+    Equivalent to ref.constant_expert_ref.
+    """
+    b, d = x.shape
+    bt = _pick_tile(b, b_tile or B_TILE)
+    grid = (b // bt,)
+    return pl.pallas_call(
+        _const_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((2, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(x, wc, v)

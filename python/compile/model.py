@@ -1,0 +1,166 @@
+"""L2: decoder-only transformer LM with every FFN replaced by a MoE++ (or
+vanilla MoE) layer — the scaled twin of the paper's Table 2 models.
+
+Architecture follows the paper's Megatron/LLaMA-style setup: RMSNorm,
+rotary position embeddings, causal multi-head attention, SwiGLU MoE experts,
+top-2 routing, untied output head. Gating residuals (Eq. 6) thread each
+layer's raw router scores into the next layer's router.
+
+Everything is a pure function over explicitly-passed parameters so the whole
+model lowers to a single HLO module with a stable, manifest-documented
+parameter order (see aot.py).
+"""
+
+from typing import List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import MoEConfig
+from .moe_layer import (MoELayerAux, MoELayerParams, init_layer_params,
+                        moe_layer_fwd)
+
+
+class BlockParams(NamedTuple):
+    """One transformer block: attention + MoE++ layer + 2 norms."""
+
+    attn_norm: jax.Array     # [D]
+    wq: jax.Array            # [D, D]
+    wk: jax.Array            # [D, D]
+    wv: jax.Array            # [D, D]
+    wo: jax.Array            # [D, D]
+    moe_norm: jax.Array      # [D]
+    moe: MoELayerParams
+
+
+class ModelParams(NamedTuple):
+    embed: jax.Array         # [V, D]
+    blocks: Tuple[BlockParams, ...]
+    final_norm: jax.Array    # [D]
+    head: jax.Array          # [D, V]
+
+
+class ModelAux(NamedTuple):
+    """Stacked per-layer routing statistics (for figures 4/5/6)."""
+
+    balance_loss: jax.Array   # scalar, mean over layers
+    expert_counts: jax.Array  # [L, N]
+    dropped: jax.Array        # [L]
+    ffn_per_token: jax.Array  # [L]
+    top1_prob: jax.Array      # [L]
+    top2_prob: jax.Array      # [L]
+
+
+def rms_norm(x, g, eps=1e-5):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * g
+
+
+def rope(x, positions):
+    """Rotary position embedding. x [B, S, H, Hd]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 10000.0 ** (-jnp.arange(0, half) / half)
+    angles = positions[:, :, None, None] * freqs[None, None, None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def attention(bp: BlockParams, x, cfg: MoEConfig):
+    """Causal multi-head attention with RoPE. x [B, S, D]."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    q = rope((x @ bp.wq).reshape(b, s, h, hd), pos)
+    k = rope((x @ bp.wk).reshape(b, s, h, hd), pos)
+    v = (x @ bp.wv).reshape(b, s, h, hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(hd)
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    logits = jnp.where(causal[None, None], logits, -1e30)
+    att = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, s, d)
+    return out @ bp.wo
+
+
+def init_params(key, cfg: MoEConfig) -> ModelParams:
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    d, v = cfg.d_model, cfg.vocab_size
+    scale = d ** -0.5
+    blocks = []
+    for i in range(cfg.n_layers):
+        bks = jax.random.split(ks[i], 5)
+        blocks.append(BlockParams(
+            attn_norm=jnp.ones((d,)),
+            wq=jax.random.normal(bks[0], (d, d)) * scale,
+            wk=jax.random.normal(bks[1], (d, d)) * scale,
+            wv=jax.random.normal(bks[2], (d, d)) * scale,
+            wo=jax.random.normal(bks[3], (d, d)) * scale,
+            moe_norm=jnp.ones((d,)),
+            moe=init_layer_params(bks[4], cfg),
+        ))
+    return ModelParams(
+        embed=jax.random.normal(ks[-3], (v, d)) * 0.02,
+        blocks=tuple(blocks),
+        final_norm=jnp.ones((d,)),
+        head=jax.random.normal(ks[-2], (d, v)) * scale,
+    )
+
+
+def model_fwd(params: ModelParams, tokens: jax.Array,
+              cfg: MoEConfig) -> Tuple[jax.Array, ModelAux]:
+    """Forward pass. tokens [B, S] int32 -> (logits [B, S, V], aux)."""
+    b, s = tokens.shape
+    d = cfg.d_model
+    x = params.embed[tokens]  # [B, S, D]
+    prev_scores = None
+    auxes: List[MoELayerAux] = []
+    for bp in params.blocks:
+        x = x + attention(bp, rms_norm(x, bp.attn_norm), cfg)
+        h = rms_norm(x, bp.moe_norm).reshape(b * s, d)
+        y, aux = moe_layer_fwd(bp.moe, h, prev_scores, cfg)
+        # Gating residual: raw scores feed the next layer's router (Eq. 6).
+        prev_scores = aux.scores
+        x = x + y.reshape(b, s, d)
+        auxes.append(aux)
+    x = rms_norm(x, params.final_norm)
+    logits = x @ params.head
+    aux = ModelAux(
+        balance_loss=jnp.stack([a.balance_loss for a in auxes]).mean(),
+        expert_counts=jnp.stack([a.expert_counts for a in auxes]),
+        dropped=jnp.stack([a.dropped for a in auxes]),
+        ffn_per_token=jnp.stack([a.ffn_per_token for a in auxes]),
+        top1_prob=jnp.stack([a.top1_prob for a in auxes]),
+        top2_prob=jnp.stack([a.top2_prob for a in auxes]),
+    )
+    return logits, aux
+
+
+def count_params(params: ModelParams) -> int:
+    return sum(p.size for p in jax.tree_util.tree_leaves(params))
+
+
+def count_activated_params(cfg: MoEConfig) -> Tuple[int, float]:
+    """(total params, expected activated params per token).
+
+    Activated = dense backbone + K expert-FFNs weighted by the expected
+    fraction of top-K slots landing on FFN experts. For MoE++ with balanced
+    routing that fraction is tau*N_F/(tau*N_F + N_Z) (Table 1); for vanilla
+    MoE it is 1. This is the accounting behind the paper's "<=0.2B/0.6B"
+    notation and the Table 1 complexity ratio.
+    """
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    per_ffn = 3 * d * f
+    router = cfg.n_experts * d + cfg.n_experts ** 2
+    const_p = cfg.n_const * 3 * d
+    attn = 4 * d * d + 2 * d
+    per_layer_total = attn + cfg.n_ffn_experts * per_ffn + router + const_p
+    total = v * d + cfg.n_layers * per_layer_total + d + d * v
+    if cfg.variant == "vanilla":
+        ffn_frac = 1.0
+    else:
+        ffn_frac = (cfg.tau * cfg.n_ffn_experts /
+                    (cfg.tau * cfg.n_ffn_experts + cfg.n_zc))
+    activated = (v * d + d * v + d +
+                 cfg.n_layers * (attn + router + const_p +
+                                 cfg.top_k * ffn_frac * per_ffn))
+    return total, activated

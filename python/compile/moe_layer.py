@@ -1,0 +1,232 @@
+"""L2: the MoE++ layer (and the vanilla-MoE baseline) as a static-shape JAX
+computation suitable for AOT lowering.
+
+Dense (GShard-style) dispatch with the paper's *heterogeneous* extensions:
+
+  * experts [0, n_ffn) are FFN experts, [n_ffn, N) are zero-computation
+    experts ordered [zero..., copy..., constant...];
+  * heterogeneous expert capacity (Eq. 8): FFN experts get
+    gamma*K*tau*T/(tau*N_F + N_Z) slots, ZC experts gamma*K*T/(tau*N_F+N_Z);
+  * over-capacity assignments are dropped — the token's residual connection
+    carries it unchanged (paper Sec. 3.3);
+  * heterogeneous load-balance loss (Eq. 7) with eta in {1, tau};
+  * pathway-aware router with gating residuals (Eq. 6), threaded between
+    layers as the raw scores of the previous layer;
+  * gates are the full-softmax probabilities of the selected experts, with
+    no renormalisation after top-k or drops (Eq. 1).
+
+The FFN experts run through the Pallas grouped kernel; zero/copy/constant
+experts never enter the dispatch buffers at all — their contribution is a
+weighted combine over the *original* token stream, which is exactly why they
+are free: no gather, no FFN FLOPs, no all-to-all in the distributed mapping.
+"""
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import MoEConfig
+from .kernels.autodiff import (constant_expert_ad as constant_expert,
+                               grouped_expert_ffn_ad as grouped_expert_ffn,
+                               router_scores_softmax_ad)
+
+
+class MoELayerParams(NamedTuple):
+    """Parameters of one MoE++ layer (ZC slots empty for vanilla)."""
+
+    router_w: jax.Array          # [N, D]
+    router_wg: jax.Array         # [N, N] gating-residual transform
+    ffn_w1: jax.Array            # [N_FFN, D, F]
+    ffn_w3: jax.Array            # [N_FFN, D, F]
+    ffn_w2: jax.Array            # [N_FFN, F, D]
+    const_wc: jax.Array          # [n_const, 2, D]
+    const_v: jax.Array           # [n_const, D]
+
+
+class MoELayerAux(NamedTuple):
+    """Per-layer routing statistics, returned for analysis/figures."""
+
+    balance_loss: jax.Array      # scalar, Eq. 7
+    expert_counts: jax.Array     # [N] pre-capacity assignment counts
+    dropped: jax.Array           # scalar count of dropped assignments
+    ffn_per_token: jax.Array     # scalar mean surviving FFN experts/token
+    scores: jax.Array            # [T, N] raw scores (-> next layer residual)
+    top1_prob: jax.Array         # scalar mean max router prob
+    top2_prob: jax.Array         # scalar mean 2nd router prob
+
+
+def init_layer_params(key, cfg: MoEConfig) -> MoELayerParams:
+    """Initialise one layer. ZC params are zero-sized for the vanilla variant."""
+    d, f = cfg.d_model, cfg.d_ff
+    n, nf, nc = cfg.n_experts, cfg.n_ffn_experts, cfg.n_const
+    ks = jax.random.split(key, 6)
+    scale = d ** -0.5
+    return MoELayerParams(
+        router_w=jax.random.normal(ks[0], (n, d)) * scale,
+        # Zero-init: gating residual starts as identity pass-through of the
+        # current layer's scores (Eq. 6 reduces to W x at init).
+        router_wg=jnp.zeros((n, n)),
+        ffn_w1=jax.random.normal(ks[1], (nf, d, f)) * scale,
+        ffn_w3=jax.random.normal(ks[2], (nf, d, f)) * scale,
+        ffn_w2=jax.random.normal(ks[3], (nf, f, d)) * (f ** -0.5),
+        const_wc=jax.random.normal(ks[4], (max(nc, 0), 2, d)) * scale,
+        const_v=jax.random.normal(ks[5], (max(nc, 0), d)) * 0.02,
+    )
+
+
+def _positions_in_expert(mask: jax.Array) -> jax.Array:
+    """Slot-major position of each assignment within its expert's queue.
+
+    mask [T, K, N] one-hot assignments. Priority follows GShard/Megatron:
+    all slot-0 (top-1) assignments in token order first, then slot-1.
+    Returns pos [T, K, N] (only meaningful where mask==1).
+    """
+    t, k, n = mask.shape
+    # Reorder to [K, T, N] so a single cumulative sum walks slot-major order.
+    m = jnp.transpose(mask, (1, 0, 2)).reshape(k * t, n)
+    pos = jnp.cumsum(m, axis=0) - m
+    return jnp.transpose(pos.reshape(k, t, n), (1, 0, 2))
+
+
+def moe_layer_fwd(
+    params: MoELayerParams,
+    x: jax.Array,                   # [T, D] flattened tokens
+    prev_scores: Optional[jax.Array],  # [T, N] or None (layer 0)
+    cfg: MoEConfig,
+) -> Tuple[jax.Array, MoELayerAux]:
+    """Forward one MoE/MoE++ layer. Returns (y [T, D], aux)."""
+    t, d = x.shape
+    n, nf, k = cfg.n_experts, cfg.n_ffn_experts, cfg.top_k
+    nz, nk, nc = cfg.n_zero, cfg.n_copy, cfg.n_const
+
+    # --- Pathway-aware router (Eq. 6) -------------------------------------
+    use_res = cfg.gating_residual and prev_scores is not None
+    prev = prev_scores if use_res else jnp.zeros((t, n))
+    probs, scores = router_scores_softmax_ad(
+        x, params.router_w, prev, params.router_wg, use_res
+    )
+
+    # --- Top-K selection (Eq. 1) ------------------------------------------
+    # argsort instead of lax.top_k: the consumer XLA (0.5.1) text parser
+    # predates the standalone `topk` HLO op; a stable sort lowers to plain
+    # `sort`, and stable argsort of -probs matches lax.top_k's tie-breaking
+    # (lower index first).
+    # (stop_gradient: indices are non-differentiable; this also keeps the
+    # sort JVP — whose gather uses batching dims too new for XLA 0.5.1 —
+    # out of the lowered train graph.)
+    top_idx = jnp.argsort(jax.lax.stop_gradient(-probs), axis=-1,
+                          stable=True)[:, :k]  # [T, K]
+    mask = jax.nn.one_hot(top_idx, n)                    # [T, K, N]
+
+    # --- Heterogeneous load-balance loss (Eq. 7) ---------------------------
+    f_frac = mask.sum(axis=1).mean(axis=0)               # f_i
+    p_mean = probs.mean(axis=0)                          # P_i
+    eta = jnp.where(jnp.arange(n) < nf, 1.0, cfg.tau)
+    balance_loss = n * jnp.sum(eta * f_frac * p_mean)
+
+    # --- Heterogeneous capacity (Eq. 8) + drops ----------------------------
+    ffn_cap, zc_cap = cfg.capacities(t)
+    cap = jnp.where(jnp.arange(n) < nf, ffn_cap, zc_cap)  # [N]
+    pos = _positions_in_expert(mask)                      # [T, K, N]
+    keep = mask * (pos < cap[None, None, :])              # [T, K, N]
+    dropped = mask.sum() - keep.sum()
+
+    # Combine weight per (token, expert): softmax prob if kept (Eq. 1).
+    gate_te = (keep * probs[:, None, :]).sum(axis=1)      # [T, N]
+
+    # --- FFN experts: dispatch -> grouped Pallas FFN -> combine ------------
+    keep_ffn = keep[..., :nf].sum(axis=1)                 # [T, N_FFN] {0,1}
+    pos_ffn = (pos[..., :nf] * keep[..., :nf]).sum(axis=1)  # [T, N_FFN]
+    # One-hot capacity slot per surviving assignment: [T, N_FFN, C].
+    slot = jax.nn.one_hot(pos_ffn.astype(jnp.int32), ffn_cap) \
+        * keep_ffn[..., None]
+    x_disp = jnp.einsum("tec,td->ecd", slot, x)           # [N_FFN, C, D]
+    y_exp = grouped_expert_ffn(x_disp, params.ffn_w1, params.ffn_w3,
+                               params.ffn_w2)             # [N_FFN, C, D]
+    w_slot = slot * gate_te[:, :nf, None]                 # gate-weighted
+    y = jnp.einsum("tec,ecd->td", w_slot, y_exp)          # [T, D]
+
+    # --- Zero-computation experts: weighted combine, no dispatch -----------
+    if cfg.variant != "vanilla":
+        off = nf
+        # Zero experts (Eq. 3) contribute nothing — their gate weight simply
+        # evaporates (this is what lets top-2 degrade to top-1).
+        off += nz
+        # Copy experts (Eq. 4): g * x.
+        if nk > 0:
+            g_copy = gate_te[:, off:off + nk].sum(axis=1, keepdims=True)
+            y = y + g_copy * x
+        off += nk
+        # Constant experts (Eq. 5): g * (a1 x + a2 v), via the Pallas kernel.
+        for j in range(nc):
+            g_cj = gate_te[:, off + j:off + j + 1]
+            y_cj = constant_expert(x, params.const_wc[j], params.const_v[j])
+            y = y + g_cj * y_cj
+
+    # Stats are observational — never differentiated (and jnp.sort's vjp is
+    # broken on this jax/jaxlib pin).
+    ffn_per_token = jax.lax.stop_gradient(keep_ffn.sum() / t)
+    sorted_probs = jnp.sort(jax.lax.stop_gradient(probs), axis=-1)
+    aux = MoELayerAux(
+        balance_loss=balance_loss,
+        expert_counts=mask.sum(axis=(0, 1)),
+        dropped=dropped,
+        ffn_per_token=ffn_per_token,
+        scores=scores,
+        top1_prob=sorted_probs[:, -1].mean(),
+        top2_prob=sorted_probs[:, -2].mean(),
+    )
+    return y, aux
+
+
+def moe_layer_fwd_ref(params, x, prev_scores, cfg):
+    """Direct per-token oracle of moe_layer_fwd (python loops; tests only)."""
+    import numpy as np
+
+    from .kernels import ref
+
+    t, d = x.shape
+    n, nf, k = cfg.n_experts, cfg.n_ffn_experts, cfg.top_k
+    nz, nk, nc = cfg.n_zero, cfg.n_copy, cfg.n_const
+    use_res = cfg.gating_residual and prev_scores is not None
+    scores = np.asarray(
+        ref.router_scores_ref(
+            x, params.router_w,
+            prev_scores if use_res else None,
+            params.router_wg if use_res else None,
+        )
+    )
+    probs = np.asarray(jax.nn.softmax(jnp.asarray(scores), axis=-1))
+    ffn_cap, zc_cap = cfg.capacities(t)
+    cap = [ffn_cap if i < nf else zc_cap for i in range(n)]
+    # Slot-major assignment order, matching _positions_in_expert.
+    top_idx = np.argsort(-probs, axis=-1, kind="stable")[:, :k]
+    load = [0] * n
+    kept = []  # (token, expert, gate)
+    for slot_k in range(k):
+        for tok in range(t):
+            e = int(top_idx[tok, slot_k])
+            if load[e] < cap[e]:
+                load[e] += 1
+                kept.append((tok, e, probs[tok, e]))
+    y = np.zeros((t, d), dtype=np.float32)
+    x_np = np.asarray(x)
+    for tok, e, g in kept:
+        if e < nf:
+            out = ref.expert_ffn_ref(
+                x_np[tok:tok + 1], params.ffn_w1[e], params.ffn_w3[e],
+                params.ffn_w2[e],
+            )
+            y[tok] += g * np.asarray(out[0])
+        elif e < nf + nz:
+            pass  # zero expert
+        elif e < nf + nz + nk:
+            y[tok] += g * x_np[tok]
+        else:
+            j = e - nf - nz - nk
+            out = ref.constant_expert_ref(
+                x_np[tok:tok + 1], params.const_wc[j], params.const_v[j]
+            )
+            y[tok] += g * np.asarray(out[0])
+    return y, scores

@@ -1,0 +1,138 @@
+"""L2: one functional training step — loss (Eq. 9), grad, AdamW — lowered as
+a single HLO module so the Rust trainer can drive pretraining without Python.
+
+    L = L_ce + beta * L_b          (beta = 0.01, paper Appendix B.2)
+
+AdamW with decoupled weight decay 0.1, grad-norm clip 1.0 and a
+warmup+cosine schedule mirroring the paper's Strategy 1; the schedule is
+computed *inside* the step from the integer step counter carried in the
+optimizer state, so the artifact is self-contained.
+"""
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import MoEConfig
+from .model import ModelParams, init_params, model_fwd
+
+
+class OptState(NamedTuple):
+    step: jax.Array   # i32 scalar
+    m: ModelParams    # first moments (same pytree as params)
+    v: ModelParams    # second moments
+
+
+class StepMetrics(NamedTuple):
+    loss: jax.Array
+    ce: jax.Array
+    balance: jax.Array
+    grad_norm: jax.Array
+    lr: jax.Array
+    dropped: jax.Array        # mean dropped assignments per layer
+    ffn_per_token: jax.Array  # mean over layers
+
+
+# Paper Strategy 1 hyper-parameters, scaled to reproduction step counts.
+WARMUP_STEPS = 100
+MAX_LR = 5e-4
+FINAL_LR = 5e-5
+TOTAL_STEPS = 2000
+WEIGHT_DECAY = 0.1
+CLIP_NORM = 1.0
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.95, 1e-8
+
+
+def lr_schedule(step):
+    """Linear warmup from ~0 then cosine decay MAX_LR -> FINAL_LR."""
+    step = step.astype(jnp.float32)
+    warm = MAX_LR * jnp.maximum(step, 1.0) / WARMUP_STEPS
+    t = jnp.clip((step - WARMUP_STEPS) / (TOTAL_STEPS - WARMUP_STEPS), 0, 1)
+    cos = FINAL_LR + 0.5 * (MAX_LR - FINAL_LR) * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < WARMUP_STEPS, warm, cos)
+
+
+def loss_fn(params: ModelParams, tokens: jax.Array, cfg: MoEConfig):
+    """Next-token CE + beta * heterogeneous balance loss over [B, S] tokens."""
+    logits, aux = model_fwd(params, tokens, cfg)
+    # Shift: predict token t+1 from prefix <= t.
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    targets = tokens[:, 1:]
+    ce = -jnp.take_along_axis(logp, targets[..., None], axis=-1).mean()
+    loss = ce + cfg.balance_coef * aux.balance_loss
+    return loss, (ce, aux)
+
+
+def init_opt_state(params: ModelParams) -> OptState:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros, v=zeros)
+
+
+def train_step(params: ModelParams, opt: OptState, tokens: jax.Array,
+               cfg: MoEConfig) -> Tuple[ModelParams, OptState, StepMetrics]:
+    (loss, (ce, aux)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, tokens, cfg
+    )
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in leaves))
+    scale = jnp.minimum(1.0, CLIP_NORM / (gnorm + 1e-6))
+    step = opt.step + 1
+    lr = lr_schedule(step)
+    b1c = 1 - ADAM_B1 ** step.astype(jnp.float32)
+    b2c = 1 - ADAM_B2 ** step.astype(jnp.float32)
+
+    tmap = jax.tree_util.tree_map
+    new_m = tmap(lambda g, m: ADAM_B1 * m + (1 - ADAM_B1) * g * scale,
+                 grads, opt.m)
+    new_v = tmap(lambda g, v: ADAM_B2 * v + (1 - ADAM_B2) * (g * scale) ** 2,
+                 grads, opt.v)
+    new_params = tmap(
+        lambda p, m, v: p - lr * ((m / b1c) / (jnp.sqrt(v / b2c) + ADAM_EPS)
+                                  + WEIGHT_DECAY * p),
+        params, new_m, new_v,
+    )
+    metrics = StepMetrics(
+        loss=loss, ce=ce, balance=aux.balance_loss, grad_norm=gnorm, lr=lr,
+        dropped=aux.dropped.mean(), ffn_per_token=aux.ffn_per_token.mean(),
+    )
+    return new_params, OptState(step=step, m=new_m, v=new_v), metrics
+
+
+def make_init_fn(cfg: MoEConfig):
+    """(seed i32) -> (params, opt_state) for AOT lowering."""
+
+    def init(seed):
+        params = init_params(jax.random.PRNGKey(seed), cfg)
+        return params, init_opt_state(params)
+
+    return init
+
+
+def make_train_step_fn(cfg: MoEConfig):
+    def step(params, opt, tokens):
+        return train_step(params, opt, tokens, cfg)
+
+    return step
+
+
+def make_fwd_fn(cfg: MoEConfig):
+    def fwd(params, tokens):
+        logits, aux = model_fwd(params, tokens, cfg)
+        return (logits, aux.expert_counts, aux.dropped, aux.ffn_per_token,
+                aux.top1_prob, aux.top2_prob, aux.balance_loss)
+
+    return fwd
+
+
+def make_eval_fn(cfg: MoEConfig):
+    """(params, tokens) -> (ce_loss,) for perplexity evaluation."""
+
+    def ev(params, tokens):
+        logits, _ = model_fwd(params, tokens, cfg)
+        logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+        targets = tokens[:, 1:]
+        ce = -jnp.take_along_axis(logp, targets[..., None], axis=-1).mean()
+        return (ce,)
+
+    return ev

@@ -1,0 +1,57 @@
+"""Config presets, spec-override parsing, and Eq. 8/Eq. 10 accounting."""
+
+import pytest
+
+from compile.configs import MoEConfig, parse_spec, preset, spec_tag
+
+
+def test_presets_mirror_table2():
+    c = preset("sm-32e")
+    assert (c.n_zero, c.n_copy, c.n_const) == (1, 1, 6)
+    assert c.n_experts == 40
+    v = preset("sm-32e:vanilla")
+    assert v.n_experts == 32 and v.variant == "vanilla"
+
+
+def test_parse_spec_overrides():
+    c = parse_spec("test@tau=0.25")
+    assert c.tau == 0.25
+    c = parse_spec("test@nz=0,nk=0,nc=1")
+    assert (c.n_zero, c.n_copy, c.n_const) == (0, 0, 1)
+    c = parse_spec("test@gr=0")
+    assert not c.gating_residual
+    c = parse_spec("test:vanilla@nf=1,k=1,ff=128")
+    assert c.variant == "vanilla" and c.n_ffn_experts == 1
+    assert c.top_k == 1 and c.d_ff == 128
+
+
+def test_spec_tags_are_deterministic_and_distinct():
+    tags = [spec_tag(s) for s in
+            ["test", "test:vanilla", "test@tau=0.25", "test@nz=1,nk=0,nc=0",
+             "test@gr=0"]]
+    assert tags[0] == "test_moepp"
+    assert tags[1] == "test_vanilla"
+    assert tags[2] == "test_moepp_tau0.25"
+    assert tags[3] == "test_moepp_nz1_nk0_nc0"
+    assert len(set(tags)) == len(tags)
+
+
+def test_capacity_scales_with_k_and_gamma():
+    c = preset("test")
+    f1, z1 = c.capacities(100)
+    import dataclasses
+    c2 = MoEConfig(**{**dataclasses.asdict(c), "capacity_factor": 2.2})
+    f2, z2 = c2.capacities(100)
+    assert f2 > f1 and z2 > z1
+
+
+def test_vanilla_capacity_homogeneous():
+    c = preset("test:vanilla")
+    f, z = c.capacities(100)
+    assert z == 0
+    assert f == int(1.1 * 2 * 100 / c.n_experts) + 1
+
+
+def test_unknown_preset_raises():
+    with pytest.raises(KeyError):
+        preset("nonexistent")

@@ -1,0 +1,191 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and the router's residual switch); tolerances are
+f32-tight since interpret-mode Pallas is numerically plain XLA.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.autodiff import (constant_expert_ad,
+                                      grouped_expert_ffn_ad,
+                                      router_scores_softmax_ad)
+from compile.kernels.expert_ffn import (expert_ffn, grouped_expert_ffn,
+                                        vmem_footprint_bytes)
+from compile.kernels.gating import router_scores_softmax
+from compile.kernels.zc_experts import constant_expert
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand(key, shape, scale=0.1):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------- expert FFN
+
+@settings(**SETTINGS)
+@given(b=st.sampled_from([1, 8, 33, 64]),
+       d=st.sampled_from([8, 32]),
+       f=st.sampled_from([16, 96]),
+       seed=st.integers(0, 2**16))
+def test_expert_ffn_matches_ref(b, d, f, seed):
+    x = rand(seed, (b, d), 1.0)
+    w1, w3, w2 = rand(seed + 1, (d, f)), rand(seed + 2, (d, f)), \
+        rand(seed + 3, (f, d))
+    np.testing.assert_allclose(
+        expert_ffn(x, w1, w3, w2), ref.expert_ffn_ref(x, w1, w3, w2),
+        rtol=2e-5, atol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(n=st.sampled_from([1, 3, 8]),
+       c=st.sampled_from([4, 16]),
+       d=st.sampled_from([8, 32]),
+       seed=st.integers(0, 2**16))
+def test_grouped_expert_ffn_matches_vmapped_ref(n, c, d, seed):
+    f = 2 * d
+    x = rand(seed, (n, c, d), 1.0)
+    w1, w3, w2 = rand(seed + 1, (n, d, f)), rand(seed + 2, (n, d, f)), \
+        rand(seed + 3, (n, f, d))
+    want = jax.vmap(ref.expert_ffn_ref)(x, w1, w3, w2)
+    np.testing.assert_allclose(grouped_expert_ffn(x, w1, w3, w2), want,
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_expert_ffn_tile_shapes_are_irrelevant():
+    """Different tilings must be numerically identical (pure refactor)."""
+    x = rand(0, (64, 32), 1.0)
+    w1, w3, w2 = rand(1, (32, 96)), rand(2, (32, 96)), rand(3, (96, 32))
+    a = expert_ffn(x, w1, w3, w2, b_tile=64, f_tile=96)
+    b = expert_ffn(x, w1, w3, w2, b_tile=16, f_tile=32)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_vmem_footprint_within_budget():
+    """DESIGN.md §8: default tiles must fit a 16 MiB VMEM at D=1024."""
+    assert vmem_footprint_bytes(1024) < 16 * 2**20
+
+
+# -------------------------------------------------------------------- router
+
+@settings(**SETTINGS)
+@given(t=st.sampled_from([1, 16, 64]),
+       d=st.sampled_from([8, 32]),
+       n=st.sampled_from([4, 12, 20]),
+       use_res=st.booleans(),
+       seed=st.integers(0, 2**16))
+def test_router_matches_ref(t, d, n, use_res, seed):
+    x = rand(seed, (t, d), 1.0)
+    w, wg = rand(seed + 1, (n, d)), rand(seed + 2, (n, n))
+    prev = rand(seed + 3, (t, n), 1.0)
+    probs, scores = router_scores_softmax(x, w, prev, wg,
+                                          use_residual=use_res)
+    want = ref.router_scores_ref(x, w, prev if use_res else None,
+                                 wg if use_res else None)
+    np.testing.assert_allclose(scores, want, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(probs, jax.nn.softmax(want, -1),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_router_probs_are_normalised():
+    probs, _ = router_scores_softmax(rand(0, (32, 16), 1.0),
+                                     rand(1, (8, 16)), jnp.zeros((32, 8)),
+                                     jnp.zeros((8, 8)), use_residual=False)
+    np.testing.assert_allclose(probs.sum(-1), np.ones(32), rtol=1e-5)
+
+
+def test_router_residual_changes_scores():
+    """With Wg nonzero the previous pathway must influence routing (Eq. 6)."""
+    x, w = rand(0, (16, 8), 1.0), rand(1, (4, 8))
+    wg = jnp.eye(4)
+    prev = rand(2, (16, 4), 5.0)
+    _, s_res = router_scores_softmax(x, w, prev, wg, use_residual=True)
+    _, s_none = router_scores_softmax(x, w, prev, wg, use_residual=False)
+    assert not np.allclose(s_res, s_none)
+    np.testing.assert_allclose(s_res - s_none, prev, rtol=1e-4, atol=1e-5)
+
+
+# ----------------------------------------------------------- constant expert
+
+@settings(**SETTINGS)
+@given(b=st.sampled_from([1, 16, 65]),
+       d=st.sampled_from([8, 32]),
+       seed=st.integers(0, 2**16))
+def test_constant_expert_matches_ref(b, d, seed):
+    x = rand(seed, (b, d), 1.0)
+    wc, v = rand(seed + 1, (2, d)), rand(seed + 2, (d,), 1.0)
+    np.testing.assert_allclose(constant_expert(x, wc, v),
+                               ref.constant_expert_ref(x, wc, v),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_constant_expert_is_convex_combination():
+    """Eq. 5: alphas sum to 1, so y - a1 x - a2 v == 0 for any alphas; with
+    Wc = 0, alphas = [.5, .5] exactly."""
+    d = 16
+    x = rand(0, (8, d), 1.0)
+    v = rand(1, (d,), 1.0)
+    y = constant_expert(x, jnp.zeros((2, d)), v)
+    np.testing.assert_allclose(y, 0.5 * x + 0.5 * v[None, :],
+                               rtol=1e-5, atol=1e-6)
+
+
+# -------------------------------------------------- zero/copy (no kernels)
+
+def test_zero_and_copy_refs():
+    x = rand(0, (8, 16), 1.0)
+    assert np.all(np.asarray(ref.zero_expert_ref(x)) == 0)
+    np.testing.assert_array_equal(ref.copy_expert_ref(x), x)
+
+
+# ------------------------------------------------------- autodiff wrappers
+
+def test_autodiff_wrappers_match_finite_differences():
+    """custom_vjp backward (ref vjp) must agree with numeric gradients."""
+    n, c, d = 2, 4, 6
+    f = 8
+    x = rand(0, (n, c, d), 0.5)
+    w1, w3, w2 = rand(1, (n, d, f)), rand(2, (n, d, f)), rand(3, (n, f, d))
+
+    def loss(w1):
+        return jnp.sum(grouped_expert_ffn_ad(x, w1, w3, w2) ** 2)
+
+    g = jax.grad(loss)(w1)
+    eps = 1e-3
+    e = jnp.zeros_like(w1).at[0, 1, 2].set(eps)
+    fd = (loss(w1 + e) - loss(w1 - e)) / (2 * eps)
+    np.testing.assert_allclose(g[0, 1, 2], fd, rtol=2e-2)
+
+
+def test_router_ad_gradients_flow_through_residual():
+    t, d, n = 8, 6, 4
+    x, w = rand(0, (t, d), 1.0), rand(1, (n, d))
+    prev, wg = rand(2, (t, n), 1.0), rand(3, (n, n))
+
+    def loss(wg):
+        probs, _ = router_scores_softmax_ad(x, w, prev, wg, True)
+        return jnp.sum(probs ** 2)
+
+    g = jax.grad(loss)(wg)
+    assert np.any(np.asarray(g) != 0)
+
+    def loss_nores(wg):
+        probs, _ = router_scores_softmax_ad(x, w, prev, wg, False)
+        return jnp.sum(probs ** 2)
+
+    g0 = jax.grad(loss_nores)(wg)
+    np.testing.assert_array_equal(np.asarray(g0), np.zeros_like(g0))
+
+
+def test_constant_expert_ad_grad_v():
+    d = 8
+    x = rand(0, (4, d), 1.0)
+    wc, v = rand(1, (2, d)), rand(2, (d,), 1.0)
+    g = jax.grad(lambda v: jnp.sum(constant_expert_ad(x, wc, v)))(v)
+    assert np.all(np.isfinite(np.asarray(g)))
+    assert np.any(np.asarray(g) != 0)

@@ -1,0 +1,177 @@
+"""L2 MoE++ layer semantics vs the per-token oracle, plus the paper's
+equations (7), (8) and the Table 1 complexity accounting."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import MoEConfig, preset
+from compile.kernels import ref
+from compile.moe_layer import (init_layer_params, moe_layer_fwd,
+                               moe_layer_fwd_ref, _positions_in_expert)
+
+SETTINGS = dict(max_examples=8, deadline=None)
+
+
+def mk(cfg_kw=None, t=32, seed=0):
+    cfg = preset("test")
+    if cfg_kw:
+        cfg = MoEConfig(**{**dataclasses.asdict(cfg), **cfg_kw})
+    params = init_layer_params(jax.random.PRNGKey(seed), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (t, cfg.d_model))
+    prev = jax.random.normal(jax.random.PRNGKey(seed + 2),
+                             (t, cfg.n_experts))
+    return cfg, params, x, prev
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 1000),
+       tau=st.sampled_from([0.1, 0.25, 0.5, 0.75, 1.0]),
+       t=st.sampled_from([16, 48]))
+def test_layer_matches_per_token_oracle(seed, tau, t):
+    cfg, params, x, prev = mk({"tau": tau}, t=t, seed=seed)
+    y, aux = moe_layer_fwd(params, x, prev, cfg)
+    y_ref, s_ref = moe_layer_fwd_ref(params, x, prev, cfg)
+    np.testing.assert_allclose(np.asarray(aux.scores), s_ref,
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-3, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 1000))
+def test_vanilla_layer_matches_oracle(seed):
+    cfg, params, x, _ = mk(None, seed=seed)
+    vcfg = preset("test:vanilla")
+    vparams = init_layer_params(jax.random.PRNGKey(seed), vcfg)
+    y, aux = moe_layer_fwd(vparams, x, None, vcfg)
+    y_ref, _ = moe_layer_fwd_ref(vparams, x, None, vcfg)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-3, atol=1e-4)
+
+
+def test_layer0_ignores_prev_scores_without_residual():
+    cfg, params, x, prev = mk()
+    y_none, _ = moe_layer_fwd(params, x, None, cfg)
+    cfg_off = MoEConfig(**{**dataclasses.asdict(cfg),
+                           "gating_residual": False})
+    y_off, _ = moe_layer_fwd(params, x, prev, cfg_off)
+    np.testing.assert_allclose(np.asarray(y_none), np.asarray(y_off),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_gating_residual_changes_routing():
+    cfg, params, x, prev = mk()
+    params = params._replace(router_wg=jnp.eye(cfg.n_experts) * 10.0)
+    _, aux_res = moe_layer_fwd(params, x, prev, cfg)
+    _, aux_none = moe_layer_fwd(params, x, None, cfg)
+    assert not np.allclose(np.asarray(aux_res.scores),
+                           np.asarray(aux_none.scores))
+
+
+# ------------------------------------------------------------------ Eq. 7/8
+
+def test_capacity_formula_matches_eq8():
+    cfg = preset("sm-8e")
+    t = 1000
+    ffn_cap, zc_cap = cfg.capacities(t)
+    gamma, tau, k = cfg.capacity_factor, cfg.tau, cfg.top_k
+    denom = tau * cfg.n_ffn_experts + cfg.n_zc
+    assert ffn_cap == int(gamma * k * tau * t / denom) + 1
+    assert zc_cap == int(gamma * k * t / denom) + 1
+    # Smaller tau -> relatively more ZC capacity (paper Sec. 3.3).
+    cfg_small = MoEConfig(**{**dataclasses.asdict(cfg), "tau": 0.1})
+    f2, z2 = cfg_small.capacities(t)
+    assert z2 / f2 > zc_cap / ffn_cap
+
+
+def test_capacity_is_enforced_and_drops_counted():
+    # A router forced to send everything to expert 0: all but C tokens drop.
+    cfg, params, x, _ = mk(t=48)
+    x = jnp.abs(x) + 0.1  # positive mean => the +100 row always wins top-1
+    biased = params._replace(
+        router_w=jnp.zeros_like(params.router_w)
+        .at[0].set(100.0 * jnp.ones(cfg.d_model) / cfg.d_model))
+    y, aux = moe_layer_fwd(biased, x, None, cfg)
+    counts = np.asarray(aux.expert_counts)
+    assert counts[0] == 48  # everyone wants expert 0 in slot 0
+    assert float(aux.dropped) > 0
+    ffn_cap, _ = cfg.capacities(48)
+    # Surviving expert-0 load is exactly the capacity.
+    y_ref, _ = moe_layer_fwd_ref(biased, x, None, cfg)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-3, atol=1e-4)
+
+
+def test_balance_loss_matches_ref_formula():
+    cfg, params, x, prev = mk(t=64)
+    y, aux = moe_layer_fwd(params, x, prev, cfg)
+    probs = jax.nn.softmax(aux.scores, axis=-1)
+    _, top_idx = jax.lax.top_k(probs, cfg.top_k)
+    want = ref.load_balance_loss_ref(aux.scores, top_idx,
+                                     cfg.n_ffn_experts, cfg.tau)
+    np.testing.assert_allclose(float(aux.balance_loss), float(want),
+                               rtol=1e-4)
+
+
+def test_balance_loss_tau_weighting():
+    """Loss must weight ZC experts by tau (Eq. 7): concentrating load on ZC
+    experts is cheaper (in loss) when tau is small."""
+    cfg, params, x, prev = mk(t=64)
+    zc_idx = cfg.n_ffn_experts  # first zero expert
+    biased = params._replace(
+        router_w=jnp.zeros_like(params.router_w)
+        .at[zc_idx].set(jnp.ones(cfg.d_model)))
+    lo = MoEConfig(**{**dataclasses.asdict(cfg), "tau": 0.1})
+    hi = MoEConfig(**{**dataclasses.asdict(cfg), "tau": 1.0})
+    _, aux_lo = moe_layer_fwd(biased, x, None, lo)
+    _, aux_hi = moe_layer_fwd(biased, x, None, hi)
+    assert float(aux_lo.balance_loss) < float(aux_hi.balance_loss)
+
+
+# ------------------------------------------------------------- positions
+
+def test_positions_slot_major_priority():
+    """Top-1 assignments must claim capacity before any top-2 assignment."""
+    t, k, n = 4, 2, 2
+    mask = np.zeros((t, k, n), np.float32)
+    mask[:, 0, 0] = 1  # all tokens top-1 -> expert 0
+    mask[:, 1, 1] = 1  # all tokens top-2 -> expert 1
+    mask[0, 1, 0] = 1  # token 0 ALSO top-2 -> expert 0 (illegal dup, but
+    mask[0, 1, 1] = 0  # exercises ordering)
+    pos = np.asarray(_positions_in_expert(jnp.asarray(mask)))
+    # token 0's slot-1 assignment to expert 0 queues after all 4 slot-0 ones.
+    assert pos[0, 1, 0] == 4
+    assert list(pos[:, 0, 0]) == [0, 1, 2, 3]
+
+
+# -------------------------------------------------------------- ZC experts
+
+def test_zero_expert_routes_contribute_nothing():
+    """Forcing all top-1 to the zero expert must halve the layer output to
+    just the top-2 contribution (top-2 degrades to top-1, Sec. 3.1)."""
+    cfg, params, x, _ = mk(t=16)
+    x = jnp.abs(x) + 0.1  # positive mean => the +100 row always wins top-1
+    zc0 = cfg.n_ffn_experts
+    biased = params._replace(
+        router_w=jnp.zeros_like(params.router_w)
+        .at[zc0].set(jnp.ones(cfg.d_model) * 100 / cfg.d_model))
+    y, aux = moe_layer_fwd(biased, x, None, cfg)
+    y_ref, _ = moe_layer_fwd_ref(biased, x, None, cfg)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-3, atol=1e-4)
+    counts = np.asarray(aux.expert_counts)
+    assert counts[zc0] == 16
+
+
+def test_ffn_per_token_below_topk_for_moepp():
+    """With ZC experts present some top-2 slots land on them, so mean FFN
+    experts per token < K — the paper's computation-saving mechanism."""
+    cfg, params, x, prev = mk(t=64)
+    _, aux = moe_layer_fwd(params, x, prev, cfg)
+    assert float(aux.ffn_per_token) < cfg.top_k
+
+    vcfg = preset("test:vanilla")
+    vparams = init_layer_params(jax.random.PRNGKey(0), vcfg)
+    _, vaux = moe_layer_fwd(vparams, x, None, vcfg)
+    assert float(vaux.ffn_per_token) > float(aux.ffn_per_token)

@@ -1,0 +1,69 @@
+"""L2 train step: loss decreases, schedule shape, optimizer invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.configs import preset
+from compile.train_step import (MAX_LR, FINAL_LR, WARMUP_STEPS, TOTAL_STEPS,
+                                init_opt_state, loss_fn, lr_schedule,
+                                make_eval_fn, train_step)
+from compile.model import init_params
+
+
+def test_lr_schedule_shape():
+    s = jnp.arange(0, TOTAL_STEPS + 500)
+    lr = np.asarray(jax.vmap(lr_schedule)(s))
+    assert lr[1] < lr[WARMUP_STEPS // 2] < lr[WARMUP_STEPS]
+    np.testing.assert_allclose(lr[WARMUP_STEPS], MAX_LR, rtol=1e-3)
+    np.testing.assert_allclose(lr[TOTAL_STEPS:], FINAL_LR, rtol=1e-3)
+    assert np.all(np.diff(lr[WARMUP_STEPS:]) <= 1e-9)  # monotone decay
+
+
+def test_loss_decreases_over_steps():
+    cfg = preset("test")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = init_opt_state(params)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, cfg.seq_len),
+                              0, cfg.vocab_size)
+    step = jax.jit(lambda p, o, t: train_step(p, o, t, cfg))
+    first = None
+    for i in range(12):
+        params, opt, m = step(params, opt, toks)
+        if first is None:
+            first = float(m.loss)
+    assert float(m.loss) < first, (first, float(m.loss))
+    assert int(opt.step) == 12
+
+
+def test_grad_norm_finite_and_clipped_update():
+    cfg = preset("test")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = init_opt_state(params)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, cfg.seq_len),
+                              0, cfg.vocab_size)
+    _, _, m = jax.jit(lambda p, o, t: train_step(p, o, t, cfg))(
+        params, opt, toks)
+    assert np.isfinite(float(m.grad_norm))
+    assert float(m.loss) > 0
+
+
+def test_balance_loss_enters_objective():
+    cfg = preset("test")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, cfg.seq_len),
+                              0, cfg.vocab_size)
+    loss, (ce, aux) = loss_fn(params, toks, cfg)
+    np.testing.assert_allclose(
+        float(loss), float(ce) + cfg.balance_coef * float(aux.balance_loss),
+        rtol=1e-5)
+
+
+def test_eval_matches_ce_of_loss_fn():
+    cfg = preset("test")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, cfg.seq_len),
+                              0, cfg.vocab_size)
+    _, (ce, _) = loss_fn(params, toks, cfg)
+    (ce2,) = make_eval_fn(cfg)(params, toks)
+    np.testing.assert_allclose(float(ce), float(ce2), rtol=1e-5)

@@ -1,0 +1,45 @@
+//! Bench: coordinator overhead — routing + dispatch-plan construction
+//! without expert compute. This is the part of the serving engine that
+//! must stay negligible next to the FFN experts (§Perf target: < 20% of
+//! expert time at sm scale).
+//!
+//!     cargo bench --bench dispatch
+
+use std::time::Duration;
+
+use moepp::bench::harness::bench;
+use moepp::config::MoeConfig;
+use moepp::coordinator::dispatch::DispatchPlan;
+use moepp::moe::router::route;
+use moepp::moe::weights::MoeLayerWeights;
+use moepp::tensor::Tensor;
+use moepp::util::rng::Rng;
+
+fn main() {
+    println!("== dispatch: routing + plan construction ==");
+    for preset in ["sm-8e", "sm-32e"] {
+        let cfg = MoeConfig::preset(preset);
+        let mut rng = Rng::new(0);
+        let w = MoeLayerWeights::init(&mut rng, &cfg);
+        for t in [64usize, 256, 1024] {
+            let x = Tensor::randn(&mut rng, &[t, cfg.d_model], 1.0);
+            let r = bench(
+                &format!("route {preset} t={t}"),
+                2, 10, Duration::from_millis(300),
+                || {
+                    let _ = route(&x, &w.router, None, cfg.top_k);
+                },
+            );
+            println!("{}", r.report());
+            let routing = route(&x, &w.router, None, cfg.top_k);
+            let r = bench(
+                &format!("plan  {preset} t={t}"),
+                2, 10, Duration::from_millis(300),
+                || {
+                    let _ = DispatchPlan::build(&routing, &cfg, t);
+                },
+            );
+            println!("{}", r.report());
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! Bench: expert-forward time, MoE vs MoE++ across tau — the micro version
+//! of Table 3's timing columns. (Hand-rolled harness; criterion is not
+//! available offline.)
+//!
+//!     cargo bench --bench expert_forward
+
+use moepp::bench::tables::bench_engine;
+use moepp::config::MoeConfig;
+use moepp::coordinator::engine::MoeEngine;
+
+fn main() -> anyhow::Result<()> {
+    println!("== expert_forward: MoE vs MoE++ (native backend) ==");
+    for preset in ["sm-8e", "sm-16e"] {
+        let vcfg = MoeConfig::preset(&format!("{preset}:vanilla"));
+        let vengine = MoeEngine::native(vcfg, 0);
+        let v = bench_engine(&format!("vanilla {preset} t=256"),
+                             &vengine, 256, 0)?;
+        println!("{}", v.report());
+        for tau in [0.1, 0.5, 0.75] {
+            let cfg = MoeConfig { tau, ..MoeConfig::preset(preset) };
+            let engine = MoeEngine::native(cfg, 0);
+            let r = bench_engine(
+                &format!("moepp   {preset} t=256 tau={tau}"),
+                &engine, 256, 0)?;
+            println!(
+                "{}   (+{:.1}% vs vanilla)",
+                r.report(),
+                (v.mean_s / r.mean_s - 1.0) * 100.0
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Bench: tensor substrate hot loops (matmul_bt for the router, the FFN
+//! expert forward) — the §Perf L3 roofline reference.
+//!
+//!     cargo bench --bench tensor_ops
+
+use std::time::Duration;
+
+use moepp::bench::harness::bench;
+use moepp::moe::experts::FfnExpert;
+use moepp::tensor::ops::matmul_bt;
+use moepp::tensor::Tensor;
+use moepp::util::rng::Rng;
+
+fn main() {
+    println!("== tensor_ops ==");
+    let mut rng = Rng::new(0);
+    for (m, d, n) in [(256, 128, 12), (256, 256, 20), (1024, 128, 12)] {
+        let x = Tensor::randn(&mut rng, &[m, d], 1.0);
+        let w = Tensor::randn(&mut rng, &[n, d], 1.0);
+        let r = bench(
+            &format!("router matmul_bt {m}x{d} @ {n}x{d}^T"),
+            3, 10, Duration::from_millis(300),
+            || {
+                let _ = matmul_bt(&x, &w);
+            },
+        );
+        let flops = 2.0 * m as f64 * d as f64 * n as f64;
+        println!("{}   {:.2} GFLOP/s", r.report(),
+                 flops / r.mean_s / 1e9);
+    }
+    for (d, f, b) in [(128, 352, 32), (256, 704, 32), (128, 352, 128)] {
+        let e = FfnExpert::init(&mut rng, d, f);
+        let x = Tensor::randn(&mut rng, &[b, d], 1.0);
+        let r = bench(
+            &format!("ffn expert d={d} f={f} b={b}"),
+            3, 10, Duration::from_millis(300),
+            || {
+                let _ = e.forward(&x);
+            },
+        );
+        let flops = 6.0 * b as f64 * d as f64 * f as f64;
+        println!("{}   {:.2} GFLOP/s", r.report(),
+                 flops / r.mean_s / 1e9);
+    }
+}

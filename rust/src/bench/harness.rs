@@ -1,0 +1,92 @@
+//! Timing harness: adaptive iteration count, warmup, robust statistics.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:40} {:>10} /iter  (median {}, p95 {}, min {}, n={})",
+            self.name,
+            crate::util::human_duration(self.mean_s),
+            crate::util::human_duration(self.median_s),
+            crate::util::human_duration(self.p95_s),
+            crate::util::human_duration(self.min_s),
+            self.iters
+        )
+    }
+}
+
+/// Benchmark `f`, aiming for ~`target` total measured time (at least
+/// `min_iters` iterations), after `warmup` unmeasured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, min_iters: usize,
+                         target: Duration, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    // Estimate a single-iter time to size the run.
+    let t0 = Instant::now();
+    f();
+    let est = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target.as_secs_f64() / est) as usize)
+        .clamp(min_iters.max(1), 10_000);
+    let mut samples = Vec::with_capacity(iters + 1);
+    samples.push(est);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    summarize(name, samples)
+}
+
+/// Summarise externally-collected per-iteration samples.
+pub fn summarize(name: &str, mut samples: Vec<f64>) -> BenchResult {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean_s: mean,
+        median_s: samples[n / 2],
+        p95_s: samples[((n - 1) as f64 * 0.95).round() as usize],
+        min_s: samples[0],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut x = 0u64;
+        let r = bench("spin", 1, 5, Duration::from_millis(10), || {
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_s > 0.0);
+        assert!(r.min_s <= r.median_s && r.median_s <= r.p95_s);
+        assert!(r.report().contains("spin"));
+    }
+
+    #[test]
+    fn summarize_stats() {
+        let r = summarize("s", vec![3.0, 1.0, 2.0]);
+        assert_eq!(r.min_s, 1.0);
+        assert_eq!(r.median_s, 2.0);
+        assert!((r.mean_s - 2.0).abs() < 1e-12);
+    }
+}

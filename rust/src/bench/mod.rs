@@ -1,0 +1,8 @@
+//! Benchmark harness substrate (no criterion offline): warmup + timed
+//! iterations with mean/median/p95 statistics, plus the workload
+//! generators shared by the table/figure reproduction binaries.
+
+pub mod harness;
+pub mod quality;
+pub mod tables;
+pub mod workload;

@@ -1,0 +1,132 @@
+//! Quality-side reproductions: train model-variant artifacts on the
+//! synthetic corpus at matched budget, evaluate held-out perplexity.
+//!
+//! Covers Table 3's benchmark columns (tau sweep), Table 4 (vs dense models
+//! of equal/greater activated params), Table 5 (expert-type ablation),
+//! Table 6 (gating residuals), and Fig. 3 (n_const sweep).
+
+use anyhow::Result;
+
+use crate::runtime::Runtime;
+use crate::training::data::Corpus;
+use crate::training::trainer::Trainer;
+use crate::util::rng::Rng;
+
+/// Result of one trained variant.
+#[derive(Clone, Debug)]
+pub struct QualityRow {
+    pub tag: String,
+    pub steps: usize,
+    pub final_loss: f64,
+    pub eval_ce: f64,
+    pub eval_ppl: f64,
+    pub mean_ffn_per_token: f64,
+    pub mean_drop: f64,
+    pub activated_frac: f64,
+}
+
+/// Train `tag` for `steps` on the shared corpus; eval on held-out batches.
+pub fn train_and_eval(
+    rt: &Runtime,
+    tag: &str,
+    steps: usize,
+    seed: u64,
+) -> Result<QualityRow> {
+    let mut trainer = Trainer::new(rt, tag, seed as i32)?;
+    let cfg = rt
+        .manifest
+        .configs
+        .get(tag)
+        .ok_or_else(|| anyhow::anyhow!("no config for tag {tag}"))?;
+    let corpus = Corpus::new(cfg.vocab_size, 4, 1234);
+    let mut rng = Rng::new(seed ^ 0xDA7A);
+    let history = trainer.train(&corpus, steps, &mut rng, steps / 5)?;
+    // Held-out eval: fresh RNG stream disjoint from training.
+    let mut eval_rng = Rng::new(0xE7A1);
+    let (ce, ppl) = trainer.eval(&corpus, 8, &mut eval_rng)?;
+    let tail = &history[history.len().saturating_sub(10)..];
+    let mean = |f: fn(&crate::training::trainer::StepMetrics) -> f64| {
+        tail.iter().map(f).sum::<f64>() / tail.len() as f64
+    };
+    Ok(QualityRow {
+        tag: tag.to_string(),
+        steps,
+        final_loss: mean(|m| m.loss),
+        eval_ce: ce,
+        eval_ppl: ppl,
+        mean_ffn_per_token: mean(|m| m.ffn_per_token),
+        mean_drop: mean(|m| m.dropped),
+        activated_frac: cfg.ffn_token_fraction(),
+    })
+}
+
+pub fn render_quality(title: &str, rows: &[QualityRow]) -> String {
+    let mut s = format!("== {title} ==\n");
+    s.push_str(&format!(
+        "{:<34} {:>6} {:>10} {:>10} {:>9} {:>8}\n",
+        "variant", "steps", "final loss", "eval ppl", "ffn/tok", "drop"
+    ));
+    for r in rows {
+        s.push_str(&format!(
+            "{:<34} {:>6} {:>10.4} {:>10.3} {:>9.2} {:>8.1}\n",
+            r.tag, r.steps, r.final_loss, r.eval_ppl,
+            r.mean_ffn_per_token, r.mean_drop
+        ));
+    }
+    s
+}
+
+/// Tags for the Table 5 expert-subset ablation (vanilla baseline + 7
+/// subsets + full model), matching the paper's 8 rows.
+pub fn table5_tags() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("test_vanilla", "baseline (no ZC experts)"),
+        ("test_moepp_nz1_nk0_nc0", "zero only"),
+        ("test_moepp_nz0_nk1_nc0", "copy only"),
+        ("test_moepp_nz0_nk0_nc1", "const only"),
+        ("test_moepp_nz1_nk1_nc0", "zero+copy"),
+        ("test_moepp_nz1_nk0_nc1", "zero+const"),
+        ("test_moepp_nz0_nk1_nc1", "copy+const"),
+        ("test_moepp", "zero+copy+const (full)"),
+    ]
+}
+
+/// Tags for the Table 3 tau sweep (quality columns).
+pub fn table3_quality_tags() -> Vec<String> {
+    let mut v: Vec<String> = [0.1, 0.25, 0.5, 1.0]
+        .iter()
+        .map(|t| format!("test_moepp_tau{t}"))
+        .collect();
+    v.push("test_moepp".to_string()); // tau = 0.75 default
+    v.insert(0, "test_vanilla".to_string());
+    v
+}
+
+/// Tags for Fig. 3 (n_const sweep; nc=2 is the base model).
+pub fn fig3_tags() -> Vec<(usize, String)> {
+    vec![
+        (1, "test_moepp_nc1".into()),
+        (2, "test_moepp".into()),
+        (4, "test_moepp_nc4".into()),
+        (6, "test_moepp_nc6".into()),
+        (8, "test_moepp_nc8".into()),
+    ]
+}
+
+/// Tags for Table 4: MoE++ vs dense models of growing activated params.
+pub fn table4_tags() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("test_vanilla_nf1_k1_ff64", "dense ~1x activated"),
+        ("test_vanilla_nf1_k1_ff128", "dense ~2x activated"),
+        ("test_vanilla_nf1_k1_ff224", "dense ~3.5x activated"),
+        ("test_moepp", "MoE++ (<=1x activated)"),
+    ]
+}
+
+/// Table 6 tags.
+pub fn table6_tags() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("test_moepp_gr0", "MoE++ w/o gating residuals"),
+        ("test_moepp", "MoE++ w/ gating residuals"),
+    ]
+}

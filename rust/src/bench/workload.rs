@@ -1,0 +1,79 @@
+//! Workload generators for the table/figure benchmarks: token-batch
+//! streams (hidden-state batches for the expert-forward benches) and
+//! serving request traces with arrival patterns.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// A stream of [T, D] hidden-state batches (the expert-forward workload).
+pub fn hidden_batches(rng: &mut Rng, n_batches: usize, t: usize, d: usize)
+    -> Vec<Tensor> {
+    (0..n_batches)
+        .map(|_| Tensor::randn(rng, &[t, d], 1.0))
+        .collect()
+}
+
+/// Serving trace: request sizes drawn from a bounded log-ish distribution
+/// (mix of short decode-like and long prefill-like requests).
+pub fn request_sizes(rng: &mut Rng, n: usize, max: usize) -> Vec<usize> {
+    (0..n)
+        .map(|_| {
+            if rng.next_f32() < 0.7 {
+                1 + rng.below(8.min(max)) // decode-ish
+            } else {
+                1 + rng.below(max) // prefill-ish
+            }
+        })
+        .collect()
+}
+
+/// Mixture weights biased token stream: scales hidden rows so different
+/// "tasks" prefer different experts (Fig. 4 workload).
+pub fn task_streams(rng: &mut Rng, tasks: &[&str], t: usize, d: usize)
+    -> Vec<(String, Tensor)> {
+    tasks
+        .iter()
+        .enumerate()
+        .map(|(i, name)| {
+            let mut x = Tensor::randn(rng, &[t, d], 1.0);
+            // Shift a task-specific subspace so routing differs by task.
+            for row in 0..t {
+                for j in 0..d / 4 {
+                    x.data[row * d + (j + i * (d / 4)) % d] += 1.5;
+                }
+            }
+            (name.to_string(), x)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_shapes() {
+        let mut rng = Rng::new(0);
+        let b = hidden_batches(&mut rng, 3, 16, 8);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b[0].shape, vec![16, 8]);
+    }
+
+    #[test]
+    fn request_sizes_bounded() {
+        let mut rng = Rng::new(1);
+        let sizes = request_sizes(&mut rng, 1000, 64);
+        assert!(sizes.iter().all(|&s| (1..=64).contains(&s)));
+        // Mostly short.
+        let short = sizes.iter().filter(|&&s| s <= 8).count();
+        assert!(short > 500);
+    }
+
+    #[test]
+    fn task_streams_distinct() {
+        let mut rng = Rng::new(2);
+        let s = task_streams(&mut rng, &["a", "b"], 8, 16);
+        assert_eq!(s.len(), 2);
+        assert_ne!(s[0].1.data, s[1].1.data);
+    }
+}

@@ -1,0 +1,144 @@
+//! All-to-all communication accounting + analytic α–β cost.
+
+use super::topology::Topology;
+
+/// Per-(src, dst) byte counts for one all-to-all phase.
+#[derive(Clone, Debug)]
+pub struct TrafficMatrix {
+    pub n: usize,
+    pub bytes: Vec<u64>, // row-major [src][dst], diagonal = local (free)
+}
+
+impl TrafficMatrix {
+    pub fn new(n: usize) -> TrafficMatrix {
+        TrafficMatrix { n, bytes: vec![0; n * n] }
+    }
+
+    pub fn add(&mut self, src: usize, dst: usize, bytes: u64) {
+        self.bytes[src * self.n + dst] += bytes;
+    }
+
+    pub fn total_offdiag(&self) -> u64 {
+        let mut t = 0;
+        for s in 0..self.n {
+            for d in 0..self.n {
+                if s != d {
+                    t += self.bytes[s * self.n + d];
+                }
+            }
+        }
+        t
+    }
+
+    pub fn sent_by(&self, src: usize) -> u64 {
+        (0..self.n)
+            .filter(|&d| d != src)
+            .map(|d| self.bytes[src * self.n + d])
+            .sum()
+    }
+
+    pub fn received_by(&self, dst: usize) -> u64 {
+        (0..self.n)
+            .filter(|&s| s != dst)
+            .map(|s| self.bytes[s * self.n + dst])
+            .sum()
+    }
+
+    /// α–β all-to-all time: latency once (messages overlap) plus the
+    /// bandwidth term of the most loaded device port (max of send/recv).
+    pub fn alltoall_time(&self, topo: &Topology) -> f64 {
+        if self.total_offdiag() == 0 {
+            return 0.0;
+        }
+        let worst = (0..self.n)
+            .map(|d| self.sent_by(d).max(self.received_by(d)))
+            .max()
+            .unwrap_or(0);
+        topo.link.alpha_s + topo.link.beta_s_per_byte * worst as f64
+    }
+}
+
+/// Traffic of one MoE layer step: dispatch (tokens to expert owners) and
+/// combine (outputs back home). Symmetric in bytes.
+#[derive(Clone, Debug)]
+pub struct LayerTraffic {
+    pub dispatch: TrafficMatrix,
+    pub combine: TrafficMatrix,
+}
+
+impl LayerTraffic {
+    pub fn new(n: usize) -> LayerTraffic {
+        LayerTraffic {
+            dispatch: TrafficMatrix::new(n),
+            combine: TrafficMatrix::new(n),
+        }
+    }
+
+    /// Record one (token, expert) assignment's traffic; `token_bytes` is
+    /// d_model * 4.
+    pub fn record_assignment(
+        &mut self,
+        home: usize,
+        owner: usize,
+        token_bytes: u64,
+    ) {
+        self.dispatch.add(home, owner, token_bytes);
+        self.combine.add(owner, home, token_bytes);
+    }
+
+    pub fn total_time(&self, topo: &Topology) -> f64 {
+        self.dispatch.alltoall_time(topo) + self.combine.alltoall_time(topo)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.dispatch.total_offdiag() + self.combine.total_offdiag()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_conservation() {
+        let mut m = TrafficMatrix::new(3);
+        m.add(0, 1, 100);
+        m.add(0, 2, 50);
+        m.add(1, 0, 25);
+        m.add(2, 2, 999); // diagonal: local, excluded
+        assert_eq!(m.total_offdiag(), 175);
+        assert_eq!(m.sent_by(0), 150);
+        assert_eq!(m.received_by(0), 25);
+        assert_eq!(m.received_by(2), 50);
+    }
+
+    #[test]
+    fn empty_traffic_is_free() {
+        let m = TrafficMatrix::new(4);
+        assert_eq!(m.alltoall_time(&Topology::new(4)), 0.0);
+    }
+
+    #[test]
+    fn alltoall_time_scales_with_worst_port() {
+        let topo = Topology::new(2);
+        let mut a = TrafficMatrix::new(2);
+        a.add(0, 1, 1_000_000);
+        let mut b = TrafficMatrix::new(2);
+        b.add(0, 1, 2_000_000);
+        assert!(b.alltoall_time(&topo) > a.alltoall_time(&topo));
+        // Bandwidth term dominates latency at MB scale.
+        let want = topo.link.alpha_s
+            + topo.link.beta_s_per_byte * 2_000_000.0;
+        assert!((b.alltoall_time(&topo) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dispatch_and_combine_are_symmetric() {
+        let mut lt = LayerTraffic::new(4);
+        lt.record_assignment(0, 3, 512);
+        lt.record_assignment(1, 1, 512); // local: on diagonal
+        assert_eq!(lt.dispatch.total_offdiag(), 512);
+        assert_eq!(lt.combine.total_offdiag(), 512);
+        assert_eq!(lt.total_bytes(), 1024);
+    }
+}

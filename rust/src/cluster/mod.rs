@@ -1,0 +1,24 @@
+//! Simulated multi-GPU expert-parallel cluster — the substrate behind the
+//! paper's *deployment friendly* claim.
+//!
+//! The paper's argument (Sec. 1, 3.4): FFN experts are sharded across
+//! devices, so top-K routing forces an all-to-all token exchange and is
+//! exposed to expert load imbalance; zero-computation experts have ~no
+//! parameters, so **every device holds a replica of all ZC experts** and a
+//! ZC-routed token never leaves its device.
+//!
+//! We reproduce that mechanism with:
+//!
+//! * [`topology`] — device count, expert placement (round-robin sharding of
+//!   FFN experts, ZC experts replicated), and an α–β link model;
+//! * [`comm`]     — all-to-all traffic accounting + analytic cost;
+//! * [`worker`]   — persistent worker threads that *actually execute* their
+//!   FFN expert shards (native backend), so compute times are measured, not
+//!   assumed;
+//! * [`sim`]      — the per-layer expert-parallel step: dispatch → traffic
+//!   matrix → worker execution → makespan = max_d(compute_d) + comm.
+
+pub mod comm;
+pub mod sim;
+pub mod topology;
+pub mod worker;

@@ -1,0 +1,168 @@
+//! Persistent worker threads: each owns the FFN experts of one simulated
+//! device (plus a replica of all ZC experts) and executes its micro-batches
+//! with measured wall-clock compute time.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::config::MoeConfig;
+use crate::moe::experts::FfnExpert;
+use crate::tensor::Tensor;
+
+/// One FFN micro-batch for a worker: (layer-local) expert id owned by this
+/// worker, gathered input rows, gates, original token ids.
+pub struct WorkUnit {
+    pub expert: usize,
+    pub x: Tensor, // [n, D] gathered rows
+    pub gates: Vec<f32>,
+    pub tokens: Vec<usize>,
+}
+
+/// Result of a work unit: gated outputs to scatter-add at the token homes.
+pub struct WorkResult {
+    pub tokens: Vec<usize>,
+    pub y: Tensor, // [n, D], already gate-scaled
+    pub compute_s: f64,
+}
+
+enum Msg {
+    Work(Vec<WorkUnit>, Sender<Vec<WorkResult>>),
+    Shutdown,
+}
+
+/// Handle to one device worker thread.
+pub struct Worker {
+    tx: Sender<Msg>,
+    handle: Option<JoinHandle<()>>,
+    pub device: usize,
+    pub owned_experts: Vec<usize>,
+}
+
+impl Worker {
+    /// Spawn a worker owning `experts` (global FFN ids -> weights).
+    pub fn spawn(
+        device: usize,
+        owned_experts: Vec<usize>,
+        weights: Vec<FfnExpert>,
+        _cfg: &MoeConfig,
+    ) -> Worker {
+        assert_eq!(owned_experts.len(), weights.len());
+        let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
+        let owned = owned_experts.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("moepp-worker-{device}"))
+            .spawn(move || {
+                let index: std::collections::HashMap<usize, usize> = owned
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &e)| (e, i))
+                    .collect();
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Shutdown => break,
+                        Msg::Work(units, reply) => {
+                            let results = units
+                                .into_iter()
+                                .map(|u| {
+                                    let t0 = Instant::now();
+                                    let w = &weights[index[&u.expert]];
+                                    let mut y = w.forward(&u.x);
+                                    // Gate-scale rows before shipping back.
+                                    let d = y.shape[1];
+                                    for (i, g) in u.gates.iter().enumerate()
+                                    {
+                                        for v in
+                                            &mut y.data[i * d..(i + 1) * d]
+                                        {
+                                            *v *= g;
+                                        }
+                                    }
+                                    WorkResult {
+                                        tokens: u.tokens,
+                                        y,
+                                        compute_s: t0
+                                            .elapsed()
+                                            .as_secs_f64(),
+                                    }
+                                })
+                                .collect();
+                            let _ = reply.send(results);
+                        }
+                    }
+                }
+            })
+            .expect("spawn worker");
+        Worker { tx, handle: Some(handle), device, owned_experts }
+    }
+
+    /// Submit micro-batches; returns a receiver for the results.
+    pub fn submit(&self, units: Vec<WorkUnit>)
+        -> Receiver<Vec<WorkResult>> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Msg::Work(units, reply_tx))
+            .expect("worker alive");
+        reply_rx
+    }
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn worker_computes_gated_ffn() {
+        let cfg = MoeConfig::preset("test");
+        let mut rng = Rng::new(0);
+        let e = FfnExpert::init(&mut rng, cfg.d_model, cfg.d_ff);
+        let want_raw =
+            e.forward(&Tensor::full(&[2, cfg.d_model], 0.5));
+        let w = Worker::spawn(0, vec![3], vec![e], &cfg);
+        let rx = w.submit(vec![WorkUnit {
+            expert: 3,
+            x: Tensor::full(&[2, cfg.d_model], 0.5),
+            gates: vec![1.0, 0.5],
+            tokens: vec![10, 11],
+        }]);
+        let results = rx.recv().unwrap();
+        assert_eq!(results.len(), 1);
+        let r = &results[0];
+        assert_eq!(r.tokens, vec![10, 11]);
+        assert!(r.compute_s >= 0.0);
+        let d = cfg.d_model;
+        for j in 0..d {
+            assert!((r.y.data[j] - want_raw.data[j]).abs() < 1e-5);
+            assert!((r.y.data[d + j] - 0.5 * want_raw.data[d + j]).abs()
+                < 1e-5);
+        }
+    }
+
+    #[test]
+    fn multiple_submissions_in_order() {
+        let cfg = MoeConfig::preset("test");
+        let mut rng = Rng::new(1);
+        let e = FfnExpert::init(&mut rng, cfg.d_model, cfg.d_ff);
+        let w = Worker::spawn(1, vec![0], vec![e], &cfg);
+        for _ in 0..5 {
+            let rx = w.submit(vec![WorkUnit {
+                expert: 0,
+                x: Tensor::zeros(&[1, cfg.d_model]),
+                gates: vec![1.0],
+                tokens: vec![0],
+            }]);
+            let r = rx.recv().unwrap();
+            assert_eq!(r.len(), 1);
+        }
+    }
+}

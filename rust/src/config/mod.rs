@@ -1,0 +1,342 @@
+//! Configuration system: the Rust mirror of `python/compile/configs.py`
+//! plus runtime/serving settings. Presets replicate the paper's Table 2
+//! structure at reproduction scale; `MoeConfig::from_json` loads the
+//! authoritative copy the AOT pipeline wrote into `artifacts/manifest.json`
+//! so L2 and L3 can never drift.
+
+use crate::util::json::Json;
+
+/// Expert kinds in an MoE++ layer (paper Sec. 3.1). Order within a layer is
+/// always: FFN experts, zero, copy, constant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ExpertKind {
+    Ffn,
+    Zero,
+    Copy,
+    Constant,
+}
+
+impl ExpertKind {
+    pub fn is_zero_computation(self) -> bool {
+        !matches!(self, ExpertKind::Ffn)
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ExpertKind::Ffn => "ffn",
+            ExpertKind::Zero => "zero",
+            ExpertKind::Copy => "copy",
+            ExpertKind::Constant => "const",
+        }
+    }
+}
+
+/// Model + MoE hyper-parameters (mirror of python MoEConfig).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MoeConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub n_ffn_experts: usize,
+    pub n_zero: usize,
+    pub n_copy: usize,
+    pub n_const: usize,
+    pub top_k: usize,
+    pub tau: f64,
+    pub capacity_factor: f64,
+    pub balance_coef: f64,
+    pub gating_residual: bool,
+    pub vanilla: bool,
+}
+
+impl Default for MoeConfig {
+    fn default() -> Self {
+        // = python preset("sm-8e"), the scaled MoE++ 0.6B/(8+4)E.
+        MoeConfig {
+            name: "sm-8e".into(),
+            vocab_size: 512,
+            n_layers: 4,
+            d_model: 128,
+            d_ff: 352,
+            n_heads: 4,
+            seq_len: 128,
+            n_ffn_experts: 8,
+            n_zero: 1,
+            n_copy: 1,
+            n_const: 2,
+            top_k: 2,
+            tau: 0.75,
+            capacity_factor: 1.1,
+            balance_coef: 0.01,
+            gating_residual: true,
+            vanilla: false,
+        }
+    }
+}
+
+impl MoeConfig {
+    /// Named presets — must stay in sync with python/compile/configs.py
+    /// (cross-checked by the integration test against manifest.json).
+    pub fn preset(name: &str) -> MoeConfig {
+        let (base, variant) = match name.split_once(':') {
+            Some((b, v)) => (b, v),
+            None => (name, "moepp"),
+        };
+        let mut cfg = match base {
+            "sm-8e" => MoeConfig::default(),
+            "sm-16e" => MoeConfig {
+                name: "sm-16e".into(),
+                n_ffn_experts: 16,
+                ..MoeConfig::default()
+            },
+            "sm-32e" => MoeConfig {
+                name: "sm-32e".into(),
+                n_ffn_experts: 32,
+                n_const: 6,
+                ..MoeConfig::default()
+            },
+            "md-16e" => MoeConfig {
+                name: "md-16e".into(),
+                n_layers: 8,
+                d_model: 256,
+                d_ff: 704,
+                n_heads: 8,
+                n_ffn_experts: 16,
+                ..MoeConfig::default()
+            },
+            "e2e" => MoeConfig {
+                name: "e2e".into(),
+                vocab_size: 2048,
+                n_layers: 6,
+                d_model: 256,
+                d_ff: 704,
+                n_heads: 8,
+                n_ffn_experts: 8,
+                ..MoeConfig::default()
+            },
+            "test" => MoeConfig {
+                name: "test".into(),
+                vocab_size: 64,
+                n_layers: 2,
+                d_model: 32,
+                d_ff: 64,
+                n_heads: 2,
+                seq_len: 16,
+                n_ffn_experts: 4,
+                ..MoeConfig::default()
+            },
+            other => panic!("unknown preset '{other}'"),
+        };
+        if variant == "vanilla" {
+            cfg.vanilla = true;
+            cfg.n_zero = 0;
+            cfg.n_copy = 0;
+            cfg.n_const = 0;
+        }
+        cfg
+    }
+
+    /// Parse from a manifest `configs` entry (written by aot.py).
+    pub fn from_json(j: &Json) -> anyhow::Result<MoeConfig> {
+        let g = |k: &str| -> anyhow::Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("missing config key '{k}'"))
+        };
+        Ok(MoeConfig {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("unnamed")
+                .to_string(),
+            vocab_size: g("vocab_size")? as usize,
+            n_layers: g("n_layers")? as usize,
+            d_model: g("d_model")? as usize,
+            d_ff: g("d_ff")? as usize,
+            n_heads: g("n_heads")? as usize,
+            seq_len: g("seq_len")? as usize,
+            n_ffn_experts: g("n_ffn_experts")? as usize,
+            n_zero: g("n_zero")? as usize,
+            n_copy: g("n_copy")? as usize,
+            n_const: g("n_const")? as usize,
+            top_k: g("top_k")? as usize,
+            tau: g("tau")?,
+            capacity_factor: g("capacity_factor")?,
+            balance_coef: g("balance_coef")?,
+            gating_residual: j
+                .get("gating_residual")
+                .and_then(Json::as_bool)
+                .unwrap_or(true),
+            vanilla: j.get("variant").and_then(Json::as_str)
+                == Some("vanilla"),
+        })
+    }
+
+    pub fn n_zc(&self) -> usize {
+        if self.vanilla {
+            0
+        } else {
+            self.n_zero + self.n_copy + self.n_const
+        }
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.n_ffn_experts + self.n_zc()
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Kind of expert index `i` (layer-local).
+    pub fn kind(&self, i: usize) -> ExpertKind {
+        let nf = self.n_ffn_experts;
+        if i < nf {
+            ExpertKind::Ffn
+        } else if i < nf + self.n_zero {
+            ExpertKind::Zero
+        } else if i < nf + self.n_zero + self.n_copy {
+            ExpertKind::Copy
+        } else {
+            assert!(i < self.n_experts(), "expert index {i} out of range");
+            ExpertKind::Constant
+        }
+    }
+
+    /// Heterogeneous expert capacity, Eq. 8 (scaled by K as in the L2
+    /// implementation — total capacity covers all T*K assignments).
+    pub fn capacities(&self, n_tokens: usize) -> (usize, usize) {
+        let (gamma, tau, k) =
+            (self.capacity_factor, self.tau, self.top_k as f64);
+        let t = n_tokens as f64;
+        if self.vanilla {
+            let cap =
+                (gamma * k * t / self.n_experts() as f64) as usize + 1;
+            return (cap, 0);
+        }
+        let denom = tau * self.n_ffn_experts as f64 + self.n_zc() as f64;
+        let ffn = (gamma * k * tau * t / denom) as usize + 1;
+        let zc = (gamma * k * t / denom) as usize + 1;
+        (ffn, zc)
+    }
+
+    /// Per-expert capacity vector for a batch of `n_tokens`.
+    pub fn capacity_vec(&self, n_tokens: usize) -> Vec<usize> {
+        let (fc, zc) = self.capacities(n_tokens);
+        (0..self.n_experts())
+            .map(|i| if self.kind(i) == ExpertKind::Ffn { fc } else { zc })
+            .collect()
+    }
+
+    /// Eq. 7's eta weight for expert i.
+    pub fn eta(&self, i: usize) -> f64 {
+        if self.kind(i) == ExpertKind::Ffn {
+            1.0
+        } else {
+            self.tau
+        }
+    }
+
+    /// FLOPs of one FFN expert applied to one token (2*3*D*F MACs).
+    pub fn ffn_flops_per_token(&self) -> f64 {
+        6.0 * self.d_model as f64 * self.d_ff as f64
+    }
+
+    /// Table 1: expected fraction of top-K slots landing on FFN experts
+    /// under balanced routing: tau*N_F / (tau*N_F + N_Z).
+    pub fn ffn_token_fraction(&self) -> f64 {
+        if self.vanilla {
+            return 1.0;
+        }
+        let nf = self.n_ffn_experts as f64;
+        let nz = self.n_zc() as f64;
+        self.tau * nf / (self.tau * nf + nz)
+    }
+}
+
+/// Paper Eq. 10: adaptive number of constant experts.
+pub fn adaptive_n_const(n_ffn: usize, n_zero: usize, n_copy: usize) -> usize {
+    ((n_ffn / 4).saturating_sub(n_zero + n_copy)).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_mirror_table2_ratios() {
+        let c = MoeConfig::preset("sm-32e");
+        assert_eq!((c.n_zero, c.n_copy, c.n_const), (1, 1, 6));
+        assert_eq!(c.n_experts(), 40);
+        let v = MoeConfig::preset("sm-32e:vanilla");
+        assert_eq!(v.n_experts(), 32);
+        assert!(v.vanilla);
+    }
+
+    #[test]
+    fn expert_kind_ordering() {
+        let c = MoeConfig::preset("sm-8e");
+        assert_eq!(c.kind(0), ExpertKind::Ffn);
+        assert_eq!(c.kind(7), ExpertKind::Ffn);
+        assert_eq!(c.kind(8), ExpertKind::Zero);
+        assert_eq!(c.kind(9), ExpertKind::Copy);
+        assert_eq!(c.kind(10), ExpertKind::Constant);
+        assert_eq!(c.kind(11), ExpertKind::Constant);
+    }
+
+    #[test]
+    #[should_panic]
+    fn kind_out_of_range_panics() {
+        MoeConfig::preset("sm-8e").kind(12);
+    }
+
+    #[test]
+    fn capacities_match_eq8() {
+        let c = MoeConfig::preset("sm-8e");
+        let t = 1000;
+        let (fc, zc) = c.capacities(t);
+        let denom = c.tau * 8.0 + 4.0;
+        assert_eq!(fc, (1.1 * 2.0 * c.tau * 1000.0 / denom) as usize + 1);
+        assert_eq!(zc, (1.1 * 2.0 * 1000.0 / denom) as usize + 1);
+        // smaller tau shifts capacity towards ZC experts
+        let mut c2 = c.clone();
+        c2.tau = 0.1;
+        let (fc2, zc2) = c2.capacities(t);
+        assert!((zc2 as f64 / fc2 as f64) > (zc as f64 / fc as f64));
+    }
+
+    #[test]
+    fn ffn_fraction_matches_table1() {
+        let c = MoeConfig::preset("sm-8e"); // tau=0.75, 8 FFN, 4 ZC
+        let want = 0.75 * 8.0 / (0.75 * 8.0 + 4.0);
+        assert!((c.ffn_token_fraction() - want).abs() < 1e-12);
+        assert_eq!(MoeConfig::preset("sm-8e:vanilla").ffn_token_fraction(),
+                   1.0);
+    }
+
+    #[test]
+    fn eq10_adaptive_const() {
+        assert_eq!(adaptive_n_const(8, 1, 1), 1); // not 0: max(..., 1)
+        assert_eq!(adaptive_n_const(16, 1, 1), 2);
+        assert_eq!(adaptive_n_const(32, 1, 1), 6);
+    }
+
+    #[test]
+    fn from_json_roundtrip() {
+        let j = Json::parse(
+            r#"{"name":"x","vocab_size":64,"n_layers":2,"d_model":32,
+                "d_ff":64,"n_heads":2,"seq_len":16,"n_ffn_experts":4,
+                "n_zero":1,"n_copy":1,"n_const":2,"top_k":2,"tau":0.75,
+                "capacity_factor":1.1,"balance_coef":0.01,
+                "gating_residual":true,"variant":"moepp"}"#,
+        )
+        .unwrap();
+        let c = MoeConfig::from_json(&j).unwrap();
+        assert_eq!(c.n_experts(), 8);
+        assert!(!c.vanilla);
+    }
+}

@@ -1,0 +1,241 @@
+//! Dynamic request batcher: accumulate incoming requests into token batches
+//! bounded by `max_tokens` and `max_wait`, vLLM-router-style.
+//!
+//! Requests carry token hidden-states (rows of D floats) plus an opaque id;
+//! the batcher concatenates them, records the row spans, and hands batches
+//! to the engine. Responses are scattered back per request.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::tensor::Tensor;
+
+/// One serving request: a group of tokens entering the MoE stack.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// [n_tokens, d_model] hidden states.
+    pub tokens: Tensor,
+    /// Task tag for the load-distribution figures (Fig. 4).
+    pub task: Option<String>,
+}
+
+/// A planned batch: concatenated tokens + per-request row spans.
+#[derive(Debug)]
+pub struct Batch {
+    pub tokens: Tensor,
+    pub spans: Vec<(u64, std::ops::Range<usize>)>,
+}
+
+impl Batch {
+    pub fn n_tokens(&self) -> usize {
+        self.tokens.shape[0]
+    }
+
+    /// Split a stacked result tensor back into per-request responses.
+    pub fn scatter(&self, result: &Tensor) -> Vec<(u64, Tensor)> {
+        let (_, d) = result.dims2();
+        self.spans
+            .iter()
+            .map(|(id, span)| {
+                let rows = span.len();
+                let mut out = Tensor::zeros(&[rows, d]);
+                out.data.copy_from_slice(
+                    &result.data[span.start * d..span.end * d],
+                );
+                (*id, out)
+            })
+            .collect()
+    }
+}
+
+/// Batching policy knobs.
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    pub max_tokens: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_tokens: 256,
+            max_wait: Duration::from_millis(5),
+        }
+    }
+}
+
+/// Deadline-or-size dynamic batcher.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    queue: VecDeque<(Request, Instant)>,
+    queued_tokens: usize,
+    d_model: usize,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig, d_model: usize) -> Batcher {
+        Batcher { cfg, queue: VecDeque::new(), queued_tokens: 0, d_model }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        assert_eq!(req.tokens.shape[1], self.d_model, "d_model mismatch");
+        self.queued_tokens += req.tokens.shape[0];
+        self.queue.push_back((req, Instant::now()));
+    }
+
+    pub fn queued_tokens(&self) -> usize {
+        self.queued_tokens
+    }
+
+    /// True if a batch should be emitted now.
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.is_empty() {
+            return false;
+        }
+        self.queued_tokens >= self.cfg.max_tokens
+            || now.duration_since(self.queue[0].1) >= self.cfg.max_wait
+    }
+
+    /// Build the next batch (up to max_tokens; whole requests only, but a
+    /// single oversized request becomes its own batch).
+    pub fn next_batch(&mut self) -> Option<Batch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let mut rows = 0usize;
+        let mut members = Vec::new();
+        while let Some((req, _)) = self.queue.front() {
+            let n = req.tokens.shape[0];
+            if !members.is_empty() && rows + n > self.cfg.max_tokens {
+                break;
+            }
+            rows += n;
+            members.push(self.queue.pop_front().unwrap().0);
+            if rows >= self.cfg.max_tokens {
+                break;
+            }
+        }
+        self.queued_tokens -= rows;
+        let mut tokens = Tensor::zeros(&[rows, self.d_model]);
+        let mut spans = Vec::new();
+        let mut at = 0;
+        for req in members {
+            let n = req.tokens.shape[0];
+            tokens.data[at * self.d_model..(at + n) * self.d_model]
+                .copy_from_slice(&req.tokens.data);
+            spans.push((req.id, at..at + n));
+            at += n;
+        }
+        Some(Batch { tokens, spans })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{gen, Prop};
+
+    fn req(id: u64, n: usize, d: usize, fill: f32) -> Request {
+        Request { id, tokens: Tensor::full(&[n, d], fill), task: None }
+    }
+
+    #[test]
+    fn batches_whole_requests_up_to_max() {
+        let mut b = Batcher::new(
+            BatcherConfig { max_tokens: 10, max_wait: Duration::ZERO },
+            4,
+        );
+        b.push(req(1, 4, 4, 1.0));
+        b.push(req(2, 4, 4, 2.0));
+        b.push(req(3, 4, 4, 3.0));
+        let batch = b.next_batch().unwrap();
+        // 4+4 fits, adding the third would exceed 10.
+        assert_eq!(batch.n_tokens(), 8);
+        assert_eq!(batch.spans.len(), 2);
+        let batch2 = b.next_batch().unwrap();
+        assert_eq!(batch2.n_tokens(), 4);
+        assert!(b.next_batch().is_none());
+        assert_eq!(b.queued_tokens(), 0);
+    }
+
+    #[test]
+    fn oversized_request_is_its_own_batch() {
+        let mut b = Batcher::new(
+            BatcherConfig { max_tokens: 8, max_wait: Duration::ZERO },
+            2,
+        );
+        b.push(req(9, 20, 2, 1.0));
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.n_tokens(), 20);
+    }
+
+    #[test]
+    fn ready_honours_deadline_and_size() {
+        let cfg = BatcherConfig {
+            max_tokens: 100,
+            max_wait: Duration::from_millis(50),
+        };
+        let mut b = Batcher::new(cfg, 2);
+        assert!(!b.ready(Instant::now()));
+        b.push(req(1, 10, 2, 0.0));
+        let now = Instant::now();
+        assert!(!b.ready(now)); // under size, under deadline
+        assert!(b.ready(now + Duration::from_millis(60))); // deadline hit
+        b.push(req(2, 95, 2, 0.0));
+        assert!(b.ready(Instant::now())); // size hit
+    }
+
+    #[test]
+    fn scatter_reverses_concatenation() {
+        let mut b = Batcher::new(BatcherConfig::default(), 3);
+        b.push(req(1, 2, 3, 1.0));
+        b.push(req(2, 3, 3, 2.0));
+        let batch = b.next_batch().unwrap();
+        let out = batch.scatter(&batch.tokens);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].1, Tensor::full(&[2, 3], 1.0));
+        assert_eq!(out[1].1, Tensor::full(&[3, 3], 2.0));
+    }
+
+    #[test]
+    fn prop_no_token_lost_or_duplicated() {
+        Prop::new("batcher-conservation").cases(40).run(
+            |rng| {
+                let n_reqs = gen::usize_in(rng, 1, 12);
+                let sizes: Vec<usize> =
+                    (0..n_reqs).map(|_| gen::usize_in(rng, 1, 30)).collect();
+                let max_tokens = gen::usize_in(rng, 4, 64);
+                (sizes, max_tokens)
+            },
+            |(sizes, max_tokens)| {
+                let d = 2;
+                let mut b = Batcher::new(
+                    BatcherConfig {
+                        max_tokens: *max_tokens,
+                        max_wait: Duration::ZERO,
+                    },
+                    d,
+                );
+                for (i, &n) in sizes.iter().enumerate() {
+                    b.push(req(i as u64, n, d, i as f32));
+                }
+                let mut seen = vec![0usize; sizes.len()];
+                while let Some(batch) = b.next_batch() {
+                    for (id, span) in &batch.spans {
+                        seen[*id as usize] += span.len();
+                        // Row content matches the request's fill value.
+                        let row = batch.tokens.row(span.start);
+                        if row[0] != *id as f32 {
+                            return Err("row content mismatch".into());
+                        }
+                    }
+                }
+                if seen != *sizes {
+                    return Err(format!("token counts: {seen:?} vs {sizes:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,153 @@
+//! Capacity-aware dispatch planning: turn a routing decision into
+//! per-FFN-expert micro-batches plus inline ZC work lists.
+//!
+//! Shares exact semantics with `moe::layer::dispatch` (slot-major priority,
+//! Eq. 8 capacities, Eq. 1 gates) — property-tested against it — but
+//! produces the structure the serving engine executes: gathered expert
+//! batches instead of per-assignment loops.
+
+use crate::config::{ExpertKind, MoeConfig};
+use crate::moe::layer::{dispatch, Assignment};
+use crate::moe::router::Routing;
+
+/// Work for one FFN expert: which tokens (rows of x) it processes.
+#[derive(Clone, Debug, Default)]
+pub struct ExpertBatch {
+    pub expert: usize,
+    pub tokens: Vec<usize>,
+    pub gates: Vec<f32>,
+}
+
+/// A fully-planned layer step.
+#[derive(Clone, Debug)]
+pub struct DispatchPlan {
+    /// Non-empty FFN expert micro-batches.
+    pub ffn_batches: Vec<ExpertBatch>,
+    /// Inline ZC assignments (zero included for accounting).
+    pub zc_inline: Vec<Assignment>,
+    /// Dropped assignments (over capacity).
+    pub dropped: Vec<Assignment>,
+    /// Pre-capacity assignment counts per expert.
+    pub expert_counts: Vec<usize>,
+}
+
+impl DispatchPlan {
+    /// Build a plan from a routing decision over `n_tokens` tokens.
+    pub fn build(routing: &Routing, cfg: &MoeConfig, n_tokens: usize)
+        -> DispatchPlan {
+        let d = dispatch(routing, cfg, n_tokens);
+        let mut ffn: Vec<ExpertBatch> = (0..cfg.n_ffn_experts)
+            .map(|e| ExpertBatch { expert: e, ..Default::default() })
+            .collect();
+        let mut zc_inline = Vec::new();
+        for a in &d.kept {
+            match cfg.kind(a.expert) {
+                ExpertKind::Ffn => {
+                    ffn[a.expert].tokens.push(a.token);
+                    ffn[a.expert].gates.push(a.gate);
+                }
+                _ => zc_inline.push(*a),
+            }
+        }
+        ffn.retain(|b| !b.tokens.is_empty());
+        DispatchPlan {
+            ffn_batches: ffn,
+            zc_inline,
+            dropped: d.dropped,
+            expert_counts: crate::moe::balance::assignment_counts(
+                routing,
+                cfg.n_experts(),
+            ),
+        }
+    }
+
+    pub fn ffn_assignments(&self) -> usize {
+        self.ffn_batches.iter().map(|b| b.tokens.len()).sum()
+    }
+
+    pub fn kept_assignments(&self) -> usize {
+        self.ffn_assignments() + self.zc_inline.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::router::route;
+    use crate::moe::weights::MoeLayerWeights;
+    use crate::tensor::Tensor;
+    use crate::util::proptest::{gen, Prop};
+    use crate::util::rng::Rng;
+
+    fn plan_for(seed: u64, t: usize) -> (MoeConfig, Routing, DispatchPlan) {
+        let cfg = MoeConfig::preset("test");
+        let mut rng = Rng::new(seed);
+        let w = MoeLayerWeights::init(&mut rng, &cfg);
+        let x = Tensor::randn(&mut rng, &[t, cfg.d_model], 1.0);
+        let routing = route(&x, &w.router, None, cfg.top_k);
+        let plan = DispatchPlan::build(&routing, &cfg, t);
+        (cfg, routing, plan)
+    }
+
+    #[test]
+    fn plan_is_equivalent_to_reference_dispatch() {
+        Prop::new("plan-equals-dispatch").cases(30).run(
+            |rng| (gen::usize_in(rng, 1, 80), rng.next_u64()),
+            |&(t, seed)| {
+                let (cfg, routing, plan) = plan_for(seed, t);
+                let d = crate::moe::layer::dispatch(&routing, &cfg, t);
+                // Same total kept/dropped.
+                if plan.kept_assignments() != d.kept.len() {
+                    return Err(format!(
+                        "kept {} vs {}", plan.kept_assignments(),
+                        d.kept.len()));
+                }
+                if plan.dropped.len() != d.dropped.len() {
+                    return Err("dropped mismatch".into());
+                }
+                // Every FFN batch token appears in d.kept with same gate.
+                for b in &plan.ffn_batches {
+                    for (tok, g) in b.tokens.iter().zip(&b.gates) {
+                        let found = d.kept.iter().any(|a| {
+                            a.expert == b.expert && a.token == *tok
+                                && (a.gate - g).abs() < 1e-7
+                        });
+                        if !found {
+                            return Err(format!(
+                                "batch entry ({}, {tok}) not in reference",
+                                b.expert));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn zc_never_enters_ffn_queue() {
+        let (cfg, _routing, plan) = plan_for(3, 64);
+        for b in &plan.ffn_batches {
+            assert!(b.expert < cfg.n_ffn_experts);
+        }
+        for a in &plan.zc_inline {
+            assert!(a.expert >= cfg.n_ffn_experts);
+        }
+    }
+
+    #[test]
+    fn batch_sizes_respect_capacity() {
+        let (cfg, _routing, plan) = plan_for(4, 96);
+        let caps = cfg.capacity_vec(96);
+        for b in &plan.ffn_batches {
+            assert!(b.tokens.len() <= caps[b.expert]);
+        }
+    }
+
+    #[test]
+    fn empty_batches_are_pruned() {
+        let (_, _, plan) = plan_for(5, 2); // 2 tokens can fill ≤4 experts
+        assert!(plan.ffn_batches.len() <= 4);
+        assert!(plan.ffn_batches.iter().all(|b| !b.tokens.is_empty()));
+    }
+}

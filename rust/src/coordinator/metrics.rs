@@ -1,0 +1,135 @@
+//! Serving metrics: latency/throughput accounting with streaming quantiles
+//! (reservoir-free P² is overkill here — we keep a bounded sorted sample).
+
+use std::time::Duration;
+
+/// Bounded latency recorder with exact quantiles over the retained window.
+#[derive(Clone, Debug)]
+pub struct LatencyStats {
+    samples: Vec<f64>, // seconds
+    cap: usize,
+    pub count: u64,
+    pub total_s: f64,
+}
+
+impl LatencyStats {
+    pub fn new(cap: usize) -> LatencyStats {
+        LatencyStats { samples: Vec::new(), cap, count: 0, total_s: 0.0 }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let s = d.as_secs_f64();
+        self.count += 1;
+        self.total_s += s;
+        if self.samples.len() == self.cap {
+            // Overwrite pseudo-randomly (deterministic stride) to keep a
+            // spread-out window without an RNG dependency.
+            let idx = (self.count as usize * 7919) % self.cap;
+            self.samples[idx] = s;
+        } else {
+            self.samples.push(s);
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_s / self.count as f64
+        }
+    }
+
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((v.len() - 1) as f64 * q).round() as usize;
+        v[idx]
+    }
+}
+
+/// Aggregate serving counters.
+#[derive(Clone, Debug, Default)]
+pub struct ServingMetrics {
+    pub requests: u64,
+    pub batches: u64,
+    pub tokens: u64,
+    pub dropped_assignments: u64,
+    pub ffn_assignments: u64,
+    pub zc_assignments: u64,
+    pub expert_forward_s: f64,
+    pub routing_s: f64,
+}
+
+impl ServingMetrics {
+    pub fn merge_forward(&mut self,
+                         stats: &crate::coordinator::engine::ForwardStats) {
+        self.tokens += stats.tokens as u64;
+        self.expert_forward_s += stats.expert_forward_s;
+        self.routing_s += stats.routing_s;
+        for l in &stats.per_layer {
+            self.dropped_assignments += l.dropped as u64;
+            self.ffn_assignments += l.ffn_assignments as u64;
+            self.zc_assignments += l.zc_assignments as u64;
+        }
+    }
+
+    pub fn expert_throughput(&self) -> f64 {
+        self.tokens as f64 / self.expert_forward_s.max(1e-12)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} batches={} tokens={} expert_tput={:.0} tok/s \
+             ffn={} zc={} dropped={} (drop rate {:.3}%)",
+            self.requests,
+            self.batches,
+            self.tokens,
+            self.expert_throughput(),
+            self.ffn_assignments,
+            self.zc_assignments,
+            self.dropped_assignments,
+            100.0 * self.dropped_assignments as f64
+                / (self.ffn_assignments + self.zc_assignments
+                    + self.dropped_assignments)
+                    .max(1) as f64,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_quantiles() {
+        let mut l = LatencyStats::new(1000);
+        for i in 1..=100 {
+            l.record(Duration::from_millis(i));
+        }
+        assert_eq!(l.count, 100);
+        assert!((l.mean() - 0.0505).abs() < 1e-3);
+        assert!((l.quantile(0.5) - 0.050).abs() < 0.003);
+        assert!(l.quantile(0.99) >= 0.098);
+    }
+
+    #[test]
+    fn bounded_window() {
+        let mut l = LatencyStats::new(10);
+        for i in 0..1000 {
+            l.record(Duration::from_micros(i));
+        }
+        assert_eq!(l.count, 1000);
+        assert_eq!(l.samples.len(), 10);
+    }
+
+    #[test]
+    fn metrics_report_smoke() {
+        let m = ServingMetrics { tokens: 100, expert_forward_s: 0.5,
+                                 ..Default::default() };
+        assert_eq!(m.expert_throughput(), 200.0);
+        assert!(m.report().contains("tokens=100"));
+    }
+}

@@ -1,0 +1,24 @@
+//! L3 serving coordinator — the paper's systems contribution.
+//!
+//! The pipeline for a token batch entering the MoE++ stack:
+//!
+//! 1. [`batcher`] groups incoming requests into token batches;
+//! 2. the pathway-aware router runs natively per layer (an [N, D] matvec —
+//!    negligible, and it keeps routing on the coordinator so dispatch
+//!    decisions precede any tensor movement);
+//! 3. [`dispatch`] applies heterogeneous capacity (Eq. 8) and builds
+//!    per-FFN-expert micro-batches;
+//! 4. **zero-computation experts short-circuit inline** — zero is a no-op,
+//!    copy a scaled add, constant a 2×D matvec — they never enter the FFN
+//!    queue. This single property produces the paper's throughput gain
+//!    (Table 3) and, in the distributed mapping (see [`crate::cluster`]),
+//!    the elimination of their all-to-all traffic;
+//! 5. FFN micro-batches execute on the chosen [`engine::Backend`]: the
+//!    native Rust expert or the AOT-compiled Pallas kernel via PJRT,
+//!    padded to the nearest compiled bucket;
+//! 6. outputs are gate-weighted and combined (Eq. 1).
+
+pub mod batcher;
+pub mod dispatch;
+pub mod engine;
+pub mod metrics;

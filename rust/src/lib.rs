@@ -1,0 +1,40 @@
+//! # MoE++ — heterogeneous Mixture-of-Experts with zero-computation experts
+//!
+//! A from-scratch reproduction of *MoE++: Accelerating Mixture-of-Experts
+//! Methods with Zero-Computation Experts* (ICLR 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1** — Pallas kernels (expert FFN, pathway-aware router, constant
+//!   expert), authored in `python/compile/kernels/` and AOT-lowered.
+//! * **L2** — the MoE++ transformer LM in JAX (`python/compile/`), lowered
+//!   once to HLO text artifacts (`make artifacts`).
+//! * **L3** — this crate: the serving coordinator, expert-parallel cluster
+//!   simulator, PJRT runtime, trainer driver and analysis/bench harnesses.
+//!   Python is never on the request path.
+//!
+//! The paper's three claims map onto L3 as follows:
+//!
+//! * **Low computing overhead** — [`coordinator`] short-circuits
+//!   zero-computation experts (zero → skip, copy → memcpy, constant → a
+//!   2×D matvec) so they never enter the FFN queue; `moepp bench table3`
+//!   measures the resulting expert-forward speedup.
+//! * **High performance** — the trainer ([`training`]) reproduces the
+//!   quality-side comparisons on a synthetic corpus (Tables 3–6, Fig. 3).
+//! * **Deployment friendly** — [`cluster`] replicates ZC experts on every
+//!   simulated device, so ZC-routed tokens incur zero all-to-all traffic.
+//!
+//! This environment is offline: other than the `xla` PJRT bridge and
+//! `anyhow`/`thiserror`, every substrate (JSON codec, CLI parser, RNG,
+//! thread pool, bench statistics, property-testing harness) is implemented
+//! in [`util`] and [`bench`].
+
+pub mod bench;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod moe;
+pub mod runtime;
+pub mod stats;
+pub mod tensor;
+pub mod training;
+pub mod util;

@@ -1,0 +1,483 @@
+//! `moepp` — the MoE++ coordinator CLI.
+//!
+//! Subcommands:
+//!   info      --preset P                    config + parameter accounting
+//!   serve     --preset P --requests N       serving demo (batcher+engine)
+//!   train     --tag T --steps N             pretrain via train_step artifact
+//!   cluster   --preset P --devices A,B,..   expert-parallel deployment sim
+//!   bench     table1|table3|table3-quality|table4|table5|table6|fig3
+//!   analyze   load|tokens|gating            figures 4 / 5 / 6
+//!
+//! Reports are printed and mirrored under reports/.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use moepp::bench::{quality, tables};
+use moepp::config::MoeConfig;
+use moepp::coordinator::batcher::{Batcher, BatcherConfig, Request};
+use moepp::coordinator::engine::MoeEngine;
+use moepp::coordinator::metrics::{LatencyStats, ServingMetrics};
+use moepp::runtime::Runtime;
+use moepp::stats;
+use moepp::tensor::Tensor;
+use moepp::training::checkpoint;
+use moepp::training::data::Corpus;
+use moepp::training::trainer::Trainer;
+use moepp::util::cli::Args;
+use moepp::util::rng::Rng;
+use moepp::{info, warn_log};
+
+fn main() {
+    let args = Args::from_env();
+    moepp::util::logging::set_verbose(args.has("verbose"));
+    moepp::util::logging::set_quiet(args.has("quiet"));
+    let r = match args.subcommand.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("train") => cmd_train(&args),
+        Some("cluster") => cmd_cluster(&args),
+        Some("bench") => cmd_bench(&args),
+        Some("analyze") => cmd_analyze(&args),
+        _ => {
+            eprintln!("{}", USAGE);
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "usage: moepp <info|serve|train|cluster|bench|analyze> \
+[args]\n  see README.md";
+
+fn report(name: &str, body: &str) -> Result<()> {
+    println!("{body}");
+    std::fs::create_dir_all("reports")?;
+    std::fs::write(format!("reports/{name}.txt"), body)?;
+    info!("wrote reports/{name}.txt");
+    Ok(())
+}
+
+fn open_runtime(args: &Args) -> Result<Runtime> {
+    Runtime::open(args.get_or("artifacts", "artifacts"))
+        .context("open artifacts (run `make artifacts` first)")
+}
+
+// ---------------------------------------------------------------- info
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let preset = args.get_or("preset", "sm-8e");
+    let cfg = MoeConfig::preset(preset);
+    let w = moepp::moe::weights::MoeLayerWeights::init(
+        &mut Rng::new(0), &cfg);
+    let (repl, shard) = w.replicated_vs_sharded_bytes();
+    println!(
+        "preset {preset}\n\
+         layers {}  d_model {}  d_ff {}  heads {}\n\
+         experts: {} FFN + {} ZC ({} zero / {} copy / {} const), top-{}\n\
+         tau {}  gamma {}  beta {}\n\
+         per-layer params: {}  (replicated-per-device {} | sharded {})\n\
+         Table-1 FFN token fraction: {:.3}  => complexity ratio {:.3}",
+        cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.n_heads,
+        cfg.n_ffn_experts, cfg.n_zc(), cfg.n_zero, cfg.n_copy, cfg.n_const,
+        cfg.top_k, cfg.tau, cfg.capacity_factor, cfg.balance_coef,
+        w.n_params(),
+        moepp::util::human_bytes(repl as u64),
+        moepp::util::human_bytes(shard as u64),
+        cfg.ffn_token_fraction(),
+        moepp::moe::complexity::complexity_ratio(&cfg, 4096),
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------- serve
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let preset = args.get_or("preset", "sm-8e");
+    let n_requests = args.get_usize("requests", 200);
+    let backend = args.get_or("backend", "native");
+    let cfg = MoeConfig::preset(preset);
+    let engine = match backend {
+        "native" => MoeEngine::native(cfg.clone(), 0),
+        "pjrt" => {
+            let rt = std::sync::Arc::new(open_runtime(args)?);
+            MoeEngine::pjrt(cfg.clone(), 0, rt)?
+        }
+        other => anyhow::bail!("unknown backend '{other}'"),
+    };
+    let mut batcher = Batcher::new(
+        BatcherConfig {
+            max_tokens: args.get_usize("max-batch-tokens", 256),
+            max_wait: std::time::Duration::from_millis(
+                args.get_usize("max-wait-ms", 2) as u64,
+            ),
+        },
+        cfg.d_model,
+    );
+    let mut rng = Rng::new(7);
+    let sizes = moepp::bench::workload::request_sizes(
+        &mut rng, n_requests, cfg.seq_len);
+    let mut metrics = ServingMetrics::default();
+    let mut latency = LatencyStats::new(4096);
+    let mut submitted = std::collections::HashMap::new();
+    let t_start = Instant::now();
+    for (id, n) in sizes.into_iter().enumerate() {
+        let req = Request {
+            id: id as u64,
+            tokens: Tensor::randn(&mut rng, &[n, cfg.d_model], 1.0),
+            task: None,
+        };
+        submitted.insert(id as u64, Instant::now());
+        batcher.push(req);
+        metrics.requests += 1;
+        while batcher.ready(Instant::now()) {
+            let batch = batcher.next_batch().unwrap();
+            let (y, stats) = engine.forward_stack(&batch.tokens)?;
+            metrics.batches += 1;
+            metrics.merge_forward(&stats);
+            for (rid, _resp) in batch.scatter(&y) {
+                latency.record(submitted[&rid].elapsed());
+            }
+        }
+    }
+    // Drain.
+    while let Some(batch) = batcher.next_batch() {
+        let (y, stats) = engine.forward_stack(&batch.tokens)?;
+        metrics.batches += 1;
+        metrics.merge_forward(&stats);
+        for (rid, _resp) in batch.scatter(&y) {
+            latency.record(submitted[&rid].elapsed());
+        }
+    }
+    let wall = t_start.elapsed().as_secs_f64();
+    let body = format!(
+        "serving demo: preset {preset}, backend {backend}\n{}\n\
+         wall {:.2}s  request p50 {:.2}ms  p95 {:.2}ms  mean {:.2}ms\n",
+        metrics.report(),
+        wall,
+        latency.quantile(0.5) * 1e3,
+        latency.quantile(0.95) * 1e3,
+        latency.mean() * 1e3,
+    );
+    report("serve", &body)
+}
+
+// ---------------------------------------------------------------- train
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let tag = args.get_or("tag", "test_moepp");
+    let steps = args.get_usize("steps", 100);
+    let seed = args.get_usize("seed", 0) as i32;
+    let rt = open_runtime(args)?;
+    let mut trainer = Trainer::new(&rt, tag, seed)?;
+    let cfg = rt.manifest.configs.get(tag)
+        .with_context(|| format!("tag {tag}"))?;
+    let corpus = Corpus::new(cfg.vocab_size, 4, 1234);
+    let mut rng = Rng::new(42);
+    let history =
+        trainer.train(&corpus, steps, &mut rng, (steps / 20).max(1))?;
+    let mut eval_rng = Rng::new(0xE7A1);
+    let (ce, ppl) = trainer.eval(&corpus, 8, &mut eval_rng)?;
+    if let Some(out) = args.get("out") {
+        checkpoint::save(std::path::Path::new(out), trainer.params())?;
+        info!("checkpoint -> {out}");
+    }
+    let first = history.first().map(|m| m.loss).unwrap_or(f64::NAN);
+    let last = history.last().map(|m| m.loss).unwrap_or(f64::NAN);
+    let body = format!(
+        "train {tag}: {steps} steps  loss {first:.4} -> {last:.4}\n\
+         eval ce {ce:.4}  ppl {ppl:.2}\n\
+         mean step time {:.3}s\n",
+        history.iter().map(|m| m.step_s).sum::<f64>()
+            / history.len().max(1) as f64,
+    );
+    report(&format!("train_{tag}"), &body)
+}
+
+// ---------------------------------------------------------------- cluster
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let preset = args.get_or("preset", "sm-8e");
+    let devices: Vec<usize> = args
+        .get_or("devices", "1,2,4,8")
+        .split(',')
+        .map(|s| s.parse().unwrap())
+        .collect();
+    let tokens = args.get_usize("tokens", 256);
+    let rows = tables::cluster_rows(preset, &devices, tokens, 0)?;
+    let body = format!(
+        "expert-parallel deployment simulation ({tokens} tokens)\n\
+         ZC experts replicated per device; FFN experts sharded round-robin\n\
+         \n{}",
+        tables::render_cluster(&rows)
+    );
+    report("cluster", &body)
+}
+
+// ---------------------------------------------------------------- bench
+
+fn quality_sweep(
+    rt: &Runtime,
+    tags: &[(String, String)],
+    steps: usize,
+    seed: u64,
+) -> Result<Vec<quality::QualityRow>> {
+    let mut rows = Vec::new();
+    for (tag, label) in tags {
+        if !rt.has(&format!("{tag}_train_step")) {
+            warn_log!(
+                "missing artifacts for {tag}; run `make bench-artifacts`");
+            continue;
+        }
+        let mut r = quality::train_and_eval(rt, tag, steps, seed)?;
+        if !label.is_empty() {
+            r.tag = format!("{label} [{tag}]");
+        }
+        rows.push(r);
+    }
+    Ok(rows)
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("table3");
+    let steps = args.get_usize("steps", 300);
+    let seed = args.get_usize("seed", 0) as u64;
+    let own = |v: Vec<(&str, &str)>| -> Vec<(String, String)> {
+        v.into_iter()
+            .map(|(a, b)| (a.to_string(), b.to_string()))
+            .collect()
+    };
+    match which {
+        "table1" => {
+            let rows = tables::table1_rows(
+                args.get_or("preset", "sm-8e"),
+                &[0.1, 0.25, 0.5, 0.75, 1.0],
+                args.get_usize("tokens", 2048),
+                seed,
+            )?;
+            report("table1", &format!(
+                "Table 1: complexity ratio, analytic vs measured\n\n{}",
+                tables::render_table1(&rows)))
+        }
+        "table3" => {
+            let presets: Vec<&str> = args
+                .get_or("presets", "sm-8e,sm-16e,sm-32e,md-16e")
+                .split(',')
+                .collect();
+            let rows = tables::table3_rows(
+                &presets,
+                &[0.1, 0.25, 0.5, 0.75, 1.0],
+                args.get_usize("tokens", 512),
+                args.get_usize("batches", 3),
+                seed,
+            )?;
+            report("table3", &format!(
+                "Table 3 (timing): expert forward time, MoE vs MoE++\n\
+                 (native backend, {} tokens/batch; paper shape: time falls \
+                 and throughput increase grows as tau falls)\n\n{}",
+                args.get_usize("tokens", 512),
+                tables::render_table3(&rows)))
+        }
+        "table3-quality" => {
+            let rt = open_runtime(args)?;
+            let tags: Vec<(String, String)> = quality::table3_quality_tags()
+                .into_iter()
+                .map(|t| (t, String::new()))
+                .collect();
+            let rows = quality_sweep(&rt, &tags, steps, seed)?;
+            report("table3_quality", &quality::render_quality(
+                "Table 3 (quality): tau sweep at matched budget", &rows))
+        }
+        "table4" => {
+            let rt = open_runtime(args)?;
+            let rows =
+                quality_sweep(&rt, &own(quality::table4_tags()), steps,
+                              seed)?;
+            report("table4", &quality::render_quality(
+                "Table 4: MoE++ vs dense of 1-3.5x activated params",
+                &rows))
+        }
+        "table5" => {
+            let rt = open_runtime(args)?;
+            let rows =
+                quality_sweep(&rt, &own(quality::table5_tags()), steps,
+                              seed)?;
+            report("table5", &quality::render_quality(
+                "Table 5: zero-computation expert-type ablation", &rows))
+        }
+        "table6" => {
+            let rt = open_runtime(args)?;
+            let rows =
+                quality_sweep(&rt, &own(quality::table6_tags()), steps,
+                              seed)?;
+            report("table6", &quality::render_quality(
+                "Table 6: gating residuals ablation", &rows))
+        }
+        "fig3" => {
+            let rt = open_runtime(args)?;
+            let tags: Vec<(String, String)> = quality::fig3_tags()
+                .into_iter()
+                .map(|(nc, t)| (t, format!("n_const={nc}")))
+                .collect();
+            let rows = quality_sweep(&rt, &tags, steps, seed)?;
+            let chart: Vec<(String, f64)> = rows
+                .iter()
+                .map(|r| (r.tag.clone(), 100.0 / r.eval_ppl.max(1e-9)))
+                .collect();
+            let body = format!(
+                "{}\nrelative quality (100/ppl, higher better):\n{}",
+                quality::render_quality(
+                    "Fig. 3: number of constant experts", &rows),
+                stats::bar_chart(&chart));
+            report("fig3", &body)
+        }
+        "layerwise" => {
+            // Ablation for the Appendix A.2 extension: uniform tau vs the
+            // edge-heavy per-layer schedule at matched mean complexity.
+            let preset = args.get_or("preset", "md-16e");
+            let tokens = args.get_usize("tokens", 256);
+            let cfg = MoeConfig::preset(preset);
+            let mut rng = Rng::new(seed);
+            let x = Tensor::randn(&mut rng, &[tokens, cfg.d_model], 1.0);
+            let mut body = String::from(
+                "layer-wise heterogeneous MoE++ (Appendix A.2 extension)\n\
+                 schedule            complexity-ratio  expert-fwd(ms)  \
+                 ffn/tok per layer\n");
+            use moepp::moe::layerwise::LayerSchedule;
+            let schedules = vec![
+                ("uniform tau=0.75", LayerSchedule::Uniform(0.75)),
+                ("uniform tau=0.40", LayerSchedule::Uniform(0.40)),
+                ("edge:0.9,0.25,2", LayerSchedule::EdgeHeavy {
+                    edge: 0.9, middle: 0.25, k: 2 }),
+            ];
+            for (name, sched) in schedules {
+                let engine = MoeEngine::native(cfg.clone(), seed)
+                    .with_schedule(&sched);
+                let _ = engine.forward_stack(&x)?;
+                let (_, stats) = engine.forward_stack(&x)?;
+                body.push_str(&format!(
+                    "{name:<20} {:>16.3} {:>15.2} {:>7.2?}\n",
+                    sched.complexity_ratio(&cfg, tokens),
+                    stats.expert_forward_s * 1e3,
+                    stats.per_layer.iter().map(|l| l.ffn_per_token)
+                        .collect::<Vec<_>>(),
+                ));
+            }
+            report("layerwise", &body)
+        }
+        other => anyhow::bail!("unknown bench '{other}'"),
+    }
+}
+
+// ---------------------------------------------------------------- analyze
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("load");
+    let preset = args.get_or("preset", "sm-8e");
+    let cfg = MoeConfig::preset(preset);
+    match which {
+        "load" => {
+            // Fig. 4 / A–E: expert-load distribution per task per layer.
+            let engine = MoeEngine::native(cfg.clone(), 0);
+            let mut rng = Rng::new(11);
+            let tasks = moepp::bench::workload::task_streams(
+                &mut rng,
+                &["arc-easy", "arc-chal", "sciq", "winograd", "logiqa"],
+                args.get_usize("tokens", 512),
+                cfg.d_model,
+            );
+            let loads = stats::load::task_level_load(&engine, &tasks)?;
+            let mut body = String::new();
+            for layer in 0..cfg.n_layers {
+                body.push_str(&stats::load::render_layer_report(
+                    &cfg, &loads, layer));
+                body.push('\n');
+            }
+            report("fig4_load", &body)
+        }
+        "tokens" => {
+            // Fig. 5: FFN experts per token vs token frequency.
+            let w = moepp::moe::weights::StackWeights::init(0, &cfg);
+            let corpus = Corpus::new(cfg.vocab_size, 4, 1234);
+            let mut rng = Rng::new(3);
+            let embed = Tensor::randn(
+                &mut rng, &[cfg.vocab_size, cfg.d_model], 1.0);
+            let seqs: Vec<Vec<i32>> = (0..args.get_usize("seqs", 64))
+                .map(|i| corpus.sample(i % 4, cfg.seq_len, &mut rng))
+                .collect();
+            let acts = stats::token_level::token_level_activations(
+                &w, &cfg, &embed, &seqs)?;
+            let rows = acts.rows();
+            let mut body = String::from(
+                "Fig. 5: mean FFN experts activated per token \
+                 (by frequency)\n\ntoken  freq  mean-ffn-per-layer\n");
+            for (tok, freq, mean) in rows.iter().take(30) {
+                body.push_str(&format!("{tok:>5} {freq:>6} {mean:>8.3}\n"));
+            }
+            // Frequency-band summary (the paper's simple-vs-hard split).
+            let hi: Vec<f64> = rows.iter().take(rows.len() / 4)
+                .map(|r| r.2).collect();
+            let lo: Vec<f64> = rows.iter().skip(3 * rows.len() / 4)
+                .map(|r| r.2).collect();
+            body.push_str(&format!(
+                "\nhigh-frequency quartile mean: {:.3}\n\
+                 low-frequency quartile mean:  {:.3}\n",
+                hi.iter().sum::<f64>() / hi.len().max(1) as f64,
+                lo.iter().sum::<f64>() / lo.len().max(1) as f64,
+            ));
+            report("fig5_tokens", &body)
+        }
+        "gating" => {
+            // Fig. 6: routing-score statistics with/without residuals.
+            // Wg is zero-initialised (Eq. 6 reduces to Wx at init), so a
+            // trained-model stand-in is used: a contractive 0.5*I mixing of
+            // the previous pathway, the shape Fig. 6 reports.
+            let mut w = moepp::moe::weights::StackWeights::init(0, &cfg);
+            let n = cfg.n_experts();
+            for layer in &mut w.layers {
+                for i in 0..n {
+                    layer.router.wg.data[i * n + i] = 0.5;
+                }
+            }
+            let mut rng = Rng::new(5);
+            let x = Tensor::randn(
+                &mut rng,
+                &[args.get_usize("tokens", 512), cfg.d_model],
+                1.0,
+            );
+            let with = stats::gating::trace(&w, &cfg, &x, true)?;
+            let without = stats::gating::trace(&w, &cfg, &x, false)?;
+            let mut body = String::from(
+                "Fig. 6: gating residual impact on routing scores\n\n\
+                 layer   top1 mean/var (w/)    top1 mean/var (w/o)   \
+                 score var w/ vs w/o\n");
+            for i in 0..with.layers.len() {
+                let a = with.layers[i];
+                let b = without.layers[i];
+                body.push_str(&format!(
+                    "{i:>5}   {:.3} / {:.5}        {:.3} / {:.5}        \
+                     {:.4} vs {:.4}\n",
+                    a.0, a.1, b.0, b.1,
+                    with.score_var[i], without.score_var[i]));
+            }
+            body.push_str(&format!(
+                "\nmean top-1 variance: w/ residuals {:.5}, w/o {:.5}\n",
+                stats::gating::mean_top1_variance(&with),
+                stats::gating::mean_top1_variance(&without)));
+            report("fig6_gating", &body)
+        }
+        other => anyhow::bail!("unknown analysis '{other}'"),
+    }
+}

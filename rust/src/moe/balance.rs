@@ -1,0 +1,164 @@
+//! Heterogeneous load-balance accounting (paper Eq. 7) and load-imbalance
+//! metrics used by the monitoring/figures pipeline.
+
+use crate::config::MoeConfig;
+use crate::moe::router::Routing;
+
+/// Eq. 7: L_b = N * sum_i eta_i * f_i * P_i  with eta_i ∈ {1, tau}.
+///
+/// f_i = fraction of tokens selecting expert i (pre-capacity), P_i = mean
+/// router probability of expert i. The N scaling matches the L2 (jax)
+/// implementation so values are directly comparable.
+pub fn balance_loss(routing: &Routing, cfg: &MoeConfig) -> f64 {
+    let n = cfg.n_experts();
+    let t = routing.topk.len();
+    if t == 0 {
+        return 0.0;
+    }
+    let mut f = vec![0.0f64; n];
+    for tk in &routing.topk {
+        for &(e, _) in tk {
+            f[e] += 1.0;
+        }
+    }
+    let mut p = vec![0.0f64; n];
+    for row in 0..t {
+        for (i, &pr) in routing.probs.row(row).iter().enumerate() {
+            p[i] += pr as f64;
+        }
+    }
+    let tf = t as f64;
+    (0..n)
+        .map(|i| cfg.eta(i) * (f[i] / tf) * (p[i] / tf))
+        .sum::<f64>()
+        * n as f64
+}
+
+/// Per-expert pre-capacity assignment counts.
+pub fn assignment_counts(routing: &Routing, n_experts: usize) -> Vec<usize> {
+    let mut counts = vec![0usize; n_experts];
+    for tk in &routing.topk {
+        for &(e, _) in tk {
+            counts[e] += 1;
+        }
+    }
+    counts
+}
+
+/// Coefficient of variation of FFN-expert load — the imbalance figure the
+/// cluster simulator reports per device group.
+pub fn load_cv(counts: &[usize]) -> f64 {
+    if counts.is_empty() {
+        return 0.0;
+    }
+    let n = counts.len() as f64;
+    let mean = counts.iter().sum::<usize>() as f64 / n;
+    if mean == 0.0 {
+        return 0.0;
+    }
+    let var = counts
+        .iter()
+        .map(|&c| (c as f64 - mean).powi(2))
+        .sum::<f64>()
+        / n;
+    var.sqrt() / mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::router::{route, RouterWeights};
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn mk_routing(seed: u64, t: usize, cfg: &MoeConfig) -> Routing {
+        let mut rng = Rng::new(seed);
+        let w = RouterWeights::init(&mut rng, cfg.n_experts(), cfg.d_model);
+        let x = Tensor::randn(&mut rng, &[t, cfg.d_model], 1.0);
+        route(&x, &w, None, cfg.top_k)
+    }
+
+    #[test]
+    fn uniform_router_gives_baseline_loss() {
+        // With perfectly uniform probs and assignments, Eq. 7 gives
+        // N * sum_i eta_i * (K/N) * (1/N) = K * mean(eta).
+        let cfg = MoeConfig::preset("test");
+        let n = cfg.n_experts();
+        let t = 64;
+        let probs = Tensor::full(&[t, n], 1.0 / n as f32);
+        let mut topk = Vec::new();
+        for i in 0..t {
+            // Spread assignments round-robin so f is uniform.
+            let a = (2 * i) % n;
+            let b = (2 * i + 1) % n;
+            topk.push(vec![(a, 1.0 / n as f32), (b, 1.0 / n as f32)]);
+        }
+        let routing = Routing {
+            scores: Tensor::zeros(&[t, n]),
+            probs,
+            topk,
+        };
+        let got = balance_loss(&routing, &cfg);
+        let mean_eta: f64 =
+            (0..n).map(|i| cfg.eta(i)).sum::<f64>() / n as f64;
+        let want = cfg.top_k as f64 * mean_eta;
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+    }
+
+    #[test]
+    fn collapse_increases_loss() {
+        let cfg = MoeConfig::preset("test");
+        let balanced = mk_routing(0, 128, &cfg);
+        let l_bal = balance_loss(&balanced, &cfg);
+        // Force collapse: everything to expert 0.
+        let mut collapsed = balanced.clone();
+        for tk in collapsed.topk.iter_mut() {
+            *tk = vec![(0, 0.9), (1, 0.05)];
+        }
+        let t = collapsed.topk.len();
+        let n = cfg.n_experts();
+        collapsed.probs = Tensor::zeros(&[t, n]);
+        for i in 0..t {
+            collapsed.probs.row_mut(i)[0] = 0.9;
+            collapsed.probs.row_mut(i)[1] = 0.05;
+        }
+        let l_col = balance_loss(&collapsed, &cfg);
+        assert!(l_col > l_bal, "{l_col} vs {l_bal}");
+    }
+
+    #[test]
+    fn tau_discounts_zc_concentration() {
+        // Same concentrated-on-ZC routing, lower tau -> lower loss.
+        let mut cfg = MoeConfig::preset("test");
+        let zc0 = cfg.n_ffn_experts; // first zero expert
+        let t = 32;
+        let n = cfg.n_experts();
+        let mut probs = Tensor::zeros(&[t, n]);
+        let mut topk = Vec::new();
+        for i in 0..t {
+            probs.row_mut(i)[zc0] = 0.9;
+            probs.row_mut(i)[0] = 0.1;
+            topk.push(vec![(zc0, 0.9f32), (0, 0.1f32)]);
+        }
+        let routing = Routing {
+            scores: Tensor::zeros(&[t, n]),
+            probs,
+            topk,
+        };
+        cfg.tau = 1.0;
+        let hi = balance_loss(&routing, &cfg);
+        cfg.tau = 0.1;
+        let lo = balance_loss(&routing, &cfg);
+        assert!(lo < hi, "{lo} vs {hi}");
+    }
+
+    #[test]
+    fn counts_and_cv() {
+        let cfg = MoeConfig::preset("test");
+        let r = mk_routing(1, 200, &cfg);
+        let counts = assignment_counts(&r, cfg.n_experts());
+        assert_eq!(counts.iter().sum::<usize>(), 200 * cfg.top_k);
+        assert_eq!(load_cv(&[5, 5, 5, 5]), 0.0);
+        assert!(load_cv(&[10, 0, 0, 0]) > 1.0);
+    }
+}

@@ -1,0 +1,100 @@
+//! Table 1: the analytic complexity model of MoE vs MoE++.
+//!
+//! For T tokens, top-K routing, N_F FFN experts and N_Z zero-computation
+//! experts with allocation parameter tau, the expected FFN work of MoE++ is
+//!
+//! ```text
+//! O( tau*N_F / (tau*N_F + N_Z) * T )
+//! ```
+//!
+//! of the vanilla-MoE cost. `moepp bench table1` validates this model
+//! against measured expert-stage FLOPs from the serving engine.
+
+use crate::config::MoeConfig;
+
+/// Expected FFN-expert FLOPs for a batch of `t` tokens (one MoE layer).
+pub fn expected_ffn_flops(cfg: &MoeConfig, t: usize) -> f64 {
+    let per_assignment = cfg.ffn_flops_per_token();
+    let assignments = cfg.top_k as f64 * t as f64 * cfg.ffn_token_fraction();
+    assignments * per_assignment
+}
+
+/// Expected ZC-expert FLOPs (constant experts only: a 2×D matvec + 2 axpy
+/// per assignment; zero/copy are free).
+pub fn expected_zc_flops(cfg: &MoeConfig, t: usize) -> f64 {
+    if cfg.vanilla {
+        return 0.0;
+    }
+    let nz = cfg.n_zc() as f64;
+    let zc_assignments =
+        cfg.top_k as f64 * t as f64 * (1.0 - cfg.ffn_token_fraction());
+    // Fraction of ZC assignments landing on constant experts (uniform
+    // within the ZC group under balanced routing).
+    let const_frac = cfg.n_const as f64 / nz;
+    let const_flops = (2.0 * 2.0 * cfg.d_model as f64) // matvec
+        + (4.0 * cfg.d_model as f64); // two axpys
+    zc_assignments * const_frac * const_flops
+}
+
+/// Table 1 ratio: MoE++ expert compute / vanilla-MoE expert compute at the
+/// same parameter count (ZC FLOPs included; they are negligible).
+pub fn complexity_ratio(cfg: &MoeConfig, t: usize) -> f64 {
+    let vanilla = MoeConfig { vanilla: true, ..cfg.clone() };
+    (expected_ffn_flops(cfg, t) + expected_zc_flops(cfg, t))
+        / expected_ffn_flops(&vanilla, t)
+}
+
+/// The paper's ideal throughput-increase figure implied by the complexity
+/// model: 1/ratio - 1 (e.g. Table 3's "+x%" column under perfect scaling).
+pub fn ideal_throughput_increase(cfg: &MoeConfig, t: usize) -> f64 {
+    1.0 / complexity_ratio(cfg, t) - 1.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_matches_closed_form() {
+        let cfg = MoeConfig::preset("sm-8e"); // tau=.75, 8F + 4Z
+        let want = 0.75 * 8.0 / (0.75 * 8.0 + 4.0);
+        let got = complexity_ratio(&cfg, 10_000);
+        // ZC flops add a hair above the pure Table 1 ratio.
+        assert!((got - want).abs() < 0.01, "{got} vs {want}");
+    }
+
+    #[test]
+    fn vanilla_ratio_is_one() {
+        let cfg = MoeConfig::preset("sm-8e:vanilla");
+        assert!((complexity_ratio(&cfg, 1000) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn smaller_tau_means_cheaper() {
+        let mut a = MoeConfig::preset("sm-8e");
+        let mut b = a.clone();
+        a.tau = 0.1;
+        b.tau = 1.0;
+        assert!(complexity_ratio(&a, 1000) < complexity_ratio(&b, 1000));
+    }
+
+    #[test]
+    fn table1_sweep_is_monotone_in_tau() {
+        let taus = [0.1, 0.25, 0.5, 0.75, 1.0];
+        let mut last = 0.0;
+        for tau in taus {
+            let cfg = MoeConfig { tau, ..MoeConfig::preset("sm-16e") };
+            let r = complexity_ratio(&cfg, 4096);
+            assert!(r > last, "ratio must increase with tau");
+            last = r;
+        }
+    }
+
+    #[test]
+    fn zc_flops_are_negligible() {
+        let cfg = MoeConfig::preset("sm-8e");
+        let t = 4096;
+        assert!(expected_zc_flops(&cfg, t)
+            < 0.01 * expected_ffn_flops(&cfg, t));
+    }
+}

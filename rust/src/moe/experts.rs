@@ -1,0 +1,292 @@
+//! Expert implementations (paper Sec. 3.1).
+//!
+//! The FFN expert is the only one with real compute: a SwiGLU MLP
+//! (~6·D·F FLOPs/token). The three zero-computation experts are:
+//!
+//! * zero     — `E(x) = 0`          (Eq. 3): *discard*, costs nothing;
+//! * copy     — `E(x) = x`          (Eq. 4): *skip*, a memcpy;
+//! * constant — `E(x) = a1·x + a2·v`(Eq. 5): *replace*, a 2×D matvec + axpy.
+//!
+//! The serving engine exploits exactly this asymmetry: FFN experts queue
+//! into bucketed micro-batches (possibly on another device), ZC experts are
+//! applied inline where the token already lives.
+
+use crate::tensor::ops::{axpy, dot, silu, softmax_slice};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Weights of one SwiGLU FFN expert.
+#[derive(Clone, Debug)]
+pub struct FfnExpert {
+    pub w1: Tensor, // [D, F] gate proj
+    pub w3: Tensor, // [D, F] linear proj
+    pub w2: Tensor, // [F, D] down proj
+}
+
+impl FfnExpert {
+    pub fn init(rng: &mut Rng, d: usize, f: usize) -> FfnExpert {
+        let sd = (d as f32).powf(-0.5);
+        let sf = (f as f32).powf(-0.5);
+        FfnExpert {
+            w1: Tensor::randn(rng, &[d, f], sd),
+            w3: Tensor::randn(rng, &[d, f], sd),
+            w2: Tensor::randn(rng, &[f, d], sf),
+        }
+    }
+
+    /// y = (silu(x@w1) * (x@w3)) @ w2 for a batch of rows.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let (b, d) = x.dims2();
+        let mut out = Tensor::zeros(&[b, d]);
+        let mut scratch = FfnScratch::new(self.w1.shape[1]);
+        self.forward_batch_into(x, None, &mut scratch, &mut out.data, None);
+        out
+    }
+
+    /// Batched forward with reusable scratch: the engine hot path.
+    ///
+    /// Writes `gates[i] * FFN(x[i])` into `out` — either contiguous rows
+    /// (scatter == None) or scatter-added at `scatter[i] * d`. `gates ==
+    /// None` means gate 1.0 everywhere, `scatter == None` overwrites rows
+    /// in order.
+    pub fn forward_batch_into(
+        &self,
+        x: &Tensor,
+        gates: Option<&[f32]>,
+        scratch: &mut FfnScratch,
+        out: &mut [f32],
+        scatter: Option<&[usize]>,
+    ) {
+        let (b, d) = x.dims2();
+        let f = self.w1.shape[1];
+        scratch.ensure(f.max(d));
+        // Token blocking (§Perf iteration 2): the kernel is weight-stream
+        // bound (w1/w3/w2 are re-read per token). Processing BLK tokens per
+        // weight pass amortises that traffic BLK-fold; the per-row inner
+        // loops re-read each weight row from L1.
+        const BLK: usize = 4;
+        let mut i = 0;
+        while i < b {
+            let blk = (b - i).min(BLK);
+            let (hg, hl, acc) = scratch.triple(f, d);
+            hg[..blk * f].fill(0.0);
+            hl[..blk * f].fill(0.0);
+            // Up-projections: one pass over w1/w3 rows for all blk tokens.
+            for k in 0..d {
+                let w1row = &self.w1.data[k * f..(k + 1) * f];
+                let w3row = &self.w3.data[k * f..(k + 1) * f];
+                for t in 0..blk {
+                    let xv = x.data[(i + t) * d + k];
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    axpy(xv, w1row, &mut hg[t * f..(t + 1) * f]);
+                    axpy(xv, w3row, &mut hl[t * f..(t + 1) * f]);
+                }
+            }
+            for (a, &v) in hg[..blk * f].iter_mut().zip(&hl[..blk * f]) {
+                *a = silu(*a) * v;
+            }
+            // Down-projection into a contiguous block accumulator, then
+            // gate-scale and scatter.
+            acc[..blk * d].fill(0.0);
+            for k in 0..f {
+                let w2row = &self.w2.data[k * d..(k + 1) * d];
+                for t in 0..blk {
+                    let hv = hg[t * f + k];
+                    if hv != 0.0 {
+                        axpy(hv, w2row, &mut acc[t * d..(t + 1) * d]);
+                    }
+                }
+            }
+            for t in 0..blk {
+                let g = gates.map_or(1.0, |gs| gs[i + t]);
+                let at = scatter.map_or(i + t, |s| s[i + t]);
+                axpy(g, &acc[t * d..(t + 1) * d],
+                     &mut out[at * d..(at + 1) * d]);
+            }
+            i += blk;
+        }
+    }
+
+    /// Single-token forward into a caller-provided buffer, scaled by `g`.
+    pub fn forward_token_into(&self, x: &[f32], g: f32, out: &mut [f32]) {
+        let d = x.len();
+        let f = self.w1.shape[1];
+        let mut hg = vec![0.0f32; f];
+        let mut hl = vec![0.0f32; f];
+        for (k, &xv) in x.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            axpy(xv, &self.w1.data[k * f..(k + 1) * f], &mut hg);
+            axpy(xv, &self.w3.data[k * f..(k + 1) * f], &mut hl);
+        }
+        for (a, &b) in hg.iter_mut().zip(&hl) {
+            *a = silu(*a) * b;
+        }
+        for (k, &hv) in hg.iter().enumerate() {
+            if hv != 0.0 {
+                axpy(g * hv, &self.w2.data[k * d..(k + 1) * d], out);
+            }
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.w1.numel() + self.w3.numel() + self.w2.numel()
+    }
+}
+
+/// Reusable intermediate buffers for `FfnExpert::forward_batch_into` —
+/// keeps the hot loop allocation-free across micro-batches (§Perf).
+pub struct FfnScratch {
+    hg: Vec<f32>,
+    hl: Vec<f32>,
+    acc: Vec<f32>,
+}
+
+const SCRATCH_BLK: usize = 4;
+
+impl FfnScratch {
+    pub fn new(f: usize) -> FfnScratch {
+        FfnScratch {
+            hg: vec![0.0; SCRATCH_BLK * f],
+            hl: vec![0.0; SCRATCH_BLK * f],
+            acc: vec![0.0; SCRATCH_BLK * f],
+        }
+    }
+
+    fn ensure(&mut self, n: usize) {
+        if self.hg.len() < SCRATCH_BLK * n {
+            self.hg.resize(SCRATCH_BLK * n, 0.0);
+            self.hl.resize(SCRATCH_BLK * n, 0.0);
+            self.acc.resize(SCRATCH_BLK * n, 0.0);
+        }
+    }
+
+    fn triple(&mut self, _f: usize, _d: usize)
+        -> (&mut [f32], &mut [f32], &mut [f32]) {
+        (&mut self.hg, &mut self.hl, &mut self.acc)
+    }
+}
+
+/// Weights of one constant expert (Eq. 5).
+#[derive(Clone, Debug)]
+pub struct ConstExpert {
+    pub wc: Tensor, // [2, D]
+    pub v: Tensor,  // [D]
+}
+
+impl ConstExpert {
+    pub fn init(rng: &mut Rng, d: usize) -> ConstExpert {
+        ConstExpert {
+            wc: Tensor::randn(rng, &[2, d], (d as f32).powf(-0.5)),
+            v: Tensor::randn(rng, &[d], 0.02),
+        }
+    }
+
+    /// out += g * (a1 x + a2 v), [a1,a2] = softmax(Wc x).
+    pub fn forward_token_into(&self, x: &[f32], g: f32, out: &mut [f32]) {
+        let d = x.len();
+        let mut logits = [
+            dot(x, &self.wc.data[0..d]),
+            dot(x, &self.wc.data[d..2 * d]),
+        ];
+        softmax_slice(&mut logits);
+        axpy(g * logits[0], x, out);
+        axpy(g * logits[1], &self.v.data, out);
+    }
+
+    pub fn alphas(&self, x: &[f32]) -> [f32; 2] {
+        let d = x.len();
+        let mut logits = [
+            dot(x, &self.wc.data[0..d]),
+            dot(x, &self.wc.data[d..2 * d]),
+        ];
+        softmax_slice(&mut logits);
+        logits
+    }
+}
+
+/// Zero expert (Eq. 3): contributes nothing.
+pub fn zero_expert_into(_x: &[f32], _g: f32, _out: &mut [f32]) {
+    // intentionally empty — "discard"
+}
+
+/// Copy expert (Eq. 4): out += g * x.
+pub fn copy_expert_into(x: &[f32], g: f32, out: &mut [f32]) {
+    axpy(g, x, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ffn_batch_matches_per_token() {
+        let mut rng = Rng::new(0);
+        let (d, f) = (16, 32);
+        let e = FfnExpert::init(&mut rng, d, f);
+        let x = Tensor::randn(&mut rng, &[5, d], 1.0);
+        let batch = e.forward(&x);
+        for i in 0..5 {
+            let mut out = vec![0.0; d];
+            e.forward_token_into(x.row(i), 1.0, &mut out);
+            for (a, b) in out.iter().zip(batch.row(i)) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn ffn_gate_scales_linearly() {
+        let mut rng = Rng::new(1);
+        let e = FfnExpert::init(&mut rng, 8, 16);
+        let x: Vec<f32> = (0..8).map(|i| i as f32 * 0.1).collect();
+        let mut a = vec![0.0; 8];
+        let mut b = vec![0.0; 8];
+        e.forward_token_into(&x, 1.0, &mut a);
+        e.forward_token_into(&x, 0.25, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x * 0.25 - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn const_expert_is_convex_combination() {
+        let mut rng = Rng::new(2);
+        let d = 12;
+        let e = ConstExpert::init(&mut rng, d);
+        let x: Vec<f32> = (0..d).map(|i| (i as f32).sin()).collect();
+        let [a1, a2] = e.alphas(&x);
+        assert!((a1 + a2 - 1.0).abs() < 1e-5);
+        assert!(a1 > 0.0 && a2 > 0.0);
+        let mut out = vec![0.0; d];
+        e.forward_token_into(&x, 1.0, &mut out);
+        for j in 0..d {
+            let want = a1 * x[j] + a2 * e.v.data[j];
+            assert!((out[j] - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn const_expert_zero_wc_gives_even_mix() {
+        let mut rng = Rng::new(3);
+        let d = 6;
+        let mut e = ConstExpert::init(&mut rng, d);
+        e.wc = Tensor::zeros(&[2, d]);
+        let x = vec![1.0; d];
+        let [a1, a2] = e.alphas(&x);
+        assert!((a1 - 0.5).abs() < 1e-6 && (a2 - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_and_copy_semantics() {
+        let x = vec![1.0, -2.0, 3.0];
+        let mut out = vec![10.0, 10.0, 10.0];
+        zero_expert_into(&x, 0.7, &mut out);
+        assert_eq!(out, vec![10.0, 10.0, 10.0]);
+        copy_expert_into(&x, 0.5, &mut out);
+        assert_eq!(out, vec![10.5, 9.0, 11.5]);
+    }
+}

@@ -1,0 +1,339 @@
+//! Native MoE++ layer forward: the direct (per-token) reference
+//! implementation of the dispatch semantics shared with L2 (DESIGN.md §6).
+//!
+//! The serving engine in `coordinator/` implements the same semantics with
+//! batching and queueing; this module is the oracle it is property-tested
+//! against, and the compute model the cluster simulator runs.
+
+use crate::config::{ExpertKind, MoeConfig};
+use crate::moe::router::{route, Routing};
+use crate::moe::weights::MoeLayerWeights;
+use crate::tensor::Tensor;
+
+/// One surviving (token, expert) assignment after capacity filtering.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Assignment {
+    pub token: usize,
+    pub expert: usize,
+    pub gate: f32,
+    pub slot: usize, // which top-k slot produced it (0 = top-1)
+}
+
+/// Result of capacity-aware dispatch (before any expert compute).
+#[derive(Clone, Debug)]
+pub struct Dispatch {
+    pub kept: Vec<Assignment>,
+    pub dropped: Vec<Assignment>,
+    /// Final per-expert load (kept assignments).
+    pub load: Vec<usize>,
+}
+
+/// Apply heterogeneous capacity (Eq. 8) to a routing decision.
+///
+/// Priority is slot-major then token order: all top-1 assignments claim
+/// capacity before any top-2 assignment — matching the L2 (GShard-style)
+/// `_positions_in_expert` exactly.
+pub fn dispatch(routing: &Routing, cfg: &MoeConfig, n_tokens: usize)
+    -> Dispatch {
+    let caps = cfg.capacity_vec(n_tokens);
+    let n = cfg.n_experts();
+    let mut load = vec![0usize; n];
+    let mut kept = Vec::new();
+    let mut dropped = Vec::new();
+    for slot in 0..cfg.top_k {
+        for (tok, tk) in routing.topk.iter().enumerate() {
+            if let Some(&(e, g)) = tk.get(slot) {
+                let a = Assignment { token: tok, expert: e, gate: g, slot };
+                if load[e] < caps[e] {
+                    load[e] += 1;
+                    kept.push(a);
+                } else {
+                    dropped.push(a);
+                }
+            }
+        }
+    }
+    Dispatch { kept, dropped, load }
+}
+
+/// Statistics of one layer forward (mirrors L2's MoELayerAux).
+#[derive(Clone, Debug, Default)]
+pub struct LayerStats {
+    pub expert_counts: Vec<usize>, // pre-capacity
+    pub dropped: usize,
+    pub ffn_assignments: usize,
+    pub zc_assignments: usize,
+    pub ffn_per_token: f64,
+    pub balance_loss: f64,
+}
+
+/// Full native layer forward: route -> dispatch -> expert compute -> combine.
+///
+/// Returns (y [T, D], routing, stats). `prev_scores` is the gating residual
+/// input (None for layer 0).
+pub fn layer_forward(
+    weights: &MoeLayerWeights,
+    x: &Tensor,
+    prev_scores: Option<&Tensor>,
+    cfg: &MoeConfig,
+) -> (Tensor, Routing, LayerStats) {
+    let (t, d) = x.dims2();
+    let prev = if cfg.gating_residual { prev_scores } else { None };
+    let routing = route(x, &weights.router, prev, cfg.top_k);
+    let disp = dispatch(&routing, cfg, t);
+    let mut y = Tensor::zeros(&[t, d]);
+    let mut ffn_assignments = 0;
+    let mut zc_assignments = 0;
+    for a in &disp.kept {
+        let xrow = x.row(a.token);
+        // Split borrows: output row is disjoint from x.
+        let orow = &mut y.data[a.token * d..(a.token + 1) * d];
+        match cfg.kind(a.expert) {
+            ExpertKind::Ffn => {
+                weights.ffn[a.expert].forward_token_into(xrow, a.gate, orow);
+                ffn_assignments += 1;
+            }
+            ExpertKind::Zero => {
+                zc_assignments += 1; // discard: contributes nothing
+            }
+            ExpertKind::Copy => {
+                crate::moe::experts::copy_expert_into(xrow, a.gate, orow);
+                zc_assignments += 1;
+            }
+            ExpertKind::Constant => {
+                let j = a.expert
+                    - cfg.n_ffn_experts
+                    - cfg.n_zero
+                    - cfg.n_copy;
+                weights.consts[j].forward_token_into(xrow, a.gate, orow);
+                zc_assignments += 1;
+            }
+        }
+    }
+    let stats = LayerStats {
+        expert_counts: crate::moe::balance::assignment_counts(
+            &routing,
+            cfg.n_experts(),
+        ),
+        dropped: disp.dropped.len(),
+        ffn_assignments,
+        zc_assignments,
+        ffn_per_token: ffn_assignments as f64 / t as f64,
+        balance_loss: crate::moe::balance::balance_loss(&routing, cfg),
+    };
+    (y, routing, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{gen, Prop};
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64, t: usize, name: &str)
+        -> (MoeConfig, MoeLayerWeights, Tensor) {
+        let cfg = MoeConfig::preset(name);
+        let mut rng = Rng::new(seed);
+        let w = MoeLayerWeights::init(&mut rng, &cfg);
+        let x = Tensor::randn(&mut rng, &[t, cfg.d_model], 1.0);
+        (cfg, w, x)
+    }
+
+    #[test]
+    fn dispatch_respects_capacity() {
+        let (cfg, w, x) = setup(0, 64, "test");
+        let routing = route(&x, &w.router, None, cfg.top_k);
+        let d = dispatch(&routing, &cfg, 64);
+        let caps = cfg.capacity_vec(64);
+        for (e, &l) in d.load.iter().enumerate() {
+            assert!(l <= caps[e], "expert {e}: load {l} > cap {}", caps[e]);
+        }
+        assert_eq!(d.kept.len() + d.dropped.len(), 64 * cfg.top_k);
+    }
+
+    #[test]
+    fn top1_has_priority_over_top2() {
+        // Build a routing where everyone's top-1 is expert 0 and token 63's
+        // top-2 is also expert 0: all top-1s must be kept/dropped before
+        // any top-2 assignment is considered.
+        let cfg = MoeConfig::preset("test");
+        let n = cfg.n_experts();
+        let t = 40;
+        let mut probs = Tensor::zeros(&[t, n]);
+        let mut topk = Vec::new();
+        for i in 0..t {
+            probs.row_mut(i)[0] = 0.6;
+            probs.row_mut(i)[1] = 0.3;
+            topk.push(vec![(0usize, 0.6f32), (1usize, 0.3f32)]);
+        }
+        let routing = Routing {
+            scores: Tensor::zeros(&[t, n]),
+            probs,
+            topk,
+        };
+        let d = dispatch(&routing, &cfg, t);
+        let cap0 = cfg.capacity_vec(t)[0];
+        // Kept expert-0 assignments are exactly the first cap0 tokens'
+        // slot-0 entries.
+        let kept0: Vec<_> =
+            d.kept.iter().filter(|a| a.expert == 0).collect();
+        assert_eq!(kept0.len(), cap0.min(t));
+        assert!(kept0.iter().all(|a| a.slot == 0));
+        assert!(kept0.windows(2).all(|w| w[0].token < w[1].token));
+    }
+
+    #[test]
+    fn forward_matches_manual_combine() {
+        let (cfg, w, x) = setup(1, 16, "test");
+        let (y, routing, _) = layer_forward(&w, &x, None, &cfg);
+        // Manual recomputation.
+        let disp = dispatch(&routing, &cfg, 16);
+        let d = cfg.d_model;
+        let mut want = Tensor::zeros(&[16, d]);
+        for a in &disp.kept {
+            let xrow = x.row(a.token);
+            let orow = &mut want.data[a.token * d..(a.token + 1) * d];
+            match cfg.kind(a.expert) {
+                ExpertKind::Ffn => w.ffn[a.expert]
+                    .forward_token_into(xrow, a.gate, orow),
+                ExpertKind::Zero => {}
+                ExpertKind::Copy => {
+                    crate::moe::experts::copy_expert_into(xrow, a.gate, orow)
+                }
+                ExpertKind::Constant => {
+                    let j = a.expert - cfg.n_ffn_experts - cfg.n_zero
+                        - cfg.n_copy;
+                    w.consts[j].forward_token_into(xrow, a.gate, orow)
+                }
+            }
+        }
+        assert!(y.approx_eq(&want, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn gating_residual_threads() {
+        let (cfg, mut w, x) = setup(2, 16, "test");
+        // identity-ish Wg so residual visibly shifts scores
+        let n = cfg.n_experts();
+        for i in 0..n {
+            w.router.wg.data[i * n + i] = 1.0;
+        }
+        let (_, r0, _) = layer_forward(&w, &x, None, &cfg);
+        let (_, r1, _) = layer_forward(&w, &x, Some(&r0.scores), &cfg);
+        assert!(!r1.scores.approx_eq(&r0.scores, 1e-6, 0.0));
+        // gating_residual=false ignores prev
+        let mut cfg_off = cfg.clone();
+        cfg_off.gating_residual = false;
+        let (_, r2, _) = layer_forward(&w, &x, Some(&r0.scores), &cfg_off);
+        assert!(r2.scores.approx_eq(&r0.scores, 1e-6, 0.0));
+    }
+
+    #[test]
+    fn vanilla_layer_has_no_zc_assignments() {
+        let (cfg, w, x) = setup(3, 32, "test:vanilla");
+        let (_, _, stats) = layer_forward(&w, &x, None, &cfg);
+        assert_eq!(stats.zc_assignments, 0);
+        assert!(stats.ffn_per_token <= cfg.top_k as f64);
+    }
+
+    #[test]
+    fn moepp_saves_ffn_work_vs_vanilla() {
+        // The paper's central claim at the layer level: fewer FFN
+        // assignments per token than vanilla top-2.
+        let (cfg, w, x) = setup(4, 256, "test");
+        let (_, _, s) = layer_forward(&w, &x, None, &cfg);
+        let (vcfg, vw, _) = setup(4, 256, "test:vanilla");
+        let (_, _, vs) = layer_forward(&vw, &x, None, &vcfg);
+        assert!(s.ffn_per_token < vs.ffn_per_token,
+                "{} vs {}", s.ffn_per_token, vs.ffn_per_token);
+    }
+
+    // ---------------------------------------------------------- properties
+
+    #[test]
+    fn prop_dispatch_conservation() {
+        Prop::new("dispatch-conservation").cases(40).run(
+            |rng| {
+                let t = gen::usize_in(rng, 1, 96);
+                let seed = rng.next_u64();
+                (t, seed)
+            },
+            |&(t, seed)| {
+                let (cfg, w, x) = setup(seed, t, "test");
+                let routing = route(&x, &w.router, None, cfg.top_k);
+                let d = dispatch(&routing, &cfg, t);
+                // 1. every assignment is kept xor dropped
+                if d.kept.len() + d.dropped.len() != t * cfg.top_k {
+                    return Err("assignment count mismatch".into());
+                }
+                // 2. capacity never exceeded
+                let caps = cfg.capacity_vec(t);
+                for (e, &l) in d.load.iter().enumerate() {
+                    if l > caps[e] {
+                        return Err(format!("expert {e} over capacity"));
+                    }
+                }
+                // 3. a token appears at most top_k times in kept
+                let mut per_tok = vec![0usize; t];
+                for a in &d.kept {
+                    per_tok[a.token] += 1;
+                }
+                if per_tok.iter().any(|&c| c > cfg.top_k) {
+                    return Err("token kept more than K times".into());
+                }
+                // 4. gates are the softmax probs (Eq. 1, no renorm)
+                for a in &d.kept {
+                    let p = routing.probs.row(a.token)[a.expert];
+                    if (a.gate - p).abs() > 1e-6 {
+                        return Err("gate != softmax prob".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_forward_gate_bound() {
+        // Output row norm is bounded by sum of gate * per-expert output
+        // norms — no expert contribution is double-counted.
+        Prop::new("forward-bound").cases(15).run(
+            |rng| rng.next_u64(),
+            |&seed| {
+                let (cfg, w, x) = setup(seed, 24, "test");
+                let (y, routing, _) = layer_forward(&w, &x, None, &cfg);
+                let disp = dispatch(&routing, &cfg, 24);
+                for tok in 0..24 {
+                    let yn = y.row(tok).iter().map(|v| v * v).sum::<f32>()
+                        .sqrt();
+                    let mut bound = 0.0f32;
+                    for a in disp.kept.iter().filter(|a| a.token == tok) {
+                        let xrow = x.row(a.token);
+                        let mut tmp = vec![0.0; cfg.d_model];
+                        match cfg.kind(a.expert) {
+                            ExpertKind::Ffn => w.ffn[a.expert]
+                                .forward_token_into(xrow, a.gate, &mut tmp),
+                            ExpertKind::Zero => {}
+                            ExpertKind::Copy =>
+                                crate::moe::experts::copy_expert_into(
+                                    xrow, a.gate, &mut tmp),
+                            ExpertKind::Constant => {
+                                let j = a.expert - cfg.n_ffn_experts
+                                    - cfg.n_zero - cfg.n_copy;
+                                w.consts[j].forward_token_into(
+                                    xrow, a.gate, &mut tmp)
+                            }
+                        }
+                        bound += tmp.iter().map(|v| v * v).sum::<f32>()
+                            .sqrt();
+                    }
+                    if yn > bound + 1e-4 {
+                        return Err(format!(
+                            "token {tok}: |y|={yn} > bound {bound}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

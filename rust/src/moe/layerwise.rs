@@ -1,0 +1,136 @@
+//! Per-layer heterogeneous MoE++ — the paper's Appendix A.2 future-work
+//! direction, implemented as a first-class feature.
+//!
+//! The paper observes (Appendix D) that expert-assignment patterns vary
+//! most in the shallow and final layers, suggesting models adapt to tasks
+//! primarily there. This module lets each layer carry its own tau (token
+//! allocation between FFN and ZC experts): a [`LayerSchedule`] maps layer
+//! index -> tau, so e.g. the shallow/final layers can keep more FFN
+//! capacity (higher tau) while middle layers shed compute (lower tau).
+
+use crate::config::MoeConfig;
+
+/// Per-layer tau schedule.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerSchedule {
+    /// Single tau everywhere (the paper's main setting).
+    Uniform(f64),
+    /// Explicit per-layer taus (len == n_layers).
+    PerLayer(Vec<f64>),
+    /// The Appendix-D-motivated shape: `edge` tau on the first and last
+    /// `k` layers, `middle` tau elsewhere.
+    EdgeHeavy { edge: f64, middle: f64, k: usize },
+}
+
+impl LayerSchedule {
+    pub fn tau(&self, layer: usize, n_layers: usize) -> f64 {
+        match self {
+            LayerSchedule::Uniform(t) => *t,
+            LayerSchedule::PerLayer(v) => v[layer],
+            LayerSchedule::EdgeHeavy { edge, middle, k } => {
+                if layer < *k || layer + k >= n_layers {
+                    *edge
+                } else {
+                    *middle
+                }
+            }
+        }
+    }
+
+    /// Materialise the per-layer configs for an engine stack.
+    pub fn configs(&self, base: &MoeConfig) -> Vec<MoeConfig> {
+        (0..base.n_layers)
+            .map(|l| MoeConfig {
+                tau: self.tau(l, base.n_layers),
+                ..base.clone()
+            })
+            .collect()
+    }
+
+    /// Expected FFN-compute ratio vs vanilla (mean of per-layer Table-1
+    /// ratios) — the complexity accounting for a scheduled stack.
+    pub fn complexity_ratio(&self, base: &MoeConfig, tokens: usize) -> f64 {
+        let cfgs = self.configs(base);
+        cfgs.iter()
+            .map(|c| crate::moe::complexity::complexity_ratio(c, tokens))
+            .sum::<f64>()
+            / cfgs.len() as f64
+    }
+
+    /// Parse from a CLI string: "0.75" | "0.9,0.5,0.5,0.9" |
+    /// "edge:0.9,0.25,1".
+    pub fn parse(s: &str) -> anyhow::Result<LayerSchedule> {
+        if let Some(rest) = s.strip_prefix("edge:") {
+            let parts: Vec<&str> = rest.split(',').collect();
+            anyhow::ensure!(parts.len() == 3, "edge:EDGE,MIDDLE,K");
+            return Ok(LayerSchedule::EdgeHeavy {
+                edge: parts[0].parse()?,
+                middle: parts[1].parse()?,
+                k: parts[2].parse()?,
+            });
+        }
+        if s.contains(',') {
+            let v: Result<Vec<f64>, _> =
+                s.split(',').map(str::parse).collect();
+            return Ok(LayerSchedule::PerLayer(v?));
+        }
+        Ok(LayerSchedule::Uniform(s.parse()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_matches_base() {
+        let s = LayerSchedule::Uniform(0.5);
+        for l in 0..8 {
+            assert_eq!(s.tau(l, 8), 0.5);
+        }
+    }
+
+    #[test]
+    fn edge_heavy_shape() {
+        let s = LayerSchedule::EdgeHeavy { edge: 0.9, middle: 0.25, k: 2 };
+        let taus: Vec<f64> = (0..8).map(|l| s.tau(l, 8)).collect();
+        assert_eq!(taus, vec![0.9, 0.9, 0.25, 0.25, 0.25, 0.25, 0.9, 0.9]);
+    }
+
+    #[test]
+    fn per_layer_configs_carry_taus() {
+        let base = MoeConfig::preset("test"); // 2 layers
+        let s = LayerSchedule::PerLayer(vec![0.1, 1.0]);
+        let cfgs = s.configs(&base);
+        assert_eq!(cfgs[0].tau, 0.1);
+        assert_eq!(cfgs[1].tau, 1.0);
+        // Capacity follows tau per layer (Eq. 8 per layer).
+        assert!(cfgs[0].capacities(100).0 < cfgs[1].capacities(100).0);
+    }
+
+    #[test]
+    fn scheduled_complexity_between_extremes() {
+        let base = MoeConfig::preset("sm-8e");
+        let lo = LayerSchedule::Uniform(0.1)
+            .complexity_ratio(&base, 1024);
+        let hi = LayerSchedule::Uniform(1.0)
+            .complexity_ratio(&base, 1024);
+        let mid = LayerSchedule::EdgeHeavy { edge: 1.0, middle: 0.1, k: 1 }
+            .complexity_ratio(&base, 1024);
+        assert!(lo < mid && mid < hi, "{lo} {mid} {hi}");
+    }
+
+    #[test]
+    fn parse_forms() {
+        assert_eq!(LayerSchedule::parse("0.75").unwrap(),
+                   LayerSchedule::Uniform(0.75));
+        assert_eq!(LayerSchedule::parse("0.9,0.5").unwrap(),
+                   LayerSchedule::PerLayer(vec![0.9, 0.5]));
+        assert_eq!(
+            LayerSchedule::parse("edge:0.9,0.25,1").unwrap(),
+            LayerSchedule::EdgeHeavy { edge: 0.9, middle: 0.25, k: 1 }
+        );
+        assert!(LayerSchedule::parse("edge:1").is_err());
+        assert!(LayerSchedule::parse("abc").is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! Pure-Rust reference implementation of MoE++ and vanilla MoE: experts,
+//! pathway-aware router, heterogeneous capacity/balance, and the Table 1
+//! complexity model.
+//!
+//! This is (a) the native backend of the serving engine, (b) the oracle the
+//! property tests check coordinator invariants against, and (c) the compute
+//! model the cluster simulator runs on each simulated device.
+
+pub mod balance;
+pub mod complexity;
+pub mod experts;
+pub mod layer;
+pub mod layerwise;
+pub mod router;
+pub mod weights;

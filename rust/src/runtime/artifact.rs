@@ -1,0 +1,206 @@
+//! Manifest parsing: the contract between aot.py and the Rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::MoeConfig;
+use crate::util::json::Json;
+
+/// Dtype of an artifact input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "float32" => Ok(Dtype::F32),
+            "int32" => Ok(Dtype::I32),
+            other => anyhow::bail!("unsupported dtype '{other}'"),
+        }
+    }
+}
+
+/// Shape+dtype+name of one artifact input or output.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .context("spec missing name")?
+                .to_string(),
+            shape: j
+                .get("shape")
+                .and_then(Json::as_arr)
+                .context("spec missing shape")?
+                .iter()
+                .map(|v| v.as_usize().context("bad dim"))
+                .collect::<Result<_>>()?,
+            dtype: Dtype::parse(
+                j.get("dtype").and_then(Json::as_str).context("dtype")?,
+            )?,
+        })
+    }
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed manifest.json.
+#[derive(Debug)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub configs: BTreeMap<String, MoeConfig>,
+    /// Extra per-config metadata (train batch, capacities, param order).
+    pub config_meta: BTreeMap<String, Json>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest json")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .context("manifest missing 'artifacts'")?
+        {
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .context("inputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_>>()?;
+            let outputs = a
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .context("outputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: a
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .context("file")?
+                        .to_string(),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        let mut configs = BTreeMap::new();
+        let mut config_meta = BTreeMap::new();
+        if let Some(cfgs) = j.get("configs").and_then(Json::as_obj) {
+            for (name, c) in cfgs {
+                configs.insert(name.clone(), MoeConfig::from_json(c)?);
+                config_meta.insert(name.clone(), c.clone());
+            }
+        }
+        Ok(Manifest { artifacts, configs, config_meta })
+    }
+
+    /// The train batch size baked into a variant's artifacts.
+    pub fn train_batch(&self, tag: &str) -> Option<usize> {
+        self.config_meta
+            .get(tag)?
+            .get("train_batch")
+            .and_then(Json::as_usize)
+    }
+
+    /// Ordered parameter names for a variant (manifest `param_order`).
+    pub fn param_order(&self, tag: &str) -> Option<Vec<String>> {
+        Some(
+            self.config_meta
+                .get(tag)?
+                .get("param_order")?
+                .as_arr()?
+                .iter()
+                .filter_map(|v| v.as_str().map(String::from))
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": {
+        "m_fwd": {
+          "file": "m_fwd.hlo.txt",
+          "inputs": [
+            {"name": "params[0]", "shape": [4, 8], "dtype": "float32"},
+            {"name": "tokens", "shape": [2, 16], "dtype": "int32"}
+          ],
+          "outputs": [
+            {"name": "logits", "shape": [2, 16, 64], "dtype": "float32"}
+          ],
+          "sha256": "x"
+        }
+      },
+      "configs": {
+        "m": {"name":"test","vocab_size":64,"n_layers":2,"d_model":32,
+              "d_ff":64,"n_heads":2,"seq_len":16,"n_ffn_experts":4,
+              "n_zero":1,"n_copy":1,"n_const":2,"top_k":2,"tau":0.75,
+              "capacity_factor":1.1,"balance_coef":0.01,
+              "gating_residual":true,"variant":"moepp",
+              "train_batch": 4,
+              "param_order": ["params[0]"]}
+      }
+    }"#;
+
+    #[test]
+    fn parse_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = &m.artifacts["m_fwd"];
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[1].dtype, Dtype::I32);
+        assert_eq!(a.outputs[0].numel(), 2 * 16 * 64);
+        assert_eq!(m.configs["m"].n_experts(), 8);
+        assert_eq!(m.train_batch("m"), Some(4));
+        assert_eq!(m.param_order("m").unwrap(), vec!["params[0]"]);
+    }
+
+    #[test]
+    fn rejects_missing_sections() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"artifacts": {"x": {}}}"#).is_err());
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(Dtype::parse("float32").unwrap(), Dtype::F32);
+        assert!(Dtype::parse("bfloat16").is_err());
+    }
+}

@@ -1,0 +1,150 @@
+//! Host-side values crossing the PJRT boundary: f32 tensors and i32 tensors
+//! with conversion to/from `xla::Literal`.
+
+use anyhow::Result;
+
+use super::artifact::{Dtype, TensorSpec};
+use crate::tensor::Tensor;
+
+/// A host value matching one artifact input/output slot.
+#[derive(Clone, Debug)]
+pub enum HostValue {
+    F32(Tensor),
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostValue {
+    pub fn scalar_i32(v: i32) -> HostValue {
+        HostValue::I32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn scalar_f32(v: f32) -> HostValue {
+        HostValue::F32(Tensor::from_vec(&[1], vec![v]).reshape(&[]))
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostValue::F32(t) => &t.shape,
+            HostValue::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            HostValue::F32(t) => Ok(t),
+            _ => anyhow::bail!("expected f32 value"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Tensor> {
+        match self {
+            HostValue::F32(t) => Ok(t),
+            _ => anyhow::bail!("expected f32 value"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostValue::I32 { data, .. } => Ok(data),
+            _ => anyhow::bail!("expected i32 value"),
+        }
+    }
+
+    /// First element as f64 (for scalar metrics).
+    pub fn scalar(&self) -> Result<f64> {
+        match self {
+            HostValue::F32(t) => Ok(*t
+                .data
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("empty value"))?
+                as f64),
+            HostValue::I32 { data, .. } => Ok(*data
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("empty value"))?
+                as f64),
+        }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64>;
+        let lit = match self {
+            HostValue::F32(t) => {
+                dims = t.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data)
+            }
+            HostValue::I32 { shape, data } => {
+                dims = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data)
+            }
+        };
+        lit.reshape(&dims)
+            .map_err(|e| anyhow::anyhow!("literal reshape: {e}"))
+    }
+
+    pub fn from_literal(lit: xla::Literal, spec: &TensorSpec)
+        -> Result<HostValue> {
+        match spec.dtype {
+            Dtype::F32 => {
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("literal to_vec f32: {e}"))?;
+                anyhow::ensure!(
+                    data.len() == spec.numel(),
+                    "output '{}': {} elements, expected {}",
+                    spec.name,
+                    data.len(),
+                    spec.numel()
+                );
+                Ok(HostValue::F32(Tensor { shape: spec.shape.clone(), data }))
+            }
+            Dtype::I32 => {
+                let data = lit
+                    .to_vec::<i32>()
+                    .map_err(|e| anyhow::anyhow!("literal to_vec i32: {e}"))?;
+                Ok(HostValue::I32 { shape: spec.shape.clone(), data })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_literal_roundtrip() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|i| i as f32).collect());
+        let lit = HostValue::F32(t.clone()).to_literal().unwrap();
+        let spec = TensorSpec {
+            name: "x".into(),
+            shape: vec![2, 3],
+            dtype: Dtype::F32,
+        };
+        let back = HostValue::from_literal(lit, &spec).unwrap();
+        assert_eq!(back.as_f32().unwrap(), &t);
+    }
+
+    #[test]
+    fn i32_scalar_roundtrip() {
+        let lit = HostValue::scalar_i32(42).to_literal().unwrap();
+        let spec = TensorSpec {
+            name: "seed".into(),
+            shape: vec![],
+            dtype: Dtype::I32,
+        };
+        let back = HostValue::from_literal(lit, &spec).unwrap();
+        assert_eq!(back.as_i32().unwrap(), &[42]);
+        assert_eq!(back.scalar().unwrap(), 42.0);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let lit = HostValue::F32(Tensor::zeros(&[4])).to_literal().unwrap();
+        let spec = TensorSpec {
+            name: "y".into(),
+            shape: vec![5],
+            dtype: Dtype::F32,
+        };
+        assert!(HostValue::from_literal(lit, &spec).is_err());
+    }
+}

@@ -1,0 +1,183 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them from
+//! the L3 hot path. Wraps the `xla` crate (xla_extension 0.5.1, CPU).
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax >= 0.5
+//! emits serialized protos with 64-bit instruction ids that this XLA build
+//! rejects; the text parser reassigns ids. All artifacts are lowered with
+//! `return_tuple=True`, so every execution returns one tuple literal which
+//! is decomposed into the manifest-declared outputs.
+
+pub mod artifact;
+pub mod host;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use artifact::{ArtifactSpec, Manifest};
+use host::HostValue;
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub name: String,
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host values; returns the decomposed output tuple.
+    pub fn run(&self, args: &[HostValue]) -> Result<Vec<HostValue>> {
+        anyhow::ensure!(
+            args.len() == self.spec.inputs.len(),
+            "artifact {}: got {} args, expected {}",
+            self.name,
+            args.len(),
+            self.spec.inputs.len()
+        );
+        // NB: aot.py never emits zero-element parameters (XLA prunes them
+        // from some compiled programs but not others), so args and the
+        // compiled program's buffer list correspond 1:1.
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .enumerate()
+            .map(|(i, v)| {
+                v.to_literal().with_context(|| {
+                    format!("arg {i} ({})", self.spec.inputs[i].name)
+                })
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal {}: {e}", self.name))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {}: {e}", self.name))?;
+        anyhow::ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "artifact {}: got {} outputs, expected {}",
+            self.name,
+            parts.len(),
+            self.spec.outputs.len()
+        );
+        parts
+            .into_iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| HostValue::from_literal(lit, spec))
+            .collect()
+    }
+
+    /// Borrow-based execution for pre-built literals (hot path: avoids
+    /// cloning expert weights on every micro-batch).
+    pub fn run_literals(&self, args: &[&xla::Literal])
+        -> Result<Vec<HostValue>> {
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal {}: {e}", self.name))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {}: {e}", self.name))?;
+        anyhow::ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "artifact {}: got {} outputs, expected {}",
+            self.name,
+            parts.len(),
+            self.spec.outputs.len()
+        );
+        parts
+            .into_iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| HostValue::from_literal(lit, spec))
+            .collect()
+    }
+}
+
+/// Artifact registry: manifest + lazily compiled executables.
+pub struct Runtime {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open `artifacts/` (expects manifest.json inside).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Runtime { dir, manifest, client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Compile (or fetch the cached) artifact by name.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?
+            .clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))?;
+        let executable = std::sync::Arc::new(Executable {
+            name: name.to_string(),
+            spec,
+            exe,
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), executable.clone());
+        Ok(executable)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.manifest.artifacts.contains_key(name)
+    }
+
+    /// Smallest compiled expert-FFN bucket >= `n` for `preset`; None if n
+    /// exceeds the largest bucket (caller then splits the batch).
+    pub fn ffn_bucket(&self, preset: &str, n: usize) -> Option<usize> {
+        let mut buckets: Vec<usize> = self
+            .manifest
+            .artifacts
+            .keys()
+            .filter_map(|k| {
+                k.strip_prefix(&format!("expert_ffn_{preset}_b"))
+                    .and_then(|b| b.parse().ok())
+            })
+            .collect();
+        buckets.sort_unstable();
+        buckets.into_iter().find(|&b| b >= n)
+    }
+
+    pub fn max_ffn_bucket(&self, preset: &str) -> Option<usize> {
+        self.manifest
+            .artifacts
+            .keys()
+            .filter_map(|k| {
+                k.strip_prefix(&format!("expert_ffn_{preset}_b"))
+                    .and_then(|b| b.parse().ok())
+            })
+            .max()
+    }
+}

@@ -1,0 +1,62 @@
+//! Analysis pipelines behind the paper's qualitative figures:
+//!
+//! * Fig. 4 / A–E — expert-load distribution at the task level;
+//! * Fig. 5      — FFN experts activated per token at the token level;
+//! * Fig. 6      — effect of gating residuals on routing-score statistics.
+//!
+//! Each pipeline runs the native engine over tagged evaluation streams and
+//! renders CSV plus ASCII bar charts (this testbed has no plotting stack).
+
+pub mod gating;
+pub mod load;
+pub mod token_level;
+
+/// Render a labelled ASCII horizontal bar chart (max width 50 cols).
+pub fn bar_chart(rows: &[(String, f64)]) -> String {
+    let max = rows.iter().map(|r| r.1).fold(0.0, f64::max).max(1e-12);
+    let label_w = rows.iter().map(|r| r.0.len()).max().unwrap_or(0);
+    let mut out = String::new();
+    for (label, v) in rows {
+        let n = ((v / max) * 50.0).round() as usize;
+        out.push_str(&format!(
+            "{label:label_w$} | {}{} {v:.3}\n",
+            "#".repeat(n),
+            " ".repeat(50 - n)
+        ));
+    }
+    out
+}
+
+/// Write rows as CSV.
+pub fn to_csv(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = header.join(",");
+    out.push('\n');
+    for r in rows {
+        out.push_str(&r.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn bar_chart_renders() {
+        let s = super::bar_chart(&[
+            ("ffn".to_string(), 2.0),
+            ("zero".to_string(), 1.0),
+        ]);
+        assert!(s.contains("ffn"));
+        let ffn_hashes =
+            s.lines().next().unwrap().matches('#').count();
+        let zero_hashes = s.lines().nth(1).unwrap().matches('#').count();
+        assert_eq!(ffn_hashes, 2 * zero_hashes);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let s = super::to_csv(&["a", "b"],
+                              &[vec!["1".into(), "2".into()]]);
+        assert_eq!(s, "a,b\n1,2\n");
+    }
+}

@@ -1,0 +1,136 @@
+//! Fig. 5: number of FFN experts activated per token, at the token level.
+//!
+//! The paper's finding: semantically heavy tokens (verbs) average ~1.7+ FFN
+//! experts, fragments average <1.5. We reproduce the *mechanism* over the
+//! synthetic corpus: per token-id mean surviving FFN activations, reported
+//! against token frequency (high-frequency ⇒ "simple" function tokens).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::MoeConfig;
+use crate::coordinator::dispatch::DispatchPlan;
+use crate::moe::router::route;
+use crate::moe::weights::StackWeights;
+use crate::tensor::Tensor;
+
+/// Accumulated per-token-id FFN activation statistics.
+#[derive(Clone, Debug, Default)]
+pub struct TokenActivations {
+    /// token id -> (sum of surviving FFN assignments across layers, count
+    /// of (occurrence, layer) observations).
+    pub acc: BTreeMap<i32, (f64, u64)>,
+    pub occurrences: BTreeMap<i32, u64>,
+}
+
+impl TokenActivations {
+    pub fn mean_ffn(&self, token: i32) -> Option<f64> {
+        self.acc.get(&token).map(|&(s, c)| s / c as f64)
+    }
+
+    /// (token, frequency, mean FFN/layer) rows sorted by frequency desc.
+    pub fn rows(&self) -> Vec<(i32, u64, f64)> {
+        let mut v: Vec<_> = self
+            .acc
+            .iter()
+            .map(|(&tok, &(s, c))| {
+                (tok, self.occurrences[&tok], s / c as f64)
+            })
+            .collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1));
+        v
+    }
+}
+
+/// Run token-id sequences through the MoE stack (embedding them with the
+/// engine-owned embedding proxy) and accumulate FFN activations per id.
+///
+/// `embed` maps token ids to hidden rows — here a deterministic random
+/// embedding table, which preserves the property that the same id always
+/// takes the same route at layer 0.
+pub fn token_level_activations(
+    weights: &StackWeights,
+    cfg: &MoeConfig,
+    embed: &Tensor, // [V, D]
+    sequences: &[Vec<i32>],
+) -> Result<TokenActivations> {
+    let d = cfg.d_model;
+    let mut out = TokenActivations::default();
+    for seq in sequences {
+        let t = seq.len();
+        let mut h = Tensor::zeros(&[t, d]);
+        for (i, &tok) in seq.iter().enumerate() {
+            h.row_mut(i)
+                .copy_from_slice(embed.row(tok as usize));
+            *out.occurrences.entry(tok).or_default() += 1;
+        }
+        let mut prev: Option<Tensor> = None;
+        for layer in &weights.layers {
+            let routing =
+                route(&h, &layer.router, prev.as_ref(), cfg.top_k);
+            let plan = DispatchPlan::build(&routing, cfg, t);
+            let mut per_tok = vec![0u32; t];
+            for b in &plan.ffn_batches {
+                for &tok_idx in &b.tokens {
+                    per_tok[tok_idx] += 1;
+                }
+            }
+            for (i, &tok) in seq.iter().enumerate() {
+                let e = out.acc.entry(tok).or_default();
+                e.0 += per_tok[i] as f64;
+                e.1 += 1;
+            }
+            // Forward natively for the next layer's input.
+            let (y, routing2, _) = crate::moe::layer::layer_forward(
+                layer, &h, prev.as_ref(), cfg,
+            );
+            prev = Some(routing2.scores);
+            for (hv, yv) in h.data.iter_mut().zip(&y.data) {
+                *hv += yv;
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn accumulates_over_layers_and_occurrences() {
+        let cfg = MoeConfig::preset("test");
+        let w = StackWeights::init(0, &cfg);
+        let mut rng = Rng::new(0);
+        let embed =
+            Tensor::randn(&mut rng, &[cfg.vocab_size, cfg.d_model], 1.0);
+        let seqs = vec![vec![1, 2, 3, 1], vec![1, 5, 5, 5]];
+        let acts =
+            token_level_activations(&w, &cfg, &embed, &seqs).unwrap();
+        // Token 1 appears 3 times x 2 layers = 6 observations.
+        assert_eq!(acts.acc[&1].1, 3 * cfg.n_layers as u64);
+        assert_eq!(acts.occurrences[&1], 3);
+        // Mean FFN per layer is within [0, top_k].
+        for (_, _, mean) in acts.rows() {
+            assert!(mean >= 0.0 && mean <= cfg.top_k as f64);
+        }
+    }
+
+    #[test]
+    fn same_token_same_first_layer_route() {
+        // Deterministic embedding ⇒ identical layer-0 routing for repeats.
+        let cfg = MoeConfig::preset("test");
+        let w = StackWeights::init(3, &cfg);
+        let mut rng = Rng::new(1);
+        let embed =
+            Tensor::randn(&mut rng, &[cfg.vocab_size, cfg.d_model], 1.0);
+        let a = token_level_activations(&w, &cfg, &embed,
+                                        &[vec![7; 16]]).unwrap();
+        // All 16 occurrences of token 7 at layer 0 take the same route, so
+        // mean is an integer divided by layers... at least it's constant
+        // per occurrence at layer 0; just sanity-check bounds here.
+        assert!(a.mean_ffn(7).unwrap() <= cfg.top_k as f64);
+    }
+}

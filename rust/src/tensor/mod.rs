@@ -1,0 +1,143 @@
+//! Host tensor substrate: a minimal f32 dense tensor plus the linear-algebra
+//! ops the native MoE engine needs (blocked matmul, softmax, top-k, norms).
+//! Built from scratch — no ndarray/BLAS in this offline environment.
+
+pub mod ops;
+
+use crate::util::rng::Rng;
+
+/// Row-major dense f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {shape:?} != data len {}", data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    /// N(0, scale^2) init.
+    pub fn randn(rng: &mut Rng, shape: &[usize], scale: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: (0..n).map(|_| rng.next_normal() * scale).collect(),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Rows/cols of a rank-2 tensor.
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.rank(), 2, "expected rank-2, got {:?}", self.shape);
+        (self.shape[0], self.shape[1])
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let (r, c) = self.dims2();
+        assert!(i < r);
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let (r, c) = self.dims2();
+        assert!(i < r);
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Transpose a rank-2 tensor.
+    pub fn t(&self) -> Tensor {
+        let (r, c) = self.dims2();
+        let mut out = Tensor::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+
+    pub fn approx_eq(&self, other: &Tensor, atol: f32, rtol: f32) -> bool {
+        self.shape == other.shape
+            && self.data.iter().zip(&other.data).all(|(a, b)| {
+                (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+            })
+    }
+
+    /// Squared L2 norm.
+    pub fn sq_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_shape() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.dims2(), (2, 3));
+        let u = Tensor::from_vec(&[3, 2], (0..6).map(|i| i as f32).collect());
+        assert_eq!(u.row(1), &[2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_shape_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(0);
+        let t = Tensor::randn(&mut rng, &[4, 7], 1.0);
+        assert_eq!(t.t().t(), t);
+    }
+
+    #[test]
+    fn randn_distribution() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::randn(&mut rng, &[100, 100], 2.0);
+        let mean = t.data.iter().sum::<f32>() / t.numel() as f32;
+        let var = t.data.iter().map(|x| (x - mean).powi(2)).sum::<f32>()
+            / t.numel() as f32;
+        assert!(mean.abs() < 0.05, "{mean}");
+        assert!((var - 4.0).abs() < 0.2, "{var}");
+    }
+
+    #[test]
+    fn approx_eq_tolerances() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![1.0 + 1e-6, 2.0 - 1e-6]);
+        assert!(a.approx_eq(&b, 1e-5, 0.0));
+        assert!(!a.approx_eq(&b, 1e-8, 0.0));
+    }
+}

@@ -1,0 +1,139 @@
+//! Checkpointing: a from-scratch binary tensor container (magic + per-slot
+//! shape/dtype/data) for trainer params/opt state and native engine
+//! weights.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::host::HostValue;
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 8] = b"MOEPPCK1";
+
+/// Save a list of host values.
+pub fn save(path: &Path, values: &[HostValue]) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&(values.len() as u64).to_le_bytes())?;
+    for v in values {
+        match v {
+            HostValue::F32(t) => {
+                f.write_all(&[0u8])?;
+                write_shape(&mut f, &t.shape)?;
+                for x in &t.data {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            HostValue::I32 { shape, data } => {
+                f.write_all(&[1u8])?;
+                write_shape(&mut f, shape)?;
+                for x in data {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Load a list of host values.
+pub fn load(path: &Path) -> Result<Vec<HostValue>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "bad checkpoint magic");
+    let n = read_u64(&mut f)? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut tag = [0u8; 1];
+        f.read_exact(&mut tag)?;
+        let shape = read_shape(&mut f)?;
+        let numel: usize = shape.iter().product();
+        match tag[0] {
+            0 => {
+                let mut data = vec![0f32; numel];
+                for x in data.iter_mut() {
+                    let mut b = [0u8; 4];
+                    f.read_exact(&mut b)?;
+                    *x = f32::from_le_bytes(b);
+                }
+                out.push(HostValue::F32(Tensor { shape, data }));
+            }
+            1 => {
+                let mut data = vec![0i32; numel];
+                for x in data.iter_mut() {
+                    let mut b = [0u8; 4];
+                    f.read_exact(&mut b)?;
+                    *x = i32::from_le_bytes(b);
+                }
+                out.push(HostValue::I32 { shape, data });
+            }
+            t => anyhow::bail!("bad tensor tag {t}"),
+        }
+    }
+    Ok(out)
+}
+
+fn write_shape<W: Write>(f: &mut W, shape: &[usize]) -> Result<()> {
+    f.write_all(&(shape.len() as u64).to_le_bytes())?;
+    for &d in shape {
+        f.write_all(&(d as u64).to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_shape<R: Read>(f: &mut R) -> Result<Vec<usize>> {
+    let rank = read_u64(f)? as usize;
+    anyhow::ensure!(rank <= 16, "implausible rank {rank}");
+    (0..rank).map(|_| Ok(read_u64(f)? as usize)).collect()
+}
+
+fn read_u64<R: Read>(f: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("moepp-ck-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.bin");
+        let vals = vec![
+            HostValue::F32(Tensor::from_vec(&[2, 3],
+                vec![1.0, -2.0, 3.5, 0.0, 1e-9, -1e9])),
+            HostValue::I32 { shape: vec![], data: vec![42] },
+            HostValue::F32(Tensor::zeros(&[0])), // empty tensor
+        ];
+        save(&path, &vals).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back[0].as_f32().unwrap(),
+                   vals[0].as_f32().unwrap());
+        assert_eq!(back[1].as_i32().unwrap(), &[42]);
+        assert_eq!(back[2].as_f32().unwrap().numel(), 0);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("moepp-ck-test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOTACKPT").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

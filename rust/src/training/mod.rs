@@ -1,0 +1,7 @@
+//! Training driver: pretraining the MoE++ LM entirely from Rust by driving
+//! the AOT-lowered `train_step` artifact (fwd + bwd + AdamW in one HLO
+//! module). Python never runs at training time.
+
+pub mod checkpoint;
+pub mod data;
+pub mod trainer;

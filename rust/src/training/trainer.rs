@@ -1,0 +1,164 @@
+//! The pretraining loop over AOT artifacts.
+//!
+//! State layout follows the manifest: `{tag}_init (seed) -> params ++ opt`,
+//! `{tag}_train_step (params ++ opt ++ tokens) -> params' ++ opt' ++
+//! [loss, ce, balance, grad_norm, lr, dropped, ffn_per_token]`,
+//! `{tag}_eval (params ++ tokens) -> (ce,)`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::host::HostValue;
+use crate::runtime::{Executable, Runtime};
+use crate::training::data::Corpus;
+use crate::util::rng::Rng;
+
+/// Metrics of one training step (tail outputs of the train_step artifact).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepMetrics {
+    pub loss: f64,
+    pub ce: f64,
+    pub balance: f64,
+    pub grad_norm: f64,
+    pub lr: f64,
+    pub dropped: f64,
+    pub ffn_per_token: f64,
+    pub step_s: f64,
+}
+
+pub struct Trainer {
+    pub tag: String,
+    pub batch: usize,
+    pub seq_len: usize,
+    n_params: usize,
+    n_opt: usize,
+    params: Vec<HostValue>,
+    opt: Vec<HostValue>,
+    step_exe: Arc<Executable>,
+    eval_exe: Arc<Executable>,
+    pub history: Vec<StepMetrics>,
+}
+
+impl Trainer {
+    /// Initialise from artifacts: runs `{tag}_init` with `seed`.
+    pub fn new(rt: &Runtime, tag: &str, seed: i32) -> Result<Trainer> {
+        let init = rt.load(&format!("{tag}_init"))?;
+        let step_exe = rt.load(&format!("{tag}_train_step"))?;
+        let eval_exe = rt.load(&format!("{tag}_eval"))?;
+        let state = init.run(&[HostValue::scalar_i32(seed)])?;
+        // Param/opt split: train_step inputs are params ++ opt ++ tokens.
+        let n_inputs = step_exe.spec.inputs.len();
+        let n_params = eval_exe.spec.inputs.len() - 1; // eval: params+tokens
+        let n_opt = n_inputs - n_params - 1;
+        anyhow::ensure!(
+            state.len() == n_params + n_opt,
+            "init returned {} values, expected {}",
+            state.len(),
+            n_params + n_opt
+        );
+        let mut state = state;
+        let opt = state.split_off(n_params);
+        let cfg_meta = rt
+            .manifest
+            .config_meta
+            .get(tag)
+            .with_context(|| format!("no config '{tag}' in manifest"))?;
+        let batch = cfg_meta
+            .get("train_batch")
+            .and_then(crate::util::json::Json::as_usize)
+            .context("train_batch")?;
+        let seq_len = cfg_meta
+            .get("seq_len")
+            .and_then(crate::util::json::Json::as_usize)
+            .context("seq_len")?;
+        Ok(Trainer {
+            tag: tag.to_string(),
+            batch,
+            seq_len,
+            n_params,
+            n_opt,
+            params: state,
+            opt,
+            step_exe,
+            eval_exe,
+            history: Vec::new(),
+        })
+    }
+
+    pub fn params(&self) -> &[HostValue] {
+        &self.params
+    }
+
+    /// One optimizer step on a [batch, seq] token matrix.
+    pub fn step(&mut self, tokens: &[i32]) -> Result<StepMetrics> {
+        anyhow::ensure!(tokens.len() == self.batch * self.seq_len,
+                        "bad token count");
+        let t0 = Instant::now();
+        let mut args = Vec::with_capacity(self.n_params + self.n_opt + 1);
+        args.extend(self.params.iter().cloned());
+        args.extend(self.opt.iter().cloned());
+        args.push(HostValue::I32 {
+            shape: vec![self.batch, self.seq_len],
+            data: tokens.to_vec(),
+        });
+        let mut out = self.step_exe.run(&args)?;
+        let metrics_vals: Vec<HostValue> =
+            out.split_off(self.n_params + self.n_opt);
+        let opt = out.split_off(self.n_params);
+        self.params = out;
+        self.opt = opt;
+        let m = |i: usize| metrics_vals[i].scalar().unwrap_or(f64::NAN);
+        let metrics = StepMetrics {
+            loss: m(0),
+            ce: m(1),
+            balance: m(2),
+            grad_norm: m(3),
+            lr: m(4),
+            dropped: m(5),
+            ffn_per_token: m(6),
+            step_s: t0.elapsed().as_secs_f64(),
+        };
+        self.history.push(metrics);
+        Ok(metrics)
+    }
+
+    /// Train `steps` steps on corpus batches; returns the metric history.
+    pub fn train(&mut self, corpus: &Corpus, steps: usize, rng: &mut Rng,
+                 log_every: usize) -> Result<Vec<StepMetrics>> {
+        let mut out = Vec::with_capacity(steps);
+        for s in 0..steps {
+            let tokens = corpus.batch(self.batch, self.seq_len, rng);
+            let m = self.step(&tokens)?;
+            if log_every > 0 && (s % log_every == 0 || s + 1 == steps) {
+                crate::info!(
+                    "[{}] step {:4}  loss {:.4}  ce {:.4}  lb {:.3}  \
+                     ffn/tok {:.2}  drop {:.1}  {:.2}s",
+                    self.tag, s, m.loss, m.ce, m.balance, m.ffn_per_token,
+                    m.dropped, m.step_s
+                );
+            }
+            out.push(m);
+        }
+        Ok(out)
+    }
+
+    /// Mean eval CE over `n_batches` held-out batches -> (ce, perplexity).
+    pub fn eval(&self, corpus: &Corpus, n_batches: usize, rng: &mut Rng)
+        -> Result<(f64, f64)> {
+        let mut total = 0.0;
+        for _ in 0..n_batches {
+            let tokens = corpus.batch(self.batch, self.seq_len, rng);
+            let mut args: Vec<HostValue> = self.params.to_vec();
+            args.push(HostValue::I32 {
+                shape: vec![self.batch, self.seq_len],
+                data: tokens,
+            });
+            let out = self.eval_exe.run(&args)?;
+            total += out[0].scalar()?;
+        }
+        let ce = total / n_batches as f64;
+        Ok((ce, ce.exp()))
+    }
+}

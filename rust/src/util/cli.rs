@@ -1,0 +1,123 @@
+//! Tiny CLI argument parser (no clap in this offline environment).
+//!
+//! Supports `moepp <subcommand> --flag value --switch positional` with typed
+//! accessors and automatic usage/error reporting.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argv entries (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // `--k=v` or `--k v` or bare switch.
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| {
+                panic!("--{key} expects an integer, got '{v}'")
+            }))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| {
+                panic!("--{key} expects a number, got '{v}'")
+            }))
+            .unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        // NB: a bare `--switch` consumes a following non-flag token as its
+        // value, so positionals go before switches.
+        let a = parse("bench table3 --preset sm-8e --tau 0.75 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.get("preset"), Some("sm-8e"));
+        assert_eq!(a.get_f64("tau", 0.0), 0.75);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["table3"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("train --steps=100 --lr=5e-4");
+        assert_eq!(a.get_usize("steps", 0), 100);
+        assert_eq!(a.get_f64("lr", 0.0), 5e-4);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("serve --quiet");
+        assert!(a.has("quiet"));
+        assert_eq!(a.get("quiet"), None);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert_eq!(a.get_usize("n", 7), 7);
+    }
+
+    #[test]
+    fn no_subcommand_when_flag_first() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.has("help"));
+    }
+}

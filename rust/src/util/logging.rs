@@ -1,0 +1,49 @@
+//! Minimal leveled stderr logger with wall-clock-relative timestamps.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+static LEVEL: AtomicU8 = AtomicU8::new(1); // 0=error 1=info 2=debug
+
+static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+pub fn set_verbose(on: bool) {
+    LEVEL.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+}
+
+pub fn set_quiet(on: bool) {
+    if on {
+        LEVEL.store(0, Ordering::Relaxed);
+    }
+}
+
+fn stamp() -> f64 {
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+pub fn log(level: u8, tag: &str, msg: std::fmt::Arguments) {
+    if level <= LEVEL.load(Ordering::Relaxed) {
+        eprintln!("[{:9.3}s {tag}] {msg}", stamp());
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(1, "info", format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(2, "debug", format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn_log {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(0, "warn", format_args!($($arg)*))
+    };
+}

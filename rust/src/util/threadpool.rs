@@ -1,0 +1,156 @@
+//! Scoped data-parallel helpers built on `std::thread::scope` (no rayon in
+//! this offline environment).
+//!
+//! On this reproduction testbed there is a single CPU core, so the pool
+//! defaults to the available parallelism but all algorithms remain correct
+//! (and are tested) for any worker count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use by default.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(chunk_start, chunk)` over mutable, disjoint chunks of `data` on
+/// `workers` threads. Chunks are contiguous and cover `data` exactly.
+pub fn parallel_chunks_mut<T: Send, F>(
+    data: &mut [T],
+    workers: usize,
+    chunk: usize,
+    f: F,
+) where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let workers = workers.max(1);
+    if workers == 1 || data.len() <= chunk {
+        let mut start = 0;
+        let total = data.len();
+        for c in data.chunks_mut(chunk.max(1)) {
+            f(start, c);
+            start += c.len();
+            if start >= total {
+                break;
+            }
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let n = data.len();
+    let base = data.as_mut_ptr() as usize;
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let next = &next;
+            let f = &f;
+            s.spawn(move || loop {
+                let start = next.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let len = chunk.min(n - start);
+                // SAFETY: [start, start+len) ranges are disjoint because
+                // `next` hands each range to exactly one worker, and the
+                // scope guarantees threads end before `data` is reused.
+                let slice = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        (base as *mut T).add(start),
+                        len,
+                    )
+                };
+                f(start, slice);
+            });
+        }
+    });
+}
+
+/// Parallel iteration over indices [0, n) with a worker-count cap; the body
+/// must be side-effect-disjoint per index (enforced by the caller).
+pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, workers: usize, f: F) {
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let next = &next;
+            let f = &f;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Map [0, n) -> Vec<R> in parallel, preserving order.
+pub fn parallel_map<R: Send + Default + Clone, F>(
+    n: usize,
+    workers: usize,
+    f: F,
+) -> Vec<R>
+where
+    F: Fn(usize) -> R + Sync,
+{
+    let mut out = vec![R::default(); n];
+    {
+        let slots: Vec<std::sync::Mutex<&mut R>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        parallel_for(n, workers, |i| {
+            let mut slot = slots[i].lock().unwrap();
+            **slot = f(i);
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunks_cover_everything() {
+        for workers in [1, 2, 4] {
+            let mut v = vec![0u64; 1003];
+            parallel_chunks_mut(&mut v, workers, 64, |start, c| {
+                for (i, x) in c.iter_mut().enumerate() {
+                    *x = (start + i) as u64;
+                }
+            });
+            for (i, x) in v.iter().enumerate() {
+                assert_eq!(*x, i as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_for_hits_every_index_once() {
+        let hits: Vec<AtomicU64> = (0..500).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(500, 4, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(100, 3, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn zero_n_is_fine() {
+        parallel_for(0, 4, |_| panic!("must not run"));
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+}

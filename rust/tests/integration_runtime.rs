@@ -1,0 +1,206 @@
+//! Integration tests over real AOT artifacts: PJRT load/execute round
+//! trips, router parity between the native Rust router and the lowered
+//! Pallas gating kernel, trainer loss descent, and engine-vs-artifact
+//! consistency.
+//!
+//! These tests require `make artifacts`; they are skipped (with a loud
+//! message) when artifacts/ is missing so `cargo test` stays runnable in a
+//! fresh checkout.
+
+use moepp::config::MoeConfig;
+use moepp::coordinator::engine::MoeEngine;
+use moepp::runtime::host::HostValue;
+use moepp::runtime::Runtime;
+use moepp::tensor::Tensor;
+use moepp::training::data::Corpus;
+use moepp::training::trainer::Trainer;
+use moepp::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::open("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP integration tests: {e:#} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn expert_ffn_artifact_matches_native_expert() {
+    let Some(rt) = runtime() else { return };
+    let cfg = MoeConfig::preset("test");
+    let mut rng = Rng::new(0);
+    let e = moepp::moe::experts::FfnExpert::init(
+        &mut rng, cfg.d_model, cfg.d_ff);
+    let exe = rt.load("expert_ffn_test_b16").unwrap();
+    let x = Tensor::randn(&mut rng, &[16, cfg.d_model], 1.0);
+    let out = exe
+        .run(&[
+            HostValue::F32(x.clone()),
+            HostValue::F32(e.w1.clone()),
+            HostValue::F32(e.w3.clone()),
+            HostValue::F32(e.w2.clone()),
+        ])
+        .unwrap();
+    let y_pjrt = out[0].as_f32().unwrap();
+    let y_native = e.forward(&x);
+    assert!(
+        y_pjrt.approx_eq(&y_native, 1e-3, 1e-3),
+        "PJRT Pallas kernel and native Rust expert disagree"
+    );
+}
+
+#[test]
+fn router_probe_matches_native_router() {
+    let Some(rt) = runtime() else { return };
+    let cfg = MoeConfig::preset("test");
+    let n = cfg.n_experts();
+    let mut rng = Rng::new(1);
+    let w = moepp::moe::router::RouterWeights {
+        w: Tensor::randn(&mut rng, &[n, cfg.d_model], 0.2),
+        wg: Tensor::randn(&mut rng, &[n, n], 0.2),
+    };
+    let t = 64;
+    let x = Tensor::randn(&mut rng, &[t, cfg.d_model], 1.0);
+    let prev = Tensor::randn(&mut rng, &[t, n], 1.0);
+    let exe = rt.load("router_probe_test").unwrap();
+    let out = exe
+        .run(&[
+            HostValue::F32(x.clone()),
+            HostValue::F32(w.w.clone()),
+            HostValue::F32(prev.clone()),
+            HostValue::F32(w.wg.clone()),
+        ])
+        .unwrap();
+    let probs_pjrt = out[0].as_f32().unwrap();
+    let scores_pjrt = out[1].as_f32().unwrap();
+    let routing = moepp::moe::router::route(&x, &w, Some(&prev), cfg.top_k);
+    assert!(scores_pjrt.approx_eq(&routing.scores, 1e-3, 1e-3),
+            "raw scores disagree");
+    assert!(probs_pjrt.approx_eq(&routing.probs, 1e-4, 1e-3),
+            "softmax probs disagree");
+}
+
+#[test]
+fn fwd_artifact_stats_match_native_dispatch_semantics() {
+    let Some(rt) = runtime() else { return };
+    // The lowered fwd reports ffn_per_token; the native engine computes the
+    // same quantity from its own dispatch. Same weights are impossible to
+    // share here (artifact params come from the init artifact), so we
+    // check the *invariant*: ffn/token <= top_k and > 0, and dropped
+    // assignments are bounded by T*K.
+    let exe = rt.load("test_moepp_fwd").unwrap();
+    let init = rt.load("test_moepp_init").unwrap();
+    let state = init.run(&[HostValue::scalar_i32(7)]).unwrap();
+    let n_params = exe.spec.inputs.len() - 1;
+    let mut args: Vec<HostValue> = state[..n_params].to_vec();
+    let batch_shape = &exe.spec.inputs[n_params].shape;
+    let (b, s) = (batch_shape[0], batch_shape[1]);
+    let cfg = rt.manifest.configs.get("test_moepp").unwrap();
+    let corpus = Corpus::new(cfg.vocab_size, 2, 0);
+    args.push(HostValue::I32 {
+        shape: vec![b, s],
+        data: corpus.batch(b, s, &mut Rng::new(0)),
+    });
+    let out = exe.run(&args).unwrap();
+    // outputs: logits, expert_counts, dropped, ffn_per_token, top1, top2, lb
+    let logits = out[0].as_f32().unwrap();
+    assert_eq!(logits.shape, vec![b, s, cfg.vocab_size]);
+    assert!(logits.data.iter().all(|v| v.is_finite()));
+    let ffn_per_token = out[3].as_f32().unwrap();
+    for &f in &ffn_per_token.data {
+        assert!(f >= 0.0 && f <= cfg.top_k as f32, "ffn/token {f}");
+    }
+    let dropped = out[2].as_f32().unwrap();
+    for &d in &dropped.data {
+        assert!(d >= 0.0 && d <= (b * s * cfg.top_k) as f32);
+    }
+    let top1 = out[4].as_f32().unwrap();
+    let top2 = out[5].as_f32().unwrap();
+    for (a, b) in top1.data.iter().zip(&top2.data) {
+        assert!(a >= b, "top1 prob must dominate top2");
+    }
+}
+
+#[test]
+fn trainer_reduces_loss_on_learnable_corpus() {
+    let Some(rt) = runtime() else { return };
+    let mut trainer = Trainer::new(&rt, "test_moepp", 3).unwrap();
+    let cfg = rt.manifest.configs.get("test_moepp").unwrap();
+    let corpus = Corpus::new(cfg.vocab_size, 4, 1234);
+    let mut rng = Rng::new(0);
+    let history = trainer.train(&corpus, 200, &mut rng, 0).unwrap();
+    let head: f64 =
+        history[..10].iter().map(|m| m.loss).sum::<f64>() / 10.0;
+    let tail: f64 = history[history.len() - 10..]
+        .iter()
+        .map(|m| m.loss)
+        .sum::<f64>()
+        / 10.0;
+    assert!(tail < head - 0.1,
+            "loss must fall: head {head:.4} tail {tail:.4}");
+    // Perplexity beats the uniform baseline after 60 steps.
+    let (_, ppl) = trainer.eval(&corpus, 4, &mut Rng::new(1)).unwrap();
+    assert!(ppl < cfg.vocab_size as f64,
+            "ppl {ppl} not below uniform {}", cfg.vocab_size);
+}
+
+#[test]
+fn vanilla_artifacts_also_train() {
+    let Some(rt) = runtime() else { return };
+    let mut trainer = Trainer::new(&rt, "test_vanilla", 3).unwrap();
+    let cfg = rt.manifest.configs.get("test_vanilla").unwrap();
+    let corpus = Corpus::new(cfg.vocab_size, 4, 1234);
+    let history =
+        trainer.train(&corpus, 20, &mut Rng::new(0), 0).unwrap();
+    assert!(history.iter().all(|m| m.loss.is_finite()));
+    // Vanilla MoE has no ZC experts: every kept assignment is FFN, so
+    // ffn/token approaches top_k (minus drops).
+    let mean_ffn = history.iter().map(|m| m.ffn_per_token).sum::<f64>()
+        / history.len() as f64;
+    assert!(mean_ffn > 1.5, "vanilla ffn/token {mean_ffn}");
+}
+
+#[test]
+fn pjrt_engine_matches_native_engine() {
+    let Some(rt) = runtime() else { return };
+    let cfg = MoeConfig::preset("test");
+    let native = MoeEngine::native(cfg.clone(), 5);
+    let pjrt =
+        MoeEngine::pjrt(cfg.clone(), 5, std::sync::Arc::new(rt)).unwrap();
+    let mut rng = Rng::new(9);
+    let x = Tensor::randn(&mut rng, &[48, cfg.d_model], 1.0);
+    let (y_native, _) = native.forward_stack(&x).unwrap();
+    let (y_pjrt, stats) = pjrt.forward_stack(&x).unwrap();
+    assert!(
+        y_pjrt.approx_eq(&y_native, 1e-3, 1e-3),
+        "backends disagree (max diff {})",
+        y_pjrt
+            .data
+            .iter()
+            .zip(&y_native.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    );
+    assert!(stats.expert_forward_s > 0.0);
+}
+
+#[test]
+fn checkpoint_roundtrip_through_trainer() {
+    let Some(rt) = runtime() else { return };
+    let mut trainer = Trainer::new(&rt, "test_moepp", 11).unwrap();
+    let cfg = rt.manifest.configs.get("test_moepp").unwrap();
+    let corpus = Corpus::new(cfg.vocab_size, 4, 1);
+    trainer.train(&corpus, 3, &mut Rng::new(0), 0).unwrap();
+    let dir = std::env::temp_dir().join("moepp-int-ck");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("t.ckpt");
+    moepp::training::checkpoint::save(&path, trainer.params()).unwrap();
+    let loaded = moepp::training::checkpoint::load(&path).unwrap();
+    assert_eq!(loaded.len(), trainer.params().len());
+    for (a, b) in loaded.iter().zip(trainer.params()) {
+        assert_eq!(a.shape(), b.shape());
+    }
+    std::fs::remove_file(path).unwrap();
+}
