@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# Tier-1 gate in one command: build, tests, lints, formatting over rust/.
+#
+#   ./ci.sh          # full gate
+#   ./ci.sh fast     # skip clippy + fmt (build + tests only)
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "ci.sh: cargo not found on PATH — install the Rust toolchain" >&2
+    exit 1
+fi
+
+run() {
+    echo "==> $*"
+    "$@"
+}
+
+run cargo build --release
+run cargo test -q
+
+if [ "${1:-}" != "fast" ]; then
+    if cargo clippy --version >/dev/null 2>&1; then
+        run cargo clippy --all-targets -- -D warnings
+    else
+        echo "==> cargo clippy unavailable; skipping lint" >&2
+    fi
+    if cargo fmt --version >/dev/null 2>&1; then
+        run cargo fmt --check
+    else
+        echo "==> cargo fmt unavailable; skipping format check" >&2
+    fi
+fi
+
+echo "ci.sh: all checks passed"

@@ -1,6 +1,7 @@
 //! Bench: expert-forward time, MoE vs MoE++ across tau — the micro version
-//! of Table 3's timing columns. (Hand-rolled harness; criterion is not
-//! available offline.)
+//! of Table 3's timing columns — plus a threadpool-worker sweep over the
+//! batched native backend showing the parallel FFN micro-batch win.
+//! (Hand-rolled harness; criterion is not available offline.)
 //!
 //!     cargo bench --bench expert_forward
 
@@ -8,25 +9,53 @@ use moepp::bench::tables::bench_engine;
 use moepp::config::MoeConfig;
 use moepp::coordinator::engine::MoeEngine;
 
+const TOKENS: usize = 256;
+
 fn main() -> anyhow::Result<()> {
     println!("== expert_forward: MoE vs MoE++ (native backend) ==");
     for preset in ["sm-8e", "sm-16e"] {
         let vcfg = MoeConfig::preset(&format!("{preset}:vanilla"));
         let vengine = MoeEngine::native(vcfg, 0);
-        let v = bench_engine(&format!("vanilla {preset} t=256"),
-                             &vengine, 256, 0)?;
+        let v = bench_engine(&format!("vanilla {preset} t={TOKENS}"),
+                             &vengine, TOKENS, 0)?;
         println!("{}", v.report());
         for tau in [0.1, 0.5, 0.75] {
             let cfg = MoeConfig { tau, ..MoeConfig::preset(preset) };
             let engine = MoeEngine::native(cfg, 0);
             let r = bench_engine(
-                &format!("moepp   {preset} t=256 tau={tau}"),
-                &engine, 256, 0)?;
+                &format!("moepp   {preset} t={TOKENS} tau={tau}"),
+                &engine, TOKENS, 0)?;
             println!(
                 "{}   (+{:.1}% vs vanilla)",
                 r.report(),
                 (v.mean_s / r.mean_s - 1.0) * 100.0
             );
+        }
+    }
+
+    println!();
+    println!("== parallel FFN micro-batches: worker sweep \
+              (NativeBatched backend) ==");
+    for preset in ["sm-8e", "sm-16e"] {
+        let mut serial_mean = 0.0f64;
+        for workers in [1usize, 2, 4] {
+            let engine = MoeEngine::native_with_workers(
+                MoeConfig::preset(preset), 0, workers);
+            let r = bench_engine(
+                &format!("moepp {preset} t={TOKENS} workers={workers}"),
+                &engine, TOKENS, 0)?;
+            let tput = TOKENS as f64 / r.mean_s;
+            if workers == 1 {
+                serial_mean = r.mean_s;
+                println!("{}   {:>10.0} tokens/s", r.report(), tput);
+            } else {
+                println!(
+                    "{}   {:>10.0} tokens/s  ({:.2}x vs serial)",
+                    r.report(),
+                    tput,
+                    serial_mean / r.mean_s
+                );
+            }
         }
     }
     Ok(())

@@ -7,7 +7,7 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::config::MoeConfig;
-use crate::moe::experts::FfnExpert;
+use crate::moe::experts::{FfnExpert, FfnScratch};
 use crate::tensor::Tensor;
 
 /// One FFN micro-batch for a worker: (layer-local) expert id owned by this
@@ -58,6 +58,9 @@ impl Worker {
                     .enumerate()
                     .map(|(i, &e)| (e, i))
                     .collect();
+                // Persistent scratch: the batched kernel grows it on first
+                // use and the hot loop stays allocation-free thereafter.
+                let mut scratch = FfnScratch::new(0);
                 while let Ok(msg) = rx.recv() {
                     match msg {
                         Msg::Shutdown => break,
@@ -67,17 +70,17 @@ impl Worker {
                                 .map(|u| {
                                     let t0 = Instant::now();
                                     let w = &weights[index[&u.expert]];
-                                    let mut y = w.forward(&u.x);
-                                    // Gate-scale rows before shipping back.
-                                    let d = y.shape[1];
-                                    for (i, g) in u.gates.iter().enumerate()
-                                    {
-                                        for v in
-                                            &mut y.data[i * d..(i + 1) * d]
-                                        {
-                                            *v *= g;
-                                        }
-                                    }
+                                    let (n, d) = u.x.dims2();
+                                    let mut y = Tensor::zeros(&[n, d]);
+                                    // Gate-scaled batched forward: rows
+                                    // arrive back already `g * FFN(x)`.
+                                    w.forward_batch_into(
+                                        &u.x,
+                                        Some(u.gates.as_slice()),
+                                        &mut scratch,
+                                        &mut y.data,
+                                        None,
+                                    );
                                     WorkResult {
                                         tokens: u.tokens,
                                         y,

@@ -207,6 +207,18 @@ impl MoeConfig {
         }
     }
 
+    /// Index of expert `i` into the layer's constant-expert table — the
+    /// single implementation of constant-expert index arithmetic (every
+    /// execution path goes through here; see DESIGN.md §6).
+    pub fn const_index(&self, i: usize) -> usize {
+        debug_assert_eq!(
+            self.kind(i),
+            ExpertKind::Constant,
+            "const_index on non-constant expert {i}"
+        );
+        i - self.n_ffn_experts - self.n_zero - self.n_copy
+    }
+
     /// Heterogeneous expert capacity, Eq. 8 (scaled by K as in the L2
     /// implementation — total capacity covers all T*K assignments).
     pub fn capacities(&self, n_tokens: usize) -> (usize, usize) {
@@ -292,6 +304,16 @@ mod tests {
     #[should_panic]
     fn kind_out_of_range_panics() {
         MoeConfig::preset("sm-8e").kind(12);
+    }
+
+    #[test]
+    fn const_index_is_table_local() {
+        let c = MoeConfig::preset("sm-8e"); // 8 FFN, 1 zero, 1 copy, 2 const
+        assert_eq!(c.const_index(10), 0);
+        assert_eq!(c.const_index(11), 1);
+        let c32 = MoeConfig::preset("sm-32e"); // 32 FFN + 1 + 1 + 6
+        assert_eq!(c32.const_index(34), 0);
+        assert_eq!(c32.const_index(39), 5);
     }
 
     #[test]

@@ -2,9 +2,12 @@
 //! per-FFN-expert micro-batches plus inline ZC work lists.
 //!
 //! Shares exact semantics with `moe::layer::dispatch` (slot-major priority,
-//! Eq. 8 capacities, Eq. 1 gates) — property-tested against it — but
-//! produces the structure the serving engine executes: gathered expert
-//! batches instead of per-assignment loops.
+//! Eq. 8 capacities, Eq. 1 gates — DESIGN.md §6) — property-tested against
+//! it — but produces the structure the shared executor
+//! (`moe::exec`, DESIGN.md §7) runs on any [`ExpertBackend`]: gathered
+//! expert batches instead of per-assignment loops.
+//!
+//! [`ExpertBackend`]: crate::moe::exec::ExpertBackend
 
 use crate::config::{ExpertKind, MoeConfig};
 use crate::moe::layer::{dispatch, Assignment};

@@ -1,9 +1,13 @@
-//! The MoE++ serving engine: route → dispatch → expert execution → combine
-//! over a stack of MoE layers, with per-stage timing.
+//! The MoE++ serving engine: a thin shell over the shared execution layer
+//! ([`crate::moe::exec`], DESIGN.md §7) that picks the expert backend and
+//! owns the weights.
 //!
-//! Two interchangeable expert backends:
+//! Interchangeable expert backends:
 //!
-//! * [`Backend::Native`] — the pure-Rust SwiGLU expert (moe::experts);
+//! * [`Backend::Native`] — the pure-Rust SwiGLU expert via
+//!   [`exec::NativeBatched`]: gathered micro-batches, allocation-free
+//!   batched kernels, and (with `workers > 1`) independent FFN
+//!   micro-batches fanned across the thread pool;
 //! * [`Backend::Pjrt`]   — the AOT-compiled Pallas kernel executed via the
 //!   PJRT runtime, with expert micro-batches padded to the nearest compiled
 //!   bucket (weights are pre-converted to literals once at engine build).
@@ -13,23 +17,25 @@
 //! excluding attention/embedding — the quantity Table 3 compares.
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::Result;
 
 use super::dispatch::DispatchPlan;
-use crate::config::{ExpertKind, MoeConfig};
-use crate::moe::layer::LayerStats;
-use crate::moe::router::route;
+use crate::config::MoeConfig;
+use crate::moe::exec::{self, ExpertBackend, FfnLayerReport, NativeBatched};
 use crate::moe::weights::StackWeights;
 use crate::runtime::host::HostValue;
 use crate::runtime::{Executable, Runtime};
 use crate::tensor::Tensor;
 
-/// Expert execution backend.
+pub use crate::moe::exec::ForwardStats;
+
+/// Expert execution backend selector.
 pub enum Backend {
-    /// Pure-Rust experts (always available).
-    Native,
+    /// Pure-Rust experts (always available). `workers` controls how many
+    /// threads fan out over independent FFN micro-batches per layer;
+    /// results are bitwise-identical for every worker count.
+    Native { workers: usize },
     /// AOT Pallas kernel via PJRT; holds pre-built weight literals per
     /// (layer, expert): [w1, w3, w2].
     Pjrt {
@@ -41,45 +47,12 @@ pub enum Backend {
     },
 }
 
-/// Aggregate timing + routing statistics for one stack forward.
-#[derive(Clone, Debug, Default)]
-pub struct ForwardStats {
-    /// Wall-clock seconds inside the expert stage (FFN + ZC + combine).
-    pub expert_forward_s: f64,
-    /// Seconds inside FFN expert execution only.
-    pub ffn_s: f64,
-    /// Seconds inside zero-computation expert execution only.
-    pub zc_s: f64,
-    /// Seconds in routing (score matmul + top-k).
-    pub routing_s: f64,
-    pub per_layer: Vec<LayerStats>,
-    pub tokens: usize,
-}
-
-impl ForwardStats {
-    /// Expert-forward throughput (tokens/s), the Table 3 metric.
-    pub fn expert_throughput(&self) -> f64 {
-        self.tokens as f64 / self.expert_forward_s.max(1e-12)
-    }
-
-    pub fn mean_ffn_per_token(&self) -> f64 {
-        if self.per_layer.is_empty() {
-            return 0.0;
-        }
-        self.per_layer.iter().map(|s| s.ffn_per_token).sum::<f64>()
-            / self.per_layer.len() as f64
-    }
-
-    pub fn total_dropped(&self) -> usize {
-        self.per_layer.iter().map(|s| s.dropped).sum()
-    }
-}
-
 /// The serving engine for one model variant.
 pub struct MoeEngine {
     pub cfg: MoeConfig,
-    /// Per-layer configs (tau may vary — Appendix A.2 layer-wise
-    /// heterogeneity via `with_schedule`; uniform by default).
+    /// Per-layer configs (tau — or even expert counts — may vary;
+    /// Appendix A.2 layer-wise heterogeneity via `with_schedule` or
+    /// [`MoeEngine::heterogeneous`]; uniform by default).
     pub layer_cfgs: Vec<MoeConfig>,
     pub weights: StackWeights,
     pub backend: Backend,
@@ -87,9 +60,60 @@ pub struct MoeEngine {
 
 impl MoeEngine {
     pub fn native(cfg: MoeConfig, seed: u64) -> MoeEngine {
+        MoeEngine::native_with_workers(cfg, seed, 1)
+    }
+
+    /// Native engine fanning FFN micro-batches over `workers` threads.
+    pub fn native_with_workers(
+        cfg: MoeConfig,
+        seed: u64,
+        workers: usize,
+    ) -> MoeEngine {
         let weights = StackWeights::init(seed, &cfg);
         let layer_cfgs = vec![cfg.clone(); cfg.n_layers];
-        MoeEngine { cfg, layer_cfgs, weights, backend: Backend::Native }
+        MoeEngine {
+            cfg,
+            layer_cfgs,
+            weights,
+            backend: Backend::Native { workers: workers.max(1) },
+        }
+    }
+
+    /// Build an engine whose layers carry fully heterogeneous configs
+    /// (expert counts included). Layer weights are initialised per layer
+    /// config; every routing/dispatch/classification decision for layer
+    /// `i` uses `layer_cfgs[i]`.
+    ///
+    /// Gating residuals thread the previous layer's [T, N] scores through
+    /// a layer's [N, N] `Wg`, so a layer with `gating_residual` enabled
+    /// must have the same expert count as its predecessor — asserted here
+    /// rather than panicking on a matmul dimension check mid-forward.
+    pub fn heterogeneous(
+        layer_cfgs: Vec<MoeConfig>,
+        seed: u64,
+    ) -> MoeEngine {
+        assert!(!layer_cfgs.is_empty());
+        for (i, w) in layer_cfgs.windows(2).enumerate() {
+            assert!(
+                !w[1].gating_residual
+                    || w[1].n_experts() == w[0].n_experts(),
+                "layer {}: gating residuals require equal expert counts \
+                 in consecutive layers ({} vs {}); disable \
+                 gating_residual on that layer or equalise expert counts",
+                i + 1,
+                w[1].n_experts(),
+                w[0].n_experts()
+            );
+        }
+        let weights = StackWeights::init_per_layer(seed, &layer_cfgs);
+        let mut cfg = layer_cfgs[0].clone();
+        cfg.n_layers = layer_cfgs.len();
+        MoeEngine {
+            cfg,
+            layer_cfgs,
+            weights,
+            backend: Backend::Native { workers: 1 },
+        }
     }
 
     /// Apply a per-layer tau schedule (paper Appendix A.2 future work).
@@ -149,154 +173,84 @@ impl MoeEngine {
     /// Forward a token batch through every MoE layer (gating residuals
     /// threaded), returning outputs and stats. `x` is [T, D].
     pub fn forward_stack(&self, x: &Tensor) -> Result<(Tensor, ForwardStats)> {
-        let (t, d) = x.dims2();
-        let mut stats = ForwardStats { tokens: t, ..Default::default() };
-        let mut h = x.clone();
-        let mut prev_scores: Option<Tensor> = None;
-        for (li, layer) in self.weights.layers.iter().enumerate() {
-            let lcfg = &self.layer_cfgs[li];
-            let t0 = Instant::now();
-            let prev = if lcfg.gating_residual {
-                prev_scores.as_ref()
-            } else {
-                None
-            };
-            let routing = route(&h, &layer.router, prev, lcfg.top_k);
-            stats.routing_s += t0.elapsed().as_secs_f64();
-
-            let plan = DispatchPlan::build(&routing, lcfg, t);
-
-            let t1 = Instant::now();
-            let mut y = Tensor::zeros(&[t, d]);
-            let mut scratch =
-                crate::moe::experts::FfnScratch::new(self.cfg.d_ff);
-            let mut gather = Tensor::zeros(&[1, d]);
-            // --- FFN experts (queued micro-batches) ------------------------
-            for batch in &plan.ffn_batches {
-                self.run_ffn_batch(li, batch.expert, &h, &batch.tokens,
-                                   &batch.gates, &mut scratch, &mut gather,
-                                   &mut y)?;
-            }
-            let ffn_elapsed = t1.elapsed().as_secs_f64();
-
-            // --- ZC experts (inline, never queued) -------------------------
-            let t2 = Instant::now();
-            for a in &plan.zc_inline {
-                let xrow = h.row(a.token);
-                let orow = &mut y.data[a.token * d..(a.token + 1) * d];
-                match self.cfg.kind(a.expert) {
-                    ExpertKind::Zero => {}
-                    ExpertKind::Copy => {
-                        crate::moe::experts::copy_expert_into(
-                            xrow, a.gate, orow)
-                    }
-                    ExpertKind::Constant => {
-                        let j = a.expert - self.cfg.n_ffn_experts
-                            - self.cfg.n_zero - self.cfg.n_copy;
-                        layer.consts[j]
-                            .forward_token_into(xrow, a.gate, orow)
-                    }
-                    ExpertKind::Ffn => unreachable!("ffn in zc list"),
-                }
-            }
-            let zc_elapsed = t2.elapsed().as_secs_f64();
-
-            stats.ffn_s += ffn_elapsed;
-            stats.zc_s += zc_elapsed;
-            stats.expert_forward_s += t1.elapsed().as_secs_f64();
-
-            let ffn_assignments = plan.ffn_assignments();
-            stats.per_layer.push(LayerStats {
-                expert_counts: plan.expert_counts.clone(),
-                dropped: plan.dropped.len(),
-                ffn_assignments,
-                zc_assignments: plan.zc_inline.len(),
-                ffn_per_token: ffn_assignments as f64 / t as f64,
-                balance_loss: crate::moe::balance::balance_loss(
-                    &routing, lcfg),
-            });
-            prev_scores = Some(routing.scores);
-            // Residual stream (as in the transformer block): h <- h + y.
-            // Without it, fully-dropped tokens become zero rows and the
-            // sparse expert kernels would skip them, corrupting the
-            // expert-forward cost accounting.
-            for (hv, yv) in h.data.iter_mut().zip(&y.data) {
-                *hv += yv;
-            }
-        }
-        Ok((h, stats))
-    }
-
-    /// Execute one FFN expert micro-batch and scatter-add gated outputs.
-    #[allow(clippy::too_many_arguments)]
-    fn run_ffn_batch(
-        &self,
-        layer: usize,
-        expert: usize,
-        h: &Tensor,
-        tokens: &[usize],
-        gates: &[f32],
-        scratch: &mut crate::moe::experts::FfnScratch,
-        gather: &mut Tensor,
-        y: &mut Tensor,
-    ) -> Result<()> {
-        let d = self.cfg.d_model;
-        match &self.backend {
-            Backend::Native => {
-                // Gather the micro-batch, run the batched allocation-free
-                // expert, scatter-add gated rows (§Perf: one weight stream
-                // per batch, zero per-token allocations).
-                let e = &self.weights.layers[layer].ffn[expert];
-                let n = tokens.len();
-                if gather.numel() < n * d {
-                    *gather = Tensor::zeros(&[n, d]);
-                } else {
-                    gather.shape = vec![n, d];
-                }
-                for (i, &tok) in tokens.iter().enumerate() {
-                    gather.data[i * d..(i + 1) * d]
-                        .copy_from_slice(h.row(tok));
-                }
-                e.forward_batch_into(gather, Some(gates), scratch,
-                                     &mut y.data, Some(tokens));
-                Ok(())
+        let mut native;
+        let mut pjrt;
+        let be: &mut dyn ExpertBackend = match &self.backend {
+            Backend::Native { workers } => {
+                native = NativeBatched {
+                    layers: &self.weights.layers,
+                    workers: *workers,
+                };
+                &mut native
             }
             Backend::Pjrt { weight_literals, executables, .. } => {
-                // Pad the micro-batch to the nearest compiled bucket; split
-                // if it exceeds the largest bucket.
-                let max_bucket = *executables.keys().last().unwrap();
-                let mut start = 0;
-                while start < tokens.len() {
-                    let n = (tokens.len() - start).min(max_bucket);
-                    let bucket = *executables
-                        .keys()
-                        .find(|&&b| b >= n)
-                        .unwrap();
-                    let exe = &executables[&bucket];
-                    let mut xb = Tensor::zeros(&[bucket, d]);
-                    for (i, &tok) in
-                        tokens[start..start + n].iter().enumerate()
-                    {
-                        xb.row_mut(i).copy_from_slice(h.row(tok));
-                    }
-                    let x_lit = HostValue::F32(xb).to_literal()?;
-                    let w = &weight_literals[layer][expert];
-                    let result = exe
-                        .run_literals(&[&x_lit, &w[0], &w[1], &w[2]])?;
-                    let out = result.into_iter().next().unwrap().into_f32()?;
-                    for (i, (&tok, &g)) in tokens[start..start + n]
-                        .iter()
-                        .zip(&gates[start..start + n])
-                        .enumerate()
-                    {
-                        let orow = &mut y.data[tok * d..(tok + 1) * d];
-                        crate::tensor::ops::axpy(g, out.row(i), orow);
-                    }
-                    start += n;
+                pjrt = PjrtBackend { weight_literals, executables };
+                &mut pjrt
+            }
+        };
+        let (y, stats, _) =
+            exec::forward_stack(be, &self.weights, &self.layer_cfgs, x)?;
+        Ok((y, stats))
+    }
+}
+
+/// PJRT expert backend: pads each micro-batch to the nearest compiled
+/// bucket (splitting batches above the largest bucket) and scatter-adds
+/// the gated kernel outputs.
+struct PjrtBackend<'a> {
+    weight_literals: &'a [Vec<[xla::Literal; 3]>],
+    executables: &'a std::collections::BTreeMap<usize, Arc<Executable>>,
+}
+
+impl ExpertBackend for PjrtBackend<'_> {
+    fn execute_ffn(
+        &mut self,
+        layer: usize,
+        plan: &DispatchPlan,
+        h: &Tensor,
+        y: &mut Tensor,
+    ) -> Result<FfnLayerReport> {
+        let (_, d) = h.dims2();
+        let max_bucket = *self
+            .executables
+            .keys()
+            .last()
+            .expect("pjrt engine compiled at least one bucket");
+        for batch in &plan.ffn_batches {
+            let tokens = &batch.tokens;
+            let gates = &batch.gates;
+            let mut start = 0;
+            while start < tokens.len() {
+                let n = (tokens.len() - start).min(max_bucket);
+                let bucket = *self
+                    .executables
+                    .keys()
+                    .find(|&&b| b >= n)
+                    .unwrap();
+                let exe = &self.executables[&bucket];
+                let mut xb = Tensor::zeros(&[bucket, d]);
+                for (i, &tok) in
+                    tokens[start..start + n].iter().enumerate()
+                {
+                    xb.row_mut(i).copy_from_slice(h.row(tok));
                 }
-                Ok(())
+                let x_lit = HostValue::F32(xb).to_literal()?;
+                let w = &self.weight_literals[layer][batch.expert];
+                let result =
+                    exe.run_literals(&[&x_lit, &w[0], &w[1], &w[2]])?;
+                let out = result.into_iter().next().unwrap().into_f32()?;
+                for (i, (&tok, &g)) in tokens[start..start + n]
+                    .iter()
+                    .zip(&gates[start..start + n])
+                    .enumerate()
+                {
+                    let orow = &mut y.data[tok * d..(tok + 1) * d];
+                    crate::tensor::ops::axpy(g, out.row(i), orow);
+                }
+                start += n;
             }
         }
+        Ok(FfnLayerReport::default())
     }
 }
 
@@ -375,5 +329,64 @@ mod tests {
             );
         }
         assert!(stats.expert_throughput() > 0.0);
+    }
+
+    #[test]
+    fn parallel_workers_match_serial_engine() {
+        let cfg = MoeConfig::preset("test");
+        let mut rng = Rng::new(13);
+        let x = Tensor::randn(&mut rng, &[96, cfg.d_model], 1.0);
+        let serial = MoeEngine::native_with_workers(cfg.clone(), 4, 1);
+        let (y1, s1) = serial.forward_stack(&x).unwrap();
+        for workers in [2, 4] {
+            let par =
+                MoeEngine::native_with_workers(cfg.clone(), 4, workers);
+            let (yw, sw) = par.forward_stack(&x).unwrap();
+            assert_eq!(y1.data, yw.data, "workers={workers} diverged");
+            for (a, b) in s1.per_layer.iter().zip(&sw.per_layer) {
+                assert_eq!(a.ffn_assignments, b.ffn_assignments);
+                assert_eq!(a.zc_assignments, b.zc_assignments);
+                assert_eq!(a.dropped, b.dropped);
+            }
+        }
+    }
+
+    #[test]
+    fn heterogeneous_layers_classify_with_their_own_config() {
+        // Regression for the per-layer classification bug: the old engine
+        // classified ZC-inline assignments with the *base* config's
+        // kind()/const-index arithmetic while routing/dispatch used the
+        // per-layer config. With layers whose expert counts differ, the
+        // two disagree (e.g. index 5 is Copy under 4-FFN layer 0 but an
+        // FFN expert under 6-FFN layer 1); every lookup must go through
+        // the layer's own config.
+        let mut c0 = MoeConfig::preset("test"); // 4 FFN + 1+1+2 ZC
+        c0.gating_residual = false; // router dims differ across layers
+        let mut c1 = c0.clone();
+        c1.n_ffn_experts = 6;
+        c1.n_const = 1; // 6 FFN + 1+1+1 ZC = 9 experts
+        let cfgs = vec![c0.clone(), c1.clone()];
+        let engine = MoeEngine::heterogeneous(cfgs.clone(), 21);
+        assert_eq!(engine.weights.layers[0].ffn.len(), 4);
+        assert_eq!(engine.weights.layers[1].ffn.len(), 6);
+        let mut rng = Rng::new(4);
+        let x = Tensor::randn(&mut rng, &[40, c0.d_model], 1.0);
+        let (y, stats) = engine.forward_stack(&x).unwrap();
+        // Reference: per-layer oracle with the matching layer config.
+        let mut h = x.clone();
+        for (li, layer) in engine.weights.layers.iter().enumerate() {
+            let (out, _, _) = layer_forward(layer, &h, None, &cfgs[li]);
+            for (hv, yv) in h.data.iter_mut().zip(&out.data) {
+                *hv += yv;
+            }
+        }
+        assert!(y.approx_eq(&h, 1e-4, 1e-4));
+        assert_eq!(stats.per_layer.len(), 2);
+        for (l, lcfg) in stats.per_layer.iter().zip(&cfgs) {
+            assert_eq!(
+                l.ffn_assignments + l.zc_assignments + l.dropped,
+                40 * lcfg.top_k
+            );
+        }
     }
 }

@@ -23,10 +23,13 @@
 //! * **Deployment friendly** — [`cluster`] replicates ZC experts on every
 //!   simulated device, so ZC-routed tokens incur zero all-to-all traffic.
 //!
-//! This environment is offline: other than the `xla` PJRT bridge and
-//! `anyhow`/`thiserror`, every substrate (JSON codec, CLI parser, RNG,
-//! thread pool, bench statistics, property-testing harness) is implemented
-//! in [`util`] and [`bench`].
+//! This environment is offline: the only dependencies are vendored in
+//! `rust/vendor/` (a minimal `anyhow` and a stub of the `xla` PJRT bridge
+//! whose client fails cleanly, disabling artifact paths); every other
+//! substrate (JSON codec, CLI parser, RNG, thread pool, bench statistics,
+//! property-testing harness) is implemented in [`util`] and [`bench`].
+//! The shared execution layer all forward paths delegate to lives in
+//! [`moe::exec`] — see DESIGN.md §7 for the backend contract.
 
 pub mod bench;
 pub mod cluster;

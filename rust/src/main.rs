@@ -102,7 +102,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let backend = args.get_or("backend", "native");
     let cfg = MoeConfig::preset(preset);
     let engine = match backend {
-        "native" => MoeEngine::native(cfg.clone(), 0),
+        // Parallel micro-batches are opt-in (--workers N): the scoped
+        // pool spawns threads per layer call, which only pays off once
+        // batches are large enough — serial stays the latency-safe
+        // default for small serve batches.
+        "native" => MoeEngine::native_with_workers(
+            cfg.clone(),
+            0,
+            args.get_usize("workers", 1),
+        ),
         "pjrt" => {
             let rt = std::sync::Arc::new(open_runtime(args)?);
             MoeEngine::pjrt(cfg.clone(), 0, rt)?

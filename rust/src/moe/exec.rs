@@ -1,0 +1,466 @@
+//! The shared MoE++ execution layer (DESIGN.md §7): one implementation of
+//! "turn a [`DispatchPlan`] into outputs" used by every forward path.
+//!
+//! The paper's deployment asymmetry — heavy FFN experts are queued,
+//! batched, sharded and communicated while zero-computation experts are
+//! applied inline wherever the token lives — used to be re-implemented by
+//! the reference layer (`moe::layer`), the serving engine
+//! (`coordinator::engine`) and the cluster simulator (`cluster::sim`).
+//! This module is now the only place that semantics lives:
+//!
+//! * [`ExpertBackend`] — the pluggable FFN execution strategy (per-token
+//!   oracle, batched native with parallel micro-batches, PJRT buckets, or
+//!   the cluster's sharded workers). Backends only ever see FFN work.
+//! * [`apply_zc_inline`] — the single zero/copy/constant application.
+//! * [`execute_layer`] — FFN stage + ZC stage + [`LayerStats`] accounting
+//!   for one planned layer.
+//! * [`forward_stack`] — the stack loop: routing with gating-residual
+//!   threading, per-layer configs, residual-stream update and
+//!   [`ForwardStats`] aggregation.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::{ExpertKind, MoeConfig};
+use crate::coordinator::dispatch::DispatchPlan;
+use crate::moe::experts::{ConstExpert, FfnScratch};
+use crate::moe::layer::{Assignment, LayerStats};
+use crate::moe::router::{route, Routing};
+use crate::moe::weights::{MoeLayerWeights, StackWeights};
+use crate::tensor::ops::axpy;
+use crate::tensor::Tensor;
+use crate::util::threadpool::parallel_map;
+
+/// Aggregate timing + routing statistics for one stack forward.
+#[derive(Clone, Debug, Default)]
+pub struct ForwardStats {
+    /// Wall-clock seconds inside the expert stage (FFN + ZC + combine).
+    pub expert_forward_s: f64,
+    /// Seconds inside FFN expert execution only.
+    pub ffn_s: f64,
+    /// Seconds inside zero-computation expert execution only.
+    pub zc_s: f64,
+    /// Seconds in routing (score matmul + top-k).
+    pub routing_s: f64,
+    pub per_layer: Vec<LayerStats>,
+    pub tokens: usize,
+}
+
+impl ForwardStats {
+    /// Expert-forward throughput (tokens/s), the Table 3 metric.
+    pub fn expert_throughput(&self) -> f64 {
+        self.tokens as f64 / self.expert_forward_s.max(1e-12)
+    }
+
+    pub fn mean_ffn_per_token(&self) -> f64 {
+        if self.per_layer.is_empty() {
+            return 0.0;
+        }
+        self.per_layer.iter().map(|s| s.ffn_per_token).sum::<f64>()
+            / self.per_layer.len() as f64
+    }
+
+    pub fn total_dropped(&self) -> usize {
+        self.per_layer.iter().map(|s| s.dropped).sum()
+    }
+}
+
+/// What a backend reports about one layer's FFN stage. Native backends
+/// leave the distributed fields at their defaults; the cluster backend
+/// fills in per-device compute, load and all-to-all accounting.
+#[derive(Clone, Debug, Default)]
+pub struct FfnLayerReport {
+    /// Measured compute seconds per device (sharded backends).
+    pub device_compute_s: Vec<f64>,
+    /// FFN assignments landing on each device.
+    pub device_load: Vec<usize>,
+    /// Analytic all-to-all time (dispatch + combine).
+    pub comm_s: f64,
+    /// Off-device bytes moved.
+    pub comm_bytes: u64,
+}
+
+/// Full record of one executed layer.
+#[derive(Clone, Debug)]
+pub struct LayerExec {
+    pub stats: LayerStats,
+    /// Wall seconds in the FFN stage (driver-measured).
+    pub ffn_s: f64,
+    /// Wall seconds in the inline ZC stage (driver-measured).
+    pub zc_s: f64,
+    pub report: FfnLayerReport,
+}
+
+/// A pluggable FFN-expert execution strategy.
+///
+/// Contract (DESIGN.md §7): for every micro-batch in `plan.ffn_batches`,
+/// scatter-add `gate * FFN_expert(h[token])` into the matching row of `y`.
+/// The backend must not touch rows outside the batch token sets, must not
+/// apply zero-computation experts (the driver owns those), and must treat
+/// `plan` as authoritative — no re-deriving of routing or capacity.
+pub trait ExpertBackend {
+    fn execute_ffn(
+        &mut self,
+        layer: usize,
+        plan: &DispatchPlan,
+        h: &Tensor,
+        y: &mut Tensor,
+    ) -> Result<FfnLayerReport>;
+}
+
+/// The single implementation of zero-computation expert application
+/// (paper Sec. 3.1): zero discards, copy adds `g*x`, constant adds the
+/// learned convex mix. ZC experts always run inline on the token's home
+/// buffer — they are never queued or communicated.
+pub fn apply_zc_inline(
+    assignments: &[Assignment],
+    cfg: &MoeConfig,
+    consts: &[ConstExpert],
+    h: &Tensor,
+    y: &mut Tensor,
+) {
+    let (_, d) = h.dims2();
+    for a in assignments {
+        let xrow = h.row(a.token);
+        let orow = &mut y.data[a.token * d..(a.token + 1) * d];
+        match cfg.kind(a.expert) {
+            ExpertKind::Zero => {}
+            ExpertKind::Copy => {
+                crate::moe::experts::copy_expert_into(xrow, a.gate, orow)
+            }
+            ExpertKind::Constant => {
+                consts[cfg.const_index(a.expert)]
+                    .forward_token_into(xrow, a.gate, orow)
+            }
+            ExpertKind::Ffn => unreachable!("ffn assignment in zc list"),
+        }
+    }
+}
+
+/// Shared per-layer statistics accounting (mirrors L2's MoELayerAux).
+pub fn layer_stats(
+    plan: &DispatchPlan,
+    routing: &Routing,
+    cfg: &MoeConfig,
+    n_tokens: usize,
+) -> LayerStats {
+    let ffn_assignments = plan.ffn_assignments();
+    LayerStats {
+        expert_counts: plan.expert_counts.clone(),
+        dropped: plan.dropped.len(),
+        ffn_assignments,
+        zc_assignments: plan.zc_inline.len(),
+        ffn_per_token: ffn_assignments as f64 / n_tokens as f64,
+        balance_loss: crate::moe::balance::balance_loss(routing, cfg),
+    }
+}
+
+/// Execute one planned layer: FFN micro-batches on the backend, ZC experts
+/// inline, both timed, plus stats. `y` receives the layer output (the
+/// caller owns the residual-stream update).
+#[allow(clippy::too_many_arguments)]
+pub fn execute_layer(
+    backend: &mut dyn ExpertBackend,
+    layer: usize,
+    plan: &DispatchPlan,
+    routing: &Routing,
+    cfg: &MoeConfig,
+    consts: &[ConstExpert],
+    h: &Tensor,
+    y: &mut Tensor,
+) -> Result<LayerExec> {
+    let t0 = Instant::now();
+    let report = backend.execute_ffn(layer, plan, h, y)?;
+    let ffn_s = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    apply_zc_inline(&plan.zc_inline, cfg, consts, h, y);
+    let zc_s = t1.elapsed().as_secs_f64();
+
+    Ok(LayerExec {
+        stats: layer_stats(plan, routing, cfg, h.dims2().0),
+        ffn_s,
+        zc_s,
+        report,
+    })
+}
+
+/// The stack-level loop shared by the serving engine, the reference stack
+/// and the cluster simulator: per layer — route (threading the previous
+/// layer's raw scores when gating residuals are on), build the dispatch
+/// plan from the *per-layer* config, execute via the backend, apply ZC
+/// inline, then update the residual stream `h <- h + y`.
+///
+/// Without the residual update, fully-dropped tokens would become zero
+/// rows and the sparse expert kernels would skip them, corrupting the
+/// expert-forward cost accounting.
+pub fn forward_stack(
+    backend: &mut dyn ExpertBackend,
+    weights: &StackWeights,
+    layer_cfgs: &[MoeConfig],
+    x: &Tensor,
+) -> Result<(Tensor, ForwardStats, Vec<LayerExec>)> {
+    let (t, d) = x.dims2();
+    assert_eq!(
+        layer_cfgs.len(),
+        weights.layers.len(),
+        "one config per layer"
+    );
+    let mut stats = ForwardStats { tokens: t, ..Default::default() };
+    let mut execs = Vec::with_capacity(weights.layers.len());
+    let mut h = x.clone();
+    let mut prev_scores: Option<Tensor> = None;
+    for (li, layer) in weights.layers.iter().enumerate() {
+        let lcfg = &layer_cfgs[li];
+        let t0 = Instant::now();
+        let prev = if lcfg.gating_residual {
+            prev_scores.as_ref()
+        } else {
+            None
+        };
+        let routing = route(&h, &layer.router, prev, lcfg.top_k);
+        stats.routing_s += t0.elapsed().as_secs_f64();
+
+        let plan = DispatchPlan::build(&routing, lcfg, t);
+        let mut y = Tensor::zeros(&[t, d]);
+        let ex = execute_layer(
+            backend, li, &plan, &routing, lcfg, &layer.consts, &h, &mut y,
+        )?;
+        stats.ffn_s += ex.ffn_s;
+        stats.zc_s += ex.zc_s;
+        stats.expert_forward_s += ex.ffn_s + ex.zc_s;
+        stats.per_layer.push(ex.stats.clone());
+        execs.push(ex);
+
+        prev_scores = Some(routing.scores);
+        for (hv, yv) in h.data.iter_mut().zip(&y.data) {
+            *hv += yv;
+        }
+    }
+    Ok((h, stats, execs))
+}
+
+// ------------------------------------------------------------- backends
+
+/// The oracle backend: per-token `forward_token_into`, exactly the
+/// reference semantics `moe::layer::layer_forward` is defined by.
+pub struct NativeSingle<'a> {
+    pub layers: &'a [MoeLayerWeights],
+}
+
+impl ExpertBackend for NativeSingle<'_> {
+    fn execute_ffn(
+        &mut self,
+        layer: usize,
+        plan: &DispatchPlan,
+        h: &Tensor,
+        y: &mut Tensor,
+    ) -> Result<FfnLayerReport> {
+        let (_, d) = h.dims2();
+        let w = &self.layers[layer];
+        for batch in &plan.ffn_batches {
+            let e = &w.ffn[batch.expert];
+            for (&tok, &gate) in batch.tokens.iter().zip(&batch.gates) {
+                let orow = &mut y.data[tok * d..(tok + 1) * d];
+                e.forward_token_into(h.row(tok), gate, orow);
+            }
+        }
+        Ok(FfnLayerReport::default())
+    }
+}
+
+/// The serving-path native backend: gather each micro-batch, run the
+/// allocation-free batched expert, scatter-add gated rows. With
+/// `workers > 1`, independent FFN micro-batches are fanned out across
+/// `util::threadpool` workers — each batch's dense output is computed in
+/// parallel and scatter-added serially in batch order, so results are
+/// bitwise-identical for every worker count.
+pub struct NativeBatched<'a> {
+    pub layers: &'a [MoeLayerWeights],
+    pub workers: usize,
+}
+
+impl ExpertBackend for NativeBatched<'_> {
+    fn execute_ffn(
+        &mut self,
+        layer: usize,
+        plan: &DispatchPlan,
+        h: &Tensor,
+        y: &mut Tensor,
+    ) -> Result<FfnLayerReport> {
+        let (_, d) = h.dims2();
+        let w = &self.layers[layer];
+        let batches = &plan.ffn_batches;
+        if self.workers <= 1 || batches.len() <= 1 {
+            // Serial: one weight stream per batch, zero per-token
+            // allocations, scatter-add directly into y (§Perf).
+            let d_ff = w.ffn.first().map_or(0, |e| e.w1.shape[1]);
+            let mut scratch = FfnScratch::new(d_ff.max(d));
+            let mut gather = Tensor::zeros(&[1, d]);
+            for batch in batches {
+                let e = &w.ffn[batch.expert];
+                let n = batch.tokens.len();
+                if gather.numel() < n * d {
+                    gather = Tensor::zeros(&[n, d]);
+                } else {
+                    gather.shape = vec![n, d];
+                }
+                for (i, &tok) in batch.tokens.iter().enumerate() {
+                    gather.data[i * d..(i + 1) * d]
+                        .copy_from_slice(h.row(tok));
+                }
+                e.forward_batch_into(
+                    &gather,
+                    Some(batch.gates.as_slice()),
+                    &mut scratch,
+                    &mut y.data,
+                    Some(batch.tokens.as_slice()),
+                );
+            }
+        } else {
+            // Parallel micro-batches: the expensive dense compute fans out
+            // over the pool; the cheap scatter-add stays serial (two FFN
+            // experts may both feed one token's output row).
+            let outs: Vec<Vec<f32>> =
+                parallel_map(batches.len(), self.workers, |i| {
+                    let batch = &batches[i];
+                    let e = &w.ffn[batch.expert];
+                    let n = batch.tokens.len();
+                    let mut gather = Tensor::zeros(&[n, d]);
+                    for (j, &tok) in batch.tokens.iter().enumerate() {
+                        gather.data[j * d..(j + 1) * d]
+                            .copy_from_slice(h.row(tok));
+                    }
+                    let mut scratch = FfnScratch::new(e.w1.shape[1].max(d));
+                    let mut out = vec![0.0f32; n * d];
+                    e.forward_batch_into(
+                        &gather,
+                        Some(batch.gates.as_slice()),
+                        &mut scratch,
+                        &mut out,
+                        None,
+                    );
+                    out
+                });
+            for (batch, out) in batches.iter().zip(&outs) {
+                for (i, &tok) in batch.tokens.iter().enumerate() {
+                    let orow = &mut y.data[tok * d..(tok + 1) * d];
+                    axpy(1.0, &out[i * d..(i + 1) * d], orow);
+                }
+            }
+        }
+        Ok(FfnLayerReport::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn setup(
+        preset: &str,
+        seed: u64,
+        t: usize,
+    ) -> (MoeConfig, StackWeights, Tensor) {
+        let cfg = MoeConfig::preset(preset);
+        let weights = StackWeights::init(seed, &cfg);
+        let mut rng = Rng::new(seed ^ 0xABCD);
+        let x = Tensor::randn(&mut rng, &[t, cfg.d_model], 1.0);
+        (cfg, weights, x)
+    }
+
+    fn run_backend(
+        backend: &mut dyn ExpertBackend,
+        cfg: &MoeConfig,
+        weights: &StackWeights,
+        x: &Tensor,
+    ) -> (Tensor, ForwardStats) {
+        let cfgs = vec![cfg.clone(); cfg.n_layers];
+        let (y, stats, _) =
+            forward_stack(backend, weights, &cfgs, x).unwrap();
+        (y, stats)
+    }
+
+    #[test]
+    fn batched_matches_single_within_tolerance() {
+        let (cfg, weights, x) = setup("test", 3, 48);
+        let (y_single, s_single) = run_backend(
+            &mut NativeSingle { layers: &weights.layers },
+            &cfg, &weights, &x,
+        );
+        let (y_batched, s_batched) = run_backend(
+            &mut NativeBatched { layers: &weights.layers, workers: 1 },
+            &cfg, &weights, &x,
+        );
+        assert!(y_batched.approx_eq(&y_single, 1e-5, 1e-5));
+        for (a, b) in s_single.per_layer.iter().zip(&s_batched.per_layer) {
+            assert_eq!(a.ffn_assignments, b.ffn_assignments);
+            assert_eq!(a.zc_assignments, b.zc_assignments);
+            assert_eq!(a.dropped, b.dropped);
+        }
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        // Parallel compute + serial scatter must be bitwise-deterministic.
+        let (cfg, weights, x) = setup("test", 9, 64);
+        let (y1, _) = run_backend(
+            &mut NativeBatched { layers: &weights.layers, workers: 1 },
+            &cfg, &weights, &x,
+        );
+        for workers in [2, 4, 8] {
+            let (yw, _) = run_backend(
+                &mut NativeBatched { layers: &weights.layers, workers },
+                &cfg, &weights, &x,
+            );
+            assert_eq!(
+                y1.data, yw.data,
+                "workers={workers} diverged from serial"
+            );
+        }
+    }
+
+    #[test]
+    fn zc_inline_only_touches_assigned_rows() {
+        let (cfg, weights, x) = setup("test", 1, 16);
+        let routing =
+            route(&x, &weights.layers[0].router, None, cfg.top_k);
+        let plan = DispatchPlan::build(&routing, &cfg, 16);
+        let mut y = Tensor::zeros(&[16, cfg.d_model]);
+        apply_zc_inline(
+            &plan.zc_inline, &cfg, &weights.layers[0].consts, &x, &mut y,
+        );
+        let zc_tokens: std::collections::BTreeSet<usize> = plan
+            .zc_inline
+            .iter()
+            .filter(|a| cfg.kind(a.expert) != ExpertKind::Zero)
+            .map(|a| a.token)
+            .collect();
+        for tok in 0..16 {
+            let nonzero = y.row(tok).iter().any(|&v| v != 0.0);
+            if !zc_tokens.contains(&tok) {
+                assert!(!nonzero, "row {tok} written without assignment");
+            }
+        }
+    }
+
+    #[test]
+    fn stats_accounting_conserves_assignments() {
+        let (cfg, weights, x) = setup("test", 5, 40);
+        let (_, stats) = run_backend(
+            &mut NativeBatched { layers: &weights.layers, workers: 2 },
+            &cfg, &weights, &x,
+        );
+        assert_eq!(stats.per_layer.len(), cfg.n_layers);
+        for l in &stats.per_layer {
+            assert_eq!(
+                l.ffn_assignments + l.zc_assignments + l.dropped,
+                40 * cfg.top_k
+            );
+        }
+        assert!(stats.expert_forward_s > 0.0);
+        assert!(stats.expert_throughput() > 0.0);
+    }
+}

@@ -3,9 +3,17 @@
 //!
 //! The serving engine in `coordinator/` implements the same semantics with
 //! batching and queueing; this module is the oracle it is property-tested
-//! against, and the compute model the cluster simulator runs.
+//! against, and the compute model the cluster simulator runs. Expert
+//! execution itself is delegated to the shared executor in [`moe::exec`]
+//! (DESIGN.md §7) with the [`NativeSingle`] oracle backend, so the
+//! route→dispatch→execute→combine semantics exists exactly once.
+//!
+//! [`moe::exec`]: crate::moe::exec
+//! [`NativeSingle`]: crate::moe::exec::NativeSingle
 
-use crate::config::{ExpertKind, MoeConfig};
+use crate::config::MoeConfig;
+use crate::coordinator::dispatch::DispatchPlan;
+use crate::moe::exec::{self, NativeSingle};
 use crate::moe::router::{route, Routing};
 use crate::moe::weights::MoeLayerWeights;
 use crate::tensor::Tensor;
@@ -80,53 +88,21 @@ pub fn layer_forward(
     let (t, d) = x.dims2();
     let prev = if cfg.gating_residual { prev_scores } else { None };
     let routing = route(x, &weights.router, prev, cfg.top_k);
-    let disp = dispatch(&routing, cfg, t);
+    let plan = DispatchPlan::build(&routing, cfg, t);
     let mut y = Tensor::zeros(&[t, d]);
-    let mut ffn_assignments = 0;
-    let mut zc_assignments = 0;
-    for a in &disp.kept {
-        let xrow = x.row(a.token);
-        // Split borrows: output row is disjoint from x.
-        let orow = &mut y.data[a.token * d..(a.token + 1) * d];
-        match cfg.kind(a.expert) {
-            ExpertKind::Ffn => {
-                weights.ffn[a.expert].forward_token_into(xrow, a.gate, orow);
-                ffn_assignments += 1;
-            }
-            ExpertKind::Zero => {
-                zc_assignments += 1; // discard: contributes nothing
-            }
-            ExpertKind::Copy => {
-                crate::moe::experts::copy_expert_into(xrow, a.gate, orow);
-                zc_assignments += 1;
-            }
-            ExpertKind::Constant => {
-                let j = a.expert
-                    - cfg.n_ffn_experts
-                    - cfg.n_zero
-                    - cfg.n_copy;
-                weights.consts[j].forward_token_into(xrow, a.gate, orow);
-                zc_assignments += 1;
-            }
-        }
-    }
-    let stats = LayerStats {
-        expert_counts: crate::moe::balance::assignment_counts(
-            &routing,
-            cfg.n_experts(),
-        ),
-        dropped: disp.dropped.len(),
-        ffn_assignments,
-        zc_assignments,
-        ffn_per_token: ffn_assignments as f64 / t as f64,
-        balance_loss: crate::moe::balance::balance_loss(&routing, cfg),
-    };
-    (y, routing, stats)
+    let mut backend =
+        NativeSingle { layers: std::slice::from_ref(weights) };
+    let ex = exec::execute_layer(
+        &mut backend, 0, &plan, &routing, cfg, &weights.consts, x, &mut y,
+    )
+    .expect("native single-layer execution is infallible");
+    (y, routing, ex.stats)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::ExpertKind;
     use crate::util::proptest::{gen, Prop};
     use crate::util::rng::Rng;
 
@@ -200,11 +176,8 @@ mod tests {
                 ExpertKind::Copy => {
                     crate::moe::experts::copy_expert_into(xrow, a.gate, orow)
                 }
-                ExpertKind::Constant => {
-                    let j = a.expert - cfg.n_ffn_experts - cfg.n_zero
-                        - cfg.n_copy;
-                    w.consts[j].forward_token_into(xrow, a.gate, orow)
-                }
+                ExpertKind::Constant => w.consts[cfg.const_index(a.expert)]
+                    .forward_token_into(xrow, a.gate, orow),
             }
         }
         assert!(y.approx_eq(&want, 1e-5, 1e-5));
@@ -318,10 +291,9 @@ mod tests {
                                 crate::moe::experts::copy_expert_into(
                                     xrow, a.gate, &mut tmp),
                             ExpertKind::Constant => {
-                                let j = a.expert - cfg.n_ffn_experts
-                                    - cfg.n_zero - cfg.n_copy;
-                                w.consts[j].forward_token_into(
-                                    xrow, a.gate, &mut tmp)
+                                w.consts[cfg.const_index(a.expert)]
+                                    .forward_token_into(
+                                        xrow, a.gate, &mut tmp)
                             }
                         }
                         bound += tmp.iter().map(|v| v * v).sum::<f32>()

@@ -8,6 +8,7 @@
 
 pub mod balance;
 pub mod complexity;
+pub mod exec;
 pub mod experts;
 pub mod layer;
 pub mod layerwise;

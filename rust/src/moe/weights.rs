@@ -64,12 +64,23 @@ pub struct StackWeights {
 
 impl StackWeights {
     pub fn init(seed: u64, cfg: &MoeConfig) -> StackWeights {
+        let cfgs = vec![cfg.clone(); cfg.n_layers];
+        StackWeights::init_per_layer(seed, &cfgs)
+    }
+
+    /// Initialise a stack whose layers may carry different configs (e.g.
+    /// per-layer expert counts for heterogeneous schedules). With uniform
+    /// configs this is identical to [`StackWeights::init`] — each layer
+    /// draws from the same split RNG stream.
+    pub fn init_per_layer(seed: u64, cfgs: &[MoeConfig]) -> StackWeights {
         let mut rng = Rng::new(seed);
         StackWeights {
-            layers: (0..cfg.n_layers)
-                .map(|i| {
+            layers: cfgs
+                .iter()
+                .enumerate()
+                .map(|(i, lcfg)| {
                     let mut lr = rng.split(i as u64 + 1);
-                    MoeLayerWeights::init(&mut lr, cfg)
+                    MoeLayerWeights::init(&mut lr, lcfg)
                 })
                 .collect(),
         }

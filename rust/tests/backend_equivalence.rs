@@ -1,0 +1,152 @@
+//! Cross-backend equivalence: every expert backend must produce the same
+//! outputs and identical kept/dropped/ZC accounting from the same weights
+//! and inputs (DESIGN.md §7's backend contract).
+//!
+//! Backends covered: the per-token oracle (`NativeSingle`), the batched
+//! serving backend at workers=1 and workers=4 (`NativeBatched` via
+//! `MoeEngine`), and the expert-parallel cluster simulator. Presets cover
+//! both MoE++ (`test`) and the ZC-free vanilla ablation (`test:vanilla`).
+
+use moepp::cluster::sim::ClusterSim;
+use moepp::cluster::topology::Topology;
+use moepp::config::MoeConfig;
+use moepp::coordinator::engine::{ForwardStats, MoeEngine};
+use moepp::moe::exec::{self, NativeSingle};
+use moepp::moe::weights::StackWeights;
+use moepp::tensor::Tensor;
+use moepp::util::proptest::{gen, Prop};
+use moepp::util::rng::Rng;
+
+/// Compare per-layer accounting between two stacks of forward stats.
+fn accounting_matches(
+    label: &str,
+    a: &ForwardStats,
+    b: &ForwardStats,
+) -> Result<(), String> {
+    if a.per_layer.len() != b.per_layer.len() {
+        return Err(format!("{label}: layer count mismatch"));
+    }
+    for (li, (x, y)) in a.per_layer.iter().zip(&b.per_layer).enumerate() {
+        if x.ffn_assignments != y.ffn_assignments {
+            return Err(format!(
+                "{label}: layer {li} ffn {} vs {}",
+                x.ffn_assignments, y.ffn_assignments
+            ));
+        }
+        if x.zc_assignments != y.zc_assignments {
+            return Err(format!(
+                "{label}: layer {li} zc {} vs {}",
+                x.zc_assignments, y.zc_assignments
+            ));
+        }
+        if x.dropped != y.dropped {
+            return Err(format!(
+                "{label}: layer {li} dropped {} vs {}",
+                x.dropped, y.dropped
+            ));
+        }
+        if x.expert_counts != y.expert_counts {
+            return Err(format!("{label}: layer {li} expert counts"));
+        }
+    }
+    Ok(())
+}
+
+fn check_preset(preset: &'static str) {
+    Prop::new("cross-backend-equivalence").cases(6).run(
+        |rng| {
+            let t = gen::usize_in(rng, 8, 48);
+            let wseed = rng.next_u64() % 1000;
+            let xseed = rng.next_u64();
+            (t, wseed, xseed)
+        },
+        |&(t, wseed, xseed)| {
+            let cfg = MoeConfig::preset(preset);
+            let mut rng = Rng::new(xseed);
+            let x = Tensor::randn(&mut rng, &[t, cfg.d_model], 1.0);
+
+            // Oracle: per-token NativeSingle over the shared stack loop.
+            let weights = StackWeights::init(wseed, &cfg);
+            let cfgs = vec![cfg.clone(); cfg.n_layers];
+            let mut oracle = NativeSingle { layers: &weights.layers };
+            let (y_oracle, s_oracle, _) =
+                exec::forward_stack(&mut oracle, &weights, &cfgs, &x)
+                    .map_err(|e| format!("oracle: {e:#}"))?;
+
+            // Batched serving backend, serial and parallel.
+            let mut batched = Vec::new();
+            for workers in [1usize, 4] {
+                let engine = MoeEngine::native_with_workers(
+                    cfg.clone(),
+                    wseed,
+                    workers,
+                );
+                let (y, s) = engine
+                    .forward_stack(&x)
+                    .map_err(|e| format!("workers={workers}: {e:#}"))?;
+                if !y.approx_eq(&y_oracle, 1e-5, 1e-5) {
+                    return Err(format!(
+                        "batched workers={workers} diverges from oracle"
+                    ));
+                }
+                accounting_matches(
+                    &format!("workers={workers}"),
+                    &s_oracle,
+                    &s,
+                )?;
+                batched.push((y, s));
+            }
+            // workers=1 and workers=4 must agree bitwise.
+            if batched[0].0.data != batched[1].0.data {
+                return Err("workers=1 vs workers=4 not bitwise equal"
+                    .into());
+            }
+
+            // Cluster simulator (same weight seed -> same weights).
+            let sim = ClusterSim::new(cfg.clone(), Topology::new(3), wseed);
+            let (y_sim, rep) = sim.forward(&x);
+            if !y_sim.approx_eq(&y_oracle, 1e-5, 1e-5) {
+                return Err("cluster sim diverges from oracle".into());
+            }
+            accounting_matches("cluster", &s_oracle, &rep.stats)?;
+            for (l, s) in rep.layers.iter().zip(&s_oracle.per_layer) {
+                if l.dropped != s.dropped {
+                    return Err("cluster layer dropped mismatch".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn backends_agree_on_moepp_preset() {
+    check_preset("test");
+}
+
+#[test]
+fn backends_agree_on_vanilla_preset() {
+    check_preset("test:vanilla");
+}
+
+#[test]
+fn backends_agree_across_tau() {
+    // Sweep tau (shifting work between FFN and ZC experts) at fixed seed.
+    for tau in [0.1, 0.75, 1.0] {
+        let cfg = MoeConfig { tau, ..MoeConfig::preset("test") };
+        let weights = StackWeights::init(5, &cfg);
+        let cfgs = vec![cfg.clone(); cfg.n_layers];
+        let mut rng = Rng::new(17);
+        let x = Tensor::randn(&mut rng, &[32, cfg.d_model], 1.0);
+        let mut oracle = NativeSingle { layers: &weights.layers };
+        let (y_oracle, s_oracle, _) =
+            exec::forward_stack(&mut oracle, &weights, &cfgs, &x).unwrap();
+        let engine = MoeEngine::native_with_workers(cfg.clone(), 5, 4);
+        let (y_eng, s_eng) = engine.forward_stack(&x).unwrap();
+        assert!(
+            y_eng.approx_eq(&y_oracle, 1e-5, 1e-5),
+            "tau={tau}: batched backend diverges"
+        );
+        accounting_matches("tau-sweep", &s_oracle, &s_eng).unwrap();
+    }
+}
