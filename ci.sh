@@ -16,8 +16,24 @@ run() {
     "$@"
 }
 
-run cargo build --release
+# Build, failing on any warning in the serve/ module (its CI gate).
+# Touch the crate root so cargo re-emits warnings even on a warm cache.
+touch src/lib.rs
+echo "==> cargo build --release (warnings in src/serve/ are fatal)"
+build_log=$(mktemp)
+cargo build --release 2>&1 | tee "$build_log"
+if grep -A3 '^warning' "$build_log" | grep -q 'src/serve/'; then
+    echo "ci.sh: warnings in rust/src/serve/ — fix them" >&2
+    exit 1
+fi
+rm -f "$build_log"
+
+# Includes the serve unit tests and tests/serve_equivalence.rs.
 run cargo test -q
+
+# Serving smoke: the full MoeService path end to end via the CLI.
+run cargo run --release --quiet -- serve --preset sm-8e --requests 64 \
+    --max-wait-ms 1
 
 if [ "${1:-}" != "fast" ]; then
     if cargo clippy --version >/dev/null 2>&1; then

@@ -1,0 +1,120 @@
+//! Serving example: the `moepp::serve` continuous-batching service API,
+//! with the AOT-compiled Pallas expert kernel on the PJRT backend when
+//! artifacts are present (falls back to the native backend otherwise).
+//!
+//!     make artifacts && cargo run --release --example serve_moe
+
+use std::time::Duration;
+
+use moepp::bench::workload::request_sizes;
+use moepp::config::MoeConfig;
+use moepp::coordinator::batcher::BatcherConfig;
+use moepp::coordinator::engine::MoeEngine;
+use moepp::runtime::Runtime;
+use moepp::serve::{
+    AdmissionError, MoeService, Priority, ServeRequest, ServiceConfig,
+};
+use moepp::tensor::Tensor;
+use moepp::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = MoeConfig::preset("test");
+    // Prefer the PJRT backend (AOT Pallas kernel) when artifacts exist.
+    let engine = match Runtime::open("artifacts") {
+        Ok(rt) => {
+            println!("backend: PJRT (AOT Pallas expert kernel)");
+            MoeEngine::pjrt(cfg.clone(), 0, std::sync::Arc::new(rt))?
+        }
+        Err(_) => {
+            println!("backend: native (run `make artifacts` for PJRT)");
+            MoeEngine::native(cfg.clone(), 0)
+        }
+    };
+
+    let service = MoeService::start(
+        engine,
+        ServiceConfig {
+            batcher: BatcherConfig {
+                max_tokens: 128,
+                max_wait: Duration::from_millis(2),
+            },
+            // A small admission window so the trace actually exercises
+            // backpressure: rejected submits wait for a completion.
+            max_queued_tokens: 512,
+            max_pending_requests: 64,
+            default_deadline: None,
+        },
+    );
+
+    // A trace of 300 requests: mostly short decode-like, some long
+    // prefill-like (see bench::workload). Every 4th request is tagged
+    // interactive so it is batched ahead of contending standard traffic.
+    let mut rng = Rng::new(1);
+    let mut handles = Vec::new();
+    let mut backpressure = 0u64;
+    let mut total_ffn = 0u64;
+    let mut total_zc = 0u64;
+    let mut answered = 0usize;
+    for (id, n) in request_sizes(&mut rng, 300, cfg.seq_len)
+        .into_iter()
+        .enumerate()
+    {
+        let priority = if id % 4 == 0 {
+            Priority::Interactive
+        } else {
+            Priority::Standard
+        };
+        let req = ServeRequest::new(Tensor::randn(
+            &mut rng,
+            &[n, cfg.d_model],
+            1.0,
+        ))
+        .with_priority(priority);
+        let handle = loop {
+            match service.submit(req.clone()) {
+                Ok(h) => break h,
+                Err(AdmissionError::QueueFull { .. })
+                | Err(AdmissionError::TooManyPending { .. }) => {
+                    // Backpressure: absorb a completion, then retry.
+                    backpressure += 1;
+                    let resp = handles
+                        .remove(0)
+                        .wait()
+                        .expect("request completes");
+                    assert_eq!(resp.output.shape[1], cfg.d_model);
+                    total_ffn += resp.stats.counts.ffn;
+                    total_zc += resp.stats.counts.zc();
+                    answered += 1;
+                }
+                Err(e) => anyhow::bail!("admission error: {e}"),
+            }
+        };
+        handles.push(handle);
+    }
+
+    // Drain the rest; every handle resolves with output + its own stats.
+    for h in handles {
+        let resp = h.wait().expect("request completes");
+        total_ffn += resp.stats.counts.ffn;
+        total_zc += resp.stats.counts.zc();
+        answered += 1;
+    }
+
+    let latency = service.latency();
+    let metrics = service.shutdown();
+    println!("{}", metrics.report());
+    println!(
+        "latency p50 {:.2}ms  p95 {:.2}ms  mean {:.2}ms",
+        latency.quantile(0.5) * 1e3,
+        latency.quantile(0.95) * 1e3,
+        latency.mean() * 1e3
+    );
+    println!(
+        "per-request accounting: {answered} answered, ffn {total_ffn} \
+         zc {total_zc} (backpressure retries {backpressure})"
+    );
+    // Per-request slices must reconcile with the batch-level totals.
+    assert_eq!(total_ffn, metrics.ffn_assignments);
+    assert_eq!(total_zc, metrics.zc_assignments);
+    Ok(())
+}

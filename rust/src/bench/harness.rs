@@ -1,6 +1,19 @@
-//! Timing harness: adaptive iteration count, warmup, robust statistics.
+//! Timing harness: adaptive iteration count, warmup, robust statistics —
+//! plus the serving-trace driver used by `moepp serve` and the serving
+//! benches (all serving measurement goes through [`MoeService`], never
+//! through a hand-driven batcher loop).
+//!
+//! [`MoeService`]: crate::serve::MoeService
 
 use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::moe::exec::AssignmentCounts;
+use crate::serve::{
+    AdmissionError, MoeService, Priority, ResponseHandle, ServeRequest,
+};
+use crate::tensor::Tensor;
 
 #[derive(Clone, Debug)]
 pub struct BenchResult {
@@ -64,6 +77,117 @@ pub fn summarize(name: &str, mut samples: Vec<f64>) -> BenchResult {
     }
 }
 
+// ------------------------------------------------------------ serving
+
+/// Outcome of driving one request trace through a [`MoeService`].
+#[derive(Clone, Debug)]
+pub struct ServeTraceReport {
+    /// Requests that completed with an output.
+    pub completed: usize,
+    /// Admission bounces absorbed by the retry loop (backpressure events,
+    /// not failures — every request eventually ran).
+    pub backpressure_retries: u64,
+    /// Submit-first to last-completion wall time.
+    pub wall_s: f64,
+    /// Completed-request service-time distribution.
+    pub per_request: BenchResult,
+    /// Sum of every request's per-request assignment counts — reconciles
+    /// against the service's batch-level metrics.
+    pub counts: AssignmentCounts,
+}
+
+impl ServeTraceReport {
+    pub fn requests_per_s(&self) -> f64 {
+        self.completed as f64 / self.wall_s.max(1e-12)
+    }
+}
+
+/// Drive `inputs` through the service as a closed-loop trace with
+/// backpressure handling: submissions that bounce on a full queue wait
+/// for the oldest outstanding response, then retry — the canonical
+/// caller-side reaction to [`AdmissionError::QueueFull`].
+///
+/// A slice of the trace is tagged [`Priority::Interactive`] (every 5th
+/// request) and [`Priority::Bulk`] (every 11th) so the scheduler's
+/// priority classes see real traffic.
+pub fn run_serve_trace(
+    service: &MoeService,
+    inputs: Vec<Tensor>,
+) -> Result<ServeTraceReport> {
+    anyhow::ensure!(!inputs.is_empty(), "empty serve trace");
+    let t0 = Instant::now();
+    let mut handles: Vec<ResponseHandle> = Vec::new();
+    let mut samples = Vec::new();
+    let mut counts = AssignmentCounts::default();
+    let mut completed = 0usize;
+    let mut retries = 0u64;
+    let drain_oldest =
+        |handles: &mut Vec<ResponseHandle>,
+         samples: &mut Vec<f64>,
+         counts: &mut AssignmentCounts,
+         completed: &mut usize|
+         -> Result<()> {
+            let resp = handles.remove(0).wait().map_err(|e| {
+                anyhow::anyhow!("serve trace request failed: {e}")
+            })?;
+            samples.push(resp.stats.service_time.as_secs_f64());
+            counts.add(&resp.stats.counts);
+            *completed += 1;
+            Ok(())
+        };
+    for (i, tokens) in inputs.into_iter().enumerate() {
+        let priority = if i % 5 == 0 {
+            Priority::Interactive
+        } else if i % 11 == 0 {
+            Priority::Bulk
+        } else {
+            Priority::Standard
+        };
+        let req = ServeRequest::new(tokens).with_priority(priority);
+        loop {
+            match service.submit(req.clone()) {
+                Ok(h) => {
+                    handles.push(h);
+                    break;
+                }
+                Err(
+                    AdmissionError::QueueFull { .. }
+                    | AdmissionError::TooManyPending { .. },
+                ) => {
+                    retries += 1;
+                    anyhow::ensure!(
+                        !handles.is_empty(),
+                        "admission rejected with nothing in flight"
+                    );
+                    drain_oldest(
+                        &mut handles,
+                        &mut samples,
+                        &mut counts,
+                        &mut completed,
+                    )?;
+                }
+                Err(e) => anyhow::bail!("serve trace admission: {e}"),
+            }
+        }
+    }
+    while !handles.is_empty() {
+        drain_oldest(
+            &mut handles,
+            &mut samples,
+            &mut counts,
+            &mut completed,
+        )?;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    Ok(ServeTraceReport {
+        completed,
+        backpressure_retries: retries,
+        wall_s,
+        per_request: summarize("serve-request", samples),
+        counts,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -88,5 +212,50 @@ mod tests {
         assert_eq!(r.min_s, 1.0);
         assert_eq!(r.median_s, 2.0);
         assert!((r.mean_s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serve_trace_completes_and_reconciles_with_service_metrics() {
+        use crate::config::MoeConfig;
+        use crate::coordinator::batcher::BatcherConfig;
+        use crate::coordinator::engine::MoeEngine;
+        use crate::serve::ServiceConfig;
+        use crate::util::rng::Rng;
+
+        let cfg = MoeConfig::preset("test");
+        let service = MoeService::start(
+            MoeEngine::native(cfg.clone(), 0),
+            ServiceConfig {
+                batcher: BatcherConfig {
+                    max_tokens: 32,
+                    max_wait: Duration::from_millis(1),
+                },
+                max_queued_tokens: 64,
+                max_pending_requests: 128,
+                default_deadline: None,
+            },
+        );
+        let mut rng = Rng::new(9);
+        let inputs: Vec<Tensor> = (0..20)
+            .map(|_| {
+                let n = 1 + (rng.next_u64() % 8) as usize;
+                Tensor::randn(&mut rng, &[n, cfg.d_model], 1.0)
+            })
+            .collect();
+        let report = run_serve_trace(&service, inputs).unwrap();
+        assert_eq!(report.completed, 20);
+        assert!(report.wall_s > 0.0);
+        assert!(report.requests_per_s() > 0.0);
+        assert_eq!(report.per_request.iters, 20);
+        // Per-request assignment counts summed over the trace must equal
+        // the service's batch-level forward accounting exactly.
+        let m = service.shutdown();
+        assert_eq!(report.counts.ffn, m.ffn_assignments);
+        assert_eq!(report.counts.zc(), m.zc_assignments);
+        assert_eq!(report.counts.dropped, m.dropped_assignments);
+        // Every input was admitted exactly once; bounces only ever
+        // incremented the reject counter.
+        assert_eq!(m.requests, 20);
+        assert_eq!(m.rejected, report.backpressure_retries);
     }
 }

@@ -4,6 +4,14 @@
 //! Requests carry token hidden-states (rows of D floats) plus an opaque id;
 //! the batcher concatenates them, records the row spans, and hands batches
 //! to the engine. Responses are scattered back per request.
+//!
+//! **Deprecated as a public serving surface.** Driving this type by hand
+//! (push → `ready()` → `next_batch()` → forward → `scatter`) is the old
+//! lock-step serving loop; it cannot express concurrency, backpressure,
+//! cancellation or per-request accounting. All serving now goes through
+//! [`crate::serve::MoeService`] (DESIGN.md §9), which owns a `Batcher`
+//! internally on its scheduler thread. Direct use is only appropriate
+//! inside the serve scheduler and in tests of the batching policy itself.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -88,6 +96,22 @@ impl Batcher {
         self.queued_tokens
     }
 
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Queued requests (not tokens).
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// The instant at which `ready` will turn true on the deadline rule
+    /// (oldest entry + max_wait); `None` when the queue is empty. Lets a
+    /// scheduler sleep exactly until the next flush is due.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queue.front().map(|(_, at)| *at + self.cfg.max_wait)
+    }
+
     /// True if a batch should be emitted now.
     pub fn ready(&self, now: Instant) -> bool {
         if self.queue.is_empty() {
@@ -95,6 +119,15 @@ impl Batcher {
         }
         self.queued_tokens >= self.cfg.max_tokens
             || now.duration_since(self.queue[0].1) >= self.cfg.max_wait
+    }
+
+    /// Remove a queued request by id (serving-side cancellation: the
+    /// request must never execute). Returns it if it was still queued.
+    pub fn remove(&mut self, id: u64) -> Option<Request> {
+        let idx = self.queue.iter().position(|(r, _)| r.id == id)?;
+        let (req, _) = self.queue.remove(idx).expect("index in range");
+        self.queued_tokens -= req.tokens.shape[0];
+        Some(req)
     }
 
     /// Build the next batch (up to max_tokens; whole requests only, but a
@@ -184,6 +217,110 @@ mod tests {
         assert!(b.ready(now + Duration::from_millis(60))); // deadline hit
         b.push(req(2, 95, 2, 0.0));
         assert!(b.ready(Instant::now())); // size hit
+    }
+
+    #[test]
+    fn queued_tokens_consistent_across_partial_flushes() {
+        // Regression: the queued-token gauge must track exactly the sum of
+        // queued request sizes through any interleaving of pushes and
+        // partial flushes (the serve scheduler's backpressure reads it).
+        let mut b = Batcher::new(
+            BatcherConfig { max_tokens: 8, max_wait: Duration::ZERO },
+            2,
+        );
+        let sizes = [3usize, 3, 5, 2, 9, 1, 4];
+        let mut queued: Vec<usize> = Vec::new();
+        for (i, &n) in sizes.iter().enumerate() {
+            b.push(req(i as u64, n, 2, 0.0));
+            queued.push(n);
+            assert_eq!(b.queued_tokens(), queued.iter().sum::<usize>());
+            if i % 2 == 1 {
+                let batch = b.next_batch().unwrap();
+                for _ in &batch.spans {
+                    queued.remove(0);
+                }
+                assert_eq!(
+                    b.queued_tokens(),
+                    queued.iter().sum::<usize>(),
+                    "after flush at push {i}"
+                );
+            }
+        }
+        while let Some(batch) = b.next_batch() {
+            for _ in &batch.spans {
+                queued.remove(0);
+            }
+            assert_eq!(b.queued_tokens(), queued.iter().sum::<usize>());
+        }
+        assert_eq!(b.queued_tokens(), 0);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn oversized_request_does_not_starve_followers() {
+        // Regression: an oversized request becomes its own batch and the
+        // requests queued behind it flush on the very next call — it must
+        // not wedge the queue or absorb its followers.
+        let mut b = Batcher::new(
+            BatcherConfig { max_tokens: 8, max_wait: Duration::ZERO },
+            2,
+        );
+        b.push(req(0, 20, 2, 0.0)); // oversized
+        b.push(req(1, 2, 2, 1.0));
+        b.push(req(2, 3, 2, 2.0));
+        assert_eq!(b.queued_tokens(), 25);
+        let first = b.next_batch().unwrap();
+        assert_eq!(first.spans.len(), 1, "oversized rides alone");
+        assert_eq!(first.spans[0].0, 0);
+        assert_eq!(first.n_tokens(), 20);
+        // Followers are immediately reachable, in order, and the batcher
+        // still reports ready on the size/deadline rules for them.
+        assert_eq!(b.queued_tokens(), 5);
+        assert!(b.ready(Instant::now()), "followers must not be starved");
+        let second = b.next_batch().unwrap();
+        assert_eq!(
+            second.spans.iter().map(|(id, _)| *id).collect::<Vec<_>>(),
+            vec![1, 2]
+        );
+        assert_eq!(b.queued_tokens(), 0);
+    }
+
+    #[test]
+    fn remove_pulls_request_out_of_queue() {
+        let mut b = Batcher::new(
+            BatcherConfig { max_tokens: 100, max_wait: Duration::ZERO },
+            2,
+        );
+        b.push(req(1, 3, 2, 1.0));
+        b.push(req(2, 5, 2, 2.0));
+        b.push(req(3, 2, 2, 3.0));
+        assert!(b.remove(9).is_none());
+        let removed = b.remove(2).unwrap();
+        assert_eq!(removed.tokens.shape, vec![5, 2]);
+        assert_eq!(b.queued_tokens(), 5);
+        let batch = b.next_batch().unwrap();
+        assert_eq!(
+            batch.spans.iter().map(|(id, _)| *id).collect::<Vec<_>>(),
+            vec![1, 3],
+            "removed request must not appear in any batch"
+        );
+        assert_eq!(b.queued_tokens(), 0);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest_entry() {
+        let cfg = BatcherConfig {
+            max_tokens: 100,
+            max_wait: Duration::from_millis(10),
+        };
+        let mut b = Batcher::new(cfg, 2);
+        assert!(b.next_deadline().is_none());
+        b.push(req(1, 4, 2, 0.0));
+        let dl = b.next_deadline().unwrap();
+        assert!(!b.ready(dl - Duration::from_millis(1)));
+        assert!(b.ready(dl));
+        b.next_batch().unwrap();
+        assert!(b.next_deadline().is_none());
     }
 
     #[test]

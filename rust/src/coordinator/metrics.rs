@@ -1,12 +1,23 @@
-//! Serving metrics: latency/throughput accounting with streaming quantiles
-//! (reservoir-free P² is overkill here — we keep a bounded sorted sample).
+//! Serving metrics: latency/throughput accounting with exact quantiles
+//! over a bounded sliding window, plus the service-level counters the
+//! `moepp::serve` scheduler maintains (queue depth, admission rejects,
+//! time-to-first-batch).
 
+use std::collections::VecDeque;
 use std::time::Duration;
 
 /// Bounded latency recorder with exact quantiles over the retained window.
+///
+/// The window is a FIFO over the most recent `cap` samples; a parallel
+/// buffer holds the same multiset *kept sorted on insert* (binary-search
+/// insert/remove), so quantile reads never allocate or sort — they index
+/// straight into the sorted buffer with nearest-rank interpolation.
 #[derive(Clone, Debug)]
 pub struct LatencyStats {
-    samples: Vec<f64>, // seconds
+    /// Insertion-order window (seconds), bounded by `cap` — eviction order.
+    window: VecDeque<f64>,
+    /// The same samples, kept sorted at all times.
+    sorted: Vec<f64>,
     cap: usize,
     pub count: u64,
     pub total_s: f64,
@@ -14,21 +25,31 @@ pub struct LatencyStats {
 
 impl LatencyStats {
     pub fn new(cap: usize) -> LatencyStats {
-        LatencyStats { samples: Vec::new(), cap, count: 0, total_s: 0.0 }
+        LatencyStats {
+            window: VecDeque::new(),
+            sorted: Vec::new(),
+            cap: cap.max(1),
+            count: 0,
+            total_s: 0.0,
+        }
     }
 
     pub fn record(&mut self, d: Duration) {
         let s = d.as_secs_f64();
         self.count += 1;
         self.total_s += s;
-        if self.samples.len() == self.cap {
-            // Overwrite pseudo-randomly (deterministic stride) to keep a
-            // spread-out window without an RNG dependency.
-            let idx = (self.count as usize * 7919) % self.cap;
-            self.samples[idx] = s;
-        } else {
-            self.samples.push(s);
+        if self.window.len() == self.cap {
+            // Slide: evict the oldest sample from both structures. The
+            // evicted value is bit-identical to what was inserted, so the
+            // binary search lands on an exact match.
+            let old = self.window.pop_front().unwrap();
+            let at = self.sorted.partition_point(|&x| x < old);
+            debug_assert!(self.sorted[at] == old);
+            self.sorted.remove(at);
         }
+        self.window.push_back(s);
+        let at = self.sorted.partition_point(|&x| x < s);
+        self.sorted.insert(at, s);
     }
 
     pub fn mean(&self) -> f64 {
@@ -39,18 +60,31 @@ impl LatencyStats {
         }
     }
 
+    /// Number of samples currently retained (≤ cap).
+    pub fn window_len(&self) -> usize {
+        self.window.len()
+    }
+
+    /// Quantile over the retained window, nearest-rank with linear
+    /// interpolation between adjacent order statistics. O(1) — the window
+    /// is maintained sorted on insert.
     pub fn quantile(&self, q: f64) -> f64 {
-        if self.samples.is_empty() {
+        if self.sorted.is_empty() {
             return 0.0;
         }
-        let mut v = self.samples.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((v.len() - 1) as f64 * q).round() as usize;
-        v[idx]
+        let pos = q.clamp(0.0, 1.0) * (self.sorted.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        let frac = pos - lo as f64;
+        self.sorted[lo] + (self.sorted[hi] - self.sorted[lo]) * frac
     }
 }
 
-/// Aggregate serving counters.
+/// Aggregate serving counters. The forward-path fields are merged from
+/// [`ForwardStats`]; the queue-path fields (rejects, cancels, queue depth,
+/// time-to-first-batch) are maintained by the `moepp::serve` scheduler.
+///
+/// [`ForwardStats`]: crate::coordinator::engine::ForwardStats
 #[derive(Clone, Debug, Default)]
 pub struct ServingMetrics {
     pub requests: u64,
@@ -61,6 +95,19 @@ pub struct ServingMetrics {
     pub zc_assignments: u64,
     pub expert_forward_s: f64,
     pub routing_s: f64,
+    /// Submissions bounced by admission control (backpressure).
+    pub rejected: u64,
+    /// Requests cancelled by their caller before execution.
+    pub cancelled: u64,
+    /// Requests whose queue deadline passed before they reached a batch.
+    pub expired: u64,
+    /// Requests failed by a backend error.
+    pub failed: u64,
+    /// Peak queued tokens observed (admission queue + batcher).
+    pub peak_queue_tokens: u64,
+    /// Seconds from service start to the first batch hitting the backend
+    /// (0 until a batch executes).
+    pub time_to_first_batch_s: f64,
 }
 
 impl ServingMetrics {
@@ -81,7 +128,7 @@ impl ServingMetrics {
     }
 
     pub fn report(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} batches={} tokens={} expert_tput={:.0} tok/s \
              ffn={} zc={} dropped={} (drop rate {:.3}%)",
             self.requests,
@@ -95,7 +142,18 @@ impl ServingMetrics {
                 / (self.ffn_assignments + self.zc_assignments
                     + self.dropped_assignments)
                     .max(1) as f64,
-        )
+        );
+        s.push_str(&format!(
+            "\nadmission: rejected={} cancelled={} expired={} failed={} \
+             peak_queue={} tok  first_batch={:.2}ms",
+            self.rejected,
+            self.cancelled,
+            self.expired,
+            self.failed,
+            self.peak_queue_tokens,
+            self.time_to_first_batch_s * 1e3,
+        ));
+        s
     }
 }
 
@@ -111,25 +169,58 @@ mod tests {
         }
         assert_eq!(l.count, 100);
         assert!((l.mean() - 0.0505).abs() < 1e-3);
-        assert!((l.quantile(0.5) - 0.050).abs() < 0.003);
+        assert!((l.quantile(0.5) - 0.0505).abs() < 1e-9);
         assert!(l.quantile(0.99) >= 0.098);
+        assert_eq!(l.quantile(0.0), 0.001);
+        assert_eq!(l.quantile(1.0), 0.100);
     }
 
     #[test]
-    fn bounded_window() {
+    fn quantile_interpolates_between_ranks() {
+        let mut l = LatencyStats::new(16);
+        l.record(Duration::from_secs(1));
+        l.record(Duration::from_secs(3));
+        // Midpoint of the two order statistics.
+        assert!((l.quantile(0.5) - 2.0).abs() < 1e-12);
+        assert!((l.quantile(0.25) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bounded_window_slides_fifo() {
         let mut l = LatencyStats::new(10);
         for i in 0..1000 {
             l.record(Duration::from_micros(i));
         }
         assert_eq!(l.count, 1000);
-        assert_eq!(l.samples.len(), 10);
+        assert_eq!(l.window_len(), 10);
+        // Only the most recent 10 samples (990..=999 µs) remain.
+        assert!((l.quantile(0.0) - 990e-6).abs() < 1e-12);
+        assert!((l.quantile(1.0) - 999e-6).abs() < 1e-12);
+        // Sorted invariant holds after heavy sliding.
+        assert!(l.sorted.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(l.sorted.len(), l.window.len());
+    }
+
+    #[test]
+    fn duplicate_samples_evict_cleanly() {
+        let mut l = LatencyStats::new(4);
+        for _ in 0..3 {
+            l.record(Duration::from_millis(5));
+        }
+        for _ in 0..6 {
+            l.record(Duration::from_millis(7));
+        }
+        assert_eq!(l.window_len(), 4);
+        assert_eq!(l.quantile(0.0), 0.007);
+        assert_eq!(l.quantile(1.0), 0.007);
     }
 
     #[test]
     fn metrics_report_smoke() {
         let m = ServingMetrics { tokens: 100, expert_forward_s: 0.5,
-                                 ..Default::default() };
+                                 rejected: 3, ..Default::default() };
         assert_eq!(m.expert_throughput(), 200.0);
         assert!(m.report().contains("tokens=100"));
+        assert!(m.report().contains("rejected=3"));
     }
 }

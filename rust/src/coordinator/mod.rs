@@ -1,5 +1,12 @@
 //! L3 serving coordinator — the paper's systems contribution.
 //!
+//! The public serving surface lives in [`crate::serve`]: `MoeService`
+//! owns a scheduler thread that drives the pieces below as a continuous
+//! batching loop (admission → batch → execute → scatter → complete,
+//! DESIGN.md §9). The modules here are the mechanism, not the API —
+//! driving [`batcher`] or the engine's `forward_stack` by hand for
+//! serving is deprecated.
+//!
 //! The pipeline for a token batch entering the MoE++ stack:
 //!
 //! 1. [`batcher`] groups incoming requests into token batches;

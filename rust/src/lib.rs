@@ -8,9 +8,11 @@
 //!   expert), authored in `python/compile/kernels/` and AOT-lowered.
 //! * **L2** — the MoE++ transformer LM in JAX (`python/compile/`), lowered
 //!   once to HLO text artifacts (`make artifacts`).
-//! * **L3** — this crate: the serving coordinator, expert-parallel cluster
-//!   simulator, PJRT runtime, trainer driver and analysis/bench harnesses.
-//!   Python is never on the request path.
+//! * **L3** — this crate: the async serving API ([`serve`]), the serving
+//!   coordinator, expert-parallel cluster simulator, PJRT runtime, trainer
+//!   driver and analysis/bench harnesses. Python is never on the request
+//!   path. All serving goes through [`serve::MoeService`] (continuous
+//!   batching, backpressure, per-request stats — DESIGN.md §9).
 //!
 //! The paper's three claims map onto L3 as follows:
 //!
@@ -37,6 +39,7 @@ pub mod config;
 pub mod coordinator;
 pub mod moe;
 pub mod runtime;
+pub mod serve;
 pub mod stats;
 pub mod tensor;
 pub mod training;

@@ -10,16 +10,14 @@
 //!
 //! Reports are printed and mirrored under reports/.
 
-use std::time::Instant;
-
 use anyhow::{Context, Result};
 
-use moepp::bench::{quality, tables};
+use moepp::bench::{harness, quality, tables};
 use moepp::config::MoeConfig;
-use moepp::coordinator::batcher::{Batcher, BatcherConfig, Request};
+use moepp::coordinator::batcher::BatcherConfig;
 use moepp::coordinator::engine::MoeEngine;
-use moepp::coordinator::metrics::{LatencyStats, ServingMetrics};
 use moepp::runtime::Runtime;
+use moepp::serve::{MoeService, ServiceConfig};
 use moepp::stats;
 use moepp::tensor::Tensor;
 use moepp::training::checkpoint;
@@ -101,75 +99,81 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_requests = args.get_usize("requests", 200);
     let backend = args.get_or("backend", "native");
     let cfg = MoeConfig::preset(preset);
-    let engine = match backend {
-        // Parallel micro-batches are opt-in (--workers N): the scoped
-        // pool spawns threads per layer call, which only pays off once
-        // batches are large enough — serial stays the latency-safe
-        // default for small serve batches.
-        "native" => MoeEngine::native_with_workers(
-            cfg.clone(),
-            0,
-            args.get_usize("workers", 1),
-        ),
-        "pjrt" => {
-            let rt = std::sync::Arc::new(open_runtime(args)?);
-            MoeEngine::pjrt(cfg.clone(), 0, rt)?
-        }
-        other => anyhow::bail!("unknown backend '{other}'"),
-    };
-    let mut batcher = Batcher::new(
-        BatcherConfig {
+    let service_cfg = ServiceConfig {
+        batcher: BatcherConfig {
             max_tokens: args.get_usize("max-batch-tokens", 256),
             max_wait: std::time::Duration::from_millis(
                 args.get_usize("max-wait-ms", 2) as u64,
             ),
         },
-        cfg.d_model,
-    );
+        max_queued_tokens: args.get_usize("max-queued-tokens", 4096),
+        max_pending_requests: args.get_usize("max-pending", 1024),
+        default_deadline: None,
+    };
+    // All serving goes through the MoeService continuous-batching API;
+    // the backend choice only selects the ServeBackend behind it.
+    let service = match backend {
+        // Parallel micro-batches are opt-in (--workers N): the scoped
+        // pool spawns threads per layer call, which only pays off once
+        // batches are large enough — serial stays the latency-safe
+        // default for small serve batches.
+        "native" => MoeService::start(
+            MoeEngine::native_with_workers(
+                cfg.clone(),
+                0,
+                args.get_usize("workers", 1),
+            ),
+            service_cfg,
+        ),
+        "pjrt" => {
+            let rt = std::sync::Arc::new(open_runtime(args)?);
+            MoeService::start(
+                MoeEngine::pjrt(cfg.clone(), 0, rt)?,
+                service_cfg,
+            )
+        }
+        "cluster" => MoeService::start(
+            moepp::cluster::sim::ClusterSim::new(
+                cfg.clone(),
+                moepp::cluster::topology::Topology::new(
+                    args.get_usize("devices", 2),
+                ),
+                0,
+            ),
+            service_cfg,
+        ),
+        other => anyhow::bail!("unknown backend '{other}'"),
+    };
     let mut rng = Rng::new(7);
     let sizes = moepp::bench::workload::request_sizes(
         &mut rng, n_requests, cfg.seq_len);
-    let mut metrics = ServingMetrics::default();
-    let mut latency = LatencyStats::new(4096);
-    let mut submitted = std::collections::HashMap::new();
-    let t_start = Instant::now();
-    for (id, n) in sizes.into_iter().enumerate() {
-        let req = Request {
-            id: id as u64,
-            tokens: Tensor::randn(&mut rng, &[n, cfg.d_model], 1.0),
-            task: None,
-        };
-        submitted.insert(id as u64, Instant::now());
-        batcher.push(req);
-        metrics.requests += 1;
-        while batcher.ready(Instant::now()) {
-            let batch = batcher.next_batch().unwrap();
-            let (y, stats) = engine.forward_stack(&batch.tokens)?;
-            metrics.batches += 1;
-            metrics.merge_forward(&stats);
-            for (rid, _resp) in batch.scatter(&y) {
-                latency.record(submitted[&rid].elapsed());
-            }
-        }
-    }
-    // Drain.
-    while let Some(batch) = batcher.next_batch() {
-        let (y, stats) = engine.forward_stack(&batch.tokens)?;
-        metrics.batches += 1;
-        metrics.merge_forward(&stats);
-        for (rid, _resp) in batch.scatter(&y) {
-            latency.record(submitted[&rid].elapsed());
-        }
-    }
-    let wall = t_start.elapsed().as_secs_f64();
+    let inputs: Vec<Tensor> = sizes
+        .into_iter()
+        .map(|n| Tensor::randn(&mut rng, &[n, cfg.d_model], 1.0))
+        .collect();
+    let label = service.backend_label().to_string();
+    let trace = harness::run_serve_trace(&service, inputs)?;
+    let latency = service.latency();
+    let metrics = service.shutdown();
     let body = format!(
-        "serving demo: preset {preset}, backend {backend}\n{}\n\
-         wall {:.2}s  request p50 {:.2}ms  p95 {:.2}ms  mean {:.2}ms\n",
+        "serving demo: preset {preset}, backend {label}\n{}\n\
+         wall {:.2}s  {:.0} req/s  backpressure retries {}\n\
+         request p50 {:.2}ms  p95 {:.2}ms  mean {:.2}ms\n\
+         per-request accounting: ffn {}  zero {}  copy {}  const {}  \
+         dropped {}  (mean ffn/token {:.3})\n",
         metrics.report(),
-        wall,
+        trace.wall_s,
+        trace.requests_per_s(),
+        trace.backpressure_retries,
         latency.quantile(0.5) * 1e3,
         latency.quantile(0.95) * 1e3,
         latency.mean() * 1e3,
+        trace.counts.ffn,
+        trace.counts.zero,
+        trace.counts.copy,
+        trace.counts.constant,
+        trace.counts.dropped,
+        trace.counts.ffn as f64 / metrics.tokens.max(1) as f64,
     );
     report("serve", &body)
 }

@@ -45,12 +45,122 @@ pub struct ForwardStats {
     pub routing_s: f64,
     pub per_layer: Vec<LayerStats>,
     pub tokens: usize,
+    /// Per-token assignment counts summed over layers — the raw material
+    /// the serving layer slices into per-request accounting
+    /// ([`crate::serve`], DESIGN.md §9). Row `i` of the input batch owns
+    /// index `i` here.
+    pub token_counts: TokenCounts,
+}
+
+/// Per-token assignment counters, one entry per input row, summed across
+/// layers. Splitting by expert kind (rather than just FFN-vs-ZC) exposes
+/// the paper's "which cheap pathway did this token take" accounting.
+#[derive(Clone, Debug, Default)]
+pub struct TokenCounts {
+    pub ffn: Vec<u32>,
+    pub zero: Vec<u32>,
+    pub copy: Vec<u32>,
+    pub constant: Vec<u32>,
+    pub dropped: Vec<u32>,
+}
+
+impl TokenCounts {
+    pub fn new(n_tokens: usize) -> TokenCounts {
+        TokenCounts {
+            ffn: vec![0; n_tokens],
+            zero: vec![0; n_tokens],
+            copy: vec![0; n_tokens],
+            constant: vec![0; n_tokens],
+            dropped: vec![0; n_tokens],
+        }
+    }
+
+    fn record_layer(&mut self, plan: &DispatchPlan, cfg: &MoeConfig) {
+        for batch in &plan.ffn_batches {
+            for &tok in &batch.tokens {
+                self.ffn[tok] += 1;
+            }
+        }
+        for a in &plan.zc_inline {
+            match cfg.kind(a.expert) {
+                ExpertKind::Zero => self.zero[a.token] += 1,
+                ExpertKind::Copy => self.copy[a.token] += 1,
+                ExpertKind::Constant => self.constant[a.token] += 1,
+                ExpertKind::Ffn => unreachable!("ffn in zc list"),
+            }
+        }
+        for a in &plan.dropped {
+            self.dropped[a.token] += 1;
+        }
+    }
+}
+
+/// Assignment totals for a set of tokens (one request's rows, or a whole
+/// batch). Produced by [`ForwardStats::span_counts`] /
+/// [`ForwardStats::total_counts`]; spans of one batch sum exactly to the
+/// batch total (tested below), which is what lets per-request serving
+/// stats reconcile against batch-level metrics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AssignmentCounts {
+    pub ffn: u64,
+    pub zero: u64,
+    pub copy: u64,
+    pub constant: u64,
+    pub dropped: u64,
+}
+
+impl AssignmentCounts {
+    /// Zero-computation assignments (zero + copy + constant).
+    pub fn zc(&self) -> u64 {
+        self.zero + self.copy + self.constant
+    }
+
+    /// Assignments that survived capacity filtering.
+    pub fn kept(&self) -> u64 {
+        self.ffn + self.zc()
+    }
+
+    /// All routed assignments (kept + dropped) — T * K per layer.
+    pub fn total(&self) -> u64 {
+        self.kept() + self.dropped
+    }
+
+    pub fn add(&mut self, other: &AssignmentCounts) {
+        self.ffn += other.ffn;
+        self.zero += other.zero;
+        self.copy += other.copy;
+        self.constant += other.constant;
+        self.dropped += other.dropped;
+    }
 }
 
 impl ForwardStats {
     /// Expert-forward throughput (tokens/s), the Table 3 metric.
     pub fn expert_throughput(&self) -> f64 {
         self.tokens as f64 / self.expert_forward_s.max(1e-12)
+    }
+
+    /// Sum the per-token counters over a row span (a request's slice of
+    /// the batch). Panics if the span exceeds the forwarded token count.
+    pub fn span_counts(
+        &self,
+        span: std::ops::Range<usize>,
+    ) -> AssignmentCounts {
+        let sum = |v: &[u32]| -> u64 {
+            v[span.clone()].iter().map(|&c| c as u64).sum()
+        };
+        AssignmentCounts {
+            ffn: sum(&self.token_counts.ffn),
+            zero: sum(&self.token_counts.zero),
+            copy: sum(&self.token_counts.copy),
+            constant: sum(&self.token_counts.constant),
+            dropped: sum(&self.token_counts.dropped),
+        }
+    }
+
+    /// Batch-level assignment totals (all tokens).
+    pub fn total_counts(&self) -> AssignmentCounts {
+        self.span_counts(0..self.tokens)
     }
 
     pub fn mean_ffn_per_token(&self) -> f64 {
@@ -207,7 +317,11 @@ pub fn forward_stack(
         weights.layers.len(),
         "one config per layer"
     );
-    let mut stats = ForwardStats { tokens: t, ..Default::default() };
+    let mut stats = ForwardStats {
+        tokens: t,
+        token_counts: TokenCounts::new(t),
+        ..Default::default()
+    };
     let mut execs = Vec::with_capacity(weights.layers.len());
     let mut h = x.clone();
     let mut prev_scores: Option<Tensor> = None;
@@ -223,6 +337,7 @@ pub fn forward_stack(
         stats.routing_s += t0.elapsed().as_secs_f64();
 
         let plan = DispatchPlan::build(&routing, lcfg, t);
+        stats.token_counts.record_layer(&plan, lcfg);
         let mut y = Tensor::zeros(&[t, d]);
         let ex = execute_layer(
             backend, li, &plan, &routing, lcfg, &layer.consts, &h, &mut y,
@@ -444,6 +559,35 @@ mod tests {
                 assert!(!nonzero, "row {tok} written without assignment");
             }
         }
+    }
+
+    #[test]
+    fn token_counts_reconcile_with_layer_totals() {
+        // The per-token counters must sum exactly to the per-layer
+        // aggregates — the invariant that lets the serving layer slice a
+        // batch's stats into per-request stats without losing anything.
+        let (cfg, weights, x) = setup("test", 8, 56);
+        let (_, stats) = run_backend(
+            &mut NativeBatched { layers: &weights.layers, workers: 1 },
+            &cfg, &weights, &x,
+        );
+        let totals = stats.total_counts();
+        let ffn: usize =
+            stats.per_layer.iter().map(|l| l.ffn_assignments).sum();
+        let zc: usize =
+            stats.per_layer.iter().map(|l| l.zc_assignments).sum();
+        let dropped: usize = stats.per_layer.iter().map(|l| l.dropped).sum();
+        assert_eq!(totals.ffn, ffn as u64);
+        assert_eq!(totals.zc(), zc as u64);
+        assert_eq!(totals.dropped, dropped as u64);
+        assert_eq!(
+            totals.total(),
+            (56 * cfg.top_k * cfg.n_layers) as u64
+        );
+        // Disjoint spans sum to the batch total.
+        let mut merged = stats.span_counts(0..20);
+        merged.add(&stats.span_counts(20..56));
+        assert_eq!(merged, totals);
     }
 
     #[test]

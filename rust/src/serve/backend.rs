@@ -1,0 +1,106 @@
+//! The [`ServeBackend`] trait: what [`crate::serve::MoeService`] needs
+//! from an execution substrate — one synchronous stack forward over a
+//! concatenated token batch, with [`ForwardStats`] for accounting.
+//!
+//! This is deliberately a *batch*-level contract, one level above
+//! [`crate::moe::exec::ExpertBackend`] (which plugs FFN strategies into a
+//! single layer). Anything that can forward a [T, D] batch through the
+//! MoE++ stack can front the service: the single-process engine (native
+//! serial, native parallel-workers, PJRT buckets) and the expert-parallel
+//! cluster simulator both implement it here, and future scaling backends
+//! (multi-node dispatch, speculative ZC, quantized experts) plug in the
+//! same way.
+
+use anyhow::Result;
+
+use crate::cluster::sim::ClusterSim;
+use crate::coordinator::engine::{Backend, MoeEngine};
+use crate::moe::exec::ForwardStats;
+use crate::tensor::Tensor;
+
+/// A synchronous batch-forward substrate the serving scheduler can own.
+///
+/// Contract:
+/// * `forward` runs the *whole* stack over `tokens` ([T, D]) and returns
+///   outputs of the same shape plus the executor's [`ForwardStats`]
+///   (whose `token_counts` rows must line up with the input rows — that
+///   is what per-request stats slicing relies on);
+/// * the backend is moved onto the scheduler thread, hence `Send`;
+/// * determinism: for a fixed backend, equal input batches produce
+///   bitwise-equal outputs (the serve equivalence test enforces this for
+///   the native engine at any worker count).
+pub trait ServeBackend: Send {
+    /// Hidden dimension requests must match (admission-checked).
+    fn d_model(&self) -> usize;
+
+    /// Forward one concatenated batch through the stack.
+    fn forward(&mut self, tokens: &Tensor) -> Result<(Tensor, ForwardStats)>;
+
+    /// Human-readable backend label for reports.
+    fn label(&self) -> String;
+}
+
+impl ServeBackend for MoeEngine {
+    fn d_model(&self) -> usize {
+        self.cfg.d_model
+    }
+
+    fn forward(&mut self, tokens: &Tensor) -> Result<(Tensor, ForwardStats)> {
+        MoeEngine::forward_stack(self, tokens)
+    }
+
+    fn label(&self) -> String {
+        match &self.backend {
+            Backend::Native { workers } => {
+                format!("engine:native(workers={workers})")
+            }
+            Backend::Pjrt { .. } => "engine:pjrt".to_string(),
+        }
+    }
+}
+
+impl ServeBackend for ClusterSim {
+    fn d_model(&self) -> usize {
+        self.cfg.d_model
+    }
+
+    fn forward(&mut self, tokens: &Tensor) -> Result<(Tensor, ForwardStats)> {
+        let (y, report) = ClusterSim::forward(self, tokens);
+        Ok((y, report.stats))
+    }
+
+    fn label(&self) -> String {
+        format!("cluster(devices={})", self.topo.n_devices)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::topology::Topology;
+    use crate::config::MoeConfig;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn engine_and_cluster_both_serve() {
+        let cfg = MoeConfig::preset("test");
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&mut rng, &[12, cfg.d_model], 1.0);
+        let mut engine: Box<dyn ServeBackend> =
+            Box::new(MoeEngine::native(cfg.clone(), 7));
+        let mut sim: Box<dyn ServeBackend> = Box::new(ClusterSim::new(
+            cfg.clone(),
+            Topology::new(2),
+            7,
+        ));
+        assert_eq!(engine.d_model(), cfg.d_model);
+        assert_eq!(sim.d_model(), cfg.d_model);
+        let (ye, se) = engine.forward(&x).unwrap();
+        let (yc, sc) = sim.forward(&x).unwrap();
+        // Same weights seed -> interchangeable outputs and accounting.
+        assert!(yc.approx_eq(&ye, 1e-5, 1e-5));
+        assert_eq!(se.total_counts(), sc.total_counts());
+        assert!(engine.label().contains("native"));
+        assert!(sim.label().contains("cluster"));
+    }
+}

@@ -1,0 +1,272 @@
+//! Response-side of the serving API: the [`ResponseHandle`] a caller
+//! holds between `submit` and completion, the typed [`ServeResponse`] it
+//! resolves to, and the per-request [`RequestStats`] sliced out of the
+//! executing batch's [`ForwardStats`].
+//!
+//! [`ForwardStats`]: crate::moe::exec::ForwardStats
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::moe::exec::AssignmentCounts;
+use crate::tensor::Tensor;
+
+/// Why a submitted request did not complete with an output.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RequestError {
+    /// The caller cancelled before the request reached a batch.
+    Cancelled,
+    /// The queue deadline passed before the request reached a batch.
+    DeadlineExpired,
+    /// The backend failed the batch this request rode in.
+    Backend(String),
+    /// The service stopped without completing the request (should not
+    /// happen under graceful shutdown — drain completes everything).
+    ServiceStopped,
+    /// `try_wait` already removed the result from this handle.
+    ResultTaken,
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RequestError::Cancelled => write!(f, "request cancelled"),
+            RequestError::DeadlineExpired => {
+                write!(f, "queue deadline expired before execution")
+            }
+            RequestError::Backend(e) => write!(f, "backend error: {e}"),
+            RequestError::ServiceStopped => {
+                write!(f, "service stopped before completion")
+            }
+            RequestError::ResultTaken => {
+                write!(f, "result already taken via try_wait")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
+
+/// Per-request accounting: this request's slice of the batch it executed
+/// in — the paper's "simple tokens are cheap" cost model, observable per
+/// caller (how many of *my* token-assignments hit FFN experts vs the
+/// zero/copy/constant pathways).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RequestStats {
+    /// Tokens this request contributed to its batch.
+    pub tokens: usize,
+    /// This request's assignment counts, summed over layers (slice of the
+    /// batch-level `ForwardStats::token_counts`).
+    pub counts: AssignmentCounts,
+    /// Time spent queued (submit → batch dispatch).
+    pub queue_wait: Duration,
+    /// Total time submit → completion.
+    pub service_time: Duration,
+    /// Size of the batch this request rode in (continuous-batching
+    /// co-tenants included).
+    pub batch_tokens: usize,
+    /// Wall time of that batch's stack forward.
+    pub batch_exec: Duration,
+}
+
+impl RequestStats {
+    /// Mean FFN assignments per token for this request — low values mean
+    /// the router classified these tokens as "simple" (cheap pathways).
+    pub fn ffn_per_token(&self) -> f64 {
+        self.counts.ffn as f64 / self.tokens.max(1) as f64
+    }
+}
+
+/// A completed request: stacked outputs for this request's rows plus its
+/// per-request stats.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeResponse {
+    /// [n_tokens, d_model] — this request's rows of the batch output.
+    pub output: Tensor,
+    pub stats: RequestStats,
+}
+
+pub(crate) type RequestResult = Result<ServeResponse, RequestError>;
+
+enum SlotState {
+    Pending,
+    Ready(RequestResult),
+    Taken,
+}
+
+/// Shared completion slot between a handle and the scheduler.
+pub(crate) struct Slot {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+    cancelled: AtomicBool,
+    /// Wakes the scheduler when this request is cancelled, so a parked
+    /// request resolves immediately instead of at the next flush
+    /// deadline. Installed by the service at submit.
+    waker: Mutex<Option<Arc<dyn Fn() + Send + Sync>>>,
+}
+
+impl Slot {
+    pub(crate) fn new() -> Arc<Slot> {
+        Arc::new(Slot {
+            state: Mutex::new(SlotState::Pending),
+            cv: Condvar::new(),
+            cancelled: AtomicBool::new(false),
+            waker: Mutex::new(None),
+        })
+    }
+
+    pub(crate) fn set_waker(&self, w: Arc<dyn Fn() + Send + Sync>) {
+        *self.waker.lock().unwrap() = Some(w);
+    }
+
+    pub(crate) fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Acquire)
+    }
+
+    /// Deliver the result and wake waiters. Idempotent-safe: the first
+    /// fulfilment wins, later ones are dropped.
+    pub(crate) fn fulfill(&self, r: RequestResult) {
+        let mut st = self.state.lock().unwrap();
+        if matches!(*st, SlotState::Pending) {
+            *st = SlotState::Ready(r);
+            self.cv.notify_all();
+        }
+        drop(st);
+        // The waker can never be needed again; dropping it releases the
+        // service state (`Arc<Shared>`) it captures, so retained handles
+        // do not pin the whole service in memory after completion.
+        *self.waker.lock().unwrap() = None;
+    }
+}
+
+/// The caller's side of one in-flight request.
+///
+/// Obtained from [`MoeService::submit`]; resolves exactly once via
+/// [`wait`](ResponseHandle::wait) (blocking) or
+/// [`try_wait`](ResponseHandle::try_wait) (non-blocking, takes the result
+/// on the call that observes completion). Dropping the handle does not
+/// cancel the request — call [`cancel`](ResponseHandle::cancel) for that.
+///
+/// [`MoeService::submit`]: crate::serve::MoeService::submit
+pub struct ResponseHandle {
+    slot: Arc<Slot>,
+    id: u64,
+}
+
+impl ResponseHandle {
+    pub(crate) fn new(slot: Arc<Slot>, id: u64) -> ResponseHandle {
+        ResponseHandle { slot, id }
+    }
+
+    /// Service-assigned request id (stable across metrics/log lines).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the request completes (or fails) and take the result.
+    pub fn wait(self) -> RequestResult {
+        let mut st = self.slot.state.lock().unwrap();
+        loop {
+            match &*st {
+                SlotState::Pending => {
+                    st = self.slot.cv.wait(st).unwrap();
+                }
+                SlotState::Ready(_) => {
+                    let prev =
+                        std::mem::replace(&mut *st, SlotState::Taken);
+                    match prev {
+                        SlotState::Ready(r) => return r,
+                        _ => unreachable!(),
+                    }
+                }
+                SlotState::Taken => {
+                    return Err(RequestError::ResultTaken);
+                }
+            }
+        }
+    }
+
+    /// Non-blocking poll: `None` while in flight; `Some(result)` exactly
+    /// once when complete (the result is taken by the observing call).
+    pub fn try_wait(&self) -> Option<RequestResult> {
+        let mut st = self.slot.state.lock().unwrap();
+        match &*st {
+            SlotState::Pending => None,
+            SlotState::Ready(_) => {
+                let prev = std::mem::replace(&mut *st, SlotState::Taken);
+                match prev {
+                    SlotState::Ready(r) => Some(r),
+                    _ => unreachable!(),
+                }
+            }
+            SlotState::Taken => Some(Err(RequestError::ResultTaken)),
+        }
+    }
+
+    /// Cancel the request: if it has not begun executing, the scheduler
+    /// is woken, pulls it back out of its queue/batcher (it never runs)
+    /// and resolves the handle with [`RequestError::Cancelled`]. If its
+    /// batch is already executing, the output is discarded in favour of
+    /// `Cancelled` at scatter time.
+    pub fn cancel(&self) {
+        self.slot.cancelled.store(true, Ordering::Release);
+        let waker = self.slot.waker.lock().unwrap().clone();
+        if let Some(w) = waker {
+            w();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp(n: usize) -> ServeResponse {
+        ServeResponse {
+            output: Tensor::zeros(&[n, 2]),
+            stats: RequestStats { tokens: n, ..Default::default() },
+        }
+    }
+
+    #[test]
+    fn wait_blocks_until_fulfilled() {
+        let slot = Slot::new();
+        let h = ResponseHandle::new(slot.clone(), 7);
+        assert_eq!(h.id(), 7);
+        let waiter = std::thread::spawn(move || h.wait());
+        std::thread::sleep(Duration::from_millis(10));
+        slot.fulfill(Ok(resp(3)));
+        let got = waiter.join().unwrap().unwrap();
+        assert_eq!(got.output.shape, vec![3, 2]);
+        assert_eq!(got.stats.tokens, 3);
+    }
+
+    #[test]
+    fn try_wait_takes_exactly_once() {
+        let slot = Slot::new();
+        let h = ResponseHandle::new(slot.clone(), 0);
+        assert!(h.try_wait().is_none());
+        slot.fulfill(Err(RequestError::Cancelled));
+        assert_eq!(h.try_wait(), Some(Err(RequestError::Cancelled)));
+        assert_eq!(h.try_wait(), Some(Err(RequestError::ResultTaken)));
+    }
+
+    #[test]
+    fn first_fulfillment_wins() {
+        let slot = Slot::new();
+        let h = ResponseHandle::new(slot.clone(), 0);
+        slot.fulfill(Ok(resp(1)));
+        slot.fulfill(Err(RequestError::ServiceStopped));
+        assert!(h.wait().is_ok());
+    }
+
+    #[test]
+    fn cancel_sets_flag() {
+        let slot = Slot::new();
+        let h = ResponseHandle::new(slot.clone(), 0);
+        assert!(!slot.is_cancelled());
+        h.cancel();
+        assert!(slot.is_cancelled());
+    }
+}

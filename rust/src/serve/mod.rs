@@ -1,0 +1,40 @@
+//! The serving API (DESIGN.md §9) — the *only* public way to serve the
+//! MoE++ stack.
+//!
+//! MoE++ makes per-token compute dynamic: zero-computation experts mean
+//! "simple" tokens cost almost nothing while hard tokens pay for FFN
+//! experts. A serving layer should therefore admit, batch and account for
+//! requests continuously — not in the lock-step push/ready/next_batch
+//! loop this crate used to expose. [`MoeService`] is that layer:
+//!
+//! * [`MoeService::submit`] admits a [`ServeRequest`] under bounded-queue
+//!   backpressure ([`AdmissionError`] on overload) and returns a
+//!   [`ResponseHandle`];
+//! * a background scheduler thread runs a continuous-batching loop over
+//!   the coordinator's [`Batcher`], honouring [`Priority`] classes,
+//!   per-request queue deadlines and cancellation;
+//! * every completion is a typed [`ServeResponse`] whose
+//!   [`RequestStats`] slice the executing batch's `ForwardStats` down to
+//!   *this* request's tokens — FFN vs zero/copy/constant assignments, the
+//!   paper's "simple tokens are cheap" accounting observable per caller;
+//! * [`ServeBackend`] decouples the service from execution: the same API
+//!   fronts the single-process [`MoeEngine`] (native or PJRT) and the
+//!   expert-parallel [`ClusterSim`], and is the plug-in point for future
+//!   scaling backends.
+//!
+//! [`Batcher`]: crate::coordinator::batcher::Batcher
+//! [`MoeEngine`]: crate::coordinator::engine::MoeEngine
+//! [`ClusterSim`]: crate::cluster::sim::ClusterSim
+
+pub mod backend;
+pub mod handle;
+pub mod service;
+
+pub use backend::ServeBackend;
+pub use handle::{
+    RequestError, RequestStats, ResponseHandle, ServeResponse,
+};
+pub use service::{
+    AdmissionError, MoeService, Priority, QueueDepth, ServeRequest,
+    ServiceConfig,
+};

@@ -1,0 +1,193 @@
+//! Serving-API equivalence (ISSUE 2 acceptance): N `submit()`s through
+//! `MoeService` must produce **bitwise-identical** outputs to the old
+//! hand-driven path (`Batcher` → `forward_stack` → `Batch::scatter`) on
+//! the same inputs, and each `ServeResponse.stats` must slice the batch
+//! accounting so that per-request FFN/ZC assignment counts sum exactly to
+//! the batch-level `ForwardStats` totals.
+//!
+//! Two angles:
+//! * `sequential_submissions_match_hand_driven_path_bitwise` pins the
+//!   batch composition (sequential submits, long flush deadline, same
+//!   `BatcherConfig`) so the service and the hand loop form identical
+//!   multi-request batches — outputs must match bit for bit. Routing and
+//!   Eq. 8 capacities depend on batch composition, so this is the
+//!   strongest statement that the service is the old path, relocated.
+//! * `concurrent_submissions_match_direct_forward` runs truly concurrent
+//!   submitters with one-request batches (max_tokens=1 makes every
+//!   request "oversized", hence its own batch), where per-request outputs
+//!   are batch-independent — bitwise against direct `forward_stack`.
+//!
+//! Both run the native backend at workers=1 and workers=4.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use moepp::config::MoeConfig;
+use moepp::coordinator::batcher::{Batcher, BatcherConfig, Request};
+use moepp::coordinator::engine::MoeEngine;
+use moepp::moe::exec::AssignmentCounts;
+use moepp::serve::{MoeService, ServiceConfig};
+use moepp::tensor::Tensor;
+use moepp::util::rng::Rng;
+
+const WEIGHT_SEED: u64 = 3;
+
+fn request_inputs(cfg: &MoeConfig, sizes: &[usize]) -> Vec<Tensor> {
+    let mut rng = Rng::new(0xBEEF);
+    sizes
+        .iter()
+        .map(|&n| Tensor::randn(&mut rng, &[n, cfg.d_model], 1.0))
+        .collect()
+}
+
+#[test]
+fn sequential_submissions_match_hand_driven_path_bitwise() {
+    let cfg = MoeConfig::preset("test");
+    let sizes = [5usize, 3, 9, 1, 7, 4, 2, 8, 6, 2, 11, 3];
+    let batcher_cfg = BatcherConfig {
+        max_tokens: 12,
+        // Flush on size (or final drain) only, so batch composition is a
+        // pure function of submission order — identical on both paths.
+        max_wait: Duration::from_secs(600),
+    };
+    for workers in [1usize, 4] {
+        let inputs = request_inputs(&cfg, &sizes);
+
+        // Old path: hand-driven Batcher + forward_stack + scatter.
+        let engine = MoeEngine::native_with_workers(
+            cfg.clone(),
+            WEIGHT_SEED,
+            workers,
+        );
+        let mut batcher = Batcher::new(batcher_cfg.clone(), cfg.d_model);
+        for (id, tokens) in inputs.iter().cloned().enumerate() {
+            batcher.push(Request { id: id as u64, tokens, task: None });
+        }
+        let mut reference: HashMap<u64, Tensor> = HashMap::new();
+        let mut ref_totals = AssignmentCounts::default();
+        let mut ref_batches = 0u64;
+        while let Some(batch) = batcher.next_batch() {
+            let (y, stats) = engine.forward_stack(&batch.tokens).unwrap();
+            ref_totals.add(&stats.total_counts());
+            ref_batches += 1;
+            for (rid, out) in batch.scatter(&y) {
+                reference.insert(rid, out);
+            }
+        }
+        assert_eq!(reference.len(), sizes.len());
+        assert!(ref_batches > 1, "trace must span multiple batches");
+
+        // New path: the same requests through MoeService.
+        let service = MoeService::start(
+            MoeEngine::native_with_workers(
+                cfg.clone(),
+                WEIGHT_SEED,
+                workers,
+            ),
+            ServiceConfig {
+                batcher: batcher_cfg.clone(),
+                max_queued_tokens: 4096,
+                max_pending_requests: 1024,
+                default_deadline: None,
+            },
+        );
+        let handles: Vec<_> = inputs
+            .iter()
+            .map(|x| service.submit_tokens(x.clone()).unwrap())
+            .collect();
+        let metrics = service.shutdown(); // drain flushes the tail
+        let mut serve_totals = AssignmentCounts::default();
+        for (id, h) in handles.into_iter().enumerate() {
+            let resp = h.wait().unwrap_or_else(|e| {
+                panic!("workers={workers} request {id}: {e}")
+            });
+            let want = &reference[&(id as u64)];
+            assert_eq!(resp.output.shape, want.shape);
+            assert_eq!(
+                resp.output.data, want.data,
+                "workers={workers}: request {id} output is not \
+                 bitwise-identical to the hand-driven path"
+            );
+            assert_eq!(resp.stats.tokens, sizes[id]);
+            serve_totals.add(&resp.stats.counts);
+        }
+
+        // Per-request slices reconcile with the old path's batch totals
+        // AND with the service's own batch-level metrics.
+        assert_eq!(serve_totals, ref_totals, "workers={workers}");
+        assert_eq!(serve_totals.ffn, metrics.ffn_assignments);
+        assert_eq!(serve_totals.zc(), metrics.zc_assignments);
+        assert_eq!(serve_totals.dropped, metrics.dropped_assignments);
+        assert_eq!(metrics.batches, ref_batches);
+        assert_eq!(metrics.requests, sizes.len() as u64);
+    }
+}
+
+#[test]
+fn concurrent_submissions_match_direct_forward() {
+    let cfg = MoeConfig::preset("test");
+    let sizes = [4usize, 7, 2, 9, 5, 3, 8, 6];
+    for workers in [1usize, 4] {
+        // max_tokens=1 => every request is its own (oversized) batch, so
+        // each output is independent of arrival interleaving and can be
+        // checked bitwise under real submission concurrency.
+        let service = Arc::new(MoeService::start(
+            MoeEngine::native_with_workers(
+                cfg.clone(),
+                WEIGHT_SEED,
+                workers,
+            ),
+            ServiceConfig {
+                batcher: BatcherConfig {
+                    max_tokens: 1,
+                    max_wait: Duration::from_millis(1),
+                },
+                max_queued_tokens: 4096,
+                max_pending_requests: 1024,
+                default_deadline: None,
+            },
+        ));
+        let inputs = request_inputs(&cfg, &sizes);
+        let oracle = MoeEngine::native_with_workers(
+            cfg.clone(),
+            WEIGHT_SEED,
+            workers,
+        );
+
+        let mut joins = Vec::new();
+        for (i, x) in inputs.iter().cloned().enumerate() {
+            let service = service.clone();
+            joins.push(std::thread::spawn(move || {
+                let h = service.submit_tokens(x).unwrap();
+                (i, h.wait().unwrap())
+            }));
+        }
+        let mut totals = AssignmentCounts::default();
+        for j in joins {
+            let (i, resp) = j.join().unwrap();
+            let (want, want_stats) =
+                oracle.forward_stack(&inputs[i]).unwrap();
+            assert_eq!(
+                resp.output.data, want.data,
+                "workers={workers}: concurrent request {i} diverges \
+                 from direct forward_stack"
+            );
+            assert_eq!(resp.stats.counts, want_stats.total_counts());
+            assert_eq!(resp.stats.tokens, sizes[i]);
+            assert_eq!(
+                resp.stats.batch_tokens, sizes[i],
+                "one-request batches expected"
+            );
+            totals.add(&resp.stats.counts);
+        }
+        let service = Arc::try_unwrap(service)
+            .unwrap_or_else(|_| panic!("service still shared"));
+        let metrics = service.shutdown();
+        assert_eq!(metrics.requests, sizes.len() as u64);
+        assert_eq!(metrics.batches, sizes.len() as u64);
+        assert_eq!(totals.ffn, metrics.ffn_assignments);
+        assert_eq!(totals.zc(), metrics.zc_assignments);
+        assert_eq!(totals.dropped, metrics.dropped_assignments);
+    }
+}
