@@ -16,14 +16,15 @@ run() {
     "$@"
 }
 
-# Build, failing on any warning in the serve/ module (its CI gate).
-# Touch the crate root so cargo re-emits warnings even on a warm cache.
+# Build, failing on any warning in the serve/ or placement/ modules
+# (their CI gates). Touch the crate root so cargo re-emits warnings even
+# on a warm cache.
 touch src/lib.rs
-echo "==> cargo build --release (warnings in src/serve/ are fatal)"
+echo "==> cargo build --release (warnings in src/serve/ and src/placement/ are fatal)"
 build_log=$(mktemp)
 cargo build --release 2>&1 | tee "$build_log"
-if grep -A3 '^warning' "$build_log" | grep -q 'src/serve/'; then
-    echo "ci.sh: warnings in rust/src/serve/ — fix them" >&2
+if grep -A3 '^warning' "$build_log" | grep -q 'src/serve/\|src/placement/'; then
+    echo "ci.sh: warnings in rust/src/serve/ or rust/src/placement/ — fix them" >&2
     exit 1
 fi
 rm -f "$build_log"
@@ -34,6 +35,11 @@ run cargo test -q
 # Serving smoke: the full MoeService path end to end via the CLI.
 run cargo run --release --quiet -- serve --preset sm-8e --requests 64 \
     --max-wait-ms 1
+
+# Placement smoke: capture a skewed profile, plan rr/lpt/refined, score
+# and re-simulate each (also writes BENCH_placement.json).
+run cargo run --release --quiet -- placement --devices 4 --profile skewed \
+    --tokens 128 --batches 2
 
 if [ "${1:-}" != "fast" ]; then
     if cargo clippy --version >/dev/null 2>&1; then

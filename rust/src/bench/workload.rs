@@ -13,6 +13,32 @@ pub fn hidden_batches(rng: &mut Rng, n_batches: usize, t: usize, d: usize)
         .collect()
 }
 
+/// Hidden-state batches with *routing skew*: most rows are small
+/// perturbations of a few zipf-weighted prototype rows, so the router
+/// concentrates FFN load on a handful of hot experts — the adversarial
+/// workload the placement planner exists for. (Which experts get hot
+/// depends on the router weights; the skew itself does not.)
+pub fn skewed_batches(rng: &mut Rng, n_batches: usize, t: usize, d: usize)
+    -> Vec<Tensor> {
+    let protos: Vec<Vec<f32>> = (0..4)
+        .map(|_| (0..d).map(|_| rng.next_normal() * 2.0).collect())
+        .collect();
+    let weights = [0.45f32, 0.30, 0.15, 0.10];
+    (0..n_batches)
+        .map(|_| {
+            let mut x = Tensor::zeros(&[t, d]);
+            for row in 0..t {
+                let p = rng.categorical(&weights);
+                for j in 0..d {
+                    x.data[row * d + j] =
+                        protos[p][j] + rng.next_normal() * 0.05;
+                }
+            }
+            x
+        })
+        .collect()
+}
+
 /// Serving trace: request sizes drawn from a bounded log-ish distribution
 /// (mix of short decode-like and long prefill-like requests).
 pub fn request_sizes(rng: &mut Rng, n: usize, max: usize) -> Vec<usize> {
@@ -57,6 +83,32 @@ mod tests {
         let b = hidden_batches(&mut rng, 3, 16, 8);
         assert_eq!(b.len(), 3);
         assert_eq!(b[0].shape, vec![16, 8]);
+    }
+
+    #[test]
+    fn skewed_batches_concentrate_rows() {
+        let mut rng = Rng::new(7);
+        let b = skewed_batches(&mut rng, 2, 64, 16);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0].shape, vec![64, 16]);
+        // Rows cluster around few prototypes: many near-duplicate pairs
+        // (distance far below what independent gaussians would give).
+        let x = &b[0];
+        let mut close_pairs = 0;
+        for i in 0..32 {
+            for j in (i + 1)..32 {
+                let d2: f32 = x
+                    .row(i)
+                    .iter()
+                    .zip(x.row(j))
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                if d2 < 1.0 {
+                    close_pairs += 1;
+                }
+            }
+        }
+        assert!(close_pairs > 50, "only {close_pairs} close pairs");
     }
 
     #[test]

@@ -133,6 +133,78 @@ mod tests {
     }
 
     #[test]
+    fn sent_received_offdiag_reconcile() {
+        // Conservation: every off-diagonal byte is sent by exactly one
+        // device and received by exactly one, so the three accountings
+        // agree — and the diagonal never leaks into any of them.
+        let mut m = TrafficMatrix::new(4);
+        let mut rng = crate::util::rng::Rng::new(9);
+        for s in 0..4 {
+            for d in 0..4 {
+                m.add(s, d, rng.below(1000) as u64); // diagonal included
+            }
+        }
+        let sent: u64 = (0..4).map(|d| m.sent_by(d)).sum();
+        let recv: u64 = (0..4).map(|d| m.received_by(d)).sum();
+        assert_eq!(sent, m.total_offdiag());
+        assert_eq!(recv, m.total_offdiag());
+        // Diagonal excluded from per-device ports.
+        let mut only_diag = TrafficMatrix::new(3);
+        for d in 0..3 {
+            only_diag.add(d, d, 777);
+        }
+        assert_eq!(only_diag.total_offdiag(), 0);
+        for d in 0..3 {
+            assert_eq!(only_diag.sent_by(d), 0);
+            assert_eq!(only_diag.received_by(d), 0);
+        }
+        assert_eq!(only_diag.alltoall_time(&Topology::new(3)), 0.0);
+    }
+
+    #[test]
+    fn alltoall_time_is_bottleneck_port_max_of_send_and_recv() {
+        // Device 0 receives from everyone: its receive port is the
+        // bottleneck even though every sender is lightly loaded.
+        let topo = Topology::new(4);
+        let mut m = TrafficMatrix::new(4);
+        for s in 1..4 {
+            m.add(s, 0, 1000);
+        }
+        let want = topo.link.alpha_s + topo.link.beta_s_per_byte * 3000.0;
+        assert!((m.alltoall_time(&topo) - want).abs() < 1e-15);
+        // A fan-out sender is bottlenecked on its send port the same way.
+        let mut f = TrafficMatrix::new(4);
+        for d in 1..4 {
+            f.add(0, d, 1000);
+        }
+        assert!((f.alltoall_time(&topo) - want).abs() < 1e-15);
+        // Per device the port cost is max(send, recv), not the sum:
+        // 2000 sent + 1500 received on device 0 costs max = 2000.
+        let mut b = TrafficMatrix::new(2);
+        b.add(0, 1, 2000);
+        b.add(1, 0, 1500);
+        let want_b =
+            topo.link.alpha_s + topo.link.beta_s_per_byte * 2000.0;
+        assert!((b.alltoall_time(&Topology::new(2)) - want_b).abs()
+            < 1e-15);
+    }
+
+    #[test]
+    fn layer_traffic_total_time_sums_both_phases() {
+        let topo = Topology::new(2);
+        let mut lt = LayerTraffic::new(2);
+        lt.record_assignment(0, 1, 4096);
+        let want = 2.0
+            * (topo.link.alpha_s + topo.link.beta_s_per_byte * 4096.0);
+        assert!((lt.total_time(&topo) - want).abs() < 1e-15);
+        // All-local traffic is free in both phases.
+        let mut local = LayerTraffic::new(2);
+        local.record_assignment(1, 1, 4096);
+        assert_eq!(local.total_time(&topo), 0.0);
+        assert_eq!(local.total_bytes(), 0);
+    }
+
+    #[test]
     fn dispatch_and_combine_are_symmetric() {
         let mut lt = LayerTraffic::new(4);
         lt.record_assignment(0, 3, 512);

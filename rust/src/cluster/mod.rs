@@ -9,14 +9,18 @@
 //!
 //! We reproduce that mechanism with:
 //!
-//! * [`topology`] — device count, expert placement (round-robin sharding of
-//!   FFN experts, ZC experts replicated), and an α–β link model;
+//! * [`topology`] — device count, expert placement (a
+//!   [`crate::placement::PlacementPlan`]; round-robin sharding of FFN
+//!   experts by default, ZC experts always replicated), and an α–β link
+//!   model;
 //! * [`comm`]     — all-to-all traffic accounting + analytic cost;
 //! * [`worker`]   — persistent worker threads that *actually execute* their
 //!   FFN expert shards (native backend), so compute times are measured, not
 //!   assumed;
 //! * [`sim`]      — the per-layer expert-parallel step: dispatch → traffic
-//!   matrix → worker execution → makespan = max_d(compute_d) + comm.
+//!   matrix → worker execution → makespan = max_d(compute_d) + comm;
+//!   applies placement migrations between batches (online replanning on
+//!   the serving path — DESIGN.md §10).
 
 pub mod comm;
 pub mod sim;

@@ -1,6 +1,7 @@
 //! Cluster topology: device count, expert placement, link model.
 
 use crate::config::{ExpertKind, MoeConfig};
+use crate::placement::PlacementPlan;
 
 /// α–β communication model: transferring `b` bytes costs α + β·b seconds.
 /// Defaults approximate NVLink-class interconnect scaled to the simulated
@@ -23,18 +24,63 @@ impl Default for LinkModel {
 pub struct Topology {
     pub n_devices: usize,
     pub link: LinkModel,
+    /// FFN expert placement. `None` is the historical round-robin modulo
+    /// (valid for any expert count and bitwise-identical to an explicit
+    /// round-robin plan); an installed plan fixes the expert count.
+    placement: Option<PlacementPlan>,
 }
 
 impl Topology {
     pub fn new(n_devices: usize) -> Topology {
         assert!(n_devices > 0);
-        Topology { n_devices, link: LinkModel::default() }
+        Topology {
+            n_devices,
+            link: LinkModel::default(),
+            placement: None,
+        }
     }
 
-    /// Owner device of FFN expert `e` (round-robin sharding, Megatron-style
-    /// expert parallelism).
+    /// Install an FFN placement plan (builder form).
+    pub fn with_placement(mut self, plan: PlacementPlan) -> Topology {
+        self.set_placement(plan);
+        self
+    }
+
+    /// Install an FFN placement plan.
+    pub fn set_placement(&mut self, plan: PlacementPlan) {
+        assert_eq!(
+            plan.n_devices(),
+            self.n_devices,
+            "placement plan device count does not match topology"
+        );
+        self.placement = Some(plan);
+    }
+
+    /// The installed plan, if any (`None` = round-robin default).
+    pub fn placement(&self) -> Option<&PlacementPlan> {
+        self.placement.as_ref()
+    }
+
+    /// The effective plan for `n_ffn_experts` FFN experts (materialises
+    /// the round-robin default when no plan is installed).
+    pub fn effective_placement(&self, n_ffn_experts: usize)
+        -> PlacementPlan {
+        match &self.placement {
+            Some(p) => p.clone(),
+            None => {
+                PlacementPlan::round_robin(n_ffn_experts, self.n_devices)
+            }
+        }
+    }
+
+    /// Owner device of FFN expert `e`. Without an installed plan this is
+    /// round-robin sharding (Megatron-style expert parallelism); with a
+    /// plan, whatever the planner decided.
     pub fn ffn_owner(&self, expert: usize) -> usize {
-        expert % self.n_devices
+        match &self.placement {
+            Some(p) => p.owner(expert),
+            None => expert % self.n_devices,
+        }
     }
 
     /// Device of origin for token `t` when a batch of `n_tokens` is sharded
@@ -45,7 +91,8 @@ impl Topology {
     }
 
     /// Does serving assignment (token, expert) require an all-to-all hop?
-    /// ZC experts never do — they are replicated on every device.
+    /// ZC experts never do — they are replicated on every device,
+    /// whatever the FFN placement says.
     pub fn needs_transfer(
         &self,
         cfg: &MoeConfig,
@@ -75,6 +122,36 @@ mod tests {
     }
 
     #[test]
+    fn explicit_round_robin_plan_matches_default() {
+        let base = Topology::new(4);
+        let planned = Topology::new(4)
+            .with_placement(PlacementPlan::round_robin(8, 4));
+        for e in 0..8 {
+            assert_eq!(base.ffn_owner(e), planned.ffn_owner(e));
+        }
+        assert!(base.placement().is_none());
+        assert!(planned.placement().unwrap().is_round_robin());
+        assert_eq!(base.effective_placement(8), planned.effective_placement(8));
+    }
+
+    #[test]
+    fn installed_plan_overrides_modulo() {
+        let plan =
+            PlacementPlan::from_owner(vec![3, 3, 0, 1], 4).unwrap();
+        let t = Topology::new(4).with_placement(plan);
+        assert_eq!(t.ffn_owner(0), 3);
+        assert_eq!(t.ffn_owner(2), 0);
+        assert_eq!(t.ffn_owner(3), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn plan_device_mismatch_panics() {
+        let plan = PlacementPlan::round_robin(4, 2);
+        let _ = Topology::new(4).with_placement(plan);
+    }
+
+    #[test]
     fn token_homes_cover_devices() {
         let t = Topology::new(4);
         let homes: Vec<usize> =
@@ -83,6 +160,39 @@ mod tests {
         assert_eq!(homes[15], 3);
         for d in 0..4 {
             assert_eq!(homes.iter().filter(|&&h| h == d).count(), 4);
+        }
+    }
+
+    #[test]
+    fn token_home_handles_ragged_batches() {
+        // n_tokens not divisible by n_devices: ceil sharding, the last
+        // device absorbs the short tail and every home stays in range.
+        let t = Topology::new(4);
+        let homes: Vec<usize> =
+            (0..10).map(|tok| t.token_home(tok, 10)).collect();
+        assert_eq!(homes, vec![0, 0, 0, 1, 1, 1, 2, 2, 2, 3]);
+        // Fewer tokens than devices: one token per device, trailing
+        // devices idle, no out-of-range home.
+        let t8 = Topology::new(8);
+        for tok in 0..3 {
+            assert_eq!(t8.token_home(tok, 3), tok);
+        }
+        // A single token parks on device 0.
+        assert_eq!(t8.token_home(0, 1), 0);
+    }
+
+    #[test]
+    fn single_device_owns_everything_and_never_transfers() {
+        let cfg = MoeConfig::preset("sm-8e");
+        let t = Topology::new(1);
+        for e in 0..cfg.n_ffn_experts {
+            assert_eq!(t.ffn_owner(e), 0);
+        }
+        for tok in 0..32 {
+            assert_eq!(t.token_home(tok, 32), 0);
+            for e in 0..cfg.n_experts() {
+                assert!(!t.needs_transfer(&cfg, tok, 32, e));
+            }
         }
     }
 
@@ -98,5 +208,44 @@ mod tests {
         // FFN experts on other devices do transfer.
         assert!(t.needs_transfer(&cfg, 0, 32, 1)); // token home 0, owner 1
         assert!(!t.needs_transfer(&cfg, 0, 32, 0));
+    }
+
+    #[test]
+    fn zc_experts_never_transfer_under_any_plan() {
+        // The replication invariant is structural: no placement plan can
+        // make a zero-computation expert pay an all-to-all hop.
+        let cfg = MoeConfig::preset("sm-8e");
+        let plans = [
+            PlacementPlan::round_robin(cfg.n_ffn_experts, 4),
+            PlacementPlan::from_owner(vec![0; cfg.n_ffn_experts], 4)
+                .unwrap(),
+            PlacementPlan::from_owner(
+                (0..cfg.n_ffn_experts).rev().map(|e| e % 4).collect(),
+                4,
+            )
+            .unwrap(),
+        ];
+        for plan in plans {
+            let t = Topology::new(4).with_placement(plan);
+            for tok in 0..16 {
+                for e in cfg.n_ffn_experts..cfg.n_experts() {
+                    assert!(!t.needs_transfer(&cfg, tok, 16, e));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn needs_transfer_follows_installed_plan() {
+        let cfg = MoeConfig::preset("sm-8e");
+        // Every FFN expert on device 3: only tokens homed on 3 are local.
+        let plan =
+            PlacementPlan::from_owner(vec![3; cfg.n_ffn_experts], 4)
+                .unwrap();
+        let t = Topology::new(4).with_placement(plan);
+        for e in 0..cfg.n_ffn_experts {
+            assert!(t.needs_transfer(&cfg, 0, 16, e)); // home 0
+            assert!(!t.needs_transfer(&cfg, 15, 16, e)); // home 3
+        }
     }
 }

@@ -20,7 +20,10 @@ pub struct WorkUnit {
 }
 
 /// Result of a work unit: gated outputs to scatter-add at the token homes.
+/// Echoes the unit's expert id so callers attribute results without
+/// relying on reply ordering.
 pub struct WorkResult {
+    pub expert: usize,
     pub tokens: Vec<usize>,
     pub y: Tensor, // [n, D], already gate-scaled
     pub compute_s: f64,
@@ -82,6 +85,7 @@ impl Worker {
                                         None,
                                     );
                                     WorkResult {
+                                        expert: u.expert,
                                         tokens: u.tokens,
                                         y,
                                         compute_s: t0
@@ -141,6 +145,7 @@ mod tests {
         let results = rx.recv().unwrap();
         assert_eq!(results.len(), 1);
         let r = &results[0];
+        assert_eq!(r.expert, 3);
         assert_eq!(r.tokens, vec![10, 11]);
         assert!(r.compute_s >= 0.0);
         let d = cfg.d_model;

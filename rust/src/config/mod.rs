@@ -258,6 +258,14 @@ impl MoeConfig {
         6.0 * self.d_model as f64 * self.d_ff as f64
     }
 
+    /// Bytes of one FFN expert's parameters in ONE layer (w1/w3/w2,
+    /// f32). Placement accounting multiplies by `n_layers`: a placement
+    /// owner applies stack-wide, so each expert slot stores (and each
+    /// migration moves) one copy per layer.
+    pub fn ffn_expert_bytes(&self) -> u64 {
+        (3 * self.d_model * self.d_ff * 4) as u64
+    }
+
     /// Table 1: expected fraction of top-K slots landing on FFN experts
     /// under balanced routing: tau*N_F / (tau*N_F + N_Z).
     pub fn ffn_token_fraction(&self) -> f64 {
@@ -338,6 +346,12 @@ mod tests {
         assert!((c.ffn_token_fraction() - want).abs() < 1e-12);
         assert_eq!(MoeConfig::preset("sm-8e:vanilla").ffn_token_fraction(),
                    1.0);
+    }
+
+    #[test]
+    fn ffn_expert_bytes_counts_three_projections() {
+        let c = MoeConfig::preset("test"); // d_model 32, d_ff 64
+        assert_eq!(c.ffn_expert_bytes(), (3 * 32 * 64 * 4) as u64);
     }
 
     #[test]

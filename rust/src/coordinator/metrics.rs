@@ -108,6 +108,9 @@ pub struct ServingMetrics {
     /// Seconds from service start to the first batch hitting the backend
     /// (0 until a batch executes).
     pub time_to_first_batch_s: f64,
+    /// Placement replans the backend applied between batches (cluster
+    /// backends with an online `placement::Replanner`; 0 elsewhere).
+    pub replans: u64,
 }
 
 impl ServingMetrics {
@@ -153,6 +156,9 @@ impl ServingMetrics {
             self.peak_queue_tokens,
             self.time_to_first_batch_s * 1e3,
         ));
+        if self.replans > 0 {
+            s.push_str(&format!("\nplacement: replans={}", self.replans));
+        }
         s
     }
 }

@@ -23,7 +23,10 @@
 //! * **High performance** — the trainer ([`training`]) reproduces the
 //!   quality-side comparisons on a synthetic corpus (Tables 3–6, Fig. 3).
 //! * **Deployment friendly** — [`cluster`] replicates ZC experts on every
-//!   simulated device, so ZC-routed tokens incur zero all-to-all traffic.
+//!   simulated device, so ZC-routed tokens incur zero all-to-all traffic;
+//!   [`placement`] plans *where* the sharded FFN experts live (load-aware
+//!   LPT/local-search under a cost model, online replanning with
+//!   hysteresis — DESIGN.md §10).
 //!
 //! This environment is offline: the only dependencies are vendored in
 //! `rust/vendor/` (a minimal `anyhow` and a stub of the `xla` PJRT bridge
@@ -38,6 +41,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod moe;
+pub mod placement;
 pub mod runtime;
 pub mod serve;
 pub mod stats;

@@ -5,10 +5,12 @@
 //!   serve     --preset P --requests N       serving demo (batcher+engine)
 //!   train     --tag T --steps N             pretrain via train_step artifact
 //!   cluster   --preset P --devices A,B,..   expert-parallel deployment sim
+//!   placement --devices N --profile skewed  plan/score/compare FFN placement
 //!   bench     table1|table3|table3-quality|table4|table5|table6|fig3
 //!   analyze   load|tokens|gating            figures 4 / 5 / 6
 //!
-//! Reports are printed and mirrored under reports/.
+//! Reports are printed and mirrored under reports/; sweeps also emit
+//! machine-readable `BENCH_<name>.json` files for cross-PR tracking.
 
 use anyhow::{Context, Result};
 
@@ -24,6 +26,7 @@ use moepp::training::checkpoint;
 use moepp::training::data::Corpus;
 use moepp::training::trainer::Trainer;
 use moepp::util::cli::Args;
+use moepp::util::json::Json;
 use moepp::util::rng::Rng;
 use moepp::{info, warn_log};
 
@@ -36,6 +39,7 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("train") => cmd_train(&args),
         Some("cluster") => cmd_cluster(&args),
+        Some("placement") => cmd_placement(&args),
         Some("bench") => cmd_bench(&args),
         Some("analyze") => cmd_analyze(&args),
         _ => {
@@ -49,7 +53,8 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: moepp <info|serve|train|cluster|bench|analyze> \
+const USAGE: &str = "usage: moepp \
+<info|serve|train|cluster|placement|bench|analyze> \
 [args]\n  see README.md";
 
 fn report(name: &str, body: &str) -> Result<()> {
@@ -132,16 +137,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 service_cfg,
             )
         }
-        "cluster" => MoeService::start(
-            moepp::cluster::sim::ClusterSim::new(
+        "cluster" => {
+            let mut sim = moepp::cluster::sim::ClusterSim::new(
                 cfg.clone(),
                 moepp::cluster::topology::Topology::new(
                     args.get_usize("devices", 2),
                 ),
                 0,
-            ),
-            service_cfg,
-        ),
+            );
+            // --replan: migrate FFN experts between batches when the
+            // observed load histogram predicts a worthwhile win
+            // (--replan-strategy lpt|refined picks the planner).
+            if args.has("replan") {
+                use moepp::placement::{
+                    CostModel, Planner, ReplanConfig, Replanner,
+                    Strategy,
+                };
+                let strategy = Strategy::parse(
+                    args.get_or("replan-strategy", "refined"),
+                )?;
+                sim = sim.with_replanner(Replanner::new(
+                    Planner::new(CostModel::from_config(&cfg)),
+                    ReplanConfig { strategy, ..ReplanConfig::default() },
+                    cfg.n_ffn_experts,
+                ));
+            }
+            MoeService::start(sim, service_cfg)
+        }
         other => anyhow::bail!("unknown backend '{other}'"),
     };
     let mut rng = Rng::new(7);
@@ -155,6 +177,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let trace = harness::run_serve_trace(&service, inputs)?;
     let latency = service.latency();
     let metrics = service.shutdown();
+    let bench = Json::obj(vec![
+        ("bench", Json::str("serve")),
+        ("preset", Json::str(preset)),
+        ("backend", Json::str(label.clone())),
+        ("requests", Json::num(trace.completed as f64)),
+        ("wall_s", Json::num(trace.wall_s)),
+        ("req_per_s", Json::num(trace.requests_per_s())),
+        ("p50_ms", Json::num(latency.quantile(0.5) * 1e3)),
+        ("p95_ms", Json::num(latency.quantile(0.95) * 1e3)),
+        ("expert_tput_tok_s", Json::num(metrics.expert_throughput())),
+        ("replans", Json::num(metrics.replans as f64)),
+    ]);
+    let bench_path = harness::write_bench_json("serve", &bench)?;
+    info!("wrote {bench_path}");
     let body = format!(
         "serving demo: preset {preset}, backend {label}\n{}\n\
          wall {:.2}s  {:.0} req/s  backpressure retries {}\n\
@@ -221,6 +257,30 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         .collect();
     let tokens = args.get_usize("tokens", 256);
     let rows = tables::cluster_rows(preset, &devices, tokens, 0)?;
+    let bench = Json::obj(vec![
+        ("bench", Json::str("cluster")),
+        ("preset", Json::str(preset)),
+        ("tokens", Json::num(tokens as f64)),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("model", Json::str(r.model.clone())),
+                            ("devices", Json::num(r.devices as f64)),
+                            ("comm_mib", Json::num(r.comm_mib)),
+                            ("comm_ms", Json::num(r.comm_ms)),
+                            ("makespan_ms", Json::num(r.makespan_ms)),
+                            ("load_cv", Json::num(r.load_cv)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let bench_path = harness::write_bench_json("cluster", &bench)?;
+    info!("wrote {bench_path}");
     let body = format!(
         "expert-parallel deployment simulation ({tokens} tokens)\n\
          ZC experts replicated per device; FFN experts sharded round-robin\n\
@@ -228,6 +288,106 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         tables::render_cluster(&rows)
     );
     report("cluster", &body)
+}
+
+// -------------------------------------------------------------- placement
+
+fn cmd_placement(args: &Args) -> Result<()> {
+    use moepp::placement::{
+        CostModel, LoadProfile, PlacementPlan, Planner, Strategy,
+    };
+    let preset = args.get_or("preset", "sm-8e");
+    let devices = args.get_usize("devices", 4);
+    let profile_arg = args.get_or("profile", "skewed");
+    let tokens = args.get_usize("tokens", 256);
+    let batches = args.get_usize("batches", 4);
+    let seed = args.get_usize("seed", 0) as u64;
+    let cfg = MoeConfig::preset(preset);
+    // Per-device parameter budget (stack-wide per expert slot), honored
+    // by both the sweep and the plan-only path.
+    let budget_bytes: Option<u64> = match args.get("budget-mib") {
+        Some(mib) => {
+            let mib: u64 = mib.parse().context("--budget-mib")?;
+            Some(mib << 20)
+        }
+        None => None,
+    };
+
+    if profile_arg.ends_with(".json") {
+        // Plan/score from a captured load profile — no simulation, so a
+        // per-device memory budget can be explored cheaply.
+        let text = std::fs::read_to_string(profile_arg)
+            .with_context(|| format!("read profile {profile_arg}"))?;
+        let profile = LoadProfile::from_json(&Json::parse(&text)?)?;
+        anyhow::ensure!(
+            profile.n_ffn_experts() == cfg.n_ffn_experts,
+            "profile has {} FFN experts, preset {preset} has {}",
+            profile.n_ffn_experts(),
+            cfg.n_ffn_experts
+        );
+        let cost = CostModel::from_config(&cfg);
+        let mut planner = Planner::new(cost.clone());
+        if let Some(bytes) = budget_bytes {
+            planner = planner.with_budget(bytes);
+        }
+        // --strategy restricts the comparison to one planner.
+        let strategies: Vec<Strategy> = match args.get("strategy") {
+            Some(s) => vec![Strategy::parse(s)?],
+            None => Strategy::all().to_vec(),
+        };
+        let rr = PlacementPlan::round_robin(cfg.n_ffn_experts, devices);
+        let mut body = format!(
+            "placement plans from captured profile {profile_arg}\n\
+             ({} layers, {} FFN experts, {} batches, total load {})\n\n\
+             {:<12} {:>14} {:>10} {:>8} {:>6}\n",
+            profile.n_layers(),
+            profile.n_ffn_experts(),
+            profile.batches,
+            profile.total(),
+            "strategy", "predicted(ms)", "a2a (MiB)", "load cv", "moved",
+        );
+        for strategy in strategies {
+            let plan = planner.plan(strategy, devices, &profile)?;
+            let s = cost.score(&plan, &profile);
+            body.push_str(&format!(
+                "{:<12} {:>14.3} {:>10.3} {:>8.3} {:>6}\n",
+                strategy.label(),
+                s.makespan_s * 1e3,
+                s.comm_bytes as f64 / (1 << 20) as f64,
+                s.mean_load_cv(),
+                rr.diff(&plan).len(),
+            ));
+        }
+        return report("placement", &body);
+    }
+
+    let skewed = match profile_arg {
+        "skewed" => true,
+        "uniform" => false,
+        other => anyhow::bail!(
+            "--profile expects skewed|uniform|<file.json>, got '{other}'"
+        ),
+    };
+    let (profile, rows) = harness::run_placement_sweep(
+        preset, devices, tokens, batches, skewed, seed, budget_bytes,
+    )?;
+    if let Some(path) = args.get("capture") {
+        std::fs::write(path, format!("{}\n", profile.to_json()))?;
+        info!("captured load profile -> {path}");
+    }
+    let bench_path = harness::write_bench_json(
+        "placement",
+        &harness::placement_sweep_json(preset, devices, tokens, &rows),
+    )?;
+    info!("wrote {bench_path}");
+    let body = format!(
+        "FFN-expert placement sweep: preset {preset}, {devices} devices, \
+         {batches}x{tokens}-token {profile_arg} batches (seed {seed})\n\
+         ZC experts replicated everywhere; plans move only FFN experts \
+         and never change model outputs\n\n{}",
+        harness::render_placement_sweep(&rows),
+    );
+    report("placement", &body)
 }
 
 // ---------------------------------------------------------------- bench

@@ -1,0 +1,225 @@
+//! The α–β placement cost model: score a [`PlacementPlan`] against an
+//! observed [`LoadProfile`] without running the cluster.
+//!
+//! Per layer, the model charges every device `compute_s_per_assignment`
+//! seconds per FFN assignment it owns, and prices the all-to-all with the
+//! same [`LinkModel`]/[`LayerTraffic`] math the simulator uses, under a
+//! uniform-home assumption: a batch's tokens are sharded evenly across
+//! devices, so `1/n_devices` of an expert's load is local and the rest
+//! arrives over the interconnect. Predicted makespan is
+//! `sum_l (max_d compute_d + comm_l)`.
+//!
+//! This is an *approximation* of [`SimReport::modeled_makespan`], not an
+//! identity: the simulator charges comm for each token's actual
+//! (contiguous-block) home rather than the uniform split, and a profile
+//! aggregated over several batches bounds `sum_b max_d` by
+//! `max_d sum_b` — so per-batch simulated figures can deviate a few
+//! percent from the prediction even on the exact loads the profile was
+//! captured from. Plan *comparisons* are what the model is for; the
+//! never-worse planner guarantee is exact only under this model.
+//!
+//! [`SimReport::modeled_makespan`]: crate::cluster::sim::SimReport
+
+use crate::cluster::comm::LayerTraffic;
+use crate::cluster::topology::{LinkModel, Topology};
+use crate::config::MoeConfig;
+use crate::moe::balance::load_cv;
+
+use super::plan::PlacementPlan;
+use super::profile::LoadProfile;
+
+/// Nominal FFN throughput of one simulated device. Only the *ratio* of
+/// compute to comm matters for plan comparison; this pins the scale.
+pub const DEVICE_FLOPS: f64 = 100e9;
+
+/// What a (plan, profile) pair costs.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    pub link: LinkModel,
+    /// Seconds of FFN compute per (token, expert) assignment.
+    pub compute_s_per_assignment: f64,
+    /// Bytes of one token's hidden state crossing a link (d_model * 4).
+    pub token_bytes: u64,
+    /// Bytes one expert slot costs a device **across the whole stack**:
+    /// a plan's `owner[e]` applies to every layer, so placing (or
+    /// migrating) expert `e` places `n_layers` per-layer weight copies.
+    /// Memory budgets and migration pricing both use this stack-wide
+    /// figure.
+    pub expert_bytes: u64,
+}
+
+impl CostModel {
+    pub fn from_config(cfg: &MoeConfig) -> CostModel {
+        CostModel {
+            link: LinkModel::default(),
+            compute_s_per_assignment: cfg.ffn_flops_per_token()
+                / DEVICE_FLOPS,
+            token_bytes: (cfg.d_model * 4) as u64,
+            expert_bytes: cfg.ffn_expert_bytes()
+                * cfg.n_layers.max(1) as u64,
+        }
+    }
+
+    /// α–β time to migrate `bytes` of expert weights between devices.
+    pub fn migration_s(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        self.link.alpha_s + self.link.beta_s_per_byte * bytes as f64
+    }
+
+    /// Score `plan` against `profile` (accumulated over its batches).
+    pub fn score(&self, plan: &PlacementPlan, profile: &LoadProfile)
+        -> PlanScore {
+        assert_eq!(
+            plan.n_ffn_experts(),
+            profile.n_ffn_experts(),
+            "plan and profile expert counts differ"
+        );
+        let n_dev = plan.n_devices();
+        let mut topo = Topology::new(n_dev);
+        topo.link = self.link.clone();
+        let mut score = PlanScore {
+            device_assignments: vec![0; n_dev],
+            ..PlanScore::default()
+        };
+        for l in 0..profile.n_layers() {
+            let loads = profile.layer(l);
+            let mut device_load = vec![0u64; n_dev];
+            for (e, &load) in loads.iter().enumerate() {
+                device_load[plan.owner(e)] += load;
+            }
+            let max_load =
+                device_load.iter().copied().max().unwrap_or(0);
+            let compute_s =
+                max_load as f64 * self.compute_s_per_assignment;
+
+            // Uniform-home all-to-all: expert e's load arrives evenly
+            // from every device; the 1/n_dev share homed on the owner is
+            // local (diagonal, free).
+            let mut traffic = LayerTraffic::new(n_dev);
+            for (e, &load) in loads.iter().enumerate() {
+                if load == 0 {
+                    continue;
+                }
+                let owner = plan.owner(e);
+                let share = load as f64 / n_dev as f64;
+                let bytes =
+                    (share * self.token_bytes as f64).round() as u64;
+                if bytes == 0 {
+                    continue;
+                }
+                for home in 0..n_dev {
+                    if home != owner {
+                        traffic.dispatch.add(home, owner, bytes);
+                        traffic.combine.add(owner, home, bytes);
+                    }
+                }
+            }
+            let comm_s = traffic.total_time(&topo);
+            let counts: Vec<usize> =
+                device_load.iter().map(|&l| l as usize).collect();
+            score.compute_s += compute_s;
+            score.comm_s += comm_s;
+            score.comm_bytes += traffic.total_bytes();
+            score.makespan_s += compute_s + comm_s;
+            score.load_cv_sum += load_cv(&counts);
+            score.layers += 1;
+            for (acc, c) in
+                score.device_assignments.iter_mut().zip(&counts)
+            {
+                *acc += c;
+            }
+        }
+        score
+    }
+}
+
+/// Predicted cost of one plan over one profile.
+#[derive(Clone, Debug, Default)]
+pub struct PlanScore {
+    /// `sum_l (max-device compute + comm)` — the objective the planner
+    /// minimises.
+    pub makespan_s: f64,
+    /// Bottleneck-device compute summed over layers.
+    pub compute_s: f64,
+    /// Analytic all-to-all time summed over layers.
+    pub comm_s: f64,
+    /// Predicted off-device bytes (dispatch + combine).
+    pub comm_bytes: u64,
+    /// Aggregate FFN assignments per device (all layers).
+    pub device_assignments: Vec<usize>,
+    load_cv_sum: f64,
+    layers: usize,
+}
+
+impl PlanScore {
+    /// Mean per-layer coefficient of variation of device load.
+    pub fn mean_load_cv(&self) -> f64 {
+        if self.layers == 0 {
+            0.0
+        } else {
+            self.load_cv_sum / self.layers as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> CostModel {
+        CostModel::from_config(&MoeConfig::preset("test"))
+    }
+
+    #[test]
+    fn balanced_plan_scores_below_collapsed_plan() {
+        let profile = LoadProfile::from_counts(vec![vec![100, 100, 0, 0]])
+            .unwrap();
+        let cost = model();
+        let collapsed =
+            PlacementPlan::from_owner(vec![0, 0, 1, 1], 2).unwrap();
+        let spread =
+            PlacementPlan::from_owner(vec![0, 1, 0, 1], 2).unwrap();
+        let s_col = cost.score(&collapsed, &profile);
+        let s_spr = cost.score(&spread, &profile);
+        assert!(s_spr.makespan_s < s_col.makespan_s,
+                "{} vs {}", s_spr.makespan_s, s_col.makespan_s);
+        assert!(s_spr.mean_load_cv() < s_col.mean_load_cv());
+        // Collapsed: device 0 computes all 200 assignments.
+        assert_eq!(s_col.device_assignments, vec![200, 0]);
+        assert_eq!(s_spr.device_assignments, vec![100, 100]);
+    }
+
+    #[test]
+    fn single_device_has_no_comm() {
+        let profile =
+            LoadProfile::from_counts(vec![vec![10, 20], vec![5, 5]])
+                .unwrap();
+        let cost = model();
+        let plan = PlacementPlan::round_robin(2, 1);
+        let s = cost.score(&plan, &profile);
+        assert_eq!(s.comm_bytes, 0);
+        assert_eq!(s.comm_s, 0.0);
+        assert!(s.makespan_s > 0.0);
+        assert_eq!(s.mean_load_cv(), 0.0);
+    }
+
+    #[test]
+    fn makespan_is_compute_plus_comm() {
+        let profile =
+            LoadProfile::from_counts(vec![vec![8, 4], vec![2, 2]]).unwrap();
+        let cost = model();
+        let plan = PlacementPlan::round_robin(2, 2);
+        let s = cost.score(&plan, &profile);
+        assert!((s.makespan_s - (s.compute_s + s.comm_s)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn migration_time_is_alpha_beta() {
+        let cost = model();
+        assert_eq!(cost.migration_s(0), 0.0);
+        let want = cost.link.alpha_s + cost.link.beta_s_per_byte * 1e6;
+        assert!((cost.migration_s(1_000_000) - want).abs() < 1e-15);
+    }
+}

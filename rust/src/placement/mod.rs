@@ -1,0 +1,47 @@
+//! Load-aware expert placement (DESIGN.md §10) — the planning layer
+//! behind the paper's deployment-friendliness claim (Sec. 3.4).
+//!
+//! MoE++ replicates the near-zero-parameter zero/copy/constant experts on
+//! every device and shards only the FFN experts, so *where* each FFN
+//! expert lives is the dominant lever on expert-parallel makespan: a hot
+//! expert colliding with another hot expert on one device stalls the
+//! whole step. This module owns that decision:
+//!
+//! * [`plan::PlacementPlan`] — the FFN expert → device map (ZC experts
+//!   are structurally replicated and never planned or migrated);
+//! * [`profile::LoadProfile`] — observed per-layer per-expert token
+//!   loads, recovered exactly from [`ForwardStats`] capacity accounting;
+//! * [`cost::CostModel`] — α–β + per-assignment compute scoring of a
+//!   plan against a profile, reusing the cluster's [`LinkModel`] /
+//!   [`LayerTraffic`] math;
+//! * [`planner::Planner`] — round-robin baseline, greedy LPT bin-packing
+//!   and local-search refinement under a per-device memory budget, with a
+//!   never-worse-than-baseline guarantee;
+//! * [`replan::Replanner`] — online replanning with hysteresis: proposes
+//!   a [`replan::MigrationPlan`] (experts to move, bytes, predicted
+//!   makespan delta) only when the predicted gain clears the migration
+//!   cost.
+//!
+//! Placement is pure layout: [`cluster::Topology`] consumes a plan (round
+//! robin remains the default, bitwise-unchanged), and the cluster combine
+//! order is placement-independent, so **no plan ever changes model
+//! outputs** — enforced by `rust/tests/cluster_placement.rs`.
+//!
+//! [`ForwardStats`]: crate::moe::exec::ForwardStats
+//! [`LinkModel`]: crate::cluster::topology::LinkModel
+//! [`LayerTraffic`]: crate::cluster::comm::LayerTraffic
+//! [`cluster::Topology`]: crate::cluster::topology::Topology
+
+pub mod cost;
+pub mod plan;
+pub mod planner;
+pub mod profile;
+pub mod replan;
+
+pub use cost::{CostModel, PlanScore};
+pub use plan::PlacementPlan;
+pub use planner::{Planner, Strategy};
+pub use profile::LoadProfile;
+pub use replan::{
+    ExpertMove, MigrationPlan, ReplanConfig, Replanner,
+};

@@ -1,0 +1,190 @@
+//! [`PlacementPlan`] — the FFN-expert → device map.
+//!
+//! The plan only ever places **FFN** experts: zero-computation experts are
+//! structurally replicated on every device (paper Sec. 3.4), so they never
+//! appear in a plan and never migrate. Invariants (DESIGN.md §10):
+//!
+//! * every FFN expert is placed on exactly one device (the `owner` vector
+//!   representation makes duplicates impossible by construction);
+//! * every owner is a valid device index;
+//! * a plan is pure *layout*: applying any valid plan never changes model
+//!   outputs — the cluster combine order is placement-independent.
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// Where each FFN expert lives. ZC experts are implicitly replicated on
+/// all devices and are not part of the plan.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlacementPlan {
+    n_devices: usize,
+    /// `owner[e]` = device holding FFN expert `e`.
+    owner: Vec<usize>,
+}
+
+impl PlacementPlan {
+    /// The historical default: expert `e` lives on device `e % n_devices`.
+    pub fn round_robin(n_ffn_experts: usize, n_devices: usize)
+        -> PlacementPlan {
+        assert!(n_devices > 0, "placement needs at least one device");
+        PlacementPlan {
+            n_devices,
+            owner: (0..n_ffn_experts).map(|e| e % n_devices).collect(),
+        }
+    }
+
+    /// Build from an explicit owner vector, validating the invariants.
+    pub fn from_owner(owner: Vec<usize>, n_devices: usize)
+        -> Result<PlacementPlan> {
+        let plan = PlacementPlan { n_devices, owner };
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Check the plan invariants (device count positive, every owner in
+    /// range). Expert uniqueness is inherent in the representation.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.n_devices > 0, "plan has no devices");
+        for (e, &d) in self.owner.iter().enumerate() {
+            anyhow::ensure!(
+                d < self.n_devices,
+                "expert {e} placed on device {d} (n_devices {})",
+                self.n_devices
+            );
+        }
+        Ok(())
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.n_devices
+    }
+
+    pub fn n_ffn_experts(&self) -> usize {
+        self.owner.len()
+    }
+
+    /// Owner device of FFN expert `e`.
+    pub fn owner(&self, expert: usize) -> usize {
+        self.owner[expert]
+    }
+
+    pub fn owners(&self) -> &[usize] {
+        &self.owner
+    }
+
+    /// Reassign one expert (planner-internal moves go through here so the
+    /// invariants cannot be broken by construction).
+    pub fn set_owner(&mut self, expert: usize, device: usize) {
+        assert!(device < self.n_devices, "device {device} out of range");
+        self.owner[expert] = device;
+    }
+
+    /// FFN experts living on `device`, ascending.
+    pub fn device_experts(&self, device: usize) -> Vec<usize> {
+        (0..self.owner.len())
+            .filter(|&e| self.owner[e] == device)
+            .collect()
+    }
+
+    /// Number of FFN experts per device.
+    pub fn device_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_devices];
+        for &d in &self.owner {
+            counts[d] += 1;
+        }
+        counts
+    }
+
+    pub fn is_round_robin(&self) -> bool {
+        self.owner.iter().enumerate().all(|(e, &d)| d == e % self.n_devices)
+    }
+
+    /// Experts whose owner differs between `self` and `to`:
+    /// `(expert, from_device, to_device)`.
+    pub fn diff(&self, to: &PlacementPlan) -> Vec<(usize, usize, usize)> {
+        assert_eq!(self.owner.len(), to.owner.len(), "plan size mismatch");
+        self.owner
+            .iter()
+            .zip(&to.owner)
+            .enumerate()
+            .filter(|(_, (a, b))| a != b)
+            .map(|(e, (&a, &b))| (e, a, b))
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n_devices", Json::num(self.n_devices as f64)),
+            (
+                "owner",
+                Json::Arr(
+                    self.owner.iter().map(|&d| Json::num(d as f64)).collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<PlacementPlan> {
+        let n_devices = j
+            .get("n_devices")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("plan json: missing n_devices"))?;
+        let owner = j
+            .get("owner")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("plan json: missing owner"))?
+            .iter()
+            .map(|v| {
+                v.as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("plan json: bad owner"))
+            })
+            .collect::<Result<Vec<usize>>>()?;
+        PlacementPlan::from_owner(owner, n_devices)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_matches_modulo() {
+        let p = PlacementPlan::round_robin(10, 4);
+        assert!(p.is_round_robin());
+        for e in 0..10 {
+            assert_eq!(p.owner(e), e % 4);
+        }
+        assert_eq!(p.device_counts(), vec![3, 3, 2, 2]);
+        assert_eq!(p.device_experts(1), vec![1, 5, 9]);
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn from_owner_rejects_out_of_range() {
+        assert!(PlacementPlan::from_owner(vec![0, 1, 2], 3).is_ok());
+        assert!(PlacementPlan::from_owner(vec![0, 3], 3).is_err());
+        assert!(PlacementPlan::from_owner(vec![], 0).is_err());
+    }
+
+    #[test]
+    fn diff_lists_moved_experts() {
+        let a = PlacementPlan::round_robin(4, 2); // [0,1,0,1]
+        let b = PlacementPlan::from_owner(vec![0, 1, 1, 0], 2).unwrap();
+        assert_eq!(a.diff(&b), vec![(2, 0, 1), (3, 1, 0)]);
+        assert!(a.diff(&a).is_empty());
+        assert!(!b.is_round_robin());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = PlacementPlan::from_owner(vec![2, 0, 1, 1], 3).unwrap();
+        let back = PlacementPlan::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, back);
+        // Parse through the text form too.
+        let txt = p.to_json().to_string();
+        let back2 =
+            PlacementPlan::from_json(&Json::parse(&txt).unwrap()).unwrap();
+        assert_eq!(p, back2);
+    }
+}

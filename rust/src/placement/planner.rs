@@ -1,0 +1,394 @@
+//! Placement search: round-robin baseline, greedy LPT bin-packing on
+//! observed load, and local-search swap/move refinement — all under an
+//! optional per-device parameter-memory budget.
+//!
+//! **Never-worse guarantee** (DESIGN.md §10): `plan()` scores every
+//! candidate with the [`CostModel`] and returns the round-robin baseline
+//! whenever a heuristic loses to it, so LPT and refined plans never score
+//! worse than round-robin on the profile they were planned from — the
+//! invariant the placement property test pins down. (Greedy LPT alone has
+//! no such guarantee: an adversarial load vector can make modulo layout
+//! beat it.)
+
+use anyhow::Result;
+
+use super::cost::CostModel;
+use super::plan::PlacementPlan;
+use super::profile::LoadProfile;
+
+/// Local-search iteration cap (each iteration applies the single best
+/// improving move or swap; termination well before this in practice).
+const REFINE_MAX_ROUNDS: usize = 128;
+
+/// Relative improvement below which local search stops (guards against
+/// chasing float dust).
+const REFINE_MIN_GAIN: f64 = 1e-9;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// `e % n_devices` — the historical baseline.
+    RoundRobin,
+    /// Longest-processing-time greedy: heaviest expert onto the
+    /// least-loaded device with memory headroom.
+    Lpt,
+    /// LPT seed + best-improvement move/swap local search.
+    Refined,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Result<Strategy> {
+        match s {
+            "rr" | "round-robin" | "roundrobin" => Ok(Strategy::RoundRobin),
+            "lpt" | "greedy" => Ok(Strategy::Lpt),
+            "refined" | "refine" | "local-search" => Ok(Strategy::Refined),
+            other => anyhow::bail!(
+                "unknown placement strategy '{other}' \
+                 (expected rr|lpt|refined)"
+            ),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Strategy::RoundRobin => "round-robin",
+            Strategy::Lpt => "lpt",
+            Strategy::Refined => "refined",
+        }
+    }
+
+    pub fn all() -> [Strategy; 3] {
+        [Strategy::RoundRobin, Strategy::Lpt, Strategy::Refined]
+    }
+}
+
+/// Plans FFN-expert placement from a load profile.
+#[derive(Clone, Debug)]
+pub struct Planner {
+    pub cost: CostModel,
+    /// Per-device FFN parameter budget; `None` = unbounded.
+    pub mem_budget_bytes: Option<u64>,
+}
+
+impl Planner {
+    pub fn new(cost: CostModel) -> Planner {
+        Planner { cost, mem_budget_bytes: None }
+    }
+
+    pub fn with_budget(mut self, bytes: u64) -> Planner {
+        self.mem_budget_bytes = Some(bytes);
+        self
+    }
+
+    /// Max FFN experts one device can hold under the memory budget.
+    fn max_experts_per_device(&self) -> Option<usize> {
+        self.mem_budget_bytes
+            .map(|b| (b / self.cost.expert_bytes.max(1)) as usize)
+    }
+
+    /// Produce a plan for `n_devices` from `profile`.
+    pub fn plan(
+        &self,
+        strategy: Strategy,
+        n_devices: usize,
+        profile: &LoadProfile,
+    ) -> Result<PlacementPlan> {
+        anyhow::ensure!(n_devices > 0, "planner needs >= 1 device");
+        let n_ffn = profile.n_ffn_experts();
+        let cap = self.max_experts_per_device().unwrap_or(n_ffn.max(1));
+        anyhow::ensure!(
+            cap * n_devices >= n_ffn,
+            "memory budget infeasible: {n_ffn} FFN experts, \
+             {n_devices} devices x {cap} experts/device"
+        );
+        anyhow::ensure!(
+            cap >= n_ffn.div_ceil(n_devices),
+            "memory budget below the balanced minimum \
+             ({} experts/device needed, budget allows {cap})",
+            n_ffn.div_ceil(n_devices)
+        );
+        let rr = PlacementPlan::round_robin(n_ffn, n_devices);
+        match strategy {
+            Strategy::RoundRobin => Ok(rr),
+            Strategy::Lpt => {
+                let lpt = self.lpt(n_devices, profile, cap);
+                Ok(self.best_of(vec![rr, lpt], profile))
+            }
+            Strategy::Refined => {
+                let lpt = self.lpt(n_devices, profile, cap);
+                let seed = self.best_of(vec![rr, lpt], profile);
+                Ok(self.refine(seed, profile, cap))
+            }
+        }
+    }
+
+    /// Lowest-makespan plan, earliest wins ties (keeps the baseline when
+    /// a heuristic merely matches it).
+    fn best_of(
+        &self,
+        candidates: Vec<PlacementPlan>,
+        profile: &LoadProfile,
+    ) -> PlacementPlan {
+        let mut best: Option<(f64, PlacementPlan)> = None;
+        for plan in candidates {
+            let m = self.cost.score(&plan, profile).makespan_s;
+            let better = match &best {
+                None => true,
+                Some((bm, _)) => m < *bm,
+            };
+            if better {
+                best = Some((m, plan));
+            }
+        }
+        best.expect("non-empty candidate list").1
+    }
+
+    /// Greedy LPT: experts by total load descending (index ascending on
+    /// ties), each onto the least-loaded device with headroom.
+    fn lpt(
+        &self,
+        n_devices: usize,
+        profile: &LoadProfile,
+        cap: usize,
+    ) -> PlacementPlan {
+        let totals = profile.expert_totals();
+        let n_ffn = totals.len();
+        let mut order: Vec<usize> = (0..n_ffn).collect();
+        order.sort_by_key(|&e| (std::cmp::Reverse(totals[e]), e));
+        let mut owner = vec![0usize; n_ffn];
+        let mut dev_load = vec![0u64; n_devices];
+        let mut dev_count = vec![0usize; n_devices];
+        for &e in &order {
+            let dev = (0..n_devices)
+                .filter(|&d| dev_count[d] < cap)
+                .min_by_key(|&d| (dev_load[d], d))
+                .expect("feasibility checked in plan()");
+            owner[e] = dev;
+            dev_load[dev] += totals[e];
+            dev_count[dev] += 1;
+        }
+        PlacementPlan::from_owner(owner, n_devices)
+            .expect("lpt produces valid owners")
+    }
+
+    /// Best-improvement local search over single-expert moves and
+    /// pairwise swaps, scored by the full cost model (so comm effects,
+    /// not just the load sum, steer refinement). Monotone: only strictly
+    /// improving steps are taken, hence never worse than its seed.
+    fn refine(
+        &self,
+        seed: PlacementPlan,
+        profile: &LoadProfile,
+        cap: usize,
+    ) -> PlacementPlan {
+        let n_ffn = seed.n_ffn_experts();
+        let n_dev = seed.n_devices();
+        let mut plan = seed;
+        let mut cur = self.cost.score(&plan, profile).makespan_s;
+        for _ in 0..REFINE_MAX_ROUNDS {
+            let counts = plan.device_counts();
+            // (new makespan, expert a, target device / swap partner b,
+            //  is_swap)
+            let mut best: Option<(f64, usize, usize, bool)> = None;
+            let consider =
+                |m: f64, a: usize, b: usize, swap: bool,
+                 best: &mut Option<(f64, usize, usize, bool)>| {
+                    let better = match best {
+                        None => true,
+                        Some((bm, ..)) => m < *bm,
+                    };
+                    if better {
+                        *best = Some((m, a, b, swap));
+                    }
+                };
+            for e in 0..n_ffn {
+                let from = plan.owner(e);
+                for d in 0..n_dev {
+                    if d == from || counts[d] >= cap {
+                        continue;
+                    }
+                    let mut cand = plan.clone();
+                    cand.set_owner(e, d);
+                    let m = self.cost.score(&cand, profile).makespan_s;
+                    consider(m, e, d, false, &mut best);
+                }
+            }
+            for a in 0..n_ffn {
+                for b in (a + 1)..n_ffn {
+                    let (da, db) = (plan.owner(a), plan.owner(b));
+                    if da == db {
+                        continue;
+                    }
+                    let mut cand = plan.clone();
+                    cand.set_owner(a, db);
+                    cand.set_owner(b, da);
+                    let m = self.cost.score(&cand, profile).makespan_s;
+                    consider(m, a, b, true, &mut best);
+                }
+            }
+            match best {
+                Some((m, a, b, swap))
+                    if m < cur * (1.0 - REFINE_MIN_GAIN) =>
+                {
+                    if swap {
+                        let (da, db) = (plan.owner(a), plan.owner(b));
+                        plan.set_owner(a, db);
+                        plan.set_owner(b, da);
+                    } else {
+                        plan.set_owner(a, b);
+                    }
+                    cur = m;
+                }
+                _ => break,
+            }
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MoeConfig;
+    use crate::util::proptest::{gen, Prop};
+
+    fn planner() -> Planner {
+        Planner::new(CostModel::from_config(&MoeConfig::preset("test")))
+    }
+
+    #[test]
+    fn lpt_splits_colliding_hot_experts() {
+        // Experts 0 and 2 are hot and collide on device 0 under
+        // round-robin; LPT and refined must separate them.
+        let profile =
+            LoadProfile::from_counts(vec![vec![100, 1, 100, 1]]).unwrap();
+        let p = planner();
+        let rr = p.plan(Strategy::RoundRobin, 2, &profile).unwrap();
+        let lpt = p.plan(Strategy::Lpt, 2, &profile).unwrap();
+        let refined = p.plan(Strategy::Refined, 2, &profile).unwrap();
+        let cost = &p.cost;
+        let m_rr = cost.score(&rr, &profile).makespan_s;
+        let m_lpt = cost.score(&lpt, &profile).makespan_s;
+        let m_ref = cost.score(&refined, &profile).makespan_s;
+        assert!(m_lpt < m_rr, "{m_lpt} vs {m_rr}");
+        assert!(m_ref <= m_lpt + 1e-15);
+        assert_ne!(lpt.owner(0), lpt.owner(2), "hot experts must split");
+    }
+
+    #[test]
+    fn budget_caps_experts_per_device() {
+        let profile = LoadProfile::from_counts(vec![vec![50, 40, 30, 20,
+                                                         10, 5]])
+            .unwrap();
+        let base = planner();
+        let cap2 = Planner {
+            mem_budget_bytes: Some(base.cost.expert_bytes * 2),
+            ..base.clone()
+        };
+        for strat in Strategy::all() {
+            let plan = cap2.plan(strat, 3, &profile).unwrap();
+            assert!(
+                plan.device_counts().iter().all(|&c| c <= 2),
+                "{strat:?} violated budget: {:?}",
+                plan.device_counts()
+            );
+        }
+        // One expert per device cannot hold 6 experts on 3 devices.
+        let cap1 = Planner {
+            mem_budget_bytes: Some(base.cost.expert_bytes),
+            ..base
+        };
+        assert!(cap1.plan(Strategy::Lpt, 3, &profile).is_err());
+    }
+
+    #[test]
+    fn strategy_parse_and_labels() {
+        assert_eq!(Strategy::parse("rr").unwrap(), Strategy::RoundRobin);
+        assert_eq!(Strategy::parse("lpt").unwrap(), Strategy::Lpt);
+        assert_eq!(
+            Strategy::parse("refined").unwrap(),
+            Strategy::Refined
+        );
+        assert!(Strategy::parse("bogus").is_err());
+        assert_eq!(Strategy::Refined.label(), "refined");
+    }
+
+    #[test]
+    fn property_heuristics_never_score_worse_than_round_robin() {
+        // The satellite property test: for any seeded load profile, LPT
+        // and refined plans never score worse than round-robin under the
+        // cost model, every plan places each FFN expert exactly once,
+        // and device counts respect the (generated) memory budget.
+        let p = planner();
+        Prop::new("placement-never-worse").cases(48).run(
+            |rng| {
+                let n_dev = gen::usize_in(rng, 1, 6);
+                let n_ffn = gen::usize_in(rng, n_dev.max(2), 24);
+                let n_layers = gen::usize_in(rng, 1, 4);
+                let layers: Vec<Vec<u64>> = (0..n_layers)
+                    .map(|_| {
+                        (0..n_ffn)
+                            .map(|_| {
+                                // Heavy-tailed: many cold, a few hot.
+                                if rng.next_f32() < 0.3 {
+                                    rng.below(500) as u64
+                                } else {
+                                    rng.below(20) as u64
+                                }
+                            })
+                            .collect()
+                    })
+                    .collect();
+                let slack = gen::usize_in(rng, 0, n_ffn);
+                (n_dev, layers, slack)
+            },
+            |(n_dev, layers, slack)| {
+                let profile =
+                    LoadProfile::from_counts(layers.clone()).unwrap();
+                let n_ffn = profile.n_ffn_experts();
+                let cap = n_ffn.div_ceil(*n_dev) + slack;
+                let planner = Planner {
+                    mem_budget_bytes: Some(
+                        p.cost.expert_bytes * cap as u64,
+                    ),
+                    ..p.clone()
+                };
+                let rr = planner
+                    .plan(Strategy::RoundRobin, *n_dev, &profile)
+                    .map_err(|e| e.to_string())?;
+                let m_rr =
+                    planner.cost.score(&rr, &profile).makespan_s;
+                for strat in [Strategy::Lpt, Strategy::Refined] {
+                    let plan = planner
+                        .plan(strat, *n_dev, &profile)
+                        .map_err(|e| e.to_string())?;
+                    plan.validate().map_err(|e| e.to_string())?;
+                    // Exactly-once placement: owners partition experts.
+                    if plan.n_ffn_experts() != n_ffn {
+                        return Err("plan lost experts".into());
+                    }
+                    let counts = plan.device_counts();
+                    if counts.iter().sum::<usize>() != n_ffn {
+                        return Err(format!(
+                            "device counts {counts:?} != {n_ffn}"
+                        ));
+                    }
+                    if counts.iter().any(|&c| c > cap) {
+                        return Err(format!(
+                            "{strat:?} violated budget cap {cap}: \
+                             {counts:?}"
+                        ));
+                    }
+                    let m =
+                        planner.cost.score(&plan, &profile).makespan_s;
+                    if m > m_rr * (1.0 + 1e-12) {
+                        return Err(format!(
+                            "{strat:?} makespan {m} worse than \
+                             round-robin {m_rr}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,235 @@
+//! [`LoadProfile`] — observed (or synthetic) per-layer, per-FFN-expert
+//! token loads, the input every planner strategy and the cost model score
+//! against.
+//!
+//! Loads are **post-capacity** FFN assignment counts: the work that
+//! actually executes on a device. `ForwardStats` records pre-capacity
+//! per-expert counts; since Eq. 8 capacity clipping keeps
+//! `min(count, capacity)` assignments per expert (order only decides
+//! *which* assignments survive, never how many), the executed load is
+//! recovered exactly without re-running dispatch.
+
+use anyhow::Result;
+
+use crate::config::MoeConfig;
+use crate::moe::exec::ForwardStats;
+use crate::util::json::Json;
+
+/// Accumulated FFN-expert load histogram across observed batches.
+#[derive(Clone, Debug)]
+pub struct LoadProfile {
+    n_ffn_experts: usize,
+    /// `layers[l][e]` = FFN assignments executed by expert `e` in layer
+    /// `l`, summed over all observed batches.
+    layers: Vec<Vec<u64>>,
+    /// How many batches have been accumulated.
+    pub batches: usize,
+}
+
+/// Executed (post-capacity) FFN loads of one forward, per layer.
+pub fn ffn_loads(stats: &ForwardStats, cfg: &MoeConfig) -> Vec<Vec<u64>> {
+    let (ffn_cap, _) = cfg.capacities(stats.tokens);
+    stats
+        .per_layer
+        .iter()
+        .map(|l| {
+            (0..cfg.n_ffn_experts)
+                .map(|e| l.expert_counts[e].min(ffn_cap) as u64)
+                .collect()
+        })
+        .collect()
+}
+
+impl LoadProfile {
+    /// Empty profile; layer rows materialise on first observation.
+    pub fn new(n_ffn_experts: usize) -> LoadProfile {
+        LoadProfile { n_ffn_experts, layers: Vec::new(), batches: 0 }
+    }
+
+    /// Build directly from explicit per-layer loads (tests, synthetic
+    /// workload studies, captured files).
+    pub fn from_counts(layers: Vec<Vec<u64>>) -> Result<LoadProfile> {
+        anyhow::ensure!(!layers.is_empty(), "profile needs >= 1 layer");
+        let n = layers[0].len();
+        anyhow::ensure!(
+            layers.iter().all(|l| l.len() == n),
+            "ragged load profile"
+        );
+        Ok(LoadProfile { n_ffn_experts: n, layers, batches: 1 })
+    }
+
+    pub fn n_ffn_experts(&self) -> usize {
+        self.n_ffn_experts
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn layer(&self, l: usize) -> &[u64] {
+        &self.layers[l]
+    }
+
+    /// Accumulate one batch's executed per-layer FFN loads.
+    pub fn observe_loads(&mut self, loads: &[Vec<u64>]) {
+        while self.layers.len() < loads.len() {
+            self.layers.push(vec![0; self.n_ffn_experts]);
+        }
+        for (row, batch) in self.layers.iter_mut().zip(loads) {
+            assert_eq!(
+                batch.len(),
+                self.n_ffn_experts,
+                "load row does not match profile expert count"
+            );
+            for (acc, &l) in row.iter_mut().zip(batch) {
+                *acc += l;
+            }
+        }
+        self.batches += 1;
+    }
+
+    /// Accumulate one forward's stats (cluster sim or engine).
+    pub fn observe_stats(&mut self, stats: &ForwardStats, cfg: &MoeConfig) {
+        let loads = ffn_loads(stats, cfg);
+        self.observe_loads(&loads);
+    }
+
+    /// Per-expert load summed over layers — what LPT packs on.
+    pub fn expert_totals(&self) -> Vec<u64> {
+        let mut totals = vec![0u64; self.n_ffn_experts];
+        for row in &self.layers {
+            for (t, &l) in totals.iter_mut().zip(row) {
+                *t += l;
+            }
+        }
+        totals
+    }
+
+    pub fn total(&self) -> u64 {
+        self.expert_totals().iter().sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n_ffn_experts", Json::num(self.n_ffn_experts as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            (
+                "layers",
+                Json::Arr(
+                    self.layers
+                        .iter()
+                        .map(|row| {
+                            Json::Arr(
+                                row.iter()
+                                    .map(|&l| Json::num(l as f64))
+                                    .collect(),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<LoadProfile> {
+        let n = j
+            .get("n_ffn_experts")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| {
+                anyhow::anyhow!("profile json: missing n_ffn_experts")
+            })?;
+        let batches =
+            j.get("batches").and_then(Json::as_usize).unwrap_or(1);
+        let layers = j
+            .get("layers")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("profile json: missing layers"))?
+            .iter()
+            .map(|row| {
+                row.as_arr()
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("profile json: layer not an array")
+                    })?
+                    .iter()
+                    .map(|v| {
+                        v.as_f64().map(|f| f as u64).ok_or_else(|| {
+                            anyhow::anyhow!("profile json: bad load")
+                        })
+                    })
+                    .collect::<Result<Vec<u64>>>()
+            })
+            .collect::<Result<Vec<Vec<u64>>>>()?;
+        anyhow::ensure!(
+            layers.iter().all(|l| l.len() == n),
+            "profile json: layer width != n_ffn_experts"
+        );
+        Ok(LoadProfile {
+            n_ffn_experts: n,
+            layers,
+            batches: batches.max(1),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::MoeEngine;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn accumulates_and_totals() {
+        let mut p = LoadProfile::new(3);
+        p.observe_loads(&[vec![1, 2, 3], vec![4, 0, 0]]);
+        p.observe_loads(&[vec![1, 0, 0], vec![0, 0, 6]]);
+        assert_eq!(p.batches, 2);
+        assert_eq!(p.n_layers(), 2);
+        assert_eq!(p.layer(0), &[2, 2, 3]);
+        assert_eq!(p.expert_totals(), vec![6, 2, 9]);
+        assert_eq!(p.total(), 17);
+    }
+
+    #[test]
+    fn observed_loads_match_executed_ffn_assignments() {
+        // The capacity-clip reconstruction must equal what actually ran:
+        // per layer, sum_e min(count_e, cap) == ffn_assignments.
+        let cfg = MoeConfig::preset("test");
+        let engine = MoeEngine::native(cfg.clone(), 3);
+        let mut rng = Rng::new(17);
+        let x = Tensor::randn(&mut rng, &[96, cfg.d_model], 1.0);
+        let (_, stats) = engine.forward_stack(&x).unwrap();
+        let loads = ffn_loads(&stats, &cfg);
+        assert_eq!(loads.len(), stats.per_layer.len());
+        for (row, l) in loads.iter().zip(&stats.per_layer) {
+            let total: u64 = row.iter().sum();
+            assert_eq!(total, l.ffn_assignments as u64);
+        }
+        let mut p = LoadProfile::new(cfg.n_ffn_experts);
+        p.observe_stats(&stats, &cfg);
+        let executed: usize =
+            stats.per_layer.iter().map(|l| l.ffn_assignments).sum();
+        assert_eq!(p.total(), executed as u64);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p =
+            LoadProfile::from_counts(vec![vec![5, 0, 7], vec![1, 2, 3]])
+                .unwrap();
+        let txt = p.to_json().to_string();
+        let back =
+            LoadProfile::from_json(&Json::parse(&txt).unwrap()).unwrap();
+        assert_eq!(back.n_ffn_experts(), 3);
+        assert_eq!(back.layer(0), p.layer(0));
+        assert_eq!(back.layer(1), p.layer(1));
+        assert_eq!(back.batches, 1);
+    }
+
+    #[test]
+    fn from_counts_rejects_ragged() {
+        assert!(LoadProfile::from_counts(vec![vec![1], vec![1, 2]])
+            .is_err());
+        assert!(LoadProfile::from_counts(vec![]).is_err());
+    }
+}

@@ -1,0 +1,332 @@
+//! Online replanning: watch per-batch load histograms, propose a
+//! migration when — and only when — the predicted gain clears the
+//! migration cost with hysteresis (DESIGN.md §10).
+//!
+//! The [`Replanner`] accumulates a [`LoadProfile`] from each executed
+//! batch's [`ForwardStats`]; [`Replanner::maybe_replan`] re-plans with the
+//! configured strategy and gates the proposal on three conditions:
+//!
+//! 1. **interval** — at least `min_interval_batches` observed in the
+//!    current window before planning is attempted, so bursty noise
+//!    cannot thrash placement and a stable workload pays the planner's
+//!    search cost at most once per interval, never per batch. The window
+//!    restarts on every commit *and on every failed attempt*: gates must
+//!    judge *recent* load, or a long-stable server's ever-growing
+//!    profile would dilute later skew below the relative-gain and
+//!    payback thresholds forever (window starvation);
+//! 2. **relative gain** — predicted makespan must improve by at least
+//!    `min_gain_frac`;
+//! 3. **payback** — the per-batch predicted gain must repay the α–β
+//!    migration cost within `payback_batches` batches.
+
+use crate::config::MoeConfig;
+use crate::moe::exec::ForwardStats;
+
+use super::plan::PlacementPlan;
+use super::planner::{Planner, Strategy};
+use super::profile::LoadProfile;
+
+/// Hysteresis knobs for online replanning.
+#[derive(Clone, Debug)]
+pub struct ReplanConfig {
+    pub strategy: Strategy,
+    /// Batches that must be observed before a proposal can fire.
+    pub min_interval_batches: usize,
+    /// Minimum relative predicted-makespan gain (0.05 = 5%).
+    pub min_gain_frac: f64,
+    /// The migration cost must be repaid within this many batches of
+    /// predicted per-batch gain.
+    pub payback_batches: f64,
+}
+
+impl Default for ReplanConfig {
+    fn default() -> ReplanConfig {
+        ReplanConfig {
+            strategy: Strategy::Refined,
+            min_interval_batches: 8,
+            min_gain_frac: 0.05,
+            payback_batches: 32.0,
+        }
+    }
+}
+
+/// One expert relocation inside a [`MigrationPlan`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExpertMove {
+    pub expert: usize,
+    pub from: usize,
+    pub to: usize,
+    pub bytes: u64,
+}
+
+/// A proposed placement change: what moves, what it costs, what it buys.
+#[derive(Clone, Debug)]
+pub struct MigrationPlan {
+    pub plan: PlacementPlan,
+    pub moves: Vec<ExpertMove>,
+    /// Expert-parameter bytes that must cross the interconnect.
+    pub migration_bytes: u64,
+    /// α–β time to move them.
+    pub migration_s: f64,
+    /// Predicted makespan of the *current* plan over the observed
+    /// profile (accumulated across the window's batches).
+    pub predicted_makespan_before_s: f64,
+    /// Predicted makespan of the proposed plan over the same profile.
+    pub predicted_makespan_after_s: f64,
+    /// Batches in the observation window the prediction is based on.
+    pub window_batches: usize,
+}
+
+impl MigrationPlan {
+    pub fn predicted_gain_s(&self) -> f64 {
+        self.predicted_makespan_before_s - self.predicted_makespan_after_s
+    }
+
+    pub fn predicted_gain_frac(&self) -> f64 {
+        self.predicted_gain_s()
+            / self.predicted_makespan_before_s.max(1e-12)
+    }
+
+    /// Predicted makespan saved per batch.
+    pub fn gain_per_batch_s(&self) -> f64 {
+        self.predicted_gain_s() / self.window_batches.max(1) as f64
+    }
+}
+
+/// Accumulates load observations and proposes gated migrations.
+#[derive(Clone, Debug)]
+pub struct Replanner {
+    pub cfg: ReplanConfig,
+    planner: Planner,
+    profile: LoadProfile,
+    n_ffn_experts: usize,
+    /// Committed replans so far.
+    pub replans: usize,
+}
+
+impl Replanner {
+    pub fn new(
+        planner: Planner,
+        cfg: ReplanConfig,
+        n_ffn_experts: usize,
+    ) -> Replanner {
+        Replanner {
+            cfg,
+            planner,
+            profile: LoadProfile::new(n_ffn_experts),
+            n_ffn_experts,
+            replans: 0,
+        }
+    }
+
+    pub fn profile(&self) -> &LoadProfile {
+        &self.profile
+    }
+
+    pub fn planner(&self) -> &Planner {
+        &self.planner
+    }
+
+    /// Record one executed batch's per-layer FFN loads.
+    pub fn observe_loads(&mut self, loads: &[Vec<u64>]) {
+        self.profile.observe_loads(loads);
+    }
+
+    /// Record one executed batch from its forward stats.
+    pub fn observe(&mut self, stats: &ForwardStats, cfg: &MoeConfig) {
+        self.profile.observe_stats(stats, cfg);
+    }
+
+    /// Propose a migration away from `current`, or `None` while the
+    /// hysteresis gates hold. Call [`Replanner::committed`] once a
+    /// returned migration has been applied.
+    ///
+    /// Planning is attempted only once the window holds at least
+    /// `min_interval_batches` (the local-search planner is far too
+    /// expensive to run on every served batch), and a failed attempt
+    /// restarts the window — so the next attempt is another full
+    /// interval away *and* is judged on fresh loads, never against a
+    /// stale accumulation of the whole uptime.
+    pub fn maybe_replan(
+        &mut self,
+        current: &PlacementPlan,
+    ) -> Option<MigrationPlan> {
+        let interval = self.cfg.min_interval_batches.max(1);
+        if self.profile.batches < interval {
+            return None;
+        }
+        let proposal = self.attempt(current);
+        if proposal.is_none() {
+            self.profile = LoadProfile::new(self.n_ffn_experts);
+        }
+        proposal
+    }
+
+    /// One ungated planning attempt over the current window.
+    fn attempt(&self, current: &PlacementPlan) -> Option<MigrationPlan> {
+        let proposed = self
+            .planner
+            .plan(self.cfg.strategy, current.n_devices(), &self.profile)
+            .ok()?;
+        if proposed == *current {
+            return None;
+        }
+        let before =
+            self.planner.cost.score(current, &self.profile).makespan_s;
+        let after =
+            self.planner.cost.score(&proposed, &self.profile).makespan_s;
+        let moves: Vec<ExpertMove> = current
+            .diff(&proposed)
+            .into_iter()
+            .map(|(expert, from, to)| ExpertMove {
+                expert,
+                from,
+                to,
+                bytes: self.planner.cost.expert_bytes,
+            })
+            .collect();
+        let migration_bytes: u64 = moves.iter().map(|m| m.bytes).sum();
+        let mig = MigrationPlan {
+            plan: proposed,
+            moves,
+            migration_bytes,
+            migration_s: self.planner.cost.migration_s(migration_bytes),
+            predicted_makespan_before_s: before,
+            predicted_makespan_after_s: after,
+            window_batches: self.profile.batches,
+        };
+        if mig.predicted_gain_s() <= 0.0 {
+            return None;
+        }
+        if mig.predicted_gain_frac() < self.cfg.min_gain_frac {
+            return None;
+        }
+        if mig.gain_per_batch_s() * self.cfg.payback_batches
+            <= mig.migration_s
+        {
+            return None;
+        }
+        Some(mig)
+    }
+
+    /// The proposed migration was applied: start a fresh observation
+    /// window (this is the hysteresis — another replan cannot fire for
+    /// at least `min_interval_batches` more batches).
+    pub fn committed(&mut self) {
+        self.profile = LoadProfile::new(self.n_ffn_experts);
+        self.replans += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::cost::CostModel;
+
+    fn replanner(min_interval: usize) -> Replanner {
+        let cost = CostModel::from_config(&MoeConfig::preset("test"));
+        Replanner::new(
+            Planner::new(cost),
+            ReplanConfig {
+                min_interval_batches: min_interval,
+                ..ReplanConfig::default()
+            },
+            4,
+        )
+    }
+
+    /// A load pattern whose hot experts collide under round-robin on two
+    /// devices (experts 0 and 2 both map to device 0).
+    fn colliding_loads() -> Vec<Vec<u64>> {
+        vec![vec![400, 2, 400, 2], vec![380, 4, 420, 2]]
+    }
+
+    #[test]
+    fn fires_after_interval_and_resets_on_commit() {
+        let mut rp = replanner(3);
+        let current = PlacementPlan::round_robin(4, 2);
+        for _ in 0..2 {
+            rp.observe_loads(&colliding_loads());
+            assert!(
+                rp.maybe_replan(&current).is_none(),
+                "must hold until the interval is observed"
+            );
+        }
+        rp.observe_loads(&colliding_loads());
+        let mig = rp
+            .maybe_replan(&current)
+            .expect("skewed profile past interval must fire");
+        assert!(mig.predicted_gain_s() > 0.0);
+        assert!(mig.predicted_gain_frac() >= rp.cfg.min_gain_frac);
+        assert!(!mig.moves.is_empty());
+        assert_eq!(
+            mig.migration_bytes,
+            mig.moves.len() as u64 * rp.planner.cost.expert_bytes
+        );
+        // Hot experts separated in the proposal.
+        assert_ne!(mig.plan.owner(0), mig.plan.owner(2));
+        // Commit starts a fresh window: the gate closes again.
+        rp.committed();
+        assert_eq!(rp.replans, 1);
+        assert!(rp.maybe_replan(&mig.plan).is_none());
+        // A failed attempt (balanced window -> proposal == current)
+        // restarts the window, so gates always judge recent load and a
+        // long-stable server cannot be starved out of ever replanning.
+        for _ in 0..3 {
+            rp.observe_loads(&[vec![50, 50, 50, 50],
+                               vec![50, 50, 50, 50]]);
+        }
+        assert!(rp.maybe_replan(&current).is_none());
+        assert_eq!(rp.profile().batches, 0, "failed attempt must reset");
+        // Skew returning after the reset clears the gates within one
+        // fresh interval — undiluted by the balanced history.
+        for _ in 0..3 {
+            rp.observe_loads(&colliding_loads());
+        }
+        assert!(rp.maybe_replan(&current).is_some());
+    }
+
+    #[test]
+    fn balanced_load_never_fires() {
+        let mut rp = replanner(1);
+        let current = PlacementPlan::round_robin(4, 2);
+        for _ in 0..10 {
+            rp.observe_loads(&[vec![100, 100, 100, 100]]);
+        }
+        assert!(rp.maybe_replan(&current).is_none());
+        assert_eq!(rp.replans, 0);
+    }
+
+    #[test]
+    fn small_gain_is_suppressed_by_min_gain_frac() {
+        let mut rp = replanner(1);
+        rp.cfg.min_gain_frac = 0.5; // demand an (unachievable) 50% win
+        let current = PlacementPlan::round_robin(4, 2);
+        rp.observe_loads(&colliding_loads());
+        assert!(rp.maybe_replan(&current).is_none());
+        // The failed attempt reset the window; with the default
+        // threshold a fresh skewed window fires.
+        rp.cfg.min_gain_frac = 0.05;
+        rp.observe_loads(&colliding_loads());
+        assert!(rp.maybe_replan(&current).is_some());
+    }
+
+    #[test]
+    fn payback_gate_blocks_tiny_windows_with_big_migrations() {
+        let mut rp = replanner(1);
+        rp.cfg.payback_batches = 0.0; // nothing can ever repay
+        let current = PlacementPlan::round_robin(4, 2);
+        rp.observe_loads(&colliding_loads());
+        assert!(rp.maybe_replan(&current).is_none());
+    }
+
+    #[test]
+    fn proposal_equal_to_current_is_not_a_migration() {
+        let mut rp = replanner(1);
+        let current = PlacementPlan::round_robin(4, 2);
+        rp.observe_loads(&colliding_loads());
+        let mig = rp.maybe_replan(&current).unwrap();
+        // Once on the proposed plan, the same profile proposes no move.
+        assert!(rp.maybe_replan(&mig.plan).is_none());
+    }
+}

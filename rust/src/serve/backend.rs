@@ -38,6 +38,13 @@ pub trait ServeBackend: Send {
 
     /// Human-readable backend label for reports.
     fn label(&self) -> String;
+
+    /// Placement replans applied since last asked (the scheduler drains
+    /// this after every batch into `ServingMetrics::replans`). Backends
+    /// without online replanning report zero.
+    fn take_replans(&mut self) -> u64 {
+        0
+    }
 }
 
 impl ServeBackend for MoeEngine {
@@ -64,13 +71,24 @@ impl ServeBackend for ClusterSim {
         self.cfg.d_model
     }
 
+    /// One served batch. Afterwards the batch's load histogram feeds the
+    /// attached [`Replanner`] (if any), which may migrate FFN experts —
+    /// so replanning happens strictly *between* batches, never while one
+    /// is executing, and outputs stay bitwise placement-independent.
+    ///
+    /// [`Replanner`]: crate::placement::Replanner
     fn forward(&mut self, tokens: &Tensor) -> Result<(Tensor, ForwardStats)> {
         let (y, report) = ClusterSim::forward(self, tokens);
+        self.note_batch(&report.stats);
         Ok((y, report.stats))
     }
 
     fn label(&self) -> String {
         format!("cluster(devices={})", self.topo.n_devices)
+    }
+
+    fn take_replans(&mut self) -> u64 {
+        self.take_replan_count()
     }
 }
 

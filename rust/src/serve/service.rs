@@ -366,6 +366,9 @@ fn execute_batch(
     let t0 = Instant::now();
     let result = backend.forward(&batch.tokens);
     let exec = t0.elapsed();
+    // Drained after forward: a replanning backend migrates experts
+    // between batches, inside its forward hook.
+    let replans = backend.take_replans();
     {
         let mut m = shared.metrics.lock().unwrap();
         if m.batches == 0 {
@@ -373,6 +376,7 @@ fn execute_batch(
                 t0.duration_since(shared.started).as_secs_f64();
         }
         m.batches += 1;
+        m.replans += replans;
         if let Ok((_, stats)) = &result {
             m.merge_forward(stats);
         }

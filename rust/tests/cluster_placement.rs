@@ -1,0 +1,275 @@
+//! Placement acceptance tests (ISSUE 3 / DESIGN.md §10):
+//!
+//! (a) the default round-robin plan reproduces the unplanned cluster's
+//!     outputs **bitwise** — installing `PlacementPlan::round_robin` is a
+//!     no-op in every observable way;
+//! (b) on a skewed routing workload the refined plan strictly reduces the
+//!     simulated (analytic, deterministic) makespan and the mean device
+//!     load CV versus round-robin — while model outputs stay bitwise
+//!     identical, because placement may never change math;
+//! plus the online-replanning path: a `Replanner` attached to the cluster
+//! backend migrates experts between served batches and the serving
+//! metrics report it.
+
+use moepp::bench::workload::skewed_batches;
+use moepp::cluster::sim::ClusterSim;
+use moepp::cluster::topology::Topology;
+use moepp::config::MoeConfig;
+use moepp::placement::{
+    CostModel, LoadProfile, PlacementPlan, Planner, ReplanConfig,
+    Replanner, Strategy,
+};
+use moepp::serve::{MoeService, ServiceConfig};
+use moepp::tensor::Tensor;
+use moepp::util::rng::Rng;
+
+fn profile_of(
+    sim: &ClusterSim,
+    cfg: &MoeConfig,
+    batches: &[Tensor],
+) -> LoadProfile {
+    let mut profile = LoadProfile::new(cfg.n_ffn_experts);
+    for b in batches {
+        let (_, rep) = sim.forward(b);
+        profile.observe_stats(&rep.stats, cfg);
+    }
+    profile
+}
+
+#[test]
+fn default_round_robin_plan_is_bitwise_identical_to_unplanned() {
+    let cfg = MoeConfig::preset("test");
+    let plain = ClusterSim::new(cfg.clone(), Topology::new(3), 7);
+    let planned = ClusterSim::new(
+        cfg.clone(),
+        Topology::new(3).with_placement(PlacementPlan::round_robin(
+            cfg.n_ffn_experts,
+            3,
+        )),
+        7,
+    );
+    let mut rng = Rng::new(21);
+    for t in [5usize, 32, 48] {
+        let x = Tensor::randn(&mut rng, &[t, cfg.d_model], 1.0);
+        let (ya, ra) = plain.forward(&x);
+        let (yb, rb) = planned.forward(&x);
+        assert_eq!(ya.data, yb.data, "outputs diverged at T={t}");
+        assert_eq!(ra.total_comm_bytes(), rb.total_comm_bytes());
+        for (la, lb) in ra.layers.iter().zip(&rb.layers) {
+            assert_eq!(la.device_load, lb.device_load);
+            assert_eq!(la.dropped, lb.dropped);
+        }
+        assert_eq!(
+            ra.stats.total_counts(),
+            rb.stats.total_counts()
+        );
+    }
+}
+
+#[test]
+fn any_placement_leaves_model_outputs_bitwise_identical() {
+    // Placement is pure layout: wherever the FFN experts live — round
+    // robin, reversed, or all piled onto one device — the combined
+    // hidden states are bit-for-bit the same.
+    let cfg = MoeConfig::preset("test"); // 4 FFN experts
+    let mut rng = Rng::new(3);
+    let x = Tensor::randn(&mut rng, &[40, cfg.d_model], 1.0);
+    let baseline = {
+        let sim = ClusterSim::new(cfg.clone(), Topology::new(2), 9);
+        sim.forward(&x)
+    };
+    let plans = [
+        PlacementPlan::from_owner(vec![1, 0, 1, 0], 2).unwrap(),
+        PlacementPlan::from_owner(vec![0, 0, 0, 0], 2).unwrap(),
+        PlacementPlan::from_owner(vec![1, 1, 0, 0], 2).unwrap(),
+        PlacementPlan::from_owner(vec![1, 1, 1, 1], 2).unwrap(),
+    ];
+    for plan in plans {
+        let sim = ClusterSim::new(
+            cfg.clone(),
+            Topology::new(2).with_placement(plan.clone()),
+            9,
+        );
+        let (y, rep) = sim.forward(&x);
+        assert_eq!(
+            baseline.0.data, y.data,
+            "plan {:?} changed model outputs",
+            plan.owners()
+        );
+        // Routing/accounting identical too — only *where* work ran moved.
+        assert_eq!(
+            baseline.1.stats.total_counts(),
+            rep.stats.total_counts()
+        );
+        let base_load: usize = baseline.1.layers.iter()
+            .map(|l| l.device_load.iter().sum::<usize>()).sum();
+        let load: usize = rep.layers.iter()
+            .map(|l| l.device_load.iter().sum::<usize>()).sum();
+        assert_eq!(base_load, load);
+    }
+}
+
+#[test]
+fn refined_plan_strictly_beats_round_robin_on_skewed_routing() {
+    // Acceptance criterion (b). Which experts run hot depends on the
+    // (random) router weights, so search a few seeds for a workload
+    // whose hot experts collide under round-robin — the planner's
+    // never-worse guarantee holds for every seed (asserted in the
+    // loop); strict improvement is asserted on the found seed.
+    let cfg = MoeConfig::preset("sm-8e"); // 8 FFN experts
+    let n_dev = 4;
+    let tokens = 128;
+    let cost = CostModel::from_config(&cfg);
+    let planner = Planner::new(cost.clone());
+    let mut found = None;
+    for seed in 0..16u64 {
+        let mut rng = Rng::new(seed);
+        let batches =
+            skewed_batches(&mut rng, 2, tokens, cfg.d_model);
+        let sim =
+            ClusterSim::new(cfg.clone(), Topology::new(n_dev), seed);
+        let profile = profile_of(&sim, &cfg, &batches);
+        let rr = planner
+            .plan(Strategy::RoundRobin, n_dev, &profile)
+            .unwrap();
+        let refined = planner
+            .plan(Strategy::Refined, n_dev, &profile)
+            .unwrap();
+        let m_rr = cost.score(&rr, &profile).makespan_s;
+        let m_ref = cost.score(&refined, &profile).makespan_s;
+        assert!(
+            m_ref <= m_rr * (1.0 + 1e-9),
+            "never-worse violated at seed {seed}: {m_ref} vs {m_rr}"
+        );
+        // Demand a solid (>= 5%) predicted win: the strict per-batch
+        // assertions below then hold with a wide margin (the two
+        // skewed batches share one prototype set, so per-batch loads
+        // mirror the aggregated profile the planner optimised).
+        if m_ref < m_rr * 0.95 {
+            found = Some((seed, batches, refined));
+            break;
+        }
+    }
+    let (seed, batches, refined) =
+        found.expect("no seed in 0..16 produced improvable skew");
+
+    let sim_rr =
+        ClusterSim::new(cfg.clone(), Topology::new(n_dev), seed);
+    let sim_ref = ClusterSim::new(
+        cfg.clone(),
+        Topology::new(n_dev).with_placement(refined),
+        seed,
+    );
+    let c = cost.compute_s_per_assignment;
+    let (mut mk_rr, mut mk_ref) = (0.0, 0.0);
+    let (mut cv_rr, mut cv_ref) = (0.0, 0.0);
+    for b in &batches {
+        let (y_rr, rep_rr) = sim_rr.forward(b);
+        let (y_ref, rep_ref) = sim_ref.forward(b);
+        // Placement may never change math.
+        assert_eq!(y_rr.data, y_ref.data);
+        mk_rr += rep_rr.modeled_makespan(c);
+        mk_ref += rep_ref.modeled_makespan(c);
+        cv_rr += rep_rr.mean_load_cv();
+        cv_ref += rep_ref.mean_load_cv();
+    }
+    assert!(
+        mk_ref < mk_rr,
+        "refined modeled makespan {mk_ref} !< round-robin {mk_rr}"
+    );
+    assert!(
+        cv_ref < cv_rr,
+        "refined mean load CV {cv_ref} !< round-robin {cv_rr}"
+    );
+}
+
+fn test_replanner(cfg: &MoeConfig) -> Replanner {
+    Replanner::new(
+        Planner::new(CostModel::from_config(cfg)),
+        ReplanConfig {
+            strategy: Strategy::Refined,
+            min_interval_batches: 2,
+            min_gain_frac: 0.01,
+            payback_batches: 1e9,
+        },
+        cfg.n_ffn_experts,
+    )
+}
+
+/// Drive the replanning cluster directly (forward + note_batch = exactly
+/// what the serving backend does per batch); returns committed replans.
+fn drive_direct(
+    cfg: &MoeConfig,
+    n_dev: usize,
+    seed: u64,
+    batches: &[Tensor],
+) -> (usize, Vec<Tensor>) {
+    let mut sim =
+        ClusterSim::new(cfg.clone(), Topology::new(n_dev), seed)
+            .with_replanner(test_replanner(cfg));
+    let mut outs = Vec::new();
+    for b in batches {
+        let (y, rep) = sim.forward(b);
+        sim.note_batch(&rep.stats);
+        outs.push(y);
+    }
+    (sim.replan_count(), outs)
+}
+
+#[test]
+fn online_replanning_migrates_between_batches_and_reports_in_metrics() {
+    let cfg = MoeConfig::preset("test");
+    let n_dev = 2;
+    // Find a seed whose skewed workload makes the replanner fire when
+    // driven directly.
+    let mut found = None;
+    for seed in 0..24u64 {
+        let mut rng = Rng::new(seed ^ 0xC0FFEE);
+        let batches = skewed_batches(&mut rng, 6, 48, cfg.d_model);
+        let (replans, outs) = drive_direct(&cfg, n_dev, seed, &batches);
+        if replans >= 1 {
+            found = Some((seed, batches, replans, outs));
+            break;
+        }
+    }
+    let (seed, batches, direct_replans, direct_outs) =
+        found.expect("no seed in 0..24 triggered the replanner");
+
+    // Migrations never changed outputs: a plain round-robin cluster on
+    // the same weights produces bit-identical results for every batch,
+    // including those executed after experts moved.
+    let plain = ClusterSim::new(cfg.clone(), Topology::new(n_dev), seed);
+    for (b, y_direct) in batches.iter().zip(&direct_outs) {
+        let (y, _) = plain.forward(b);
+        assert_eq!(y.data, y_direct.data);
+    }
+
+    // The serving path reproduces the same migrations: one request per
+    // batch (submit → wait), so the backend sees the identical batch
+    // sequence, and the scheduler surfaces the count in ServingMetrics.
+    let sim = ClusterSim::new(cfg.clone(), Topology::new(n_dev), seed)
+        .with_replanner(test_replanner(&cfg));
+    let service = MoeService::start(
+        sim,
+        ServiceConfig {
+            batcher: moepp::coordinator::batcher::BatcherConfig {
+                max_tokens: 48,
+                max_wait: std::time::Duration::ZERO,
+            },
+            ..ServiceConfig::default()
+        },
+    );
+    for (b, y_direct) in batches.iter().zip(&direct_outs) {
+        let h = service.submit_tokens(b.clone()).unwrap();
+        let resp = h.wait().unwrap();
+        assert_eq!(resp.output.data, y_direct.data);
+    }
+    let m = service.shutdown();
+    assert_eq!(m.batches, batches.len() as u64);
+    assert_eq!(
+        m.replans, direct_replans as u64,
+        "serving metrics must report the backend's replans"
+    );
+    assert!(m.replans >= 1);
+    assert!(m.report().contains("replans="));
+}
