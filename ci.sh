@@ -16,15 +16,16 @@ run() {
     "$@"
 }
 
-# Build, failing on any warning in the serve/ or placement/ modules
-# (their CI gates). Touch the crate root so cargo re-emits warnings even
-# on a warm cache.
+# Build, failing on any warning in the gated modules (serve/, placement/,
+# tensor/, moe/, bench/). Touch the crate root so cargo re-emits warnings
+# even on a warm cache.
 touch src/lib.rs
-echo "==> cargo build --release (warnings in src/serve/ and src/placement/ are fatal)"
+echo "==> cargo build --release (warnings in src/{serve,placement,tensor,moe,bench}/ are fatal)"
 build_log=$(mktemp)
 cargo build --release 2>&1 | tee "$build_log"
-if grep -A3 '^warning' "$build_log" | grep -q 'src/serve/\|src/placement/'; then
-    echo "ci.sh: warnings in rust/src/serve/ or rust/src/placement/ — fix them" >&2
+if grep -A3 '^warning' "$build_log" \
+    | grep -q 'src/serve/\|src/placement/\|src/tensor/\|src/moe/\|src/bench/'; then
+    echo "ci.sh: warnings in a gated module (serve/placement/tensor/moe/bench) — fix them" >&2
     exit 1
 fi
 rm -f "$build_log"
@@ -40,6 +41,11 @@ run cargo run --release --quiet -- serve --preset sm-8e --requests 64 \
 # and re-simulate each (also writes BENCH_placement.json).
 run cargo run --release --quiet -- placement --devices 4 --profile skewed \
     --tokens 128 --batches 2
+
+# Expert-forward smoke: batch vs shard partitioning on uniform + skewed
+# routing (writes BENCH_forward.json — the perf-trajectory artifact).
+run cargo run --release --quiet -- bench --forward --presets sm-8e \
+    --workers 1,4 --tokens 96 --batches 2
 
 if [ "${1:-}" != "fast" ]; then
     if cargo clippy --version >/dev/null 2>&1; then

@@ -7,7 +7,7 @@
 
 use moepp::bench::tables::bench_engine;
 use moepp::config::MoeConfig;
-use moepp::coordinator::engine::MoeEngine;
+use moepp::coordinator::engine::{MoeEngine, Partition};
 
 const TOKENS: usize = 256;
 
@@ -15,16 +15,16 @@ fn main() -> anyhow::Result<()> {
     println!("== expert_forward: MoE vs MoE++ (native backend) ==");
     for preset in ["sm-8e", "sm-16e"] {
         let vcfg = MoeConfig::preset(&format!("{preset}:vanilla"));
-        let vengine = MoeEngine::native(vcfg, 0);
+        let mut vengine = MoeEngine::native(vcfg, 0);
         let v = bench_engine(&format!("vanilla {preset} t={TOKENS}"),
-                             &vengine, TOKENS, 0)?;
+                             &mut vengine, TOKENS, 0)?;
         println!("{}", v.report());
         for tau in [0.1, 0.5, 0.75] {
             let cfg = MoeConfig { tau, ..MoeConfig::preset(preset) };
-            let engine = MoeEngine::native(cfg, 0);
+            let mut engine = MoeEngine::native(cfg, 0);
             let r = bench_engine(
                 &format!("moepp   {preset} t={TOKENS} tau={tau}"),
-                &engine, TOKENS, 0)?;
+                &mut engine, TOKENS, 0)?;
             println!(
                 "{}   (+{:.1}% vs vanilla)",
                 r.report(),
@@ -34,27 +34,32 @@ fn main() -> anyhow::Result<()> {
     }
 
     println!();
-    println!("== parallel FFN micro-batches: worker sweep \
+    println!("== token-parallel FFN: worker x partition sweep \
               (NativeBatched backend) ==");
     for preset in ["sm-8e", "sm-16e"] {
         let mut serial_mean = 0.0f64;
-        for workers in [1usize, 2, 4] {
-            let engine = MoeEngine::native_with_workers(
-                MoeConfig::preset(preset), 0, workers);
-            let r = bench_engine(
-                &format!("moepp {preset} t={TOKENS} workers={workers}"),
-                &engine, TOKENS, 0)?;
-            let tput = TOKENS as f64 / r.mean_s;
-            if workers == 1 {
-                serial_mean = r.mean_s;
-                println!("{}   {:>10.0} tokens/s", r.report(), tput);
-            } else {
-                println!(
-                    "{}   {:>10.0} tokens/s  ({:.2}x vs serial)",
-                    r.report(),
-                    tput,
-                    serial_mean / r.mean_s
-                );
+        for partition in Partition::all() {
+            for workers in [1usize, 2, 4] {
+                let mut engine = MoeEngine::native_with_workers(
+                    MoeConfig::preset(preset), 0, workers)
+                    .with_partition(partition);
+                let r = bench_engine(
+                    &format!(
+                        "moepp {preset} t={TOKENS} {} workers={workers}",
+                        partition.label()),
+                    &mut engine, TOKENS, 0)?;
+                let tput = TOKENS as f64 / r.mean_s;
+                if workers == 1 && partition == Partition::Batch {
+                    serial_mean = r.mean_s;
+                    println!("{}   {:>10.0} tokens/s", r.report(), tput);
+                } else {
+                    println!(
+                        "{}   {:>10.0} tokens/s  ({:.2}x vs serial)",
+                        r.report(),
+                        tput,
+                        serial_mean / r.mean_s
+                    );
+                }
             }
         }
     }

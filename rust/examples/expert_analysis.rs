@@ -15,7 +15,7 @@ use moepp::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     let cfg = MoeConfig::preset("sm-8e");
-    let engine = MoeEngine::native(cfg.clone(), 0);
+    let mut engine = MoeEngine::native(cfg.clone(), 0);
     let mut rng = Rng::new(11);
 
     // --- Fig. 4: expert-load distribution per task ------------------------
@@ -25,7 +25,7 @@ fn main() -> anyhow::Result<()> {
         256,
         cfg.d_model,
     );
-    let loads = load::task_level_load(&engine, &tasks)?;
+    let loads = load::task_level_load(&mut engine, &tasks)?;
     println!("{}", load::render_layer_report(&cfg, &loads, 0));
 
     // --- Fig. 5: FFN activations per token by frequency -------------------

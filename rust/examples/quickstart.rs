@@ -20,8 +20,8 @@ fn main() -> anyhow::Result<()> {
 
     // 2. Build the serving engine (native expert backend) and its vanilla
     //    twin at the same parameter count.
-    let moepp = MoeEngine::native(cfg.clone(), 0);
-    let vanilla =
+    let mut moepp = MoeEngine::native(cfg.clone(), 0);
+    let mut vanilla =
         MoeEngine::native(MoeConfig::preset("sm-8e:vanilla"), 0);
 
     // 3. Push one batch of 256 tokens through the full MoE layer stack.

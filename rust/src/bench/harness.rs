@@ -12,6 +12,7 @@ use anyhow::Result;
 use crate::cluster::sim::{ClusterSim, SimReport};
 use crate::cluster::topology::Topology;
 use crate::config::MoeConfig;
+use crate::coordinator::engine::{MoeEngine, Partition};
 use crate::moe::exec::AssignmentCounts;
 use crate::placement::{
     CostModel, LoadProfile, PlacementPlan, Planner, Strategy,
@@ -97,6 +98,181 @@ pub fn write_bench_json(name: &str, payload: &Json) -> Result<String> {
     Ok(path)
 }
 
+// ------------------------------------------------------ expert forward
+
+/// One configuration's row in the expert-forward sweep.
+#[derive(Clone, Debug)]
+pub struct ForwardSweepRow {
+    pub preset: String,
+    /// "uniform" (i.i.d. gaussian batches) or "skewed" (zipf prototype
+    /// batches that pile FFN load onto few hot experts).
+    pub workload: String,
+    /// "batch" (old batch-per-worker fan-out) or "shard" (token-parallel).
+    pub partition: String,
+    pub workers: usize,
+    /// Mean expert-forward time per batch (the Table 3 metric).
+    pub expert_forward_ms: f64,
+    /// Expert-forward throughput over the measured batches.
+    pub tokens_per_s: f64,
+    /// Arena growths after the measured run — should equal the warmup's
+    /// (steady state allocates nothing; reported for the perf trajectory).
+    pub arena_growths: u64,
+}
+
+/// The expert-forward sweep behind `moepp bench forward` and
+/// `BENCH_forward.json`: presets × {uniform, skewed} routing ×
+/// partition strategies × worker counts, measured on identical batches
+/// (same workload rng per preset/workload, same weight seed), so the
+/// shard-vs-batch ratio isolates the partitioning strategy — outputs are
+/// bitwise-identical across every cell by the §7/§11 equivalence
+/// contract, only the schedule changes.
+pub fn run_forward_sweep(
+    presets: &[&str],
+    workers_list: &[usize],
+    partitions: &[Partition],
+    tokens: usize,
+    n_batches: usize,
+    seed: u64,
+) -> Result<Vec<ForwardSweepRow>> {
+    anyhow::ensure!(n_batches > 0, "forward sweep needs >= 1 batch");
+    anyhow::ensure!(
+        !workers_list.is_empty() && !partitions.is_empty(),
+        "forward sweep needs >= 1 worker count and partition"
+    );
+    let mut rows = Vec::new();
+    for preset in presets {
+        let cfg = MoeConfig::preset(preset);
+        for (workload, skewed) in [("uniform", false), ("skewed", true)] {
+            let mut rng = Rng::new(seed ^ 0xF0D5);
+            let batches = if skewed {
+                super::workload::skewed_batches(
+                    &mut rng, n_batches, tokens, cfg.d_model,
+                )
+            } else {
+                super::workload::hidden_batches(
+                    &mut rng, n_batches, tokens, cfg.d_model,
+                )
+            };
+            for &partition in partitions {
+                for &workers in workers_list {
+                    let mut engine = MoeEngine::native_with_workers(
+                        cfg.clone(),
+                        seed,
+                        workers,
+                    )
+                    .with_partition(partition);
+                    // Warm: arena growth and routing caches settle here.
+                    let _ = engine.forward_stack(&batches[0])?;
+                    let mut expert_s = 0.0;
+                    for b in &batches {
+                        let (_, stats) = engine.forward_stack(b)?;
+                        expert_s += stats.expert_forward_s;
+                    }
+                    rows.push(ForwardSweepRow {
+                        preset: preset.to_string(),
+                        workload: workload.to_string(),
+                        partition: partition.label().to_string(),
+                        workers,
+                        expert_forward_ms: expert_s * 1e3
+                            / n_batches as f64,
+                        tokens_per_s: (tokens * n_batches) as f64
+                            / expert_s.max(1e-12),
+                        arena_growths: engine.arena_growths(),
+                    });
+                }
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// Shard-over-batch throughput ratio for a row's (preset, workload,
+/// workers) cell, when both partitions were measured.
+fn shard_speedup(rows: &[ForwardSweepRow], r: &ForwardSweepRow)
+    -> Option<f64> {
+    if r.partition != "shard" {
+        return None;
+    }
+    rows.iter()
+        .find(|b| {
+            b.partition == "batch"
+                && b.preset == r.preset
+                && b.workload == r.workload
+                && b.workers == r.workers
+        })
+        .map(|b| r.tokens_per_s / b.tokens_per_s.max(1e-12))
+}
+
+pub fn render_forward_sweep(rows: &[ForwardSweepRow]) -> String {
+    let mut s = format!(
+        "{:<8} {:<8} {:<6} {:>7} {:>14} {:>12} {:>10}\n",
+        "preset", "workload", "part", "workers", "expert fwd(ms)",
+        "tokens/s", "vs batch"
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:<8} {:<8} {:<6} {:>7} {:>14.3} {:>12.0} {:>10}\n",
+            r.preset,
+            r.workload,
+            r.partition,
+            r.workers,
+            r.expert_forward_ms,
+            r.tokens_per_s,
+            shard_speedup(rows, r)
+                .map(|x| format!("{x:.2}x"))
+                .unwrap_or_else(|| "-".into()),
+        ));
+    }
+    s
+}
+
+/// JSON payload for `BENCH_forward.json`.
+pub fn forward_sweep_json(
+    tokens: usize,
+    n_batches: usize,
+    rows: &[ForwardSweepRow],
+) -> Json {
+    Json::obj(vec![
+        ("bench", Json::str("forward")),
+        ("tokens", Json::num(tokens as f64)),
+        ("batches", Json::num(n_batches as f64)),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        let mut fields = vec![
+                            ("preset", Json::str(r.preset.clone())),
+                            ("workload", Json::str(r.workload.clone())),
+                            (
+                                "partition",
+                                Json::str(r.partition.clone()),
+                            ),
+                            ("workers", Json::num(r.workers as f64)),
+                            (
+                                "expert_forward_ms",
+                                Json::num(r.expert_forward_ms),
+                            ),
+                            ("tokens_per_s", Json::num(r.tokens_per_s)),
+                            (
+                                "arena_growths",
+                                Json::num(r.arena_growths as f64),
+                            ),
+                        ];
+                        if let Some(x) = shard_speedup(rows, r) {
+                            fields.push((
+                                "speedup_vs_batch",
+                                Json::num(x),
+                            ));
+                        }
+                        Json::obj(fields)
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
 // ---------------------------------------------------------- placement
 
 /// One strategy's row in the placement sweep.
@@ -149,7 +325,7 @@ pub fn run_placement_sweep(
     // the identical configuration twice).
     let mut profile = LoadProfile::new(cfg.n_ffn_experts);
     let baseline_reports: Vec<SimReport> = {
-        let sim =
+        let mut sim =
             ClusterSim::new(cfg.clone(), Topology::new(n_devices), seed);
         workload
             .iter()
@@ -179,7 +355,7 @@ pub fn run_placement_sweep(
         {
             &simulated[i].1
         } else {
-            let sim = ClusterSim::new(
+            let mut sim = ClusterSim::new(
                 cfg.clone(),
                 Topology::new(n_devices).with_placement(plan.clone()),
                 seed,
@@ -412,6 +588,48 @@ mod tests {
         assert_eq!(r.min_s, 1.0);
         assert_eq!(r.median_s, 2.0);
         assert!((r.mean_s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn forward_sweep_covers_grid_and_reports_speedups() {
+        let rows = run_forward_sweep(
+            &["test"],
+            &[1, 2],
+            &Partition::all(),
+            32,
+            2,
+            5,
+        )
+        .unwrap();
+        // 1 preset x 2 workloads x 2 partitions x 2 worker counts.
+        assert_eq!(rows.len(), 8);
+        for r in &rows {
+            assert!(r.tokens_per_s > 0.0, "{r:?}");
+            assert!(r.expert_forward_ms > 0.0, "{r:?}");
+        }
+        let rendered = render_forward_sweep(&rows);
+        assert!(rendered.contains("skewed"));
+        let j = forward_sweep_json(32, 2, &rows);
+        let back = Json::parse(&j.to_string()).unwrap();
+        let jrows = back.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(jrows.len(), 8);
+        // Every shard row carries a speedup ratio against its batch twin.
+        let shard_rows: Vec<_> = jrows
+            .iter()
+            .filter(|r| {
+                r.get("partition").and_then(Json::as_str)
+                    == Some("shard")
+            })
+            .collect();
+        assert!(!shard_rows.is_empty());
+        for r in shard_rows {
+            assert!(
+                r.get("speedup_vs_batch")
+                    .and_then(Json::as_f64)
+                    .is_some(),
+                "missing speedup field"
+            );
+        }
     }
 
     #[test]

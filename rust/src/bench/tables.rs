@@ -31,7 +31,7 @@ pub struct ThroughputRow {
 
 /// Measure mean expert-forward time of an engine over a workload.
 pub fn measure_expert_forward(
-    engine: &MoeEngine,
+    engine: &mut MoeEngine,
     batches: &[Tensor],
 ) -> Result<(f64, ForwardStats)> {
     // Warm.
@@ -63,8 +63,9 @@ pub fn table3_rows(
         let mut rng = Rng::new(seed);
         let batches =
             hidden_batches(&mut rng, n_batches, tokens, vcfg.d_model);
-        let vengine = MoeEngine::native(vcfg.clone(), seed);
-        let (v_time, v_stats) = measure_expert_forward(&vengine, &batches)?;
+        let mut vengine = MoeEngine::native(vcfg.clone(), seed);
+        let (v_time, v_stats) =
+            measure_expert_forward(&mut vengine, &batches)?;
         rows.push(ThroughputRow {
             model: format!("MoE {preset}"),
             tau: f64::NAN,
@@ -75,8 +76,9 @@ pub fn table3_rows(
         });
         for &tau in taus {
             let cfg = MoeConfig { tau, ..MoeConfig::preset(preset) };
-            let engine = MoeEngine::native(cfg.clone(), seed);
-            let (t, stats) = measure_expert_forward(&engine, &batches)?;
+            let mut engine = MoeEngine::native(cfg.clone(), seed);
+            let (t, stats) =
+                measure_expert_forward(&mut engine, &batches)?;
             rows.push(ThroughputRow {
                 model: format!("MoE++ {preset}"),
                 tau,
@@ -127,14 +129,14 @@ pub fn table1_rows(preset: &str, taus: &[f64], tokens: usize, seed: u64)
     let vcfg = MoeConfig::preset(&format!("{preset}:vanilla"));
     let mut rng = Rng::new(seed);
     let x = Tensor::randn(&mut rng, &[tokens, vcfg.d_model], 1.0);
-    let vengine = MoeEngine::native(vcfg, seed);
+    let mut vengine = MoeEngine::native(vcfg, seed);
     let (_, vstats) = vengine.forward_stack(&x)?;
     let v_ffn: usize =
         vstats.per_layer.iter().map(|l| l.ffn_assignments).sum();
     let mut rows = Vec::new();
     for &tau in taus {
         let cfg = MoeConfig { tau, ..MoeConfig::preset(preset) };
-        let engine = MoeEngine::native(cfg.clone(), seed);
+        let mut engine = MoeEngine::native(cfg.clone(), seed);
         let (_, stats) = engine.forward_stack(&x)?;
         let ffn: usize =
             stats.per_layer.iter().map(|l| l.ffn_assignments).sum();
@@ -182,7 +184,8 @@ pub fn cluster_rows(preset: &str, devices: &[usize], tokens: usize,
             let cfg = MoeConfig::preset(&format!("{preset}{variant}"));
             let mut rng = Rng::new(seed);
             let x = Tensor::randn(&mut rng, &[tokens, cfg.d_model], 1.0);
-            let sim = ClusterSim::new(cfg.clone(), Topology::new(nd), seed);
+            let mut sim =
+                ClusterSim::new(cfg.clone(), Topology::new(nd), seed);
             let (_, rep) = sim.forward(&x);
             rows.push(ClusterRow {
                 model: if variant.is_empty() {
@@ -217,7 +220,7 @@ pub fn render_cluster(rows: &[ClusterRow]) -> String {
 }
 
 /// Micro-bench of a single engine forward, criterion-style.
-pub fn bench_engine(name: &str, engine: &MoeEngine, tokens: usize,
+pub fn bench_engine(name: &str, engine: &mut MoeEngine, tokens: usize,
                     seed: u64) -> Result<BenchResult> {
     let mut rng = Rng::new(seed);
     let x = Tensor::randn(&mut rng, &[tokens, engine.cfg.d_model], 1.0);

@@ -18,6 +18,11 @@ impl TrafficMatrix {
         self.bytes[src * self.n + dst] += bytes;
     }
 
+    /// Zero every entry, keeping the allocation (scratch reuse).
+    pub fn clear(&mut self) {
+        self.bytes.fill(0);
+    }
+
     pub fn total_offdiag(&self) -> u64 {
         let mut t = 0;
         for s in 0..self.n {
@@ -88,6 +93,12 @@ impl LayerTraffic {
 
     pub fn total_time(&self, topo: &Topology) -> f64 {
         self.dispatch.alltoall_time(topo) + self.combine.alltoall_time(topo)
+    }
+
+    /// Zero both phases, keeping the allocations (scratch reuse).
+    pub fn clear(&mut self) {
+        self.dispatch.clear();
+        self.combine.clear();
     }
 
     pub fn total_bytes(&self) -> u64 {

@@ -23,6 +23,7 @@ use anyhow::Result;
 
 use crate::config::MoeConfig;
 use crate::coordinator::dispatch::DispatchPlan;
+use crate::moe::arena::{ExecArena, FfnArena};
 use crate::moe::balance::load_cv;
 use crate::moe::exec::{self, ExpertBackend, FfnLayerReport, ForwardStats};
 use crate::moe::weights::StackWeights;
@@ -137,6 +138,9 @@ pub struct ClusterSim {
     replanner: Option<Replanner>,
     /// Replans applied since the serving layer last collected the count.
     replans_unreported: u64,
+    /// Reusable stack-forward buffers (routing, per-layer y; the worker
+    /// backend keeps its own per-device tensors) — DESIGN.md §11.
+    arena: ExecArena,
 }
 
 impl ClusterSim {
@@ -159,6 +163,7 @@ impl ClusterSim {
             workers,
             replanner: None,
             replans_unreported: 0,
+            arena: ExecArena::new(),
         }
     }
 
@@ -257,7 +262,9 @@ impl ClusterSim {
 
     /// Run one batch [T, D] through the full stack on the cluster,
     /// returning the combined hidden states and the simulation report.
-    pub fn forward(&self, x: &Tensor) -> (Tensor, SimReport) {
+    /// `&mut self`: the sim's [`ExecArena`] backs the stack loop's
+    /// reusable buffers (DESIGN.md §11).
+    pub fn forward(&mut self, x: &Tensor) -> (Tensor, SimReport) {
         let mut backend = ClusterBackend {
             topo: &self.topo,
             workers: &self.workers,
@@ -265,6 +272,7 @@ impl ClusterSim {
         };
         let (y, stats, execs) = exec::forward_stack(
             &mut backend, &self.weights, &self.layer_cfgs, x,
+            &mut self.arena,
         )
         .expect("cluster execution is infallible");
         let layers = execs
@@ -297,12 +305,16 @@ struct ClusterBackend<'a> {
 }
 
 impl ExpertBackend for ClusterBackend<'_> {
+    // Gathers stage into per-device `WorkUnit` tensors that cross the
+    // (simulated) device boundary, so the host arena's pools do not
+    // apply here.
     fn execute_ffn(
         &mut self,
         layer: usize,
         plan: &DispatchPlan,
         h: &Tensor,
         y: &mut Tensor,
+        _arena: &mut FfnArena,
     ) -> Result<FfnLayerReport> {
         let (t, d) = h.dims2();
         let token_bytes = (d * 4) as u64;
@@ -386,7 +398,8 @@ mod tests {
 
     fn run(preset: &str, devices: usize, t: usize) -> SimReport {
         let cfg = MoeConfig::preset(preset);
-        let sim = ClusterSim::new(cfg.clone(), Topology::new(devices), 0);
+        let mut sim =
+            ClusterSim::new(cfg.clone(), Topology::new(devices), 0);
         let mut rng = Rng::new(42);
         let x = Tensor::randn(&mut rng, &[t, cfg.d_model], 1.0);
         sim.forward(&x).1
@@ -436,8 +449,8 @@ mod tests {
         // Cluster execution must be numerically interchangeable with the
         // single-process native engine (same weights seed).
         let cfg = MoeConfig::preset("test");
-        let sim = ClusterSim::new(cfg.clone(), Topology::new(3), 7);
-        let engine =
+        let mut sim = ClusterSim::new(cfg.clone(), Topology::new(3), 7);
+        let mut engine =
             crate::coordinator::engine::MoeEngine::native(cfg.clone(), 7);
         let mut rng = Rng::new(1);
         let x = Tensor::randn(&mut rng, &[32, cfg.d_model], 1.0);

@@ -5,9 +5,10 @@
 //! Interchangeable expert backends:
 //!
 //! * [`Backend::Native`] — the pure-Rust SwiGLU expert via
-//!   [`exec::NativeBatched`]: gathered micro-batches, allocation-free
-//!   batched kernels, and (with `workers > 1`) independent FFN
-//!   micro-batches fanned across the thread pool;
+//!   [`exec::NativeBatched`]: arena-backed gathers and scratch
+//!   (DESIGN.md §11), and (with `workers > 1`) the layer's FFN work cut
+//!   into (expert, row-range) shards fanned across the thread pool so a
+//!   hot expert no longer serialises the layer;
 //! * [`Backend::Pjrt`]   — the AOT-compiled Pallas kernel executed via the
 //!   PJRT runtime, with expert micro-batches padded to the nearest compiled
 //!   bucket (weights are pre-converted to literals once at engine build).
@@ -22,20 +23,23 @@ use anyhow::Result;
 
 use super::dispatch::DispatchPlan;
 use crate::config::MoeConfig;
+use crate::moe::arena::{ExecArena, FfnArena};
 use crate::moe::exec::{self, ExpertBackend, FfnLayerReport, NativeBatched};
 use crate::moe::weights::StackWeights;
 use crate::runtime::host::HostValue;
 use crate::runtime::{Executable, Runtime};
 use crate::tensor::Tensor;
 
-pub use crate::moe::exec::ForwardStats;
+pub use crate::moe::exec::{ForwardStats, Partition};
 
 /// Expert execution backend selector.
 pub enum Backend {
     /// Pure-Rust experts (always available). `workers` controls how many
-    /// threads fan out over independent FFN micro-batches per layer;
-    /// results are bitwise-identical for every worker count.
-    Native { workers: usize },
+    /// threads the per-layer FFN work fans out over and `partition` how
+    /// that work is cut (token shards by default; `Partition::Batch` is
+    /// the historical batch-per-worker baseline); results are
+    /// bitwise-identical for every worker count and partition.
+    Native { workers: usize, partition: Partition },
     /// AOT Pallas kernel via PJRT; holds pre-built weight literals per
     /// (layer, expert): [w1, w3, w2].
     Pjrt {
@@ -56,6 +60,9 @@ pub struct MoeEngine {
     pub layer_cfgs: Vec<MoeConfig>,
     pub weights: StackWeights,
     pub backend: Backend,
+    /// Reusable execution buffers (DESIGN.md §11) — one arena per engine,
+    /// which is one per scheduler when the engine backs a `MoeService`.
+    arena: ExecArena,
 }
 
 impl MoeEngine {
@@ -63,7 +70,9 @@ impl MoeEngine {
         MoeEngine::native_with_workers(cfg, seed, 1)
     }
 
-    /// Native engine fanning FFN micro-batches over `workers` threads.
+    /// Native engine fanning each layer's FFN work over `workers` threads
+    /// (token-shard partitioning by default; see
+    /// [`MoeEngine::with_partition`]).
     pub fn native_with_workers(
         cfg: MoeConfig,
         seed: u64,
@@ -75,8 +84,26 @@ impl MoeEngine {
             cfg,
             layer_cfgs,
             weights,
-            backend: Backend::Native { workers: workers.max(1) },
+            backend: Backend::Native {
+                workers: workers.max(1),
+                partition: Partition::default(),
+            },
+            arena: ExecArena::new(),
         }
+    }
+
+    /// Select the native backend's work partitioning (no-op for PJRT).
+    pub fn with_partition(mut self, p: Partition) -> MoeEngine {
+        if let Backend::Native { partition, .. } = &mut self.backend {
+            *partition = p;
+        }
+        self
+    }
+
+    /// Arena growth count (see [`ExecArena::growths`]): constant across
+    /// steady-state batches once warmed up — regression-tested.
+    pub fn arena_growths(&self) -> u64 {
+        self.arena.growths()
     }
 
     /// Build an engine whose layers carry fully heterogeneous configs
@@ -112,7 +139,11 @@ impl MoeEngine {
             cfg,
             layer_cfgs,
             weights,
-            backend: Backend::Native { workers: 1 },
+            backend: Backend::Native {
+                workers: 1,
+                partition: Partition::default(),
+            },
+            arena: ExecArena::new(),
         }
     }
 
@@ -167,19 +198,26 @@ impl MoeEngine {
                 weight_literals,
                 executables,
             },
+            arena: ExecArena::new(),
         })
     }
 
     /// Forward a token batch through every MoE layer (gating residuals
-    /// threaded), returning outputs and stats. `x` is [T, D].
-    pub fn forward_stack(&self, x: &Tensor) -> Result<(Tensor, ForwardStats)> {
+    /// threaded), returning outputs and stats. `x` is [T, D]. Takes
+    /// `&mut self` because the engine's [`ExecArena`] backs every
+    /// reusable buffer of the forward (DESIGN.md §11).
+    pub fn forward_stack(
+        &mut self,
+        x: &Tensor,
+    ) -> Result<(Tensor, ForwardStats)> {
         let mut native;
         let mut pjrt;
         let be: &mut dyn ExpertBackend = match &self.backend {
-            Backend::Native { workers } => {
+            Backend::Native { workers, partition } => {
                 native = NativeBatched {
                     layers: &self.weights.layers,
                     workers: *workers,
+                    partition: *partition,
                 };
                 &mut native
             }
@@ -188,8 +226,13 @@ impl MoeEngine {
                 &mut pjrt
             }
         };
-        let (y, stats, _) =
-            exec::forward_stack(be, &self.weights, &self.layer_cfgs, x)?;
+        let (y, stats, _) = exec::forward_stack(
+            be,
+            &self.weights,
+            &self.layer_cfgs,
+            x,
+            &mut self.arena,
+        )?;
         Ok((y, stats))
     }
 }
@@ -203,12 +246,15 @@ struct PjrtBackend<'a> {
 }
 
 impl ExpertBackend for PjrtBackend<'_> {
+    // The PJRT path stages through freshly-built literals (the XLA FFI
+    // owns the buffers), so it has no use for the arena's host pools.
     fn execute_ffn(
         &mut self,
         layer: usize,
         plan: &DispatchPlan,
         h: &Tensor,
         y: &mut Tensor,
+        _arena: &mut FfnArena,
     ) -> Result<FfnLayerReport> {
         let (_, d) = h.dims2();
         let max_bucket = *self
@@ -263,7 +309,7 @@ mod tests {
     #[test]
     fn native_engine_matches_reference_layer_stack() {
         let cfg = MoeConfig::preset("test");
-        let engine = MoeEngine::native(cfg.clone(), 11);
+        let mut engine = MoeEngine::native(cfg.clone(), 11);
         let mut rng = Rng::new(99);
         let x = Tensor::randn(&mut rng, &[24, cfg.d_model], 1.0);
         let (y, stats) = engine.forward_stack(&x).unwrap();
@@ -288,8 +334,9 @@ mod tests {
     fn moepp_engine_does_less_ffn_work_than_vanilla() {
         let mut rng = Rng::new(5);
         let x = Tensor::randn(&mut rng, &[128, 32], 1.0);
-        let e1 = MoeEngine::native(MoeConfig::preset("test"), 1);
-        let e2 = MoeEngine::native(MoeConfig::preset("test:vanilla"), 1);
+        let mut e1 = MoeEngine::native(MoeConfig::preset("test"), 1);
+        let mut e2 =
+            MoeEngine::native(MoeConfig::preset("test:vanilla"), 1);
         let (_, s1) = e1.forward_stack(&x).unwrap();
         let (_, s2) = e2.forward_stack(&x).unwrap();
         assert!(s1.mean_ffn_per_token() < s2.mean_ffn_per_token());
@@ -302,7 +349,8 @@ mod tests {
         let cfg = MoeConfig::preset("test"); // 2 layers -> per-layer taus
         let sched = crate::moe::layerwise::LayerSchedule::PerLayer(
             vec![1.0, 0.1]);
-        let engine = MoeEngine::native(cfg.clone(), 2).with_schedule(&sched);
+        let mut engine =
+            MoeEngine::native(cfg.clone(), 2).with_schedule(&sched);
         let mut rng = Rng::new(3);
         let x = Tensor::randn(&mut rng, &[128, cfg.d_model], 1.0);
         let (_, stats) = engine.forward_stack(&x).unwrap();
@@ -317,7 +365,7 @@ mod tests {
     #[test]
     fn stats_accounting_consistent() {
         let cfg = MoeConfig::preset("test");
-        let engine = MoeEngine::native(cfg.clone(), 3);
+        let mut engine = MoeEngine::native(cfg.clone(), 3);
         let mut rng = Rng::new(7);
         let x = Tensor::randn(&mut rng, &[64, cfg.d_model], 1.0);
         let (_, stats) = engine.forward_stack(&x).unwrap();
@@ -336,17 +384,23 @@ mod tests {
         let cfg = MoeConfig::preset("test");
         let mut rng = Rng::new(13);
         let x = Tensor::randn(&mut rng, &[96, cfg.d_model], 1.0);
-        let serial = MoeEngine::native_with_workers(cfg.clone(), 4, 1);
+        let mut serial = MoeEngine::native_with_workers(cfg.clone(), 4, 1);
         let (y1, s1) = serial.forward_stack(&x).unwrap();
-        for workers in [2, 4] {
-            let par =
-                MoeEngine::native_with_workers(cfg.clone(), 4, workers);
-            let (yw, sw) = par.forward_stack(&x).unwrap();
-            assert_eq!(y1.data, yw.data, "workers={workers} diverged");
-            for (a, b) in s1.per_layer.iter().zip(&sw.per_layer) {
-                assert_eq!(a.ffn_assignments, b.ffn_assignments);
-                assert_eq!(a.zc_assignments, b.zc_assignments);
-                assert_eq!(a.dropped, b.dropped);
+        for partition in Partition::all() {
+            for workers in [2, 4] {
+                let mut par =
+                    MoeEngine::native_with_workers(cfg.clone(), 4, workers)
+                        .with_partition(partition);
+                let (yw, sw) = par.forward_stack(&x).unwrap();
+                assert_eq!(
+                    y1.data, yw.data,
+                    "workers={workers} {} diverged", partition.label()
+                );
+                for (a, b) in s1.per_layer.iter().zip(&sw.per_layer) {
+                    assert_eq!(a.ffn_assignments, b.ffn_assignments);
+                    assert_eq!(a.zc_assignments, b.zc_assignments);
+                    assert_eq!(a.dropped, b.dropped);
+                }
             }
         }
     }
@@ -366,7 +420,7 @@ mod tests {
         c1.n_ffn_experts = 6;
         c1.n_const = 1; // 6 FFN + 1+1+1 ZC = 9 experts
         let cfgs = vec![c0.clone(), c1.clone()];
-        let engine = MoeEngine::heterogeneous(cfgs.clone(), 21);
+        let mut engine = MoeEngine::heterogeneous(cfgs.clone(), 21);
         assert_eq!(engine.weights.layers[0].ffn.len(), 4);
         assert_eq!(engine.weights.layers[1].ffn.len(), 6);
         let mut rng = Rng::new(4);

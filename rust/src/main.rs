@@ -6,7 +6,7 @@
 //!   train     --tag T --steps N             pretrain via train_step artifact
 //!   cluster   --preset P --devices A,B,..   expert-parallel deployment sim
 //!   placement --devices N --profile skewed  plan/score/compare FFN placement
-//!   bench     table1|table3|table3-quality|table4|table5|table6|fig3
+//!   bench     forward|table1|table3|table3-quality|table4|table5|table6|fig3
 //!   analyze   load|tokens|gating            figures 4 / 5 / 6
 //!
 //! Reports are printed and mirrored under reports/; sweeps also emit
@@ -118,16 +118,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // All serving goes through the MoeService continuous-batching API;
     // the backend choice only selects the ServeBackend behind it.
     let service = match backend {
-        // Parallel micro-batches are opt-in (--workers N): the scoped
-        // pool spawns threads per layer call, which only pays off once
+        // Parallel FFN work is opt-in (--workers N): the scoped pool
+        // spawns threads per layer call, which only pays off once
         // batches are large enough — serial stays the latency-safe
-        // default for small serve batches.
+        // default for small serve batches. --partition batch|shard
+        // selects the work split (token shards by default).
         "native" => MoeService::start(
             MoeEngine::native_with_workers(
                 cfg.clone(),
                 0,
                 args.get_usize("workers", 1),
-            ),
+            )
+            .with_partition(moepp::coordinator::engine::Partition::parse(
+                args.get_or("partition", "shard"),
+            )?),
             service_cfg,
         ),
         "pjrt" => {
@@ -415,11 +419,16 @@ fn quality_sweep(
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
-    let which = args
-        .positional
-        .first()
-        .map(String::as_str)
-        .unwrap_or("table3");
+    // `moepp bench forward` and `moepp bench --forward` both work (the
+    // flag form is what ci.sh smokes).
+    let which = if args.has("forward") {
+        "forward"
+    } else {
+        args.positional
+            .first()
+            .map(String::as_str)
+            .unwrap_or("table3")
+    };
     let steps = args.get_usize("steps", 300);
     let seed = args.get_usize("seed", 0) as u64;
     let own = |v: Vec<(&str, &str)>| -> Vec<(String, String)> {
@@ -428,6 +437,40 @@ fn cmd_bench(args: &Args) -> Result<()> {
             .collect()
     };
     match which {
+        "forward" => {
+            use moepp::coordinator::engine::Partition;
+            let presets: Vec<&str> =
+                args.get_or("presets", "sm-8e,md-16e").split(',').collect();
+            let workers: Vec<usize> = args
+                .get_or("workers", "1,2,4")
+                .split(',')
+                .map(|s| s.parse().context("--workers"))
+                .collect::<Result<_>>()?;
+            let partitions: Vec<Partition> =
+                match args.get_or("partition", "both") {
+                    "both" => Partition::all().to_vec(),
+                    one => vec![Partition::parse(one)?],
+                };
+            let tokens = args.get_usize("tokens", 256);
+            let batches = args.get_usize("batches", 4);
+            let rows = harness::run_forward_sweep(
+                &presets, &workers, &partitions, tokens, batches, seed,
+            )?;
+            let bench_path = harness::write_bench_json(
+                "forward",
+                &harness::forward_sweep_json(tokens, batches, &rows),
+            )?;
+            info!("wrote {bench_path}");
+            let body = format!(
+                "expert-forward sweep: {batches}x{tokens}-token batches, \
+                 uniform + skewed routing (seed {seed})\n\
+                 partition=batch is the old batch-per-worker fan-out; \
+                 shard splits hot experts across workers \
+                 (outputs bitwise-identical either way)\n\n{}",
+                harness::render_forward_sweep(&rows),
+            );
+            report("bench_forward", &body)
+        }
         "table1" => {
             let rows = tables::table1_rows(
                 args.get_or("preset", "sm-8e"),
@@ -531,7 +574,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
                     edge: 0.9, middle: 0.25, k: 2 }),
             ];
             for (name, sched) in schedules {
-                let engine = MoeEngine::native(cfg.clone(), seed)
+                let mut engine = MoeEngine::native(cfg.clone(), seed)
                     .with_schedule(&sched);
                 let _ = engine.forward_stack(&x)?;
                 let (_, stats) = engine.forward_stack(&x)?;
@@ -562,7 +605,7 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     match which {
         "load" => {
             // Fig. 4 / A–E: expert-load distribution per task per layer.
-            let engine = MoeEngine::native(cfg.clone(), 0);
+            let mut engine = MoeEngine::native(cfg.clone(), 0);
             let mut rng = Rng::new(11);
             let tasks = moepp::bench::workload::task_streams(
                 &mut rng,
@@ -570,7 +613,8 @@ fn cmd_analyze(args: &Args) -> Result<()> {
                 args.get_usize("tokens", 512),
                 cfg.d_model,
             );
-            let loads = stats::load::task_level_load(&engine, &tasks)?;
+            let loads =
+                stats::load::task_level_load(&mut engine, &tasks)?;
             let mut body = String::new();
             for layer in 0..cfg.n_layers {
                 body.push_str(&stats::load::render_layer_report(

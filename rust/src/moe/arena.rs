@@ -1,0 +1,345 @@
+//! [`ExecArena`] — the reusable buffer pool behind the expert-forward hot
+//! path (DESIGN.md §11).
+//!
+//! The serving loop used to allocate per layer and per micro-batch: a
+//! fresh `y`, fresh routing scores/probs/top-k, a gather tensor and FFN
+//! scratch per micro-batch, and a fresh dense output block per parallel
+//! worker. The arena owns all of those buffers instead; they grow
+//! monotonically to the largest shape seen and are reused across layers,
+//! batches and requests, so steady-state serving performs **zero heap
+//! allocations** for the listed buffers (dispatch-plan assembly and the
+//! returned `ForwardStats` still allocate — they are per-batch *outputs*,
+//! not compute scratch).
+//!
+//! Ownership/lifetime contract:
+//!
+//! * one arena per forward driver — `MoeEngine` and `ClusterSim` each own
+//!   one, which also makes it one-per-scheduler under `MoeService` (the
+//!   backend moves onto the scheduler thread);
+//! * [`crate::moe::exec::forward_stack`] borrows the arena for the whole
+//!   stack forward; backends receive only the [`FfnArena`] sub-pool via
+//!   `ExpertBackend::execute_ffn` and must get their gather/scratch/shard
+//!   buffers from it rather than allocating;
+//! * buffers never shrink; [`ExecArena::growths`] counts every backing
+//!   allocation that had to expand, which is what the steady-state
+//!   regression test pins to zero after the first batch.
+
+use crate::moe::experts::{FfnScratch, FFN_TOKEN_BLOCK};
+use crate::moe::router::{route_into, Routing, RouterWeights};
+use crate::tensor::Tensor;
+
+/// Assumed L1 data-cache budget the kernel tile hint targets (half of a
+/// typical 32 KiB L1d; only locality, never results, depends on it).
+const DEFAULT_L1_BUDGET_BYTES: usize = 16 * 1024;
+
+/// Up-projection column tile for `d_ff = f` under `l1_budget` bytes: the
+/// resident set per column is `FFN_TOKEN_BLOCK` hg + hl lanes plus the
+/// two streamed weight rows, 4 bytes each.
+pub fn pick_f_tile(f: usize, l1_budget: usize) -> usize {
+    let per_col = (2 * FFN_TOKEN_BLOCK + 2) * std::mem::size_of::<f32>();
+    let tile = (l1_budget / per_col).max(64) & !15;
+    tile.min(f).max(1)
+}
+
+/// The full execution arena threaded through `forward_stack`.
+pub struct ExecArena {
+    /// Routing buffers (scores / probs / top-k, plus the gating-residual
+    /// carry).
+    pub(crate) route: RouteArena,
+    /// The per-layer expert-output buffer `y` (`h += y` afterwards).
+    pub(crate) y: Tensor,
+    /// FFN-stage buffers handed to the backend.
+    pub(crate) ffn: FfnArena,
+    y_growths: u64,
+}
+
+impl Default for ExecArena {
+    fn default() -> Self {
+        ExecArena::new()
+    }
+}
+
+impl ExecArena {
+    pub fn new() -> ExecArena {
+        ExecArena {
+            route: RouteArena::new(),
+            y: Tensor::zeros(&[0, 0]),
+            ffn: FfnArena::new(),
+            y_growths: 0,
+        }
+    }
+
+    /// Total backing-allocation growths since construction (routing + y +
+    /// FFN pools + every shard buffer). Constant across batches once the
+    /// arena has warmed up on the workload's largest shapes.
+    pub fn growths(&self) -> u64 {
+        self.y_growths + self.route.growths + self.ffn.growths()
+    }
+
+    /// Shape `y` to `[t, d]` and zero it for the next layer.
+    pub(crate) fn prepare_y(&mut self, t: usize, d: usize) {
+        if self.y.reshape_in_place(&[t, d]) {
+            self.y_growths += 1;
+        }
+        self.y.data.fill(0.0);
+    }
+
+    /// Disjoint borrows for one layer execution: the routing decision
+    /// (shared), the `y` output buffer and the FFN sub-pool (both
+    /// exclusive).
+    pub(crate) fn split(
+        &mut self,
+    ) -> (&Routing, &mut Tensor, &mut FfnArena) {
+        (&self.route.routing, &mut self.y, &mut self.ffn)
+    }
+}
+
+// ------------------------------------------------------------- routing
+
+/// Reused routing state: the layer's [`Routing`] plus the previous
+/// layer's raw scores (the Eq. 6 gating-residual carry).
+pub(crate) struct RouteArena {
+    pub(crate) routing: Routing,
+    prev_scores: Tensor,
+    /// Parked per-token top-k vectors from batches larger than the
+    /// current one — revived on the next large batch so oscillating
+    /// batch sizes stay allocation-free.
+    topk_spare: Vec<Vec<(usize, f32)>>,
+    growths: u64,
+}
+
+impl RouteArena {
+    fn new() -> RouteArena {
+        RouteArena {
+            routing: Routing::empty(),
+            prev_scores: Tensor::zeros(&[0, 0]),
+            topk_spare: Vec::new(),
+            growths: 0,
+        }
+    }
+
+    /// Route one layer into the reused buffers. `use_prev` must be false
+    /// for the first layer of a stack — the carry holds the *previous
+    /// batch's* last scores until then.
+    pub(crate) fn route_layer(
+        &mut self,
+        x: &Tensor,
+        weights: &RouterWeights,
+        use_prev: bool,
+        k: usize,
+    ) {
+        let prev = if use_prev { Some(&self.prev_scores) } else { None };
+        route_into(
+            x,
+            weights,
+            prev,
+            k,
+            &mut self.routing,
+            &mut self.topk_spare,
+            &mut self.growths,
+        );
+    }
+
+    /// Retire the layer: its raw scores become the next layer's residual
+    /// input (buffer swap, no copy).
+    pub(crate) fn end_layer(&mut self) {
+        std::mem::swap(&mut self.prev_scores, &mut self.routing.scores);
+    }
+}
+
+// ----------------------------------------------------------- FFN stage
+
+/// What a backend may allocate from: serial gather + scratch, and the
+/// per-shard buffers of the token-parallel path.
+pub struct FfnArena {
+    /// Serial-path micro-batch gather buffer.
+    pub(crate) gather: Tensor,
+    /// Serial-path (and oracle) FFN scratch.
+    pub(crate) scratch: FfnScratch,
+    /// Shard descriptors of the current layer (rebuilt per layer, storage
+    /// reused).
+    pub(crate) shards: Vec<ShardSpec>,
+    /// One buffer set per in-flight shard; workers write disjoint entries.
+    pub(crate) shard_bufs: Vec<ShardBuf>,
+    pub(crate) l1_budget_bytes: usize,
+    pub(crate) growths: u64,
+}
+
+impl Default for FfnArena {
+    fn default() -> Self {
+        FfnArena::new()
+    }
+}
+
+impl FfnArena {
+    pub fn new() -> FfnArena {
+        FfnArena {
+            gather: Tensor::zeros(&[0, 0]),
+            scratch: FfnScratch::new(0),
+            shards: Vec::new(),
+            shard_bufs: Vec::new(),
+            l1_budget_bytes: DEFAULT_L1_BUDGET_BYTES,
+            growths: 0,
+        }
+    }
+
+    fn growths(&self) -> u64 {
+        self.growths
+            + self.shard_bufs.iter().map(|b| b.growths).sum::<u64>()
+    }
+
+    /// Cache hint: the up-projection column tile for `d_ff = f`.
+    pub fn f_tile(&self, f: usize) -> usize {
+        pick_f_tile(f, self.l1_budget_bytes)
+    }
+
+    /// Size the serial-path scratch for experts of width `f` over hidden
+    /// size `d`, installing the tile hint.
+    pub(crate) fn prepare_serial(&mut self, f: usize, d: usize) {
+        if self.scratch.ensure(f.max(d)) {
+            self.growths += 1;
+        }
+        self.scratch.f_tile = self.f_tile(f);
+    }
+
+    /// Grow the shard-buffer pool to at least `n` entries.
+    pub(crate) fn ensure_shard_bufs(&mut self, n: usize) {
+        if n > self.shard_bufs.capacity() {
+            self.growths += 1;
+        }
+        while self.shard_bufs.len() < n {
+            self.shard_bufs.push(ShardBuf::new());
+        }
+    }
+}
+
+/// Gather `tokens`' rows of `h` into the reused `gather` tensor.
+pub(crate) fn gather_rows(
+    gather: &mut Tensor,
+    h: &Tensor,
+    tokens: &[usize],
+    d: usize,
+    growths: &mut u64,
+) {
+    if gather.reshape_in_place(&[tokens.len(), d]) {
+        *growths += 1;
+    }
+    for (i, &tok) in tokens.iter().enumerate() {
+        gather.data[i * d..(i + 1) * d].copy_from_slice(h.row(tok));
+    }
+}
+
+/// One (expert micro-batch, row range) unit of FFN work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Index into `plan.ffn_batches`.
+    pub batch: usize,
+    /// First row of the batch this shard covers.
+    pub start: usize,
+    /// Rows covered.
+    pub len: usize,
+}
+
+/// Private working set of one shard: gather input, dense output block and
+/// kernel scratch. Owned by the arena so parallel workers reuse them
+/// across layers and batches without allocating.
+pub struct ShardBuf {
+    pub(crate) gather: Tensor,
+    pub(crate) out: Vec<f32>,
+    pub(crate) scratch: FfnScratch,
+    growths: u64,
+}
+
+impl ShardBuf {
+    fn new() -> ShardBuf {
+        ShardBuf {
+            gather: Tensor::zeros(&[0, 0]),
+            out: Vec::new(),
+            scratch: FfnScratch::new(0),
+            growths: 0,
+        }
+    }
+
+    /// Disjoint borrows for the kernel call: gather input (shared),
+    /// output block and scratch (exclusive).
+    pub(crate) fn parts(
+        &mut self,
+    ) -> (&Tensor, &mut Vec<f32>, &mut FfnScratch) {
+        (&self.gather, &mut self.out, &mut self.scratch)
+    }
+
+    /// Shape for `rows` tokens of width `d`, scratch width `n` and the
+    /// given tile hint; zeroes the output block (the kernel accumulates
+    /// into it).
+    pub(crate) fn prepare(
+        &mut self,
+        rows: usize,
+        d: usize,
+        n: usize,
+        f_tile: usize,
+    ) {
+        if self.gather.reshape_in_place(&[rows, d]) {
+            self.growths += 1;
+        }
+        let need = rows * d;
+        if need > self.out.capacity() {
+            self.growths += 1;
+        }
+        if self.out.len() < need {
+            self.out.resize(need, 0.0);
+        }
+        self.out[..need].fill(0.0);
+        if self.scratch.ensure(n) {
+            self.growths += 1;
+        }
+        self.scratch.f_tile = f_tile;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f_tile_hint_respects_budget_and_bounds() {
+        // Small widths are untiled (tile == f), large widths clamp to the
+        // L1-derived tile, and degenerate budgets stay usable.
+        let a = FfnArena::new();
+        assert_eq!(a.f_tile(64), 64);
+        assert_eq!(a.f_tile(128), 128);
+        let big = a.f_tile(4096);
+        assert!(big < 4096 && big >= 64, "{big}");
+        assert_eq!(big % 16, 0);
+        assert_eq!(pick_f_tile(8, 1), 8); // tiny f: tile = f
+        assert_eq!(pick_f_tile(0, 1024), 1); // never zero
+    }
+
+    #[test]
+    fn arena_growth_counter_settles_after_warmup() {
+        let mut a = ExecArena::new();
+        for _ in 0..3 {
+            a.prepare_y(16, 8);
+        }
+        let warm = a.growths();
+        assert!(warm >= 1);
+        a.prepare_y(16, 8);
+        a.prepare_y(4, 8); // smaller shapes never grow
+        assert_eq!(a.growths(), warm);
+        a.prepare_y(64, 8); // larger does
+        assert!(a.growths() > warm);
+    }
+
+    #[test]
+    fn shard_buf_prepare_zeroes_only_the_active_rows() {
+        let mut b = ShardBuf::new();
+        b.prepare(3, 4, 8, 0);
+        b.out[..12].fill(7.0);
+        b.prepare(2, 4, 8, 0);
+        assert!(b.out[..8].iter().all(|&v| v == 0.0));
+        assert_eq!(b.gather.dims2(), (2, 4));
+        // Second same-shape prepare grows nothing.
+        let g = b.growths;
+        b.prepare(3, 4, 8, 0);
+        assert_eq!(b.growths, g);
+    }
+}

@@ -9,14 +9,18 @@
 //! This module is now the only place that semantics lives:
 //!
 //! * [`ExpertBackend`] — the pluggable FFN execution strategy (per-token
-//!   oracle, batched native with parallel micro-batches, PJRT buckets, or
-//!   the cluster's sharded workers). Backends only ever see FFN work.
+//!   oracle, batched native with token-parallel shards, PJRT buckets, or
+//!   the cluster's sharded workers). Backends only ever see FFN work, and
+//!   draw their gather/scratch/output buffers from the [`FfnArena`] they
+//!   are handed (DESIGN.md §11) instead of allocating.
 //! * [`apply_zc_inline`] — the single zero/copy/constant application.
 //! * [`execute_layer`] — FFN stage + ZC stage + [`LayerStats`] accounting
 //!   for one planned layer.
 //! * [`forward_stack`] — the stack loop: routing with gating-residual
 //!   threading, per-layer configs, residual-stream update and
-//!   [`ForwardStats`] aggregation.
+//!   [`ForwardStats`] aggregation, with every reusable buffer (per-layer
+//!   `y`, routing scores, FFN scratch) drawn from the caller's
+//!   [`ExecArena`].
 
 use std::time::Instant;
 
@@ -24,13 +28,16 @@ use anyhow::Result;
 
 use crate::config::{ExpertKind, MoeConfig};
 use crate::coordinator::dispatch::DispatchPlan;
-use crate::moe::experts::{ConstExpert, FfnScratch};
+use crate::moe::arena::{
+    gather_rows, pick_f_tile, ExecArena, FfnArena, ShardSpec,
+};
+use crate::moe::experts::{ConstExpert, FFN_TOKEN_BLOCK};
 use crate::moe::layer::{Assignment, LayerStats};
-use crate::moe::router::{route, Routing};
+use crate::moe::router::Routing;
 use crate::moe::weights::{MoeLayerWeights, StackWeights};
 use crate::tensor::ops::axpy;
 use crate::tensor::Tensor;
-use crate::util::threadpool::parallel_map;
+use crate::util::threadpool::parallel_chunks_mut;
 
 /// Aggregate timing + routing statistics for one stack forward.
 #[derive(Clone, Debug, Default)]
@@ -209,6 +216,9 @@ pub struct LayerExec {
 /// The backend must not touch rows outside the batch token sets, must not
 /// apply zero-computation experts (the driver owns those), and must treat
 /// `plan` as authoritative — no re-deriving of routing or capacity.
+/// Reusable buffers come from `arena` (DESIGN.md §11): backends request
+/// gather/scratch/shard storage from it so steady-state execution does
+/// not allocate.
 pub trait ExpertBackend {
     fn execute_ffn(
         &mut self,
@@ -216,6 +226,7 @@ pub trait ExpertBackend {
         plan: &DispatchPlan,
         h: &Tensor,
         y: &mut Tensor,
+        arena: &mut FfnArena,
     ) -> Result<FfnLayerReport>;
 }
 
@@ -268,7 +279,8 @@ pub fn layer_stats(
 
 /// Execute one planned layer: FFN micro-batches on the backend, ZC experts
 /// inline, both timed, plus stats. `y` receives the layer output (the
-/// caller owns the residual-stream update).
+/// caller owns the residual-stream update); `arena` supplies the
+/// backend's reusable buffers.
 #[allow(clippy::too_many_arguments)]
 pub fn execute_layer(
     backend: &mut dyn ExpertBackend,
@@ -279,9 +291,10 @@ pub fn execute_layer(
     consts: &[ConstExpert],
     h: &Tensor,
     y: &mut Tensor,
+    arena: &mut FfnArena,
 ) -> Result<LayerExec> {
     let t0 = Instant::now();
-    let report = backend.execute_ffn(layer, plan, h, y)?;
+    let report = backend.execute_ffn(layer, plan, h, y, arena)?;
     let ffn_s = t0.elapsed().as_secs_f64();
 
     let t1 = Instant::now();
@@ -305,11 +318,17 @@ pub fn execute_layer(
 /// Without the residual update, fully-dropped tokens would become zero
 /// rows and the sparse expert kernels would skip them, corrupting the
 /// expert-forward cost accounting.
+///
+/// All reusable buffers (routing scores/probs/top-k, the per-layer `y`,
+/// the backends' gather/scratch/shard storage) come from `arena` and are
+/// reused across layers, batches and requests — steady-state forwards
+/// allocate only the returned output/stats (DESIGN.md §11).
 pub fn forward_stack(
     backend: &mut dyn ExpertBackend,
     weights: &StackWeights,
     layer_cfgs: &[MoeConfig],
     x: &Tensor,
+    arena: &mut ExecArena,
 ) -> Result<(Tensor, ForwardStats, Vec<LayerExec>)> {
     let (t, d) = x.dims2();
     assert_eq!(
@@ -324,23 +343,26 @@ pub fn forward_stack(
     };
     let mut execs = Vec::with_capacity(weights.layers.len());
     let mut h = x.clone();
-    let mut prev_scores: Option<Tensor> = None;
     for (li, layer) in weights.layers.iter().enumerate() {
         let lcfg = &layer_cfgs[li];
         let t0 = Instant::now();
-        let prev = if lcfg.gating_residual {
-            prev_scores.as_ref()
-        } else {
-            None
-        };
-        let routing = route(&h, &layer.router, prev, lcfg.top_k);
+        // The arena's residual carry holds the previous layer's raw
+        // scores; layer 0 must never read it (it still holds the last
+        // batch's tail).
+        arena.route.route_layer(
+            &h,
+            &layer.router,
+            lcfg.gating_residual && li > 0,
+            lcfg.top_k,
+        );
         stats.routing_s += t0.elapsed().as_secs_f64();
 
-        let plan = DispatchPlan::build(&routing, lcfg, t);
+        let plan = DispatchPlan::build(&arena.route.routing, lcfg, t);
         stats.token_counts.record_layer(&plan, lcfg);
-        let mut y = Tensor::zeros(&[t, d]);
+        arena.prepare_y(t, d);
+        let (routing, y, ffn) = arena.split();
         let ex = execute_layer(
-            backend, li, &plan, &routing, lcfg, &layer.consts, &h, &mut y,
+            backend, li, &plan, routing, lcfg, &layer.consts, &h, y, ffn,
         )?;
         stats.ffn_s += ex.ffn_s;
         stats.zc_s += ex.zc_s;
@@ -348,18 +370,59 @@ pub fn forward_stack(
         stats.per_layer.push(ex.stats.clone());
         execs.push(ex);
 
-        prev_scores = Some(routing.scores);
         for (hv, yv) in h.data.iter_mut().zip(&y.data) {
             *hv += yv;
         }
+        arena.route.end_layer();
     }
     Ok((h, stats, execs))
 }
 
 // ------------------------------------------------------------- backends
 
-/// The oracle backend: per-token `forward_token_into`, exactly the
-/// reference semantics `moe::layer::layer_forward` is defined by.
+/// How [`NativeBatched`] splits a layer's FFN work across workers.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Partition {
+    /// One work unit per FFN micro-batch — the historical batch-per-worker
+    /// fan-out, kept as the measured baseline (`--partition batch`).
+    /// Under skewed routing a single hot expert's batch stays serial on
+    /// one worker while the rest idle.
+    Batch,
+    /// (expert, row-range) shards sized from the layer's work estimate,
+    /// so a hot expert's micro-batch splits across all workers. Outputs
+    /// are scatter-added serially in canonical (batch, shard) order, so
+    /// results are bitwise-identical to [`Partition::Batch`] and to the
+    /// serial path for every worker count.
+    #[default]
+    Shard,
+}
+
+impl Partition {
+    pub fn parse(s: &str) -> Result<Partition> {
+        match s {
+            "batch" => Ok(Partition::Batch),
+            "shard" => Ok(Partition::Shard),
+            other => anyhow::bail!(
+                "unknown partition '{other}' (expected batch|shard)"
+            ),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Partition::Batch => "batch",
+            Partition::Shard => "shard",
+        }
+    }
+
+    pub fn all() -> [Partition; 2] {
+        [Partition::Batch, Partition::Shard]
+    }
+}
+
+/// The oracle backend: per-token forwards (via the arena's scratch),
+/// exactly the reference semantics `moe::layer::layer_forward` is defined
+/// by.
 pub struct NativeSingle<'a> {
     pub layers: &'a [MoeLayerWeights],
 }
@@ -371,29 +434,100 @@ impl ExpertBackend for NativeSingle<'_> {
         plan: &DispatchPlan,
         h: &Tensor,
         y: &mut Tensor,
+        arena: &mut FfnArena,
     ) -> Result<FfnLayerReport> {
         let (_, d) = h.dims2();
         let w = &self.layers[layer];
+        let d_ff = w.ffn.first().map_or(0, |e| e.w1.shape[1]);
+        arena.prepare_serial(d_ff, d);
         for batch in &plan.ffn_batches {
             let e = &w.ffn[batch.expert];
             for (&tok, &gate) in batch.tokens.iter().zip(&batch.gates) {
                 let orow = &mut y.data[tok * d..(tok + 1) * d];
-                e.forward_token_into(h.row(tok), gate, orow);
+                let _ = e.forward_token_scratch(
+                    h.row(tok), gate, &mut arena.scratch, orow,
+                );
             }
         }
         Ok(FfnLayerReport::default())
     }
 }
 
-/// The serving-path native backend: gather each micro-batch, run the
-/// allocation-free batched expert, scatter-add gated rows. With
-/// `workers > 1`, independent FFN micro-batches are fanned out across
-/// `util::threadpool` workers — each batch's dense output is computed in
-/// parallel and scatter-added serially in batch order, so results are
-/// bitwise-identical for every worker count.
+/// Oversubscription factor for shard sizing: aim for this many shards per
+/// worker so the atomic work queue smooths uneven expert batches.
+const SHARD_OVERSUB: usize = 4;
+
+/// Target rows per shard for `total` FFN rows over `workers` threads,
+/// floored at the kernel's token block (tiny shards would waste whole
+/// weight-stream passes).
+fn shard_rows_target(total: usize, workers: usize) -> usize {
+    total
+        .div_ceil(workers.max(1) * SHARD_OVERSUB)
+        .max(FFN_TOKEN_BLOCK)
+}
+
+/// Append `plan`'s work as (batch, row-range) shards onto `shards`, in
+/// canonical (batch, start) order. `Partition::Batch` emits one shard per
+/// micro-batch; `Partition::Shard` splits each batch into even contiguous
+/// ranges of at most the target size. The work estimate is row count —
+/// within a layer every FFN expert has the same `d_ff`, so rows are
+/// proportional to FLOPs.
+fn plan_shards(
+    plan: &DispatchPlan,
+    partition: Partition,
+    workers: usize,
+    shards: &mut Vec<ShardSpec>,
+) {
+    shards.clear();
+    match partition {
+        Partition::Batch => {
+            for (bi, batch) in plan.ffn_batches.iter().enumerate() {
+                shards.push(ShardSpec {
+                    batch: bi,
+                    start: 0,
+                    len: batch.tokens.len(),
+                });
+            }
+        }
+        Partition::Shard => {
+            let total: usize = plan
+                .ffn_batches
+                .iter()
+                .map(|b| b.tokens.len())
+                .sum();
+            let target = shard_rows_target(total, workers);
+            for (bi, batch) in plan.ffn_batches.iter().enumerate() {
+                let len = batch.tokens.len();
+                let n_shards = len.div_ceil(target).max(1);
+                let base = len / n_shards;
+                let rem = len % n_shards;
+                let mut start = 0;
+                for s in 0..n_shards {
+                    let sz = base + usize::from(s < rem);
+                    if sz == 0 {
+                        continue;
+                    }
+                    shards.push(ShardSpec { batch: bi, start, len: sz });
+                    start += sz;
+                }
+            }
+        }
+    }
+}
+
+/// The serving-path native backend: gather each unit of FFN work, run the
+/// allocation-free batched expert kernel, scatter-add gated rows. With
+/// `workers > 1` the layer's work is cut into shards per `partition` and
+/// fanned out over `util::threadpool`; every shard's dense output lands
+/// in an arena-owned buffer and is scatter-added serially in canonical
+/// (batch, shard) order — two FFN experts may feed one token's output
+/// row, and per-token results are independent of shard boundaries, so
+/// outputs are **bitwise-identical** for every worker count and both
+/// partition strategies (racing the scatter would be UB).
 pub struct NativeBatched<'a> {
     pub layers: &'a [MoeLayerWeights],
     pub workers: usize,
+    pub partition: Partition,
 }
 
 impl ExpertBackend for NativeBatched<'_> {
@@ -403,66 +537,106 @@ impl ExpertBackend for NativeBatched<'_> {
         plan: &DispatchPlan,
         h: &Tensor,
         y: &mut Tensor,
+        arena: &mut FfnArena,
     ) -> Result<FfnLayerReport> {
         let (_, d) = h.dims2();
         let w = &self.layers[layer];
         let batches = &plan.ffn_batches;
-        if self.workers <= 1 || batches.len() <= 1 {
-            // Serial: one weight stream per batch, zero per-token
-            // allocations, scatter-add directly into y (§Perf).
+        if batches.is_empty() {
+            return Ok(FfnLayerReport::default());
+        }
+        let mut n_shards = 0;
+        if self.workers > 1 {
+            let shards_cap = arena.shards.capacity();
+            plan_shards(
+                plan, self.partition, self.workers, &mut arena.shards,
+            );
+            if arena.shards.capacity() > shards_cap {
+                arena.growths += 1;
+            }
+            n_shards = arena.shards.len();
+        }
+        if n_shards <= 1 {
+            // Serial: one weight stream per batch, scatter-add directly
+            // into y, every buffer arena-owned (§Perf, DESIGN.md §11).
+            // Also taken when the parallel plan degenerates to a single
+            // shard — one unit of work gains no parallelism and would
+            // pay a needless output-block zero plus a combine pass.
             let d_ff = w.ffn.first().map_or(0, |e| e.w1.shape[1]);
-            let mut scratch = FfnScratch::new(d_ff.max(d));
-            let mut gather = Tensor::zeros(&[1, d]);
+            arena.prepare_serial(d_ff, d);
             for batch in batches {
                 let e = &w.ffn[batch.expert];
-                let n = batch.tokens.len();
-                if gather.numel() < n * d {
-                    gather = Tensor::zeros(&[n, d]);
-                } else {
-                    gather.shape = vec![n, d];
-                }
-                for (i, &tok) in batch.tokens.iter().enumerate() {
-                    gather.data[i * d..(i + 1) * d]
-                        .copy_from_slice(h.row(tok));
-                }
+                gather_rows(
+                    &mut arena.gather,
+                    h,
+                    &batch.tokens,
+                    d,
+                    &mut arena.growths,
+                );
                 e.forward_batch_into(
-                    &gather,
+                    &arena.gather,
                     Some(batch.gates.as_slice()),
-                    &mut scratch,
+                    &mut arena.scratch,
                     &mut y.data,
                     Some(batch.tokens.as_slice()),
                 );
             }
-        } else {
-            // Parallel micro-batches: the expensive dense compute fans out
-            // over the pool; the cheap scatter-add stays serial (two FFN
-            // experts may both feed one token's output row).
-            let outs: Vec<Vec<f32>> =
-                parallel_map(batches.len(), self.workers, |i| {
-                    let batch = &batches[i];
-                    let e = &w.ffn[batch.expert];
-                    let n = batch.tokens.len();
-                    let mut gather = Tensor::zeros(&[n, d]);
-                    for (j, &tok) in batch.tokens.iter().enumerate() {
-                        gather.data[j * d..(j + 1) * d]
-                            .copy_from_slice(h.row(tok));
-                    }
-                    let mut scratch = FfnScratch::new(e.w1.shape[1].max(d));
-                    let mut out = vec![0.0f32; n * d];
-                    e.forward_batch_into(
-                        &gather,
-                        Some(batch.gates.as_slice()),
-                        &mut scratch,
-                        &mut out,
-                        None,
-                    );
-                    out
-                });
-            for (batch, out) in batches.iter().zip(&outs) {
-                for (i, &tok) in batch.tokens.iter().enumerate() {
-                    let orow = &mut y.data[tok * d..(tok + 1) * d];
-                    axpy(1.0, &out[i * d..(i + 1) * d], orow);
+            return Ok(FfnLayerReport::default());
+        }
+
+        // Token-parallel path: cut the layer's FFN work into shards, fan
+        // the dense compute out over the pool (each worker writing its
+        // own arena-owned shard buffer), then scatter-add serially.
+        arena.ensure_shard_bufs(n_shards);
+        let l1_budget = arena.l1_budget_bytes;
+        let shards = &arena.shards;
+        parallel_chunks_mut(
+            &mut arena.shard_bufs[..n_shards],
+            self.workers,
+            1,
+            |idx, bufs| {
+                let spec = &shards[idx];
+                let batch = &batches[spec.batch];
+                let e = &w.ffn[batch.expert];
+                let f = e.w1.shape[1];
+                let buf = &mut bufs[0];
+                buf.prepare(
+                    spec.len,
+                    d,
+                    f.max(d),
+                    pick_f_tile(f, l1_budget),
+                );
+                let rows =
+                    &batch.tokens[spec.start..spec.start + spec.len];
+                for (i, &tok) in rows.iter().enumerate() {
+                    buf.gather.data[i * d..(i + 1) * d]
+                        .copy_from_slice(h.row(tok));
                 }
+                let (gather, out, scratch) = buf.parts();
+                e.forward_batch_into(
+                    gather,
+                    Some(
+                        &batch.gates[spec.start..spec.start + spec.len],
+                    ),
+                    scratch,
+                    &mut out[..spec.len * d],
+                    None,
+                );
+            },
+        );
+        // Canonical serial combine: shards are generated in (batch,
+        // start) order, and within one batch a token appears in exactly
+        // one shard, so each output row accumulates its expert
+        // contributions in batch order — the same order the serial path
+        // and the batch partition produce.
+        for (spec, buf) in
+            arena.shards.iter().zip(&arena.shard_bufs[..n_shards])
+        {
+            let batch = &batches[spec.batch];
+            let rows = &batch.tokens[spec.start..spec.start + spec.len];
+            for (i, &tok) in rows.iter().enumerate() {
+                let orow = &mut y.data[tok * d..(tok + 1) * d];
+                axpy(1.0, &buf.out[i * d..(i + 1) * d], orow);
             }
         }
         Ok(FfnLayerReport::default())
@@ -472,6 +646,7 @@ impl ExpertBackend for NativeBatched<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::moe::router::route;
     use crate::util::rng::Rng;
 
     fn setup(
@@ -493,9 +668,19 @@ mod tests {
         x: &Tensor,
     ) -> (Tensor, ForwardStats) {
         let cfgs = vec![cfg.clone(); cfg.n_layers];
+        let mut arena = ExecArena::new();
         let (y, stats, _) =
-            forward_stack(backend, weights, &cfgs, x).unwrap();
+            forward_stack(backend, weights, &cfgs, x, &mut arena)
+                .unwrap();
         (y, stats)
+    }
+
+    fn batched<'a>(
+        weights: &'a StackWeights,
+        workers: usize,
+        partition: Partition,
+    ) -> NativeBatched<'a> {
+        NativeBatched { layers: &weights.layers, workers, partition }
     }
 
     #[test]
@@ -506,7 +691,7 @@ mod tests {
             &cfg, &weights, &x,
         );
         let (y_batched, s_batched) = run_backend(
-            &mut NativeBatched { layers: &weights.layers, workers: 1 },
+            &mut batched(&weights, 1, Partition::Shard),
             &cfg, &weights, &x,
         );
         assert!(y_batched.approx_eq(&y_single, 1e-5, 1e-5));
@@ -518,22 +703,61 @@ mod tests {
     }
 
     #[test]
-    fn worker_count_does_not_change_results() {
-        // Parallel compute + serial scatter must be bitwise-deterministic.
+    fn worker_count_and_partition_do_not_change_results() {
+        // Parallel compute + serial canonical scatter must be
+        // bitwise-deterministic for every worker count AND both work
+        // partitions (the old batch fan-out and the new token shards).
         let (cfg, weights, x) = setup("test", 9, 64);
         let (y1, _) = run_backend(
-            &mut NativeBatched { layers: &weights.layers, workers: 1 },
+            &mut batched(&weights, 1, Partition::Shard),
             &cfg, &weights, &x,
         );
-        for workers in [2, 4, 8] {
-            let (yw, _) = run_backend(
-                &mut NativeBatched { layers: &weights.layers, workers },
-                &cfg, &weights, &x,
-            );
-            assert_eq!(
-                y1.data, yw.data,
-                "workers={workers} diverged from serial"
-            );
+        for partition in Partition::all() {
+            for workers in [1, 2, 4, 8] {
+                let (yw, _) = run_backend(
+                    &mut batched(&weights, workers, partition),
+                    &cfg, &weights, &x,
+                );
+                assert_eq!(
+                    y1.data, yw.data,
+                    "workers={workers} partition={} diverged",
+                    partition.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn shard_partition_covers_all_rows_exactly_once() {
+        // plan_shards must partition each batch's rows into contiguous,
+        // disjoint, covering ranges in canonical order.
+        let (cfg, weights, x) = setup("test", 21, 96);
+        let routing =
+            route(&x, &weights.layers[0].router, None, cfg.top_k);
+        let plan = DispatchPlan::build(&routing, &cfg, 96);
+        for workers in [1usize, 2, 4, 8, 64] {
+            let mut shards = Vec::new();
+            plan_shards(&plan, Partition::Shard, workers, &mut shards);
+            let mut cursor: Vec<usize> =
+                vec![0; plan.ffn_batches.len()];
+            let mut prev_batch = 0usize;
+            for s in &shards {
+                assert!(s.batch >= prev_batch, "canonical order broken");
+                prev_batch = s.batch;
+                assert_eq!(
+                    s.start, cursor[s.batch],
+                    "gap or overlap in batch {}", s.batch
+                );
+                assert!(s.len > 0);
+                cursor[s.batch] += s.len;
+            }
+            for (bi, b) in plan.ffn_batches.iter().enumerate() {
+                assert_eq!(
+                    cursor[bi],
+                    b.tokens.len(),
+                    "batch {bi} not fully covered (workers={workers})"
+                );
+            }
         }
     }
 
@@ -568,7 +792,7 @@ mod tests {
         // batch's stats into per-request stats without losing anything.
         let (cfg, weights, x) = setup("test", 8, 56);
         let (_, stats) = run_backend(
-            &mut NativeBatched { layers: &weights.layers, workers: 1 },
+            &mut batched(&weights, 1, Partition::Shard),
             &cfg, &weights, &x,
         );
         let totals = stats.total_counts();
@@ -594,7 +818,7 @@ mod tests {
     fn stats_accounting_conserves_assignments() {
         let (cfg, weights, x) = setup("test", 5, 40);
         let (_, stats) = run_backend(
-            &mut NativeBatched { layers: &weights.layers, workers: 2 },
+            &mut batched(&weights, 2, Partition::Shard),
             &cfg, &weights, &x,
         );
         assert_eq!(stats.per_layer.len(), cfg.n_layers);

@@ -45,10 +45,11 @@ impl FfnExpert {
 
     /// Batched forward with reusable scratch: the engine hot path.
     ///
-    /// Writes `gates[i] * FFN(x[i])` into `out` — either contiguous rows
-    /// (scatter == None) or scatter-added at `scatter[i] * d`. `gates ==
-    /// None` means gate 1.0 everywhere, `scatter == None` overwrites rows
-    /// in order.
+    /// **Accumulates** `gates[i] * FFN(x[i])` into `out` (axpy — never
+    /// overwrites): at contiguous rows in order when `scatter == None`,
+    /// or at row `scatter[i]` otherwise. Callers reusing an output
+    /// buffer must zero it first (`ShardBuf::prepare` does). `gates ==
+    /// None` means gate 1.0 everywhere.
     pub fn forward_batch_into(
         &self,
         x: &Tensor,
@@ -59,30 +60,40 @@ impl FfnExpert {
     ) {
         let (b, d) = x.dims2();
         let f = self.w1.shape[1];
-        scratch.ensure(f.max(d));
-        // Token blocking (§Perf iteration 2): the kernel is weight-stream
-        // bound (w1/w3/w2 are re-read per token). Processing BLK tokens per
-        // weight pass amortises that traffic BLK-fold; the per-row inner
-        // loops re-read each weight row from L1.
-        const BLK: usize = 4;
+        let _ = scratch.ensure(f.max(d));
+        // `f_tile == 0` means untiled (one full-width pass), the exact
+        // historical loop; tiling never changes results — each output
+        // column's accumulation order over k is untouched.
+        let ft = if scratch.f_tile == 0 { f } else { scratch.f_tile.min(f) };
+        const BLK: usize = FFN_TOKEN_BLOCK;
         let mut i = 0;
         while i < b {
             let blk = (b - i).min(BLK);
-            let (hg, hl, acc) = scratch.triple(f, d);
+            let (hg, hl, acc) = scratch.triple();
             hg[..blk * f].fill(0.0);
             hl[..blk * f].fill(0.0);
-            // Up-projections: one pass over w1/w3 rows for all blk tokens.
-            for k in 0..d {
-                let w1row = &self.w1.data[k * f..(k + 1) * f];
-                let w3row = &self.w3.data[k * f..(k + 1) * f];
-                for t in 0..blk {
-                    let xv = x.data[(i + t) * d + k];
-                    if xv == 0.0 {
-                        continue;
+            // Up-projections (§Perf iteration 3): the kernel is
+            // weight-stream bound (w1/w3/w2 re-read per token), so BLK
+            // tokens share one pass over the weight rows — and the pass
+            // is tiled to `ft` columns at a time so the 2·BLK hg/hl
+            // working rows stay L1-resident at large d_ff (the tile comes
+            // from the arena's cache hint, DESIGN.md §11).
+            let mut c0 = 0;
+            while c0 < f {
+                let c1 = (c0 + ft).min(f);
+                for k in 0..d {
+                    let w1row = &self.w1.data[k * f + c0..k * f + c1];
+                    let w3row = &self.w3.data[k * f + c0..k * f + c1];
+                    for t in 0..blk {
+                        let xv = x.data[(i + t) * d + k];
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        axpy(xv, w1row, &mut hg[t * f + c0..t * f + c1]);
+                        axpy(xv, w3row, &mut hl[t * f + c0..t * f + c1]);
                     }
-                    axpy(xv, w1row, &mut hg[t * f..(t + 1) * f]);
-                    axpy(xv, w3row, &mut hl[t * f..(t + 1) * f]);
                 }
+                c0 = c1;
             }
             for (a, &v) in hg[..blk * f].iter_mut().zip(&hl[..blk * f]) {
                 *a = silu(*a) * v;
@@ -111,18 +122,53 @@ impl FfnExpert {
 
     /// Single-token forward into a caller-provided buffer, scaled by `g`.
     pub fn forward_token_into(&self, x: &[f32], g: f32, out: &mut [f32]) {
-        let d = x.len();
         let f = self.w1.shape[1];
         let mut hg = vec![0.0f32; f];
         let mut hl = vec![0.0f32; f];
+        self.token_kernel(x, g, &mut hg, &mut hl, out);
+    }
+
+    /// [`FfnExpert::forward_token_into`] via caller scratch — the oracle
+    /// backend's allocation-free path. Bitwise-identical: same loops over
+    /// freshly-zeroed intermediates. Returns whether the scratch grew
+    /// (arena accounting).
+    pub fn forward_token_scratch(
+        &self,
+        x: &[f32],
+        g: f32,
+        scratch: &mut FfnScratch,
+        out: &mut [f32],
+    ) -> bool {
+        let d = x.len();
+        let f = self.w1.shape[1];
+        let grew = scratch.ensure(f.max(d));
+        let (hg, hl, _) = scratch.triple();
+        hg[..f].fill(0.0);
+        hl[..f].fill(0.0);
+        self.token_kernel(x, g, &mut hg[..f], &mut hl[..f], out);
+        grew
+    }
+
+    /// Shared single-token SwiGLU body over zeroed `hg`/`hl` slices of
+    /// width `d_ff`.
+    fn token_kernel(
+        &self,
+        x: &[f32],
+        g: f32,
+        hg: &mut [f32],
+        hl: &mut [f32],
+        out: &mut [f32],
+    ) {
+        let d = x.len();
+        let f = self.w1.shape[1];
         for (k, &xv) in x.iter().enumerate() {
             if xv == 0.0 {
                 continue;
             }
-            axpy(xv, &self.w1.data[k * f..(k + 1) * f], &mut hg);
-            axpy(xv, &self.w3.data[k * f..(k + 1) * f], &mut hl);
+            axpy(xv, &self.w1.data[k * f..(k + 1) * f], hg);
+            axpy(xv, &self.w3.data[k * f..(k + 1) * f], hl);
         }
-        for (a, &b) in hg.iter_mut().zip(&hl) {
+        for (a, &b) in hg.iter_mut().zip(hl.iter()) {
             *a = silu(*a) * b;
         }
         for (k, &hv) in hg.iter().enumerate() {
@@ -137,35 +183,46 @@ impl FfnExpert {
     }
 }
 
+/// Tokens processed per weight-stream pass in the batched kernel (and the
+/// lane count the scratch buffers are sized for).
+pub const FFN_TOKEN_BLOCK: usize = 4;
+
 /// Reusable intermediate buffers for `FfnExpert::forward_batch_into` —
 /// keeps the hot loop allocation-free across micro-batches (§Perf).
 pub struct FfnScratch {
     hg: Vec<f32>,
     hl: Vec<f32>,
     acc: Vec<f32>,
+    /// Up-projection column tile (0 = untiled). Set from the execution
+    /// arena's cache hint (`FfnArena::f_tile`, DESIGN.md §11); any value
+    /// produces bitwise-identical results — it is purely a locality knob.
+    pub f_tile: usize,
 }
-
-const SCRATCH_BLK: usize = 4;
 
 impl FfnScratch {
     pub fn new(f: usize) -> FfnScratch {
         FfnScratch {
-            hg: vec![0.0; SCRATCH_BLK * f],
-            hl: vec![0.0; SCRATCH_BLK * f],
-            acc: vec![0.0; SCRATCH_BLK * f],
+            hg: vec![0.0; FFN_TOKEN_BLOCK * f],
+            hl: vec![0.0; FFN_TOKEN_BLOCK * f],
+            acc: vec![0.0; FFN_TOKEN_BLOCK * f],
+            f_tile: 0,
         }
     }
 
-    fn ensure(&mut self, n: usize) {
-        if self.hg.len() < SCRATCH_BLK * n {
-            self.hg.resize(SCRATCH_BLK * n, 0.0);
-            self.hl.resize(SCRATCH_BLK * n, 0.0);
-            self.acc.resize(SCRATCH_BLK * n, 0.0);
+    /// Grow the buffers to hold `FFN_TOKEN_BLOCK` lanes of width `n`;
+    /// returns whether an allocation grew (arena growth accounting).
+    pub(crate) fn ensure(&mut self, n: usize) -> bool {
+        if self.hg.len() < FFN_TOKEN_BLOCK * n {
+            self.hg.resize(FFN_TOKEN_BLOCK * n, 0.0);
+            self.hl.resize(FFN_TOKEN_BLOCK * n, 0.0);
+            self.acc.resize(FFN_TOKEN_BLOCK * n, 0.0);
+            true
+        } else {
+            false
         }
     }
 
-    fn triple(&mut self, _f: usize, _d: usize)
-        -> (&mut [f32], &mut [f32], &mut [f32]) {
+    fn triple(&mut self) -> (&mut [f32], &mut [f32], &mut [f32]) {
         (&mut self.hg, &mut self.hl, &mut self.acc)
     }
 }
@@ -236,6 +293,50 @@ mod tests {
                 assert!((a - b).abs() < 1e-4, "{a} vs {b}");
             }
         }
+    }
+
+    #[test]
+    fn f_tile_never_changes_results_bitwise() {
+        // The tile only reorders *which columns* a weight pass touches;
+        // every output column's accumulation order is unchanged, so any
+        // tile (including awkward non-divisors) is bitwise-identical to
+        // the untiled kernel.
+        let mut rng = Rng::new(4);
+        let (d, f) = (12, 40);
+        let e = FfnExpert::init(&mut rng, d, f);
+        let x = Tensor::randn(&mut rng, &[7, d], 1.0);
+        let gates: Vec<f32> = (0..7).map(|i| 0.1 + 0.1 * i as f32).collect();
+        let run = |tile: usize| {
+            let mut scratch = FfnScratch::new(f.max(d));
+            scratch.f_tile = tile;
+            let mut out = vec![0.0f32; 7 * d];
+            e.forward_batch_into(&x, Some(&gates), &mut scratch,
+                                 &mut out, None);
+            out
+        };
+        let untiled = run(0);
+        for tile in [1, 7, 16, 39, 40, 1000] {
+            assert_eq!(run(tile), untiled, "tile={tile} diverged");
+        }
+    }
+
+    #[test]
+    fn token_scratch_matches_allocating_token_forward() {
+        let mut rng = Rng::new(5);
+        let (d, f) = (10, 24);
+        let e = FfnExpert::init(&mut rng, d, f);
+        let x: Vec<f32> = (0..d).map(|i| (i as f32 * 0.37).cos()).collect();
+        let mut scratch = FfnScratch::new(4);
+        let mut a = vec![0.0f32; d];
+        let mut b = vec![0.0f32; d];
+        e.forward_token_into(&x, 0.8, &mut a);
+        let grew = e.forward_token_scratch(&x, 0.8, &mut scratch, &mut b);
+        assert!(grew, "undersized scratch must report growth");
+        assert_eq!(a, b);
+        // Steady state: no further growth, still identical.
+        b.fill(0.0);
+        assert!(!e.forward_token_scratch(&x, 0.8, &mut scratch, &mut b));
+        assert_eq!(a, b);
     }
 
     #[test]

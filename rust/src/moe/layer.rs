@@ -13,6 +13,7 @@
 
 use crate::config::MoeConfig;
 use crate::coordinator::dispatch::DispatchPlan;
+use crate::moe::arena::FfnArena;
 use crate::moe::exec::{self, NativeSingle};
 use crate::moe::router::{route, Routing};
 use crate::moe::weights::MoeLayerWeights;
@@ -92,8 +93,13 @@ pub fn layer_forward(
     let mut y = Tensor::zeros(&[t, d]);
     let mut backend =
         NativeSingle { layers: std::slice::from_ref(weights) };
+    // The oracle is a per-call reference path, not a serving loop — a
+    // throwaway arena keeps the shared executor signature without
+    // threading reuse through every test call site.
+    let mut arena = FfnArena::new();
     let ex = exec::execute_layer(
-        &mut backend, 0, &plan, &routing, cfg, &weights.consts, x, &mut y,
+        &mut backend, 0, &plan, &routing, cfg, &weights.consts, x,
+        &mut y, &mut arena,
     )
     .expect("native single-layer execution is infallible");
     (y, routing, ex.stats)

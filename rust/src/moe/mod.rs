@@ -6,6 +6,7 @@
 //! property tests check coordinator invariants against, and (c) the compute
 //! model the cluster simulator runs on each simulated device.
 
+pub mod arena;
 pub mod balance;
 pub mod complexity;
 pub mod exec;

@@ -11,7 +11,9 @@
 //! the coordinator lets routing decisions drive dispatch *before* any
 //! tensor traffic happens.
 
-use crate::tensor::ops::{matmul_bt, softmax_rows, topk};
+use crate::tensor::ops::{
+    matmul_bt_acc, matmul_bt_into, softmax_rows, topk_into,
+};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -42,6 +44,19 @@ pub struct Routing {
     pub topk: Vec<Vec<(usize, f32)>>,
 }
 
+impl Routing {
+    /// An empty routing shell for arena reuse — [`route_into`] shapes the
+    /// buffers on every call, so the same `Routing` serves every layer
+    /// and batch without reallocating (DESIGN.md §11).
+    pub fn empty() -> Routing {
+        Routing {
+            scores: Tensor::zeros(&[0, 0]),
+            probs: Tensor::zeros(&[0, 0]),
+            topk: Vec::new(),
+        }
+    }
+}
+
 /// Compute Eq. 6 scores + softmax + top-k for a token batch.
 ///
 /// `prev_scores` is the previous layer's raw scores (None for layer 0 or
@@ -52,18 +67,63 @@ pub fn route(
     prev_scores: Option<&Tensor>,
     k: usize,
 ) -> Routing {
-    let mut scores = matmul_bt(x, &weights.w); // [T, N]
-    if let Some(prev) = prev_scores {
-        let res = matmul_bt(prev, &weights.wg); // prev @ Wg^T
-        for (s, r) in scores.data.iter_mut().zip(&res.data) {
-            *s += r;
-        }
+    let mut out = Routing::empty();
+    let mut spare = Vec::new();
+    let mut growths = 0u64;
+    route_into(x, weights, prev_scores, k, &mut out, &mut spare,
+               &mut growths);
+    out
+}
+
+/// [`route`] into a reused [`Routing`]: scores/probs tensors are reshaped
+/// in place and the per-token top-k vectors are reused, so steady-state
+/// routing performs no heap allocation. When the batch shrinks, the
+/// surplus per-token vectors are parked in `spare` (not dropped) and
+/// revived when a larger batch returns — `Routing.topk.len()` must equal
+/// the token count (consumers iterate it), so the pool is what keeps
+/// oscillating batch sizes allocation-free. `growths` is incremented
+/// whenever a buffer had to grow (arena accounting, DESIGN.md §11).
+/// Numerically identical to [`route`] — same matmuls, same softmax, and
+/// `topk_into` preserves the exact `lax.top_k` order.
+pub fn route_into(
+    x: &Tensor,
+    weights: &RouterWeights,
+    prev_scores: Option<&Tensor>,
+    k: usize,
+    out: &mut Routing,
+    spare: &mut Vec<Vec<(usize, f32)>>,
+    growths: &mut u64,
+) {
+    let (t, _) = x.dims2();
+    let n = weights.w.shape[0];
+    if out.scores.reshape_in_place(&[t, n]) {
+        *growths += 1;
     }
-    let mut probs = scores.clone();
-    softmax_rows(&mut probs);
-    let (t, _n) = probs.dims2();
-    let topk_v = (0..t).map(|i| topk(probs.row(i), k)).collect();
-    Routing { scores, probs, topk: topk_v }
+    matmul_bt_into(x, &weights.w, &mut out.scores); // [T, N]
+    if let Some(prev) = prev_scores {
+        matmul_bt_acc(prev, &weights.wg, &mut out.scores); // + prev @ Wg^T
+    }
+    if out.probs.reshape_in_place(&[t, n]) {
+        *growths += 1;
+    }
+    out.probs.data.copy_from_slice(&out.scores.data);
+    softmax_rows(&mut out.probs);
+    if t > out.topk.capacity() {
+        *growths += 1;
+    }
+    while out.topk.len() > t {
+        spare.push(out.topk.pop().expect("len > t >= 0"));
+    }
+    while out.topk.len() < t {
+        out.topk.push(spare.pop().unwrap_or_else(|| {
+            *growths += 1; // a token count beyond any seen before
+            Vec::with_capacity(k)
+        }));
+    }
+    let Routing { probs, topk, .. } = out;
+    for (i, tk) in topk.iter_mut().enumerate() {
+        topk_into(probs.row(i), k, tk);
+    }
 }
 
 #[cfg(test)]
@@ -86,6 +146,46 @@ mod tests {
             // Top-2 gates sum to < 1 (full-softmax, no renorm).
             assert!(tk[0].1 + tk[1].1 < 1.0 + 1e-6);
         }
+    }
+
+    #[test]
+    fn route_into_reuse_is_bitwise_identical_and_stops_growing() {
+        let mut rng = Rng::new(9);
+        let mut w = RouterWeights::init(&mut rng, 7, 12);
+        for i in 0..7 {
+            w.wg.data[i * 7 + i] = 0.3; // make the residual term visible
+        }
+        let prev = Tensor::randn(&mut rng, &[6, 7], 1.0);
+        let mut reused = Routing::empty();
+        let mut spare = Vec::new();
+        let mut growths = 0u64;
+        for round in 0..3 {
+            let x = Tensor::randn(&mut rng, &[6, 12], 1.0);
+            let fresh = route(&x, &w, Some(&prev), 2);
+            route_into(&x, &w, Some(&prev), 2, &mut reused, &mut spare,
+                       &mut growths);
+            assert_eq!(reused.scores.data, fresh.scores.data, "r{round}");
+            assert_eq!(reused.probs.data, fresh.probs.data, "r{round}");
+            assert_eq!(reused.topk, fresh.topk, "r{round}");
+        }
+        // All growth happened on the first same-shape call.
+        let after_warm = growths;
+        let x = Tensor::randn(&mut rng, &[6, 12], 1.0);
+        route_into(&x, &w, None, 2, &mut reused, &mut spare, &mut growths);
+        assert_eq!(growths, after_warm, "steady-state routing regrew");
+        // A smaller batch must shrink the visible rows (no stale top-k
+        // entries) while parking — not dropping — the surplus vectors.
+        let small = Tensor::randn(&mut rng, &[2, 12], 1.0);
+        route_into(&small, &w, None, 2, &mut reused, &mut spare,
+                   &mut growths);
+        assert_eq!(reused.topk.len(), 2);
+        assert_eq!(reused.scores.dims2(), (2, 7));
+        assert_eq!(spare.len(), 4, "surplus vectors must be pooled");
+        // Oscillating back up revives the pooled vectors: zero growth.
+        route_into(&x, &w, None, 2, &mut reused, &mut spare, &mut growths);
+        assert_eq!(reused.topk.len(), 6);
+        assert!(spare.is_empty());
+        assert_eq!(growths, after_warm, "batch-size oscillation regrew");
     }
 
     #[test]

@@ -135,6 +135,197 @@ impl CostModel {
     }
 }
 
+// ---------------------------------------------------------- delta score
+
+/// Incremental rescoring for the planner's local search (the ROADMAP
+/// "incremental plan scoring" follow-on): a single-expert move (or a
+/// pairwise swap) only changes two devices' compute and the moved
+/// experts' traffic, so candidates are evaluated from maintained
+/// per-layer, per-device aggregates instead of re-walking every expert.
+///
+/// **Exactness.** All maintained state is integral (u64 loads, u64 share
+/// bytes); every evaluation re-derives the float makespan from those
+/// integers with the same expressions, in the same layer order,
+/// [`CostModel::score`] uses — the uniform-home traffic matrix has
+/// `dispatch[h][o] = combine[o][h] = B_o` (the byte total of device `o`'s
+/// owned experts) for `h != o`, and u64 sums are order-independent. So
+/// `eval_move`/`eval_swap` equal a full `score()` of the mutated plan
+/// **bitwise**, which the planner property test pins down; the local
+/// search therefore walks the identical trajectory the full-rescore
+/// implementation did, only cheaper: O(D²) per candidate instead of
+/// O(L·E + D²), with E·D + E² candidates per round.
+pub struct DeltaScorer<'a> {
+    cost: &'a CostModel,
+    profile: &'a LoadProfile,
+    plan: PlacementPlan,
+    topo: Topology,
+    /// `device_load[l][d]` — FFN assignments device `d` owns in layer `l`.
+    device_load: Vec<Vec<u64>>,
+    /// `device_bytes[l][d]` — uniform-home share bytes of `d`'s experts.
+    device_bytes: Vec<Vec<u64>>,
+    /// `expert_bytes[l][e]` — the rounded per-home share bytes of `e`.
+    expert_bytes: Vec<Vec<u64>>,
+    /// Scratch traffic matrix reused across evaluations.
+    scratch: LayerTraffic,
+}
+
+impl<'a> DeltaScorer<'a> {
+    pub fn new(
+        cost: &'a CostModel,
+        profile: &'a LoadProfile,
+        plan: PlacementPlan,
+    ) -> DeltaScorer<'a> {
+        assert_eq!(
+            plan.n_ffn_experts(),
+            profile.n_ffn_experts(),
+            "plan and profile expert counts differ"
+        );
+        let n_dev = plan.n_devices();
+        let mut topo = Topology::new(n_dev);
+        topo.link = cost.link.clone();
+        let n_layers = profile.n_layers();
+        let mut device_load = vec![vec![0u64; n_dev]; n_layers];
+        let mut device_bytes = vec![vec![0u64; n_dev]; n_layers];
+        let mut expert_bytes =
+            vec![vec![0u64; profile.n_ffn_experts()]; n_layers];
+        for l in 0..n_layers {
+            for (e, &load) in profile.layer(l).iter().enumerate() {
+                let owner = plan.owner(e);
+                device_load[l][owner] += load;
+                if load == 0 {
+                    continue;
+                }
+                let share = load as f64 / n_dev as f64;
+                let bytes =
+                    (share * cost.token_bytes as f64).round() as u64;
+                expert_bytes[l][e] = bytes;
+                device_bytes[l][owner] += bytes;
+            }
+        }
+        DeltaScorer {
+            cost,
+            profile,
+            plan,
+            topo,
+            device_load,
+            device_bytes,
+            expert_bytes,
+            scratch: LayerTraffic::new(n_dev),
+        }
+    }
+
+    pub fn plan(&self) -> &PlacementPlan {
+        &self.plan
+    }
+
+    pub fn into_plan(self) -> PlacementPlan {
+        self.plan
+    }
+
+    pub fn device_counts(&self) -> Vec<usize> {
+        self.plan.device_counts()
+    }
+
+    /// Current plan's makespan — bitwise equal to
+    /// `cost.score(&plan, profile).makespan_s`.
+    pub fn makespan(&mut self) -> f64 {
+        self.makespan_with(&[])
+    }
+
+    /// Makespan if `expert` moved to device `to` (state unchanged).
+    pub fn eval_move(&mut self, expert: usize, to: usize) -> f64 {
+        self.makespan_with(&[(expert, to)])
+    }
+
+    /// Makespan if experts `a` and `b` swapped owners (state unchanged).
+    pub fn eval_swap(&mut self, a: usize, b: usize) -> f64 {
+        let (da, db) = (self.plan.owner(a), self.plan.owner(b));
+        self.makespan_with(&[(a, db), (b, da)])
+    }
+
+    /// Commit a move, updating the integral aggregates exactly.
+    pub fn apply_move(&mut self, expert: usize, to: usize) {
+        let from = self.plan.owner(expert);
+        if from == to {
+            return;
+        }
+        for l in 0..self.device_load.len() {
+            let load = self.profile.layer(l)[expert];
+            self.device_load[l][from] -= load;
+            self.device_load[l][to] += load;
+            let bytes = self.expert_bytes[l][expert];
+            self.device_bytes[l][from] -= bytes;
+            self.device_bytes[l][to] += bytes;
+        }
+        self.plan.set_owner(expert, to);
+    }
+
+    /// Commit a swap of `a` and `b`'s owners.
+    pub fn apply_swap(&mut self, a: usize, b: usize) {
+        let (da, db) = (self.plan.owner(a), self.plan.owner(b));
+        self.apply_move(a, db);
+        self.apply_move(b, da);
+    }
+
+    /// Makespan of the current plan with up to two hypothetical
+    /// reassignments applied on the fly (owners read *before* any of the
+    /// moves, which is what `eval_swap` relies on).
+    fn makespan_with(&mut self, moves: &[(usize, usize)]) -> f64 {
+        let n_dev = self.plan.n_devices();
+        let mut total = 0.0;
+        for l in 0..self.device_load.len() {
+            let mut max_load = 0u64;
+            for dv in 0..n_dev {
+                let mut load = self.device_load[l][dv];
+                for &(e, to) in moves {
+                    let from = self.plan.owner(e);
+                    if to == from {
+                        continue;
+                    }
+                    if dv == from {
+                        load -= self.profile.layer(l)[e];
+                    }
+                    if dv == to {
+                        load += self.profile.layer(l)[e];
+                    }
+                }
+                max_load = max_load.max(load);
+            }
+            let compute_s =
+                max_load as f64 * self.cost.compute_s_per_assignment;
+
+            self.scratch.clear();
+            for o in 0..n_dev {
+                let mut bytes = self.device_bytes[l][o];
+                for &(e, to) in moves {
+                    let from = self.plan.owner(e);
+                    if to == from {
+                        continue;
+                    }
+                    if o == from {
+                        bytes -= self.expert_bytes[l][e];
+                    }
+                    if o == to {
+                        bytes += self.expert_bytes[l][e];
+                    }
+                }
+                if bytes == 0 {
+                    continue;
+                }
+                for h in 0..n_dev {
+                    if h != o {
+                        self.scratch.dispatch.add(h, o, bytes);
+                        self.scratch.combine.add(o, h, bytes);
+                    }
+                }
+            }
+            let comm_s = self.scratch.total_time(&self.topo);
+            total += compute_s + comm_s;
+        }
+        total
+    }
+}
+
 /// Predicted cost of one plan over one profile.
 #[derive(Clone, Debug, Default)]
 pub struct PlanScore {

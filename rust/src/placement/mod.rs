@@ -38,7 +38,7 @@ pub mod planner;
 pub mod profile;
 pub mod replan;
 
-pub use cost::{CostModel, PlanScore};
+pub use cost::{CostModel, DeltaScorer, PlanScore};
 pub use plan::PlacementPlan;
 pub use planner::{Planner, Strategy};
 pub use profile::LoadProfile;

@@ -12,7 +12,7 @@
 
 use anyhow::Result;
 
-use super::cost::CostModel;
+use super::cost::{CostModel, DeltaScorer};
 use super::plan::PlacementPlan;
 use super::profile::LoadProfile;
 
@@ -174,6 +174,12 @@ impl Planner {
     /// pairwise swaps, scored by the full cost model (so comm effects,
     /// not just the load sum, steer refinement). Monotone: only strictly
     /// improving steps are taken, hence never worse than its seed.
+    ///
+    /// Candidates are evaluated with [`DeltaScorer`] — bitwise equal to a
+    /// full rescore (property-tested below), so the search walks exactly
+    /// the trajectory the old clone-and-rescore implementation did, but a
+    /// candidate no longer pays O(L·E) to re-walk every expert (the
+    /// ROADMAP "incremental plan scoring" item).
     fn refine(
         &self,
         seed: PlacementPlan,
@@ -182,10 +188,10 @@ impl Planner {
     ) -> PlacementPlan {
         let n_ffn = seed.n_ffn_experts();
         let n_dev = seed.n_devices();
-        let mut plan = seed;
-        let mut cur = self.cost.score(&plan, profile).makespan_s;
+        let mut scorer = DeltaScorer::new(&self.cost, profile, seed);
+        let mut cur = scorer.makespan();
         for _ in 0..REFINE_MAX_ROUNDS {
-            let counts = plan.device_counts();
+            let counts = scorer.device_counts();
             // (new makespan, expert a, target device / swap partner b,
             //  is_swap)
             let mut best: Option<(f64, usize, usize, bool)> = None;
@@ -201,27 +207,23 @@ impl Planner {
                     }
                 };
             for e in 0..n_ffn {
-                let from = plan.owner(e);
+                let from = scorer.plan().owner(e);
                 for d in 0..n_dev {
                     if d == from || counts[d] >= cap {
                         continue;
                     }
-                    let mut cand = plan.clone();
-                    cand.set_owner(e, d);
-                    let m = self.cost.score(&cand, profile).makespan_s;
+                    let m = scorer.eval_move(e, d);
                     consider(m, e, d, false, &mut best);
                 }
             }
             for a in 0..n_ffn {
                 for b in (a + 1)..n_ffn {
-                    let (da, db) = (plan.owner(a), plan.owner(b));
+                    let (da, db) =
+                        (scorer.plan().owner(a), scorer.plan().owner(b));
                     if da == db {
                         continue;
                     }
-                    let mut cand = plan.clone();
-                    cand.set_owner(a, db);
-                    cand.set_owner(b, da);
-                    let m = self.cost.score(&cand, profile).makespan_s;
+                    let m = scorer.eval_swap(a, b);
                     consider(m, a, b, true, &mut best);
                 }
             }
@@ -230,18 +232,16 @@ impl Planner {
                     if m < cur * (1.0 - REFINE_MIN_GAIN) =>
                 {
                     if swap {
-                        let (da, db) = (plan.owner(a), plan.owner(b));
-                        plan.set_owner(a, db);
-                        plan.set_owner(b, da);
+                        scorer.apply_swap(a, b);
                     } else {
-                        plan.set_owner(a, b);
+                        scorer.apply_move(a, b);
                     }
                     cur = m;
                 }
                 _ => break,
             }
         }
-        plan
+        scorer.into_plan()
     }
 }
 
@@ -310,6 +310,102 @@ mod tests {
         );
         assert!(Strategy::parse("bogus").is_err());
         assert_eq!(Strategy::Refined.label(), "refined");
+    }
+
+    #[test]
+    fn property_delta_score_equals_full_rescore() {
+        // The incremental scorer must agree with CostModel::score
+        // *bitwise* on random profiles, plans and candidate move/swap
+        // sequences — that is what lets refine() use it without changing
+        // the search trajectory.
+        let p = planner();
+        Prop::new("delta-equals-full-rescore").cases(40).run(
+            |rng| {
+                let n_dev = gen::usize_in(rng, 1, 5);
+                let n_ffn = gen::usize_in(rng, n_dev.max(2), 16);
+                let n_layers = gen::usize_in(rng, 1, 3);
+                let layers: Vec<Vec<u64>> = (0..n_layers)
+                    .map(|_| {
+                        (0..n_ffn)
+                            .map(|_| rng.below(300) as u64)
+                            .collect()
+                    })
+                    .collect();
+                let owner: Vec<usize> =
+                    (0..n_ffn).map(|_| rng.below(n_dev)).collect();
+                let steps: Vec<(bool, usize, usize)> = (0..12)
+                    .map(|_| {
+                        (
+                            rng.next_f32() < 0.5,
+                            rng.below(n_ffn),
+                            rng.below(n_ffn.max(n_dev)),
+                        )
+                    })
+                    .collect();
+                (n_dev, layers, owner, steps)
+            },
+            |(n_dev, layers, owner, steps)| {
+                let profile =
+                    LoadProfile::from_counts(layers.clone()).unwrap();
+                let plan = PlacementPlan::from_owner(
+                    owner.clone(),
+                    *n_dev,
+                )
+                .unwrap();
+                let mut scorer =
+                    DeltaScorer::new(&p.cost, &profile, plan.clone());
+                let full =
+                    p.cost.score(&plan, &profile).makespan_s;
+                if scorer.makespan() != full {
+                    return Err(format!(
+                        "base: delta {} != full {full}",
+                        scorer.makespan()
+                    ));
+                }
+                for &(is_swap, a, b) in steps {
+                    if is_swap {
+                        let b = b % scorer.plan().n_ffn_experts();
+                        if a == b {
+                            continue;
+                        }
+                        let delta = scorer.eval_swap(a, b);
+                        let mut cand = scorer.plan().clone();
+                        let (da, db) = (cand.owner(a), cand.owner(b));
+                        cand.set_owner(a, db);
+                        cand.set_owner(b, da);
+                        let full =
+                            p.cost.score(&cand, &profile).makespan_s;
+                        if delta != full {
+                            return Err(format!(
+                                "swap({a},{b}): {delta} != {full}"
+                            ));
+                        }
+                        // Commit and re-check the maintained state.
+                        scorer.apply_swap(a, b);
+                        if scorer.makespan() != full {
+                            return Err("state after swap".into());
+                        }
+                    } else {
+                        let to = b % *n_dev;
+                        let delta = scorer.eval_move(a, to);
+                        let mut cand = scorer.plan().clone();
+                        cand.set_owner(a, to);
+                        let full =
+                            p.cost.score(&cand, &profile).makespan_s;
+                        if delta != full {
+                            return Err(format!(
+                                "move({a}->{to}): {delta} != {full}"
+                            ));
+                        }
+                        scorer.apply_move(a, to);
+                        if scorer.makespan() != full {
+                            return Err("state after move".into());
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -195,7 +195,7 @@ mod tests {
         // The capacity-clip reconstruction must equal what actually ran:
         // per layer, sum_e min(count_e, cap) == ffn_assignments.
         let cfg = MoeConfig::preset("test");
-        let engine = MoeEngine::native(cfg.clone(), 3);
+        let mut engine = MoeEngine::native(cfg.clone(), 3);
         let mut rng = Rng::new(17);
         let x = Tensor::randn(&mut rng, &[96, cfg.d_model], 1.0);
         let (_, stats) = engine.forward_stack(&x).unwrap();

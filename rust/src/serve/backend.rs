@@ -58,9 +58,10 @@ impl ServeBackend for MoeEngine {
 
     fn label(&self) -> String {
         match &self.backend {
-            Backend::Native { workers } => {
-                format!("engine:native(workers={workers})")
-            }
+            Backend::Native { workers, partition } => format!(
+                "engine:native(workers={workers},{})",
+                partition.label()
+            ),
             Backend::Pjrt { .. } => "engine:pjrt".to_string(),
         }
     }

@@ -45,7 +45,7 @@ impl TaskLoad {
 
 /// Run the engine over per-task token streams and collect load stats.
 pub fn task_level_load(
-    engine: &MoeEngine,
+    engine: &mut MoeEngine,
     tasks: &[(String, Tensor)],
 ) -> Result<BTreeMap<String, TaskLoad>> {
     let mut out = BTreeMap::new();
@@ -95,7 +95,7 @@ mod tests {
     #[test]
     fn load_fractions_sum_to_one() {
         let cfg = MoeConfig::preset("test");
-        let engine = MoeEngine::native(cfg.clone(), 0);
+        let mut engine = MoeEngine::native(cfg.clone(), 0);
         let mut rng = Rng::new(0);
         let tasks = vec![
             ("taskA".to_string(),
@@ -103,7 +103,7 @@ mod tests {
             ("taskB".to_string(),
              Tensor::randn(&mut rng, &[64, cfg.d_model], 2.0)),
         ];
-        let loads = task_level_load(&engine, &tasks).unwrap();
+        let loads = task_level_load(&mut engine, &tasks).unwrap();
         for load in loads.values() {
             for layer in 0..cfg.n_layers {
                 let total: f64 =
@@ -119,12 +119,12 @@ mod tests {
     fn distinct_tasks_have_distinct_assignments() {
         // Fig. 4 finding (iii): expert assignment varies across tasks.
         let cfg = MoeConfig::preset("test");
-        let engine = MoeEngine::native(cfg.clone(), 1);
+        let mut engine = MoeEngine::native(cfg.clone(), 1);
         let mut rng = Rng::new(5);
         let a = Tensor::randn(&mut rng, &[128, cfg.d_model], 0.5);
         let b = Tensor::randn(&mut rng, &[128, cfg.d_model], 3.0);
         let loads = task_level_load(
-            &engine,
+            &mut engine,
             &[("a".into(), a), ("b".into(), b)],
         )
         .unwrap();

@@ -71,6 +71,21 @@ impl Tensor {
         self
     }
 
+    /// Re-shape in place to `shape`, resizing the backing storage to the
+    /// exact element count (contents are unspecified afterwards). Unlike
+    /// [`Tensor::reshape`] this may change the element count — it is the
+    /// primitive the execution arena reuses buffers with. Returns `true`
+    /// when the backing allocation had to grow, which is what arena
+    /// growth accounting hooks (DESIGN.md §11).
+    pub fn reshape_in_place(&mut self, shape: &[usize]) -> bool {
+        let n: usize = shape.iter().product();
+        let grew = n > self.data.capacity();
+        self.data.resize(n, 0.0);
+        self.shape.clear();
+        self.shape.extend_from_slice(shape);
+        grew
+    }
+
     /// Transpose a rank-2 tensor.
     pub fn t(&self) -> Tensor {
         let (r, c) = self.dims2();
@@ -131,6 +146,21 @@ mod tests {
             / t.numel() as f32;
         assert!(mean.abs() < 0.05, "{mean}");
         assert!((var - 4.0).abs() < 0.2, "{var}");
+    }
+
+    #[test]
+    fn reshape_in_place_reports_growth_only_on_realloc() {
+        let mut t = Tensor::zeros(&[2, 3]);
+        // Growing past the allocation reports a growth.
+        assert!(t.reshape_in_place(&[4, 3]));
+        assert_eq!(t.dims2(), (4, 3));
+        assert_eq!(t.numel(), 12);
+        // Shrinking and regrowing within capacity does not.
+        assert!(!t.reshape_in_place(&[1, 3]));
+        assert_eq!(t.numel(), 3);
+        assert!(!t.reshape_in_place(&[3, 4]));
+        assert_eq!(t.dims2(), (3, 4));
+        assert_eq!(t.numel(), 12);
     }
 
     #[test]

@@ -10,7 +10,8 @@
 use moepp::cluster::sim::ClusterSim;
 use moepp::cluster::topology::Topology;
 use moepp::config::MoeConfig;
-use moepp::coordinator::engine::{ForwardStats, MoeEngine};
+use moepp::coordinator::engine::{ForwardStats, MoeEngine, Partition};
+use moepp::moe::arena::ExecArena;
 use moepp::moe::exec::{self, NativeSingle};
 use moepp::moe::weights::StackWeights;
 use moepp::tensor::Tensor;
@@ -69,41 +70,54 @@ fn check_preset(preset: &'static str) {
             let weights = StackWeights::init(wseed, &cfg);
             let cfgs = vec![cfg.clone(); cfg.n_layers];
             let mut oracle = NativeSingle { layers: &weights.layers };
-            let (y_oracle, s_oracle, _) =
-                exec::forward_stack(&mut oracle, &weights, &cfgs, &x)
-                    .map_err(|e| format!("oracle: {e:#}"))?;
+            let mut arena = ExecArena::new();
+            let (y_oracle, s_oracle, _) = exec::forward_stack(
+                &mut oracle, &weights, &cfgs, &x, &mut arena,
+            )
+            .map_err(|e| format!("oracle: {e:#}"))?;
 
-            // Batched serving backend, serial and parallel.
+            // Batched serving backend: serial and parallel, both work
+            // partitions.
             let mut batched = Vec::new();
-            for workers in [1usize, 4] {
-                let engine = MoeEngine::native_with_workers(
-                    cfg.clone(),
-                    wseed,
-                    workers,
-                );
-                let (y, s) = engine
-                    .forward_stack(&x)
-                    .map_err(|e| format!("workers={workers}: {e:#}"))?;
-                if !y.approx_eq(&y_oracle, 1e-5, 1e-5) {
+            for partition in Partition::all() {
+                for workers in [1usize, 4] {
+                    let mut engine = MoeEngine::native_with_workers(
+                        cfg.clone(),
+                        wseed,
+                        workers,
+                    )
+                    .with_partition(partition);
+                    let (y, s) =
+                        engine.forward_stack(&x).map_err(|e| {
+                            format!("workers={workers}: {e:#}")
+                        })?;
+                    if !y.approx_eq(&y_oracle, 1e-5, 1e-5) {
+                        return Err(format!(
+                            "batched workers={workers} {} diverges \
+                             from oracle",
+                            partition.label()
+                        ));
+                    }
+                    accounting_matches(
+                        &format!("workers={workers}"),
+                        &s_oracle,
+                        &s,
+                    )?;
+                    batched.push((y, s));
+                }
+            }
+            // Every (partition, workers) cell must agree bitwise.
+            for (i, (y, _)) in batched.iter().enumerate().skip(1) {
+                if batched[0].0.data != y.data {
                     return Err(format!(
-                        "batched workers={workers} diverges from oracle"
+                        "cell {i} not bitwise equal to cell 0"
                     ));
                 }
-                accounting_matches(
-                    &format!("workers={workers}"),
-                    &s_oracle,
-                    &s,
-                )?;
-                batched.push((y, s));
-            }
-            // workers=1 and workers=4 must agree bitwise.
-            if batched[0].0.data != batched[1].0.data {
-                return Err("workers=1 vs workers=4 not bitwise equal"
-                    .into());
             }
 
             // Cluster simulator (same weight seed -> same weights).
-            let sim = ClusterSim::new(cfg.clone(), Topology::new(3), wseed);
+            let mut sim =
+                ClusterSim::new(cfg.clone(), Topology::new(3), wseed);
             let (y_sim, rep) = sim.forward(&x);
             if !y_sim.approx_eq(&y_oracle, 1e-5, 1e-5) {
                 return Err("cluster sim diverges from oracle".into());
@@ -139,9 +153,12 @@ fn backends_agree_across_tau() {
         let mut rng = Rng::new(17);
         let x = Tensor::randn(&mut rng, &[32, cfg.d_model], 1.0);
         let mut oracle = NativeSingle { layers: &weights.layers };
-        let (y_oracle, s_oracle, _) =
-            exec::forward_stack(&mut oracle, &weights, &cfgs, &x).unwrap();
-        let engine = MoeEngine::native_with_workers(cfg.clone(), 5, 4);
+        let mut arena = ExecArena::new();
+        let (y_oracle, s_oracle, _) = exec::forward_stack(
+            &mut oracle, &weights, &cfgs, &x, &mut arena,
+        )
+        .unwrap();
+        let mut engine = MoeEngine::native_with_workers(cfg.clone(), 5, 4);
         let (y_eng, s_eng) = engine.forward_stack(&x).unwrap();
         assert!(
             y_eng.approx_eq(&y_oracle, 1e-5, 1e-5),

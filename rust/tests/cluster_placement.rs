@@ -24,7 +24,7 @@ use moepp::tensor::Tensor;
 use moepp::util::rng::Rng;
 
 fn profile_of(
-    sim: &ClusterSim,
+    sim: &mut ClusterSim,
     cfg: &MoeConfig,
     batches: &[Tensor],
 ) -> LoadProfile {
@@ -39,8 +39,8 @@ fn profile_of(
 #[test]
 fn default_round_robin_plan_is_bitwise_identical_to_unplanned() {
     let cfg = MoeConfig::preset("test");
-    let plain = ClusterSim::new(cfg.clone(), Topology::new(3), 7);
-    let planned = ClusterSim::new(
+    let mut plain = ClusterSim::new(cfg.clone(), Topology::new(3), 7);
+    let mut planned = ClusterSim::new(
         cfg.clone(),
         Topology::new(3).with_placement(PlacementPlan::round_robin(
             cfg.n_ffn_experts,
@@ -75,7 +75,7 @@ fn any_placement_leaves_model_outputs_bitwise_identical() {
     let mut rng = Rng::new(3);
     let x = Tensor::randn(&mut rng, &[40, cfg.d_model], 1.0);
     let baseline = {
-        let sim = ClusterSim::new(cfg.clone(), Topology::new(2), 9);
+        let mut sim = ClusterSim::new(cfg.clone(), Topology::new(2), 9);
         sim.forward(&x)
     };
     let plans = [
@@ -85,7 +85,7 @@ fn any_placement_leaves_model_outputs_bitwise_identical() {
         PlacementPlan::from_owner(vec![1, 1, 1, 1], 2).unwrap(),
     ];
     for plan in plans {
-        let sim = ClusterSim::new(
+        let mut sim = ClusterSim::new(
             cfg.clone(),
             Topology::new(2).with_placement(plan.clone()),
             9,
@@ -126,9 +126,9 @@ fn refined_plan_strictly_beats_round_robin_on_skewed_routing() {
         let mut rng = Rng::new(seed);
         let batches =
             skewed_batches(&mut rng, 2, tokens, cfg.d_model);
-        let sim =
+        let mut sim =
             ClusterSim::new(cfg.clone(), Topology::new(n_dev), seed);
-        let profile = profile_of(&sim, &cfg, &batches);
+        let profile = profile_of(&mut sim, &cfg, &batches);
         let rr = planner
             .plan(Strategy::RoundRobin, n_dev, &profile)
             .unwrap();
@@ -153,9 +153,9 @@ fn refined_plan_strictly_beats_round_robin_on_skewed_routing() {
     let (seed, batches, refined) =
         found.expect("no seed in 0..16 produced improvable skew");
 
-    let sim_rr =
+    let mut sim_rr =
         ClusterSim::new(cfg.clone(), Topology::new(n_dev), seed);
-    let sim_ref = ClusterSim::new(
+    let mut sim_ref = ClusterSim::new(
         cfg.clone(),
         Topology::new(n_dev).with_placement(refined),
         seed,
@@ -238,7 +238,8 @@ fn online_replanning_migrates_between_batches_and_reports_in_metrics() {
     // Migrations never changed outputs: a plain round-robin cluster on
     // the same weights produces bit-identical results for every batch,
     // including those executed after experts moved.
-    let plain = ClusterSim::new(cfg.clone(), Topology::new(n_dev), seed);
+    let mut plain =
+        ClusterSim::new(cfg.clone(), Topology::new(n_dev), seed);
     for (b, y_direct) in batches.iter().zip(&direct_outs) {
         let (y, _) = plain.forward(b);
         assert_eq!(y.data, y_direct.data);

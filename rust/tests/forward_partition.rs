@@ -1,0 +1,158 @@
+//! Token-parallel partitioning + arena acceptance tests (ISSUE 4,
+//! DESIGN.md §11):
+//!
+//! * outputs are **bitwise-identical** across workers ∈ {1, 2, 4, 8} and
+//!   both work partitions (batch fan-out vs token shards), including an
+//!   adversarial routing where every token lands on one hot expert —
+//!   the case the shard partition exists for;
+//! * the execution arena stops growing after the first pass over a
+//!   steady-state serve loop's batches: replaying any previously-seen
+//!   batch shape performs zero buffer growths (and reproduces outputs
+//!   bit for bit).
+
+use moepp::bench::workload::skewed_batches;
+use moepp::config::MoeConfig;
+use moepp::coordinator::dispatch::{DispatchPlan, ExpertBatch};
+use moepp::coordinator::engine::{MoeEngine, Partition};
+use moepp::moe::arena::FfnArena;
+use moepp::moe::exec::{ExpertBackend, NativeBatched};
+use moepp::moe::weights::StackWeights;
+use moepp::tensor::Tensor;
+use moepp::util::rng::Rng;
+
+#[test]
+fn skewed_workload_is_bitwise_identical_across_workers_and_partitions() {
+    let cfg = MoeConfig::preset("test");
+    let mut rng = Rng::new(11);
+    let batches = skewed_batches(&mut rng, 2, 72, cfg.d_model);
+    // Reference: serial engine.
+    let mut reference = Vec::new();
+    {
+        let mut engine = MoeEngine::native_with_workers(cfg.clone(), 6, 1);
+        for b in &batches {
+            reference.push(engine.forward_stack(b).unwrap().0);
+        }
+    }
+    for partition in Partition::all() {
+        for workers in [1usize, 2, 4, 8] {
+            let mut engine =
+                MoeEngine::native_with_workers(cfg.clone(), 6, workers)
+                    .with_partition(partition);
+            for (b, want) in batches.iter().zip(&reference) {
+                let (y, _) = engine.forward_stack(b).unwrap();
+                assert_eq!(
+                    y.data,
+                    want.data,
+                    "workers={workers} partition={} diverged on the \
+                     skewed workload",
+                    partition.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn single_hot_expert_layer_is_bitwise_identical_for_all_schedules() {
+    // The adversarial case: one FFN expert owns the entire layer's work.
+    // Under Partition::Batch that batch is a single unit (one worker
+    // computes while the rest idle); under Partition::Shard it splits
+    // into row ranges — results must be bit-for-bit the same either way,
+    // for every worker count.
+    let cfg = MoeConfig::preset("test");
+    let weights = StackWeights::init(13, &cfg);
+    let t = 61; // awkward row count: uneven shard splits
+    let mut rng = Rng::new(29);
+    let h = Tensor::randn(&mut rng, &[t, cfg.d_model], 1.0);
+    let gates: Vec<f32> =
+        (0..t).map(|i| 0.2 + 0.01 * (i % 7) as f32).collect();
+    let mut expert_counts = vec![0usize; cfg.n_experts()];
+    expert_counts[0] = t;
+    let plan = DispatchPlan {
+        ffn_batches: vec![ExpertBatch {
+            expert: 0,
+            tokens: (0..t).collect(),
+            gates: gates.clone(),
+        }],
+        zc_inline: Vec::new(),
+        dropped: Vec::new(),
+        expert_counts,
+    };
+
+    let run = |workers: usize, partition: Partition| -> Vec<f32> {
+        let mut be = NativeBatched {
+            layers: &weights.layers,
+            workers,
+            partition,
+        };
+        let mut y = Tensor::zeros(&[t, cfg.d_model]);
+        let mut arena = FfnArena::new();
+        be.execute_ffn(0, &plan, &h, &mut y, &mut arena).unwrap();
+        y.data
+    };
+
+    let want = run(1, Partition::Shard);
+    assert!(
+        want.iter().any(|&v| v != 0.0),
+        "hot expert must produce output"
+    );
+    for partition in Partition::all() {
+        for workers in [1usize, 2, 4, 8] {
+            assert_eq!(
+                run(workers, partition),
+                want,
+                "workers={workers} partition={} diverged on the \
+                 single-hot-expert layer",
+                partition.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn arena_stops_growing_after_first_pass_of_steady_state_loop() {
+    // The serve scheduler's steady state is exactly this loop: the same
+    // engine forwarding batch after batch. After one pass over the
+    // workload every arena buffer has seen its peak shape, so replaying
+    // the batches must perform zero growths — per batch and in total —
+    // while reproducing outputs bitwise.
+    for (workers, partition) in [
+        (1usize, Partition::Shard),
+        (2, Partition::Shard),
+        (4, Partition::Batch),
+    ] {
+        let cfg = MoeConfig::preset("test");
+        let mut engine =
+            MoeEngine::native_with_workers(cfg.clone(), 2, workers)
+                .with_partition(partition);
+        let mut rng = Rng::new(77);
+        let mut batches = skewed_batches(&mut rng, 3, 48, cfg.d_model);
+        batches.push(Tensor::randn(&mut rng, &[48, cfg.d_model], 1.0));
+        let mut first_pass = Vec::new();
+        for b in &batches {
+            first_pass.push(engine.forward_stack(b).unwrap().0);
+        }
+        let warmed = engine.arena_growths();
+        assert!(warmed > 0, "warmup must have grown the arena");
+        for round in 0..2 {
+            for (b, want) in batches.iter().zip(&first_pass) {
+                let (y, _) = engine.forward_stack(b).unwrap();
+                assert_eq!(
+                    y.data, want.data,
+                    "replay diverged (round {round})"
+                );
+                assert_eq!(
+                    engine.arena_growths(),
+                    warmed,
+                    "arena grew in steady state (round {round}, \
+                     workers={workers}, {})",
+                    partition.label()
+                );
+            }
+        }
+        // A strictly smaller batch also grows nothing.
+        let small = Tensor::randn(&mut rng, &[9, cfg.d_model], 1.0);
+        let _ = engine.forward_stack(&small).unwrap();
+        assert_eq!(engine.arena_growths(), warmed, "smaller batch grew");
+    }
+}

@@ -166,8 +166,8 @@ fn vanilla_artifacts_also_train() {
 fn pjrt_engine_matches_native_engine() {
     let Some(rt) = runtime() else { return };
     let cfg = MoeConfig::preset("test");
-    let native = MoeEngine::native(cfg.clone(), 5);
-    let pjrt =
+    let mut native = MoeEngine::native(cfg.clone(), 5);
+    let mut pjrt =
         MoeEngine::pjrt(cfg.clone(), 5, std::sync::Arc::new(rt)).unwrap();
     let mut rng = Rng::new(9);
     let x = Tensor::randn(&mut rng, &[48, cfg.d_model], 1.0);

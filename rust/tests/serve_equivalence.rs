@@ -55,7 +55,7 @@ fn sequential_submissions_match_hand_driven_path_bitwise() {
         let inputs = request_inputs(&cfg, &sizes);
 
         // Old path: hand-driven Batcher + forward_stack + scatter.
-        let engine = MoeEngine::native_with_workers(
+        let mut engine = MoeEngine::native_with_workers(
             cfg.clone(),
             WEIGHT_SEED,
             workers,
@@ -149,7 +149,7 @@ fn concurrent_submissions_match_direct_forward() {
             },
         ));
         let inputs = request_inputs(&cfg, &sizes);
-        let oracle = MoeEngine::native_with_workers(
+        let mut oracle = MoeEngine::native_with_workers(
             cfg.clone(),
             WEIGHT_SEED,
             workers,
