@@ -17,15 +17,15 @@ run() {
 }
 
 # Build, failing on any warning in the gated modules (serve/, placement/,
-# tensor/, moe/, bench/). Touch the crate root so cargo re-emits warnings
-# even on a warm cache.
+# tensor/, moe/, bench/, util/). Touch the crate root so cargo re-emits
+# warnings even on a warm cache.
 touch src/lib.rs
-echo "==> cargo build --release (warnings in src/{serve,placement,tensor,moe,bench}/ are fatal)"
+echo "==> cargo build --release (warnings in src/{serve,placement,tensor,moe,bench,util}/ are fatal)"
 build_log=$(mktemp)
 cargo build --release 2>&1 | tee "$build_log"
 if grep -A3 '^warning' "$build_log" \
-    | grep -q 'src/serve/\|src/placement/\|src/tensor/\|src/moe/\|src/bench/'; then
-    echo "ci.sh: warnings in a gated module (serve/placement/tensor/moe/bench) — fix them" >&2
+    | grep -q 'src/serve/\|src/placement/\|src/tensor/\|src/moe/\|src/bench/\|src/util/'; then
+    echo "ci.sh: warnings in a gated module (serve/placement/tensor/moe/bench/util) — fix them" >&2
     exit 1
 fi
 rm -f "$build_log"
@@ -42,10 +42,12 @@ run cargo run --release --quiet -- serve --preset sm-8e --requests 64 \
 run cargo run --release --quiet -- placement --devices 4 --profile skewed \
     --tokens 128 --batches 2
 
-# Expert-forward smoke: batch vs shard partitioning on uniform + skewed
-# routing (writes BENCH_forward.json — the perf-trajectory artifact).
+# Expert-forward smoke: batch vs shard partitioning AND pool vs scoped
+# executors on uniform + skewed routing (writes BENCH_forward.json — the
+# perf-trajectory artifact; the pool-vs-scoped small-batch latency rows
+# carry speedup_vs_scoped).
 run cargo run --release --quiet -- bench --forward --presets sm-8e \
-    --workers 1,4 --tokens 96 --batches 2
+    --workers 1,4 --tokens 96 --batches 2 --executor both
 
 if [ "${1:-}" != "fast" ]; then
     if cargo clippy --version >/dev/null 2>&1; then

@@ -12,7 +12,7 @@ use anyhow::Result;
 use crate::cluster::sim::{ClusterSim, SimReport};
 use crate::cluster::topology::Topology;
 use crate::config::MoeConfig;
-use crate::coordinator::engine::{MoeEngine, Partition};
+use crate::coordinator::engine::{ExecutorKind, MoeEngine, Partition};
 use crate::moe::exec::AssignmentCounts;
 use crate::placement::{
     CostModel, LoadProfile, PlacementPlan, Planner, Strategy,
@@ -109,6 +109,8 @@ pub struct ForwardSweepRow {
     pub workload: String,
     /// "batch" (old batch-per-worker fan-out) or "shard" (token-parallel).
     pub partition: String,
+    /// "pool" (persistent worker pool) or "scoped" (spawn-per-call).
+    pub executor: String,
     pub workers: usize,
     /// Mean expert-forward time per batch (the Table 3 metric).
     pub expert_forward_ms: f64,
@@ -117,27 +119,34 @@ pub struct ForwardSweepRow {
     /// Arena growths after the measured run — should equal the warmup's
     /// (steady state allocates nothing; reported for the perf trajectory).
     pub arena_growths: u64,
+    /// Pool worker threads spawned over the measured run (zero for the
+    /// scoped executor, `workers - 1` paid once for the pool — the
+    /// thread-spawn twin of `arena_growths`).
+    pub pool_spawns: u64,
 }
 
 /// The expert-forward sweep behind `moepp bench forward` and
 /// `BENCH_forward.json`: presets × {uniform, skewed} routing ×
-/// partition strategies × worker counts, measured on identical batches
-/// (same workload rng per preset/workload, same weight seed), so the
-/// shard-vs-batch ratio isolates the partitioning strategy — outputs are
-/// bitwise-identical across every cell by the §7/§11 equivalence
-/// contract, only the schedule changes.
+/// partition strategies × executors × worker counts, measured on
+/// identical batches (same workload rng per preset/workload, same weight
+/// seed), so the shard-vs-batch and pool-vs-scoped ratios isolate one
+/// axis each — outputs are bitwise-identical across every cell by the
+/// §7/§11/§12 equivalence contract, only the schedule changes.
 pub fn run_forward_sweep(
     presets: &[&str],
     workers_list: &[usize],
     partitions: &[Partition],
+    executors: &[ExecutorKind],
     tokens: usize,
     n_batches: usize,
     seed: u64,
 ) -> Result<Vec<ForwardSweepRow>> {
     anyhow::ensure!(n_batches > 0, "forward sweep needs >= 1 batch");
     anyhow::ensure!(
-        !workers_list.is_empty() && !partitions.is_empty(),
-        "forward sweep needs >= 1 worker count and partition"
+        !workers_list.is_empty()
+            && !partitions.is_empty()
+            && !executors.is_empty(),
+        "forward sweep needs >= 1 worker count, partition and executor"
     );
     let mut rows = Vec::new();
     for preset in presets {
@@ -154,31 +163,37 @@ pub fn run_forward_sweep(
                 )
             };
             for &partition in partitions {
-                for &workers in workers_list {
-                    let mut engine = MoeEngine::native_with_workers(
-                        cfg.clone(),
-                        seed,
-                        workers,
-                    )
-                    .with_partition(partition);
-                    // Warm: arena growth and routing caches settle here.
-                    let _ = engine.forward_stack(&batches[0])?;
-                    let mut expert_s = 0.0;
-                    for b in &batches {
-                        let (_, stats) = engine.forward_stack(b)?;
-                        expert_s += stats.expert_forward_s;
+                for &executor in executors {
+                    for &workers in workers_list {
+                        let mut engine = MoeEngine::native_with_workers(
+                            cfg.clone(),
+                            seed,
+                            workers,
+                        )
+                        .with_partition(partition)
+                        .with_executor(executor);
+                        // Warm: arena growth, routing caches and the
+                        // pool's one-time worker spawns settle here.
+                        let _ = engine.forward_stack(&batches[0])?;
+                        let mut expert_s = 0.0;
+                        for b in &batches {
+                            let (_, stats) = engine.forward_stack(b)?;
+                            expert_s += stats.expert_forward_s;
+                        }
+                        rows.push(ForwardSweepRow {
+                            preset: preset.to_string(),
+                            workload: workload.to_string(),
+                            partition: partition.label().to_string(),
+                            executor: executor.label().to_string(),
+                            workers,
+                            expert_forward_ms: expert_s * 1e3
+                                / n_batches as f64,
+                            tokens_per_s: (tokens * n_batches) as f64
+                                / expert_s.max(1e-12),
+                            arena_growths: engine.arena_growths(),
+                            pool_spawns: engine.pool_spawns(),
+                        });
                     }
-                    rows.push(ForwardSweepRow {
-                        preset: preset.to_string(),
-                        workload: workload.to_string(),
-                        partition: partition.label().to_string(),
-                        workers,
-                        expert_forward_ms: expert_s * 1e3
-                            / n_batches as f64,
-                        tokens_per_s: (tokens * n_batches) as f64
-                            / expert_s.max(1e-12),
-                        arena_growths: engine.arena_growths(),
-                    });
                 }
             }
         }
@@ -186,39 +201,85 @@ pub fn run_forward_sweep(
     Ok(rows)
 }
 
-/// Shard-over-batch throughput ratio for a row's (preset, workload,
-/// workers) cell, when both partitions were measured.
-fn shard_speedup(rows: &[ForwardSweepRow], r: &ForwardSweepRow)
-    -> Option<f64> {
-    if r.partition != "shard" {
+/// A comparison axis of the forward sweep (the dimension a ratio column
+/// varies while all the others are held fixed).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum SweepAxis {
+    Partition,
+    Executor,
+}
+
+fn axis_value(r: &ForwardSweepRow, axis: SweepAxis) -> &str {
+    match axis {
+        SweepAxis::Partition => &r.partition,
+        SweepAxis::Executor => &r.executor,
+    }
+}
+
+/// Throughput ratio of `r` against its baseline twin: the row agreeing
+/// with `r` on every sweep axis except `axis`, where the twin holds
+/// `base`. `None` when `r` is itself a baseline row or no twin was
+/// measured. One matcher serves every ratio column, so a new sweep
+/// axis added to [`ForwardSweepRow`] only needs teaching here once.
+fn speedup_vs(
+    rows: &[ForwardSweepRow],
+    r: &ForwardSweepRow,
+    axis: SweepAxis,
+    base: &str,
+) -> Option<f64> {
+    if axis_value(r, axis) == base {
         return None;
     }
     rows.iter()
         .find(|b| {
-            b.partition == "batch"
+            axis_value(b, axis) == base
                 && b.preset == r.preset
                 && b.workload == r.workload
                 && b.workers == r.workers
+                && (axis == SweepAxis::Partition
+                    || b.partition == r.partition)
+                && (axis == SweepAxis::Executor
+                    || b.executor == r.executor)
         })
         .map(|b| r.tokens_per_s / b.tokens_per_s.max(1e-12))
 }
 
+/// Shard-over-batch throughput ratio for a row's (preset, workload,
+/// executor, workers) cell, when both partitions were measured.
+fn shard_speedup(rows: &[ForwardSweepRow], r: &ForwardSweepRow)
+    -> Option<f64> {
+    speedup_vs(rows, r, SweepAxis::Partition, "batch")
+}
+
+/// Pool-over-scoped throughput ratio for a row's (preset, workload,
+/// partition, workers) cell — the persistent-executor win the §12
+/// refactor targets (largest at small batches, where per-layer thread
+/// spawns dominated). Present when both executors were measured.
+fn pool_speedup(rows: &[ForwardSweepRow], r: &ForwardSweepRow)
+    -> Option<f64> {
+    speedup_vs(rows, r, SweepAxis::Executor, "scoped")
+}
+
 pub fn render_forward_sweep(rows: &[ForwardSweepRow]) -> String {
     let mut s = format!(
-        "{:<8} {:<8} {:<6} {:>7} {:>14} {:>12} {:>10}\n",
-        "preset", "workload", "part", "workers", "expert fwd(ms)",
-        "tokens/s", "vs batch"
+        "{:<8} {:<8} {:<6} {:<6} {:>7} {:>14} {:>12} {:>9} {:>10}\n",
+        "preset", "workload", "part", "exec", "workers",
+        "expert fwd(ms)", "tokens/s", "vs batch", "vs scoped"
     );
     for r in rows {
         s.push_str(&format!(
-            "{:<8} {:<8} {:<6} {:>7} {:>14.3} {:>12.0} {:>10}\n",
+            "{:<8} {:<8} {:<6} {:<6} {:>7} {:>14.3} {:>12.0} {:>9} {:>10}\n",
             r.preset,
             r.workload,
             r.partition,
+            r.executor,
             r.workers,
             r.expert_forward_ms,
             r.tokens_per_s,
             shard_speedup(rows, r)
+                .map(|x| format!("{x:.2}x"))
+                .unwrap_or_else(|| "-".into()),
+            pool_speedup(rows, r)
                 .map(|x| format!("{x:.2}x"))
                 .unwrap_or_else(|| "-".into()),
         ));
@@ -248,6 +309,7 @@ pub fn forward_sweep_json(
                                 "partition",
                                 Json::str(r.partition.clone()),
                             ),
+                            ("executor", Json::str(r.executor.clone())),
                             ("workers", Json::num(r.workers as f64)),
                             (
                                 "expert_forward_ms",
@@ -258,10 +320,20 @@ pub fn forward_sweep_json(
                                 "arena_growths",
                                 Json::num(r.arena_growths as f64),
                             ),
+                            (
+                                "pool_spawns",
+                                Json::num(r.pool_spawns as f64),
+                            ),
                         ];
                         if let Some(x) = shard_speedup(rows, r) {
                             fields.push((
                                 "speedup_vs_batch",
+                                Json::num(x),
+                            ));
+                        }
+                        if let Some(x) = pool_speedup(rows, r) {
+                            fields.push((
+                                "speedup_vs_scoped",
                                 Json::num(x),
                             ));
                         }
@@ -596,24 +668,33 @@ mod tests {
             &["test"],
             &[1, 2],
             &Partition::all(),
+            &ExecutorKind::all(),
             32,
             2,
             5,
         )
         .unwrap();
-        // 1 preset x 2 workloads x 2 partitions x 2 worker counts.
-        assert_eq!(rows.len(), 8);
+        // 1 preset x 2 workloads x 2 partitions x 2 executors x
+        // 2 worker counts.
+        assert_eq!(rows.len(), 16);
         for r in &rows {
             assert!(r.tokens_per_s > 0.0, "{r:?}");
             assert!(r.expert_forward_ms > 0.0, "{r:?}");
+            if r.executor == "scoped" {
+                assert_eq!(r.pool_spawns, 0, "{r:?}");
+            } else {
+                assert_eq!(r.pool_spawns, r.workers as u64 - 1, "{r:?}");
+            }
         }
         let rendered = render_forward_sweep(&rows);
         assert!(rendered.contains("skewed"));
+        assert!(rendered.contains("pool") && rendered.contains("scoped"));
         let j = forward_sweep_json(32, 2, &rows);
         let back = Json::parse(&j.to_string()).unwrap();
         let jrows = back.get("rows").unwrap().as_arr().unwrap();
-        assert_eq!(jrows.len(), 8);
-        // Every shard row carries a speedup ratio against its batch twin.
+        assert_eq!(jrows.len(), 16);
+        // Every shard row carries a speedup ratio against its batch twin
+        // (same executor), every pool row one against its scoped twin.
         let shard_rows: Vec<_> = jrows
             .iter()
             .filter(|r| {
@@ -628,6 +709,21 @@ mod tests {
                     .and_then(Json::as_f64)
                     .is_some(),
                 "missing speedup field"
+            );
+        }
+        let pool_rows: Vec<_> = jrows
+            .iter()
+            .filter(|r| {
+                r.get("executor").and_then(Json::as_str) == Some("pool")
+            })
+            .collect();
+        assert_eq!(pool_rows.len(), 8);
+        for r in pool_rows {
+            assert!(
+                r.get("speedup_vs_scoped")
+                    .and_then(Json::as_f64)
+                    .is_some(),
+                "missing pool-vs-scoped field"
             );
         }
     }

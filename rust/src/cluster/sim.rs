@@ -27,9 +27,10 @@ use crate::moe::arena::{ExecArena, FfnArena};
 use crate::moe::balance::load_cv;
 use crate::moe::exec::{self, ExpertBackend, FfnLayerReport, ForwardStats};
 use crate::moe::weights::StackWeights;
-use crate::placement::{PlacementPlan, Replanner};
+use crate::placement::{MigrationPlan, PlacementPlan, Replanner};
 use crate::tensor::ops::axpy;
 use crate::tensor::Tensor;
+use crate::util::pool::{ExecPool, Executor, TaskHandle};
 
 use super::comm::LayerTraffic;
 use super::topology::Topology;
@@ -136,11 +137,22 @@ pub struct ClusterSim {
     workers: Vec<Vec<Worker>>,
     /// Online replanner driving `apply_placement` between served batches.
     replanner: Option<Replanner>,
+    /// In-flight off-thread planning task: submitted at the batch
+    /// boundary where the replanner's window fills, polled (never
+    /// awaited) at each later boundary and applied at the first one
+    /// that finds it finished — the local search neither runs on nor
+    /// blocks the serving scheduler thread (DESIGN.md §12).
+    pending_plan: Option<TaskHandle<Option<MigrationPlan>>>,
     /// Replans applied since the serving layer last collected the count.
     replans_unreported: u64,
     /// Reusable stack-forward buffers (routing, per-layer y; the worker
     /// backend keeps its own per-device tensors) — DESIGN.md §11.
     arena: ExecArena,
+    /// The sim's executor pool (DESIGN.md §12). The cluster backend runs
+    /// FFN work on its own per-device worker threads, so the pool's job
+    /// side idles; its task side carries the replanner's local search off
+    /// the scheduler thread (one lazily-spawned worker, spawned once).
+    pool: ExecPool,
 }
 
 impl ClusterSim {
@@ -162,8 +174,10 @@ impl ClusterSim {
             layer_cfgs,
             workers,
             replanner: None,
+            pending_plan: None,
             replans_unreported: 0,
             arena: ExecArena::new(),
+            pool: ExecPool::new(1),
         }
     }
 
@@ -188,18 +202,26 @@ impl ClusterSim {
             .map(|layer| {
                 (0..topo.n_devices)
                     .map(|dev| {
-                        let owned: Vec<usize> = (0..cfg.n_ffn_experts)
-                            .filter(|&e| topo.ffn_owner(e) == dev)
-                            .collect();
-                        let w = owned
-                            .iter()
-                            .map(|&e| layer.ffn[e].clone())
-                            .collect();
-                        Worker::spawn(dev, owned, w, cfg)
+                        Self::spawn_device_worker(layer, cfg, topo, dev)
                     })
                     .collect()
             })
             .collect()
+    }
+
+    /// One device's worker for one layer, loaded with the FFN experts
+    /// the topology's placement assigns it.
+    fn spawn_device_worker(
+        layer: &crate::moe::weights::MoeLayerWeights,
+        cfg: &MoeConfig,
+        topo: &Topology,
+        dev: usize,
+    ) -> Worker {
+        let owned: Vec<usize> = (0..cfg.n_ffn_experts)
+            .filter(|&e| topo.ffn_owner(e) == dev)
+            .collect();
+        let w = owned.iter().map(|&e| layer.ffn[e].clone()).collect();
+        Worker::spawn(dev, owned, w, cfg)
     }
 
     /// The effective FFN placement currently executing.
@@ -207,8 +229,12 @@ impl ClusterSim {
         self.topo.effective_placement(self.cfg.n_ffn_experts)
     }
 
-    /// Migrate to `plan`: install it on the topology and respawn the
-    /// worker shards accordingly. Returns the number of experts that
+    /// Migrate to `plan`: install it on the topology and respawn **only
+    /// the workers of devices whose owned-expert set changed** — the
+    /// between-batch stall scales with the migration (its moved experts
+    /// and bytes), not with cluster size; untouched devices' worker
+    /// threads survive by identity (asserted in
+    /// `tests/cluster_placement.rs`). Returns the number of experts that
     /// changed owner. Call between batches — never during a forward.
     pub fn apply_placement(&mut self, plan: &PlacementPlan)
         -> Result<usize> {
@@ -225,29 +251,106 @@ impl ClusterSim {
             self.cfg.n_ffn_experts
         );
         plan.validate()?;
-        let moved = self.placement().diff(plan).len();
-        if moved == 0 {
+        let moves = self.placement().diff(plan);
+        if moves.is_empty() {
             return Ok(0);
         }
+        // A manually-applied plan invalidates any in-flight replanner
+        // proposal (it was searched against the placement just replaced).
+        self.pending_plan = None;
+        let mut affected = vec![false; self.topo.n_devices];
+        for &(_, from, to) in &moves {
+            affected[from] = true;
+            affected[to] = true;
+        }
         self.topo.set_placement(plan.clone());
-        self.workers =
-            Self::spawn_workers(&self.weights, &self.cfg, &self.topo);
-        Ok(moved)
+        for (layer, workers) in
+            self.weights.layers.iter().zip(&mut self.workers)
+        {
+            for (dev, worker) in workers.iter_mut().enumerate() {
+                if affected[dev] {
+                    *worker = Self::spawn_device_worker(
+                        layer, &self.cfg, &self.topo, dev,
+                    );
+                }
+            }
+        }
+        Ok(moves.len())
     }
 
-    /// Feed one executed batch's stats to the attached replanner and
-    /// apply its migration if one fires. The serving backend calls this
-    /// after every batch — i.e. replanning happens *between* batches.
+    /// Feed one executed batch's stats to the attached replanner. The
+    /// serving backend calls this after every batch, so everything here
+    /// happens *between* batches — and the expensive part (the planner's
+    /// local search) never touches this thread at all (DESIGN.md §12):
+    ///
+    /// 1. when the replanner's observation window fills, the search is
+    ///    **submitted** to the sim's pool and this call returns;
+    /// 2. every later batch boundary **polls** (non-blocking
+    ///    `try_take`); the first boundary that finds the search finished
+    ///    — normally the very next one, since planning overlapped a
+    ///    whole batch — applies its gated proposal before the next
+    ///    batch executes. A search slower than a batch just stays in
+    ///    flight: `note_batch` is O(1) on this thread unconditionally,
+    ///    which is what kills the periodic tail-latency spike at large
+    ///    expert counts.
+    ///
+    /// Outputs are unaffected either way: placement never changes math.
     pub fn note_batch(&mut self, stats: &ForwardStats) {
         let Some(mut rp) = self.replanner.take() else { return };
         rp.observe(stats, &self.cfg);
-        if let Some(mig) = rp.maybe_replan(&self.placement()) {
-            if self.apply_placement(&mig.plan).is_ok() {
-                rp.committed();
-                self.replans_unreported += 1;
+        if let Some(handle) = self.pending_plan.take() {
+            match handle.try_take() {
+                // Still planning: leave it in flight, poll again at the
+                // next boundary — never block the scheduler.
+                None => self.pending_plan = Some(handle),
+                Some(Ok(Some(mig))) => {
+                    if self.apply_placement(&mig.plan).is_ok() {
+                        rp.committed();
+                        self.replans_unreported += 1;
+                    } else {
+                        rp.window_reset();
+                    }
+                }
+                // Gates held: restart the window, exactly like the
+                // synchronous failed-attempt rule.
+                Some(Ok(None)) => rp.window_reset(),
+                // The task panicked (a planner bug, NOT a gate): the
+                // pool contained it, but it must not be silent — every
+                // window would fill, panic and reset, permanently
+                // disabling replanning with no trace.
+                Some(Err(msg)) => {
+                    crate::warn_log!(
+                        "placement planning task panicked: {msg}; \
+                         replanning window restarted"
+                    );
+                    debug_assert!(
+                        false,
+                        "placement planning task panicked: {msg}"
+                    );
+                    rp.window_reset();
+                }
             }
+        } else if rp.ready() {
+            let task = rp.plan_task(&self.placement());
+            self.pending_plan = Some(self.pool.submit(move || task.run()));
         }
         self.replanner = Some(rp);
+    }
+
+    /// True while a submitted planning task has not yet been joined
+    /// (diagnostics / tests of the off-thread replan protocol).
+    pub fn replan_in_flight(&self) -> bool {
+        self.pending_plan.is_some()
+    }
+
+    /// Per-(layer, device) worker thread identities — the migration
+    /// regression test uses these to prove untouched devices' workers
+    /// survive `apply_placement` by identity.
+    pub fn worker_thread_ids(&self) -> Vec<Vec<std::thread::ThreadId>> {
+        self.workers
+            .iter()
+            .map(|row| row.iter().map(Worker::thread_id).collect())
+            .collect()
     }
 
     /// Replans applied since last asked (serving metrics hook).
@@ -272,7 +375,7 @@ impl ClusterSim {
         };
         let (y, stats, execs) = exec::forward_stack(
             &mut backend, &self.weights, &self.layer_cfgs, x,
-            &mut self.arena,
+            &mut self.arena, &Executor::Pool(&self.pool),
         )
         .expect("cluster execution is infallible");
         let layers = execs
@@ -307,7 +410,8 @@ struct ClusterBackend<'a> {
 impl ExpertBackend for ClusterBackend<'_> {
     // Gathers stage into per-device `WorkUnit` tensors that cross the
     // (simulated) device boundary, so the host arena's pools do not
-    // apply here.
+    // apply here — and FFN compute runs on the per-device worker
+    // threads, so the host executor idles too.
     fn execute_ffn(
         &mut self,
         layer: usize,
@@ -315,6 +419,7 @@ impl ExpertBackend for ClusterBackend<'_> {
         h: &Tensor,
         y: &mut Tensor,
         _arena: &mut FfnArena,
+        _exec: &Executor,
     ) -> Result<FfnLayerReport> {
         let (t, d) = h.dims2();
         let token_bytes = (d * 4) as u64;

@@ -103,6 +103,13 @@ impl Worker {
         Worker { tx, handle: Some(handle), device, owned_experts }
     }
 
+    /// OS thread identity of this worker — stable for the worker's whole
+    /// life, which is what lets tests prove a migration respawned only
+    /// the affected devices (untouched workers keep their identity).
+    pub fn thread_id(&self) -> std::thread::ThreadId {
+        self.handle.as_ref().expect("worker running").thread().id()
+    }
+
     /// Submit micro-batches; returns a receiver for the results.
     pub fn submit(&self, units: Vec<WorkUnit>)
         -> Receiver<Vec<WorkResult>> {

@@ -7,8 +7,11 @@
 //! * [`Backend::Native`] — the pure-Rust SwiGLU expert via
 //!   [`exec::NativeBatched`]: arena-backed gathers and scratch
 //!   (DESIGN.md §11), and (with `workers > 1`) the layer's FFN work cut
-//!   into (expert, row-range) shards fanned across the thread pool so a
-//!   hot expert no longer serialises the layer;
+//!   into (expert, row-range) shards fanned across the engine's
+//!   persistent [`ExecPool`] (DESIGN.md §12; `ExecutorKind::Scoped`
+//!   keeps the old spawn-per-call helpers as the measured baseline) so a
+//!   hot expert no longer serialises the layer and steady-state batches
+//!   spawn no threads;
 //! * [`Backend::Pjrt`]   — the AOT-compiled Pallas kernel executed via the
 //!   PJRT runtime, with expert micro-batches padded to the nearest compiled
 //!   bucket (weights are pre-converted to literals once at engine build).
@@ -29,8 +32,10 @@ use crate::moe::weights::StackWeights;
 use crate::runtime::host::HostValue;
 use crate::runtime::{Executable, Runtime};
 use crate::tensor::Tensor;
+use crate::util::pool::{ExecPool, Executor};
 
 pub use crate::moe::exec::{ForwardStats, Partition};
+pub use crate::util::pool::ExecutorKind;
 
 /// Expert execution backend selector.
 pub enum Backend {
@@ -63,6 +68,14 @@ pub struct MoeEngine {
     /// Reusable execution buffers (DESIGN.md §11) — one arena per engine,
     /// which is one per scheduler when the engine backs a `MoeService`.
     arena: ExecArena,
+    /// Which executor fans out the per-layer FFN work (DESIGN.md §12):
+    /// the persistent pool by default, scoped spawns as the baseline.
+    executor: ExecutorKind,
+    /// The engine's long-lived worker pool, owned next to the arena (one
+    /// per forward driver = one per scheduler thread under `MoeService`).
+    /// Built lazily on the thread that runs forwards; `None` until then
+    /// or when the scoped executor is selected.
+    pool: Option<ExecPool>,
 }
 
 impl MoeEngine {
@@ -89,6 +102,8 @@ impl MoeEngine {
                 partition: Partition::default(),
             },
             arena: ExecArena::new(),
+            executor: ExecutorKind::default(),
+            pool: None,
         }
     }
 
@@ -100,10 +115,32 @@ impl MoeEngine {
         self
     }
 
+    /// Select how parallel FFN work is executed (DESIGN.md §12):
+    /// [`ExecutorKind::Pool`] (default) fans out over the engine's
+    /// long-lived [`ExecPool`]; [`ExecutorKind::Scoped`] keeps the
+    /// spawn-per-call scoped helpers as the measured baseline. Outputs
+    /// are bitwise-identical either way.
+    pub fn with_executor(mut self, kind: ExecutorKind) -> MoeEngine {
+        self.executor = kind;
+        if kind == ExecutorKind::Scoped {
+            self.pool = None;
+        }
+        self
+    }
+
     /// Arena growth count (see [`ExecArena::growths`]): constant across
     /// steady-state batches once warmed up — regression-tested.
     pub fn arena_growths(&self) -> u64 {
         self.arena.growths()
+    }
+
+    /// Worker threads the engine's pool has ever spawned — paid once at
+    /// pool construction, constant across steady-state batches (the
+    /// thread-spawn analogue of [`MoeEngine::arena_growths`];
+    /// regression-tested). Zero until the first pool forward or under
+    /// the scoped executor.
+    pub fn pool_spawns(&self) -> u64 {
+        self.pool.as_ref().map_or(0, |p| p.spawns())
     }
 
     /// Build an engine whose layers carry fully heterogeneous configs
@@ -144,6 +181,8 @@ impl MoeEngine {
                 partition: Partition::default(),
             },
             arena: ExecArena::new(),
+            executor: ExecutorKind::default(),
+            pool: None,
         }
     }
 
@@ -199,6 +238,8 @@ impl MoeEngine {
                 executables,
             },
             arena: ExecArena::new(),
+            executor: ExecutorKind::default(),
+            pool: None,
         })
     }
 
@@ -210,13 +251,31 @@ impl MoeEngine {
         &mut self,
         x: &Tensor,
     ) -> Result<(Tensor, ForwardStats)> {
+        let workers = match &self.backend {
+            Backend::Native { workers, .. } => *workers,
+            Backend::Pjrt { .. } => 1,
+        };
+        // The pool is built lazily so its parked workers are children of
+        // whichever thread drives forwards (the scheduler thread under
+        // MoeService) — spawned once, never per batch. Only the native
+        // backend fans out on the host; PJRT runs on-device and would
+        // never touch a pool.
+        if self.executor == ExecutorKind::Pool
+            && self.pool.is_none()
+            && matches!(self.backend, Backend::Native { .. })
+        {
+            self.pool = Some(ExecPool::new(workers));
+        }
+        let exec = match (self.executor, &self.pool) {
+            (ExecutorKind::Pool, Some(p)) => Executor::Pool(p),
+            _ => Executor::Scoped { workers },
+        };
         let mut native;
         let mut pjrt;
         let be: &mut dyn ExpertBackend = match &self.backend {
-            Backend::Native { workers, partition } => {
+            Backend::Native { partition, .. } => {
                 native = NativeBatched {
                     layers: &self.weights.layers,
-                    workers: *workers,
                     partition: *partition,
                 };
                 &mut native
@@ -232,6 +291,7 @@ impl MoeEngine {
             &self.layer_cfgs,
             x,
             &mut self.arena,
+            &exec,
         )?;
         Ok((y, stats))
     }
@@ -247,7 +307,8 @@ struct PjrtBackend<'a> {
 
 impl ExpertBackend for PjrtBackend<'_> {
     // The PJRT path stages through freshly-built literals (the XLA FFI
-    // owns the buffers), so it has no use for the arena's host pools.
+    // owns the buffers), so it has no use for the arena's host pools,
+    // and the kernel runs on the device — no host fan-out either.
     fn execute_ffn(
         &mut self,
         layer: usize,
@@ -255,6 +316,7 @@ impl ExpertBackend for PjrtBackend<'_> {
         h: &Tensor,
         y: &mut Tensor,
         _arena: &mut FfnArena,
+        _exec: &Executor,
     ) -> Result<FfnLayerReport> {
         let (_, d) = h.dims2();
         let max_bucket = *self
@@ -386,20 +448,34 @@ mod tests {
         let x = Tensor::randn(&mut rng, &[96, cfg.d_model], 1.0);
         let mut serial = MoeEngine::native_with_workers(cfg.clone(), 4, 1);
         let (y1, s1) = serial.forward_stack(&x).unwrap();
-        for partition in Partition::all() {
-            for workers in [2, 4] {
-                let mut par =
-                    MoeEngine::native_with_workers(cfg.clone(), 4, workers)
-                        .with_partition(partition);
-                let (yw, sw) = par.forward_stack(&x).unwrap();
-                assert_eq!(
-                    y1.data, yw.data,
-                    "workers={workers} {} diverged", partition.label()
-                );
-                for (a, b) in s1.per_layer.iter().zip(&sw.per_layer) {
-                    assert_eq!(a.ffn_assignments, b.ffn_assignments);
-                    assert_eq!(a.zc_assignments, b.zc_assignments);
-                    assert_eq!(a.dropped, b.dropped);
+        for executor in ExecutorKind::all() {
+            for partition in Partition::all() {
+                for workers in [2, 4] {
+                    let mut par = MoeEngine::native_with_workers(
+                        cfg.clone(), 4, workers,
+                    )
+                    .with_partition(partition)
+                    .with_executor(executor);
+                    let (yw, sw) = par.forward_stack(&x).unwrap();
+                    assert_eq!(
+                        y1.data, yw.data,
+                        "workers={workers} {} {} diverged",
+                        partition.label(), executor.label()
+                    );
+                    for (a, b) in s1.per_layer.iter().zip(&sw.per_layer) {
+                        assert_eq!(a.ffn_assignments, b.ffn_assignments);
+                        assert_eq!(a.zc_assignments, b.zc_assignments);
+                        assert_eq!(a.dropped, b.dropped);
+                    }
+                    if executor == ExecutorKind::Pool {
+                        assert_eq!(
+                            par.pool_spawns(),
+                            workers as u64 - 1,
+                            "pool spawns once at construction"
+                        );
+                    } else {
+                        assert_eq!(par.pool_spawns(), 0);
+                    }
                 }
             }
         }

@@ -118,11 +118,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // All serving goes through the MoeService continuous-batching API;
     // the backend choice only selects the ServeBackend behind it.
     let service = match backend {
-        // Parallel FFN work is opt-in (--workers N): the scoped pool
-        // spawns threads per layer call, which only pays off once
-        // batches are large enough — serial stays the latency-safe
-        // default for small serve batches. --partition batch|shard
-        // selects the work split (token shards by default).
+        // Parallel FFN work is opt-in (--workers N); the engine fans it
+        // out over its persistent worker pool (spawned once on the
+        // scheduler thread — no per-layer spawn cost), so parallelism
+        // pays off even at small serve batches. --partition batch|shard
+        // selects the work split (token shards by default) and
+        // --executor pool|scoped the fan-out machinery (the scoped
+        // spawn-per-call baseline is kept for measurement).
         "native" => MoeService::start(
             MoeEngine::native_with_workers(
                 cfg.clone(),
@@ -131,7 +133,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             )
             .with_partition(moepp::coordinator::engine::Partition::parse(
                 args.get_or("partition", "shard"),
-            )?),
+            )?)
+            .with_executor(
+                moepp::coordinator::engine::ExecutorKind::parse(
+                    args.get_or("executor", "pool"),
+                )?,
+            ),
             service_cfg,
         ),
         "pjrt" => {
@@ -438,7 +445,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     };
     match which {
         "forward" => {
-            use moepp::coordinator::engine::Partition;
+            use moepp::coordinator::engine::{ExecutorKind, Partition};
             let presets: Vec<&str> =
                 args.get_or("presets", "sm-8e,md-16e").split(',').collect();
             let workers: Vec<usize> = args
@@ -451,10 +458,19 @@ fn cmd_bench(args: &Args) -> Result<()> {
                     "both" => Partition::all().to_vec(),
                     one => vec![Partition::parse(one)?],
                 };
+            // --executor both measures the persistent pool against the
+            // scoped spawn-per-call baseline (the §12 win shows up as
+            // speedup_vs_scoped on small-batch rows).
+            let executors: Vec<ExecutorKind> =
+                match args.get_or("executor", "pool") {
+                    "both" => ExecutorKind::all().to_vec(),
+                    one => vec![ExecutorKind::parse(one)?],
+                };
             let tokens = args.get_usize("tokens", 256);
             let batches = args.get_usize("batches", 4);
             let rows = harness::run_forward_sweep(
-                &presets, &workers, &partitions, tokens, batches, seed,
+                &presets, &workers, &partitions, &executors, tokens,
+                batches, seed,
             )?;
             let bench_path = harness::write_bench_json(
                 "forward",
@@ -465,8 +481,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 "expert-forward sweep: {batches}x{tokens}-token batches, \
                  uniform + skewed routing (seed {seed})\n\
                  partition=batch is the old batch-per-worker fan-out; \
-                 shard splits hot experts across workers \
-                 (outputs bitwise-identical either way)\n\n{}",
+                 shard splits hot experts across workers; executor=pool \
+                 reuses parked workers where scoped spawns per layer \
+                 (outputs bitwise-identical across all cells)\n\n{}",
                 harness::render_forward_sweep(&rows),
             );
             report("bench_forward", &body)

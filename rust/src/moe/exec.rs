@@ -20,7 +20,10 @@
 //!   threading, per-layer configs, residual-stream update and
 //!   [`ForwardStats`] aggregation, with every reusable buffer (per-layer
 //!   `y`, routing scores, FFN scratch) drawn from the caller's
-//!   [`ExecArena`].
+//!   [`ExecArena`] and all parallel fan-out going through the caller's
+//!   [`Executor`] (the driver-owned persistent pool by default, the
+//!   scoped spawn-per-call helpers as the measured baseline —
+//!   DESIGN.md §12).
 
 use std::time::Instant;
 
@@ -37,7 +40,7 @@ use crate::moe::router::Routing;
 use crate::moe::weights::{MoeLayerWeights, StackWeights};
 use crate::tensor::ops::axpy;
 use crate::tensor::Tensor;
-use crate::util::threadpool::parallel_chunks_mut;
+use crate::util::pool::Executor;
 
 /// Aggregate timing + routing statistics for one stack forward.
 #[derive(Clone, Debug, Default)]
@@ -218,8 +221,13 @@ pub struct LayerExec {
 /// `plan` as authoritative — no re-deriving of routing or capacity.
 /// Reusable buffers come from `arena` (DESIGN.md §11): backends request
 /// gather/scratch/shard storage from it so steady-state execution does
-/// not allocate.
+/// not allocate. Parallel fan-out goes through `exec` (DESIGN.md §12):
+/// backends size their work partition off `exec.workers()` and run it
+/// via `exec.run`/`exec.for_each_mut` instead of spawning threads — the
+/// driver decides whether that is the persistent pool or the scoped
+/// baseline, and outputs must be bitwise-identical either way.
 pub trait ExpertBackend {
+    #[allow(clippy::too_many_arguments)]
     fn execute_ffn(
         &mut self,
         layer: usize,
@@ -227,6 +235,7 @@ pub trait ExpertBackend {
         h: &Tensor,
         y: &mut Tensor,
         arena: &mut FfnArena,
+        exec: &Executor,
     ) -> Result<FfnLayerReport>;
 }
 
@@ -292,9 +301,10 @@ pub fn execute_layer(
     h: &Tensor,
     y: &mut Tensor,
     arena: &mut FfnArena,
+    exec: &Executor,
 ) -> Result<LayerExec> {
     let t0 = Instant::now();
-    let report = backend.execute_ffn(layer, plan, h, y, arena)?;
+    let report = backend.execute_ffn(layer, plan, h, y, arena, exec)?;
     let ffn_s = t0.elapsed().as_secs_f64();
 
     let t1 = Instant::now();
@@ -329,6 +339,7 @@ pub fn forward_stack(
     layer_cfgs: &[MoeConfig],
     x: &Tensor,
     arena: &mut ExecArena,
+    exec: &Executor,
 ) -> Result<(Tensor, ForwardStats, Vec<LayerExec>)> {
     let (t, d) = x.dims2();
     assert_eq!(
@@ -363,6 +374,7 @@ pub fn forward_stack(
         let (routing, y, ffn) = arena.split();
         let ex = execute_layer(
             backend, li, &plan, routing, lcfg, &layer.consts, &h, y, ffn,
+            exec,
         )?;
         stats.ffn_s += ex.ffn_s;
         stats.zc_s += ex.zc_s;
@@ -435,6 +447,7 @@ impl ExpertBackend for NativeSingle<'_> {
         h: &Tensor,
         y: &mut Tensor,
         arena: &mut FfnArena,
+        _exec: &Executor,
     ) -> Result<FfnLayerReport> {
         let (_, d) = h.dims2();
         let w = &self.layers[layer];
@@ -457,25 +470,28 @@ impl ExpertBackend for NativeSingle<'_> {
 /// worker so the atomic work queue smooths uneven expert batches.
 const SHARD_OVERSUB: usize = 4;
 
-/// Target rows per shard for `total` FFN rows over `workers` threads,
-/// floored at the kernel's token block (tiny shards would waste whole
-/// weight-stream passes).
-fn shard_rows_target(total: usize, workers: usize) -> usize {
-    total
-        .div_ceil(workers.max(1) * SHARD_OVERSUB)
-        .max(FFN_TOKEN_BLOCK)
-}
-
 /// Append `plan`'s work as (batch, row-range) shards onto `shards`, in
 /// canonical (batch, start) order. `Partition::Batch` emits one shard per
 /// micro-batch; `Partition::Shard` splits each batch into even contiguous
-/// ranges of at most the target size. The work estimate is row count —
-/// within a layer every FFN expert has the same `d_ff`, so rows are
-/// proportional to FLOPs.
+/// ranges sized by **cost**, not row count: `cost_per_row(bi)` is the
+/// relative per-row FLOP weight of batch `bi` (its expert's `d_ff` — the
+/// `ffn_flops_per_token` ∝ `d_model · d_ff` identity with the shared
+/// `d_model` factored out), so per-expert width differences split into
+/// shards of even *work*, not even row counts. NOTE: today every expert
+/// a stock `MoeLayerWeights` builds shares its layer's `d_ff`, so on
+/// runtime-producible plans the weight is layer-constant and this
+/// reduces exactly to row sizing — the cost hook is the seam for
+/// heterogeneous-width experts (e.g. future quantized experts, ROADMAP)
+/// and is exercised directly by the unit test below. Each batch still
+/// gets at least one shard and never more than
+/// `ceil(rows / FFN_TOKEN_BLOCK)` (sub-block shards would waste whole
+/// weight-stream passes). Shard boundaries never affect results (§11),
+/// only load balance.
 fn plan_shards(
     plan: &DispatchPlan,
     partition: Partition,
     workers: usize,
+    cost_per_row: impl Fn(usize) -> u64,
     shards: &mut Vec<ShardSpec>,
 ) {
     shards.clear();
@@ -490,15 +506,26 @@ fn plan_shards(
             }
         }
         Partition::Shard => {
-            let total: usize = plan
+            let total: u64 = plan
                 .ffn_batches
                 .iter()
-                .map(|b| b.tokens.len())
+                .enumerate()
+                .map(|(bi, b)| {
+                    b.tokens.len() as u64 * cost_per_row(bi).max(1)
+                })
                 .sum();
-            let target = shard_rows_target(total, workers);
+            let target = total
+                .div_ceil((workers.max(1) * SHARD_OVERSUB) as u64)
+                .max(1);
             for (bi, batch) in plan.ffn_batches.iter().enumerate() {
                 let len = batch.tokens.len();
-                let n_shards = len.div_ceil(target).max(1);
+                if len == 0 {
+                    continue;
+                }
+                let cost = len as u64 * cost_per_row(bi).max(1);
+                let by_cost = cost.div_ceil(target) as usize;
+                let max_shards = len.div_ceil(FFN_TOKEN_BLOCK).max(1);
+                let n_shards = by_cost.clamp(1, max_shards);
                 let base = len / n_shards;
                 let rem = len % n_shards;
                 let mut start = 0;
@@ -516,17 +543,18 @@ fn plan_shards(
 }
 
 /// The serving-path native backend: gather each unit of FFN work, run the
-/// allocation-free batched expert kernel, scatter-add gated rows. With
-/// `workers > 1` the layer's work is cut into shards per `partition` and
-/// fanned out over `util::threadpool`; every shard's dense output lands
-/// in an arena-owned buffer and is scatter-added serially in canonical
-/// (batch, shard) order — two FFN experts may feed one token's output
-/// row, and per-token results are independent of shard boundaries, so
-/// outputs are **bitwise-identical** for every worker count and both
-/// partition strategies (racing the scatter would be UB).
+/// allocation-free batched expert kernel, scatter-add gated rows. When
+/// the driver's [`Executor`] is wider than one, the layer's work is cut
+/// into shards per `partition` and fanned out over it (the persistent
+/// pool by default, scoped spawns as the measured baseline); every
+/// shard's dense output lands in an arena-owned buffer and is
+/// scatter-added serially in canonical (batch, shard) order — two FFN
+/// experts may feed one token's output row, and per-token results are
+/// independent of shard boundaries, so outputs are **bitwise-identical**
+/// for every worker count, both partition strategies and both executors
+/// (racing the scatter would be UB).
 pub struct NativeBatched<'a> {
     pub layers: &'a [MoeLayerWeights],
-    pub workers: usize,
     pub partition: Partition,
 }
 
@@ -538,6 +566,7 @@ impl ExpertBackend for NativeBatched<'_> {
         h: &Tensor,
         y: &mut Tensor,
         arena: &mut FfnArena,
+        exec: &Executor,
     ) -> Result<FfnLayerReport> {
         let (_, d) = h.dims2();
         let w = &self.layers[layer];
@@ -545,11 +574,16 @@ impl ExpertBackend for NativeBatched<'_> {
         if batches.is_empty() {
             return Ok(FfnLayerReport::default());
         }
+        let workers = exec.workers();
         let mut n_shards = 0;
-        if self.workers > 1 {
+        if workers > 1 {
             let shards_cap = arena.shards.capacity();
             plan_shards(
-                plan, self.partition, self.workers, &mut arena.shards,
+                plan,
+                self.partition,
+                workers,
+                |bi| w.ffn[batches[bi].expert].w1.shape[1] as u64,
+                &mut arena.shards,
             );
             if arena.shards.capacity() > shards_cap {
                 arena.growths += 1;
@@ -585,21 +619,18 @@ impl ExpertBackend for NativeBatched<'_> {
         }
 
         // Token-parallel path: cut the layer's FFN work into shards, fan
-        // the dense compute out over the pool (each worker writing its
-        // own arena-owned shard buffer), then scatter-add serially.
+        // the dense compute out over the executor (each worker writing
+        // its own arena-owned shard buffer), then scatter-add serially.
         arena.ensure_shard_bufs(n_shards);
         let l1_budget = arena.l1_budget_bytes;
         let shards = &arena.shards;
-        parallel_chunks_mut(
+        exec.for_each_mut(
             &mut arena.shard_bufs[..n_shards],
-            self.workers,
-            1,
-            |idx, bufs| {
+            |idx, buf| {
                 let spec = &shards[idx];
                 let batch = &batches[spec.batch];
                 let e = &w.ffn[batch.expert];
                 let f = e.w1.shape[1];
-                let buf = &mut bufs[0];
                 buf.prepare(
                     spec.len,
                     d,
@@ -666,21 +697,21 @@ mod tests {
         cfg: &MoeConfig,
         weights: &StackWeights,
         x: &Tensor,
+        exec: &Executor,
     ) -> (Tensor, ForwardStats) {
         let cfgs = vec![cfg.clone(); cfg.n_layers];
         let mut arena = ExecArena::new();
         let (y, stats, _) =
-            forward_stack(backend, weights, &cfgs, x, &mut arena)
+            forward_stack(backend, weights, &cfgs, x, &mut arena, exec)
                 .unwrap();
         (y, stats)
     }
 
     fn batched<'a>(
         weights: &'a StackWeights,
-        workers: usize,
         partition: Partition,
     ) -> NativeBatched<'a> {
-        NativeBatched { layers: &weights.layers, workers, partition }
+        NativeBatched { layers: &weights.layers, partition }
     }
 
     #[test]
@@ -688,11 +719,11 @@ mod tests {
         let (cfg, weights, x) = setup("test", 3, 48);
         let (y_single, s_single) = run_backend(
             &mut NativeSingle { layers: &weights.layers },
-            &cfg, &weights, &x,
+            &cfg, &weights, &x, &Executor::serial(),
         );
         let (y_batched, s_batched) = run_backend(
-            &mut batched(&weights, 1, Partition::Shard),
-            &cfg, &weights, &x,
+            &mut batched(&weights, Partition::Shard),
+            &cfg, &weights, &x, &Executor::serial(),
         );
         assert!(y_batched.approx_eq(&y_single, 1e-5, 1e-5));
         for (a, b) in s_single.per_layer.iter().zip(&s_batched.per_layer) {
@@ -703,26 +734,33 @@ mod tests {
     }
 
     #[test]
-    fn worker_count_and_partition_do_not_change_results() {
+    fn worker_count_partition_and_executor_do_not_change_results() {
         // Parallel compute + serial canonical scatter must be
-        // bitwise-deterministic for every worker count AND both work
-        // partitions (the old batch fan-out and the new token shards).
+        // bitwise-deterministic for every worker count, both work
+        // partitions (batch fan-out vs token shards) AND both executors
+        // (persistent pool vs scoped spawns).
         let (cfg, weights, x) = setup("test", 9, 64);
         let (y1, _) = run_backend(
-            &mut batched(&weights, 1, Partition::Shard),
-            &cfg, &weights, &x,
+            &mut batched(&weights, Partition::Shard),
+            &cfg, &weights, &x, &Executor::serial(),
         );
         for partition in Partition::all() {
             for workers in [1, 2, 4, 8] {
-                let (yw, _) = run_backend(
-                    &mut batched(&weights, workers, partition),
-                    &cfg, &weights, &x,
-                );
-                assert_eq!(
-                    y1.data, yw.data,
-                    "workers={workers} partition={} diverged",
-                    partition.label()
-                );
+                let pool = crate::util::pool::ExecPool::new(workers);
+                for exec in [
+                    Executor::Scoped { workers },
+                    Executor::Pool(&pool),
+                ] {
+                    let (yw, _) = run_backend(
+                        &mut batched(&weights, partition),
+                        &cfg, &weights, &x, &exec,
+                    );
+                    assert_eq!(
+                        y1.data, yw.data,
+                        "workers={workers} partition={} diverged",
+                        partition.label()
+                    );
+                }
             }
         }
     }
@@ -737,7 +775,7 @@ mod tests {
         let plan = DispatchPlan::build(&routing, &cfg, 96);
         for workers in [1usize, 2, 4, 8, 64] {
             let mut shards = Vec::new();
-            plan_shards(&plan, Partition::Shard, workers, &mut shards);
+            plan_shards(&plan, Partition::Shard, workers, |_| 1, &mut shards);
             let mut cursor: Vec<usize> =
                 vec![0; plan.ffn_batches.len()];
             let mut prev_batch = 0usize;
@@ -759,6 +797,56 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn shard_sizing_follows_flops_not_rows() {
+        // Two batches with equal total FLOPs but very different row
+        // counts: a narrow expert (cost 1/row, 112 rows) and a wide one
+        // (cost 14/row — e.g. 14x the d_ff — 8 rows). Row-based sizing
+        // would leave the wide batch whole (8 rows is far below a
+        // 120/16-row target) while cost-based sizing splits both batches
+        // into shards of even work.
+        use crate::coordinator::dispatch::ExpertBatch;
+        let mk = |expert: usize, n: usize| ExpertBatch {
+            expert,
+            tokens: (0..n).collect(),
+            gates: vec![1.0; n],
+        };
+        let plan = DispatchPlan {
+            ffn_batches: vec![mk(0, 112), mk(1, 8)],
+            zc_inline: Vec::new(),
+            dropped: Vec::new(),
+            expert_counts: vec![112, 8],
+        };
+        let cost = |bi: usize| if bi == 0 { 1 } else { 14 };
+        let mut shards = Vec::new();
+        plan_shards(&plan, Partition::Shard, 4, cost, &mut shards);
+        // total cost 224, workers*oversub = 16 -> 14 cost per shard:
+        // batch 0 gets ceil(112/14) = 8 shards; batch 1 wants 8 but is
+        // clamped to ceil(8/FFN_TOKEN_BLOCK) = 2 whole-block shards.
+        let n0 = shards.iter().filter(|s| s.batch == 0).count();
+        let n1 = shards.iter().filter(|s| s.batch == 1).count();
+        assert_eq!(n0, 8, "{shards:?}");
+        assert_eq!(n1, 2, "{shards:?}");
+        // Even-work check: every batch-0 shard carries 14 rows (=14
+        // cost), every batch-1 shard 4 rows (=56 cost, block-clamped).
+        for s in &shards {
+            let want = if s.batch == 0 { 14 } else { 4 };
+            assert_eq!(s.len, want, "{s:?}");
+        }
+        // Uniform costs reproduce row-proportional splitting: equal-row
+        // batches get equal shard counts.
+        let plan_u = DispatchPlan {
+            ffn_batches: vec![mk(0, 64), mk(1, 64)],
+            zc_inline: Vec::new(),
+            dropped: Vec::new(),
+            expert_counts: vec![64, 64],
+        };
+        plan_shards(&plan_u, Partition::Shard, 4, |_| 1, &mut shards);
+        let n0 = shards.iter().filter(|s| s.batch == 0).count();
+        let n1 = shards.iter().filter(|s| s.batch == 1).count();
+        assert_eq!(n0, n1);
     }
 
     #[test]
@@ -792,8 +880,8 @@ mod tests {
         // batch's stats into per-request stats without losing anything.
         let (cfg, weights, x) = setup("test", 8, 56);
         let (_, stats) = run_backend(
-            &mut batched(&weights, 1, Partition::Shard),
-            &cfg, &weights, &x,
+            &mut batched(&weights, Partition::Shard),
+            &cfg, &weights, &x, &Executor::serial(),
         );
         let totals = stats.total_counts();
         let ffn: usize =
@@ -818,8 +906,8 @@ mod tests {
     fn stats_accounting_conserves_assignments() {
         let (cfg, weights, x) = setup("test", 5, 40);
         let (_, stats) = run_backend(
-            &mut batched(&weights, 2, Partition::Shard),
-            &cfg, &weights, &x,
+            &mut batched(&weights, Partition::Shard),
+            &cfg, &weights, &x, &Executor::Scoped { workers: 2 },
         );
         assert_eq!(stats.per_layer.len(), cfg.n_layers);
         for l in &stats.per_layer {

@@ -18,6 +18,7 @@ use crate::moe::exec::{self, NativeSingle};
 use crate::moe::router::{route, Routing};
 use crate::moe::weights::MoeLayerWeights;
 use crate::tensor::Tensor;
+use crate::util::pool::Executor;
 
 /// One surviving (token, expert) assignment after capacity filtering.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -99,7 +100,7 @@ pub fn layer_forward(
     let mut arena = FfnArena::new();
     let ex = exec::execute_layer(
         &mut backend, 0, &plan, &routing, cfg, &weights.consts, x,
-        &mut y, &mut arena,
+        &mut y, &mut arena, &Executor::serial(),
     )
     .expect("native single-layer execution is infallible");
     (y, routing, ex.stats)

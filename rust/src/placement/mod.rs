@@ -43,5 +43,5 @@ pub use plan::PlacementPlan;
 pub use planner::{Planner, Strategy};
 pub use profile::LoadProfile;
 pub use replan::{
-    ExpertMove, MigrationPlan, ReplanConfig, Replanner,
+    ExpertMove, MigrationPlan, PlanTask, ReplanConfig, Replanner,
 };

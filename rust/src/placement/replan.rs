@@ -18,6 +18,13 @@
 //!    `min_gain_frac`;
 //! 3. **payback** — the per-batch predicted gain must repay the α–β
 //!    migration cost within `payback_batches` batches.
+//!
+//! On the serving path the search itself runs **off-thread**: once
+//! [`Replanner::ready`] the cluster snapshots a [`PlanTask`]
+//! (planner + window profile + current plan) and submits it to its
+//! worker pool; the next batch boundary joins the finished task and
+//! applies the gated proposal (DESIGN.md §12). [`Replanner::maybe_replan`]
+//! is the synchronous form of the identical, deterministic search.
 
 use crate::config::MoeConfig;
 use crate::moe::exec::ForwardStats;
@@ -137,6 +144,38 @@ impl Replanner {
         self.profile.observe_stats(stats, cfg);
     }
 
+    /// True once the observation window holds a full interval — the
+    /// point at which planning should be attempted (synchronously via
+    /// [`Replanner::maybe_replan`], or off-thread by submitting
+    /// [`Replanner::plan_task`] to a worker pool).
+    pub fn ready(&self) -> bool {
+        self.profile.batches >= self.cfg.min_interval_batches.max(1)
+    }
+
+    /// Restart the observation window after a failed (or stale) planning
+    /// attempt, so gates always judge *recent* load — see the module
+    /// docs on window starvation. [`Replanner::committed`] performs the
+    /// same reset on the success path.
+    pub fn window_reset(&mut self) {
+        self.profile = LoadProfile::new(self.n_ffn_experts);
+    }
+
+    /// Snapshot everything one detached planning attempt needs — the
+    /// planner, the window's profile and the current plan — so the
+    /// local search can run on another thread ([`PlanTask::run`]) while
+    /// the scheduler keeps serving (DESIGN.md §12). The caller owns the
+    /// submit → poll → apply-at-boundary protocol: on completion, apply
+    /// the proposal and call [`Replanner::committed`], or call
+    /// [`Replanner::window_reset`] when the gates held.
+    pub fn plan_task(&self, current: &PlacementPlan) -> PlanTask {
+        PlanTask {
+            planner: self.planner.clone(),
+            cfg: self.cfg.clone(),
+            profile: self.profile.clone(),
+            current: current.clone(),
+        }
+    }
+
     /// Propose a migration away from `current`, or `None` while the
     /// hysteresis gates hold. Call [`Replanner::committed`] once a
     /// returned migration has been applied.
@@ -146,36 +185,70 @@ impl Replanner {
     /// expensive to run on every served batch), and a failed attempt
     /// restarts the window — so the next attempt is another full
     /// interval away *and* is judged on fresh loads, never against a
-    /// stale accumulation of the whole uptime.
+    /// stale accumulation of the whole uptime. This is the synchronous
+    /// form; the serving path runs the identical search off-thread
+    /// through [`Replanner::plan_task`] (the search is deterministic, so
+    /// both produce the same proposal for the same window).
     pub fn maybe_replan(
         &mut self,
         current: &PlacementPlan,
     ) -> Option<MigrationPlan> {
-        let interval = self.cfg.min_interval_batches.max(1);
-        if self.profile.batches < interval {
+        if !self.ready() {
             return None;
         }
-        let proposal = self.attempt(current);
+        let proposal = self.plan_task(current).run();
         if proposal.is_none() {
-            self.profile = LoadProfile::new(self.n_ffn_experts);
+            self.window_reset();
         }
         proposal
     }
 
-    /// One ungated planning attempt over the current window.
-    fn attempt(&self, current: &PlacementPlan) -> Option<MigrationPlan> {
+    /// The proposed migration was applied: start a fresh observation
+    /// window (this is the hysteresis — another replan cannot fire for
+    /// at least `min_interval_batches` more batches).
+    pub fn committed(&mut self) {
+        self.window_reset();
+        self.replans += 1;
+    }
+}
+
+/// One self-contained, ungated planning attempt over a snapshotted
+/// window: the payload a [`Replanner`] hands to a worker pool so the
+/// local search never runs on the serving scheduler thread. Owns clones
+/// of everything it reads — the live replanner keeps observing new
+/// batches while this runs.
+pub struct PlanTask {
+    planner: Planner,
+    cfg: ReplanConfig,
+    profile: LoadProfile,
+    current: PlacementPlan,
+}
+
+impl PlanTask {
+    /// Run the strategy's search and apply the hysteresis gates; `None`
+    /// when no worthwhile migration exists. Deterministic: equal
+    /// snapshots produce equal proposals on any thread.
+    pub fn run(&self) -> Option<MigrationPlan> {
         let proposed = self
             .planner
-            .plan(self.cfg.strategy, current.n_devices(), &self.profile)
+            .plan(
+                self.cfg.strategy,
+                self.current.n_devices(),
+                &self.profile,
+            )
             .ok()?;
-        if proposed == *current {
+        if proposed == self.current {
             return None;
         }
-        let before =
-            self.planner.cost.score(current, &self.profile).makespan_s;
+        let before = self
+            .planner
+            .cost
+            .score(&self.current, &self.profile)
+            .makespan_s;
         let after =
             self.planner.cost.score(&proposed, &self.profile).makespan_s;
-        let moves: Vec<ExpertMove> = current
+        let moves: Vec<ExpertMove> = self
+            .current
             .diff(&proposed)
             .into_iter()
             .map(|(expert, from, to)| ExpertMove {
@@ -207,14 +280,6 @@ impl Replanner {
             return None;
         }
         Some(mig)
-    }
-
-    /// The proposed migration was applied: start a fresh observation
-    /// window (this is the hysteresis — another replan cannot fire for
-    /// at least `min_interval_batches` more batches).
-    pub fn committed(&mut self) {
-        self.profile = LoadProfile::new(self.n_ffn_experts);
-        self.replans += 1;
     }
 }
 

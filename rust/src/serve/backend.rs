@@ -25,10 +25,14 @@ use crate::tensor::Tensor;
 ///   outputs of the same shape plus the executor's [`ForwardStats`]
 ///   (whose `token_counts` rows must line up with the input rows — that
 ///   is what per-request stats slicing relies on);
-/// * the backend is moved onto the scheduler thread, hence `Send`;
+/// * the backend is moved onto the scheduler thread, hence `Send`; it
+///   owns its own execution resources — the `ExecArena` *and* the
+///   persistent `ExecPool` (DESIGN.md §12) travel with it, so the
+///   scheduler's steady-state loop allocates no buffers and spawns no
+///   threads;
 /// * determinism: for a fixed backend, equal input batches produce
 ///   bitwise-equal outputs (the serve equivalence test enforces this for
-///   the native engine at any worker count).
+///   the native engine at any worker count and either executor).
 pub trait ServeBackend: Send {
     /// Hidden dimension requests must match (admission-checked).
     fn d_model(&self) -> usize;
@@ -75,7 +79,11 @@ impl ServeBackend for ClusterSim {
     /// One served batch. Afterwards the batch's load histogram feeds the
     /// attached [`Replanner`] (if any), which may migrate FFN experts —
     /// so replanning happens strictly *between* batches, never while one
-    /// is executing, and outputs stay bitwise placement-independent.
+    /// is executing, and outputs stay bitwise placement-independent. The
+    /// planner's local search itself runs on the sim's pool, not this
+    /// scheduler thread: `note_batch` submits it when the observation
+    /// window fills, then polls non-blockingly and applies it at the
+    /// first boundary that finds it finished (DESIGN.md §12).
     ///
     /// [`Replanner`]: crate::placement::Replanner
     fn forward(&mut self, tokens: &Tensor) -> Result<(Tensor, ForwardStats)> {

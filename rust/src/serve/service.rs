@@ -16,7 +16,13 @@
 //!   cancellation and queue deadlines are honoured here;
 //! * **execute** — batches flush on the batcher's size/deadline rules and
 //!   run on the backend while new submissions keep arriving
-//!   (continuous batching — admission never waits for execution);
+//!   (continuous batching — admission never waits for execution). The
+//!   backend moves onto this thread, bringing its `ExecArena` *and* its
+//!   persistent `ExecPool` with it (DESIGN.md §11/§12): the pool's
+//!   workers spawn once at the first batch, so the steady-state loop
+//!   performs zero heap growths and zero thread spawns — and a
+//!   replanning cluster backend's placement search runs on the pool,
+//!   never here;
 //! * **scatter/complete** — each request's rows and its slice of the
 //!   batch's [`ForwardStats`] resolve the caller's handle.
 //!

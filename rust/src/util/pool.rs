@@ -1,0 +1,701 @@
+//! [`ExecPool`] — the long-lived executor behind the expert-forward hot
+//! path (DESIGN.md §12).
+//!
+//! The scoped helpers in [`crate::util::threadpool`] spawn OS threads on
+//! every call; after PR 4 removed the steady-state allocations, that
+//! per-layer spawn cost became the dominant fixed overhead at small batch
+//! sizes (ROADMAP "persistent worker pool"). An `ExecPool` spawns its
+//! workers once and parks them on a condvar; each [`ExecPool::run`] call
+//! publishes one lifetime-erased parallel job which the parked workers
+//! (and the calling thread) drain through an atomic index queue, then
+//! fences until every claimed index has finished executing. Steady-state
+//! forwards therefore perform **zero thread spawns** — the pool analogue
+//! of the arena's zero-allocation guarantee, regression-tested the same
+//! way (`ExecPool::spawns`, [`thread_spawns`]).
+//!
+//! Ownership mirrors the arena (DESIGN.md §11): one pool per forward
+//! driver — `MoeEngine` and `ClusterSim` each own one next to their
+//! `ExecArena`, which makes it one pool per scheduler thread when either
+//! backs a `MoeService`. Backends receive the pool as an [`Executor`]
+//! through `ExpertBackend::execute_ffn`; [`Executor::Scoped`] keeps the
+//! old spawn-per-call helpers alive as the measured baseline
+//! (`moepp bench forward --executor pool|scoped|both`). Outputs are
+//! bitwise-identical across executors and worker counts — executors only
+//! decide *where/when* compute runs, never the combine order (§11).
+//!
+//! Besides parallel jobs the pool accepts detached one-shot tasks
+//! ([`ExecPool::submit`] → [`TaskHandle`]): this is what carries the
+//! placement replanner's local search off the serving scheduler thread
+//! (DESIGN.md §12, "off-thread replanning"). Contracts:
+//!
+//! * **panic containment** — a panicking parallel index or task never
+//!   kills a worker: panics are caught per unit, counted, and re-raised
+//!   on the *caller* (`run` panics after its fence; a task's panic
+//!   surfaces as `Err` on its handle). The pool stays usable.
+//! * **epoch/fence** — [`ExecPool::epoch`] counts completed parallel
+//!   jobs; [`ExecPool::fence`] blocks until no job is installed and the
+//!   task queue is drained and idle. `run` itself always fences before
+//!   returning (that is what makes the lifetime erasure of the job
+//!   closure sound).
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+/// Process-wide count of threads ever spawned by pool workers *and* the
+/// scoped helpers in [`crate::util::threadpool`] — the counter the
+/// steady-state "zero thread spawns" serve regression pins constant
+/// (analogous to `ExecArena::growths`).
+static THREAD_SPAWNS: AtomicU64 = AtomicU64::new(0);
+
+pub fn thread_spawns() -> u64 {
+    THREAD_SPAWNS.load(Ordering::Relaxed)
+}
+
+pub(crate) fn note_spawn() {
+    THREAD_SPAWNS.fetch_add(1, Ordering::Relaxed);
+}
+
+// ----------------------------------------------------------------- pool
+
+/// One published parallel job: a lifetime-erased `Fn(usize)` plus the
+/// atomic claim/completion counters the workers drain it through.
+struct Job {
+    /// Raw (lifetime-erased) pointer to the caller's closure. Only
+    /// dereferenced for successfully claimed indices (`i < n`), all of
+    /// which finish before `run` returns — `run`'s fence waits for
+    /// `done == n`, so the pointee outlives every dereference.
+    f: *const (dyn Fn(usize) + Sync),
+    n: usize,
+    /// Next index to claim (may overshoot `n`; overshoots never touch `f`).
+    next: AtomicUsize,
+    /// Indices fully executed. `done == n` is the job-complete signal.
+    done: AtomicUsize,
+    panics: AtomicUsize,
+}
+
+// SAFETY: `f` points at a `Sync` closure, so shared references to it may
+// cross threads; the raw pointer itself is only dereferenced under the
+// `i < n` claim rule above, within the lifetime `run` guarantees.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+std::thread_local! {
+    /// The pool whose parallel job this thread is currently draining
+    /// (null otherwise) — the nested-`run` guard: a `run` issued from
+    /// inside a job closure of the *same* pool must execute inline, or
+    /// it would wait for the job slot its own caller is keeping busy
+    /// (self-deadlock). Keyed by `Shared` address so independent pools
+    /// still compose freely.
+    static DRAINING: std::cell::Cell<*const ()> =
+        const { std::cell::Cell::new(std::ptr::null()) };
+}
+
+impl Job {
+    /// Claim-and-execute until the index queue runs dry. Shared by the
+    /// workers and the submitting thread (which participates instead of
+    /// blocking). Returns once no unclaimed index remains.
+    fn drain(&self, shared: &Shared) {
+        let key = shared as *const Shared as *const ();
+        let prev = DRAINING.with(|d| d.replace(key));
+        self.drain_inner(shared);
+        DRAINING.with(|d| d.set(prev));
+    }
+
+    // Per-index panics are caught below, so `drain` always restores the
+    // thread-local marker.
+    fn drain_inner(&self, shared: &Shared) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                return;
+            }
+            // SAFETY: `i < n` — see the field docs.
+            let f = unsafe { &*self.f };
+            if catch_unwind(AssertUnwindSafe(|| f(i))).is_err() {
+                self.panics.fetch_add(1, Ordering::Relaxed);
+            }
+            if self.done.fetch_add(1, Ordering::AcqRel) + 1 == self.n {
+                // Lock-then-notify pairs with the fence's check-then-wait
+                // under the same lock: no lost wakeup.
+                let _guard = shared.state.lock().unwrap();
+                shared.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+type Task = Box<dyn FnOnce() + Send>;
+
+struct State {
+    job: Option<Arc<Job>>,
+    tasks: VecDeque<Task>,
+    /// Tasks popped from the queue and currently executing.
+    tasks_active: usize,
+    /// Worker threads currently spawned.
+    threads: usize,
+    /// Completed parallel jobs.
+    epoch: u64,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here waiting for a job or task.
+    work_cv: Condvar,
+    /// `run` exclusion, job fences and `fence()` wait here.
+    done_cv: Condvar,
+    /// Worker threads ever spawned by this pool.
+    spawns: AtomicU64,
+}
+
+/// A long-lived worker pool: `width - 1` parked worker threads plus the
+/// submitting thread, which always participates in parallel jobs. A
+/// width-1 pool runs jobs inline and spawns no threads at all (its single
+/// lazy worker appears only if [`ExecPool::submit`] is used).
+pub struct ExecPool {
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    width: usize,
+}
+
+impl ExecPool {
+    /// Pool of total parallel width `width` (submitter included): spawns
+    /// `width - 1` worker threads immediately, so the spawn cost is paid
+    /// once at construction, never on the per-layer hot path.
+    pub fn new(width: usize) -> ExecPool {
+        let width = width.max(1);
+        let pool = ExecPool {
+            shared: Arc::new(Shared {
+                state: Mutex::new(State {
+                    job: None,
+                    tasks: VecDeque::new(),
+                    tasks_active: 0,
+                    threads: 0,
+                    epoch: 0,
+                    shutdown: false,
+                }),
+                work_cv: Condvar::new(),
+                done_cv: Condvar::new(),
+                spawns: AtomicU64::new(0),
+            }),
+            handles: Mutex::new(Vec::new()),
+            width,
+        };
+        {
+            let mut st = pool.shared.state.lock().unwrap();
+            for _ in 1..width {
+                pool.spawn_worker(&mut st);
+            }
+        }
+        pool
+    }
+
+    /// Total parallel width of `run` (worker threads + the caller).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Worker threads ever spawned by this pool — constant after
+    /// construction (plus at most one lazy `submit` worker), which is the
+    /// steady-state zero-spawn regression signal.
+    pub fn spawns(&self) -> u64 {
+        self.shared.spawns.load(Ordering::Relaxed)
+    }
+
+    /// Completed parallel jobs since construction.
+    pub fn epoch(&self) -> u64 {
+        self.shared.state.lock().unwrap().epoch
+    }
+
+    fn spawn_worker(&self, st: &mut State) {
+        let shared = self.shared.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("moepp-pool-w{}", st.threads))
+            .spawn(move || worker_loop(&shared))
+            .expect("spawn pool worker");
+        self.handles.lock().unwrap().push(handle);
+        st.threads += 1;
+        self.shared.spawns.fetch_add(1, Ordering::Relaxed);
+        note_spawn();
+    }
+
+    /// Run `f(i)` for every `i in 0..n` across the pool, returning once
+    /// all indices have executed (the fence). The caller participates, so
+    /// a width-1 pool degenerates to a plain serial loop with no
+    /// synchronisation at all. If any index panicked, the panic is
+    /// re-raised here — after the fence, so no worker is left touching
+    /// caller-owned data — and the pool remains usable.
+    ///
+    /// Nested `run` on the **same** pool (a job closure calling `run`
+    /// again) executes inline serially instead of installing a second
+    /// job: the nested call would otherwise wait for a job slot its own
+    /// caller keeps busy — a guaranteed self-deadlock. Nesting across
+    /// *different* pools, and `run` from inside a `submit` task, are
+    /// fine (those always make progress).
+    pub fn run<F: Fn(usize) + Sync>(&self, n: usize, f: F) {
+        if n == 0 {
+            return;
+        }
+        let nested = DRAINING.with(|d| d.get())
+            == Arc::as_ptr(&self.shared) as *const ();
+        if self.width <= 1 || n == 1 || nested {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        // SAFETY: lifetime-erased borrow of `f`. Erasure is sound because
+        // the claim rule (only `i < n` dereferences) plus the fence below
+        // (`done == n` before this function returns) guarantee no
+        // dereference outlives `f`.
+        let f_erased: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(usize) + Sync),
+                &'static (dyn Fn(usize) + Sync),
+            >(&f)
+        };
+        let job = Arc::new(Job {
+            f: f_erased as *const (dyn Fn(usize) + Sync),
+            n,
+            next: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            panics: AtomicUsize::new(0),
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            // One job at a time: a concurrent `run` waits for the slot.
+            while st.job.is_some() {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.job = Some(job.clone());
+            self.shared.work_cv.notify_all();
+        }
+        job.drain(&self.shared);
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            while job.done.load(Ordering::Acquire) < n {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.job = None;
+            st.epoch += 1;
+            // Wake run-exclusion and fence() waiters.
+            self.shared.done_cv.notify_all();
+        }
+        let panics = job.panics.load(Ordering::Relaxed);
+        if panics > 0 {
+            panic!("ExecPool::run: {panics} of {n} parallel task(s) \
+                    panicked (workers contained and still parked)");
+        }
+    }
+
+    /// Enqueue a detached one-shot task; the returned [`TaskHandle`]
+    /// yields the result (or the panic message). Tasks execute on pool
+    /// workers — never on the calling thread — so this is what carries
+    /// planning work off the serving scheduler. A width-1 pool lazily
+    /// spawns its single worker on first use.
+    pub fn submit<T, F>(&self, f: F) -> TaskHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let slot = Arc::new(TaskSlot {
+            result: Mutex::new(None),
+            cv: Condvar::new(),
+        });
+        let task_slot = slot.clone();
+        let task: Task = Box::new(move || {
+            let r = catch_unwind(AssertUnwindSafe(f))
+                .map_err(|p| panic_message(&p));
+            *task_slot.result.lock().unwrap() = Some(r);
+            task_slot.cv.notify_all();
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.threads == 0 {
+                self.spawn_worker(&mut st);
+            }
+            st.tasks.push_back(task);
+            self.shared.work_cv.notify_all();
+        }
+        TaskHandle { slot }
+    }
+
+    /// Block until no parallel job is installed and the task queue is
+    /// empty and idle.
+    pub fn fence(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        while st.job.is_some()
+            || !st.tasks.is_empty()
+            || st.tasks_active > 0
+        {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+    }
+}
+
+impl Drop for ExecPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "pool task panicked".to_string()
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    enum Work {
+        Job(Arc<Job>),
+        Task(Task),
+    }
+    loop {
+        let work = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(job) = &st.job {
+                    if job.next.load(Ordering::Relaxed) < job.n {
+                        break Work::Job(job.clone());
+                    }
+                }
+                if let Some(t) = st.tasks.pop_front() {
+                    st.tasks_active += 1;
+                    break Work::Task(t);
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        match work {
+            // Per-index panics are caught inside drain.
+            Work::Job(job) => job.drain(shared),
+            Work::Task(t) => {
+                // The submit wrapper catches its own panic; this outer
+                // guard just keeps a worker alive no matter what.
+                let _ = catch_unwind(AssertUnwindSafe(t));
+                let mut st = shared.state.lock().unwrap();
+                st.tasks_active -= 1;
+                shared.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------- handles
+
+struct TaskSlot<T> {
+    result: Mutex<Option<Result<T, String>>>,
+    cv: Condvar,
+}
+
+/// Receiver for a [`ExecPool::submit`] task: poll with
+/// [`TaskHandle::try_take`] or block with [`TaskHandle::wait`]. `Err`
+/// carries the task's panic message (the worker survives).
+pub struct TaskHandle<T> {
+    slot: Arc<TaskSlot<T>>,
+}
+
+impl<T> TaskHandle<T> {
+    /// Take the result if the task has finished; `None` while running.
+    pub fn try_take(&self) -> Option<Result<T, String>> {
+        self.slot.result.lock().unwrap().take()
+    }
+
+    /// Block until the task finishes and take its result.
+    pub fn wait(self) -> Result<T, String> {
+        let mut g = self.slot.result.lock().unwrap();
+        loop {
+            if let Some(r) = g.take() {
+                return r;
+            }
+            g = self.slot.cv.wait(g).unwrap();
+        }
+    }
+}
+
+// ------------------------------------------------------------ executors
+
+/// How a forward driver fans a layer's FFN work across threads — the
+/// handle threaded through `forward_stack` / `execute_layer` /
+/// `ExpertBackend::execute_ffn` (DESIGN.md §12). Outputs are
+/// bitwise-identical across variants: executors schedule compute, the
+/// canonical serial combine (§11) fixes the float summation order.
+pub enum Executor<'a> {
+    /// Spawn scoped threads per call (`util::threadpool`) — the
+    /// pre-pool behaviour, kept as the measured baseline.
+    Scoped { workers: usize },
+    /// Fan out over a long-lived [`ExecPool`] (parked workers, zero
+    /// steady-state spawns).
+    Pool(&'a ExecPool),
+}
+
+impl Executor<'static> {
+    /// A serial executor for oracle/reference paths.
+    pub fn serial() -> Executor<'static> {
+        Executor::Scoped { workers: 1 }
+    }
+}
+
+impl Executor<'_> {
+    /// Parallel width backends should size their work partitions for.
+    pub fn workers(&self) -> usize {
+        match self {
+            Executor::Scoped { workers } => (*workers).max(1),
+            Executor::Pool(p) => p.width(),
+        }
+    }
+
+    /// Run `f(i)` for `i in 0..n`, returning after all complete.
+    pub fn run<F: Fn(usize) + Sync>(&self, n: usize, f: F) {
+        match self {
+            Executor::Scoped { workers } => {
+                crate::util::threadpool::parallel_for(n, *workers, f)
+            }
+            Executor::Pool(p) => p.run(n, f),
+        }
+    }
+
+    /// Ordered map over disjoint `&mut` elements — the executors'
+    /// shared primitive, and the **only** place the disjoint-`&mut`
+    /// erasure lives: both variants guarantee each index in
+    /// [`Executor::run`] is claimed by exactly one thread (the pool's
+    /// atomic job counter / `parallel_for`'s atomic claim counter) and
+    /// both fence before returning, so no two threads ever hold the
+    /// same slot's `&mut` and no access outlives `data`.
+    pub fn for_each_mut<T, F>(&self, data: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        let base = data.as_mut_ptr() as usize;
+        self.run(data.len(), move |i| {
+            // SAFETY: one claim per in-bounds index + the run fence —
+            // see the method docs.
+            let item = unsafe { &mut *(base as *mut T).add(i) };
+            f(i, item);
+        });
+    }
+}
+
+/// Which executor a driver should build — the config-level counterpart of
+/// [`Executor`] (CLI `--executor pool|scoped`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecutorKind {
+    /// Long-lived pool (default: no per-layer spawn cost).
+    #[default]
+    Pool,
+    /// Scoped spawn-per-call fallback (measured baseline).
+    Scoped,
+}
+
+impl ExecutorKind {
+    pub fn parse(s: &str) -> Result<ExecutorKind> {
+        match s {
+            "pool" => Ok(ExecutorKind::Pool),
+            "scoped" => Ok(ExecutorKind::Scoped),
+            other => anyhow::bail!(
+                "unknown executor '{other}' (expected pool|scoped)"
+            ),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ExecutorKind::Pool => "pool",
+            ExecutorKind::Scoped => "scoped",
+        }
+    }
+
+    pub fn all() -> [ExecutorKind; 2] {
+        [ExecutorKind::Pool, ExecutorKind::Scoped]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_hits_every_index_once_for_any_width() {
+        for width in [1usize, 2, 4, 8] {
+            let pool = ExecPool::new(width);
+            let hits: Vec<AtomicU64> =
+                (0..501).map(|_| AtomicU64::new(0)).collect();
+            pool.run(501, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "width={width}"
+            );
+            assert_eq!(pool.spawns(), width.max(1) as u64 - 1);
+        }
+    }
+
+    #[test]
+    fn repeated_jobs_spawn_nothing_and_bump_epoch() {
+        let pool = ExecPool::new(4);
+        let after_build = pool.spawns();
+        assert_eq!(after_build, 3);
+        for round in 0..32 {
+            let sum = AtomicU64::new(0);
+            pool.run(64, |i| {
+                sum.fetch_add(i as u64, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 64 * 63 / 2);
+            assert_eq!(pool.spawns(), after_build, "round {round}");
+        }
+        assert_eq!(pool.epoch(), 32);
+    }
+
+    #[test]
+    fn for_each_mut_writes_each_slot_exactly_once_on_both_executors() {
+        let pool = ExecPool::new(3);
+        for exec in [Executor::Scoped { workers: 3 }, Executor::Pool(&pool)]
+        {
+            let mut v = vec![0u64; 97];
+            exec.for_each_mut(&mut v, |i, slot| *slot = (i * i) as u64);
+            for (i, x) in v.iter().enumerate() {
+                assert_eq!(*x, (i * i) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn nested_run_on_the_same_pool_degrades_to_inline_serial() {
+        // A job closure calling run() on its own pool must not install a
+        // second job (that would self-deadlock waiting for the slot its
+        // caller keeps busy): it executes inline, epoch counts only the
+        // outer job, and results are complete.
+        let pool = ExecPool::new(4);
+        let cells: Vec<AtomicU64> =
+            (0..6 * 8).map(|_| AtomicU64::new(0)).collect();
+        let cells = &cells;
+        pool.run(6, |outer| {
+            pool.run(8, |inner| {
+                cells[outer * 8 + inner].fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert!(
+            cells.iter().all(|c| c.load(Ordering::Relaxed) == 1),
+            "nested fan-out must cover every (outer, inner) pair once"
+        );
+        assert_eq!(pool.epoch(), 1, "only the outer job installs");
+        // Independent pools still compose: nesting across pools is fine.
+        let other = ExecPool::new(2);
+        let sum = AtomicU64::new(0);
+        pool.run(4, |_| {
+            other.run(4, |i| {
+                sum.fetch_add(i as u64, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4 * 6);
+    }
+
+    #[test]
+    fn parallel_panic_is_contained_and_reraised() {
+        let pool = ExecPool::new(4);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(16, |i| {
+                if i == 7 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "caller must observe the panic");
+        // Workers survived: the pool still runs jobs and spawned nothing.
+        let spawns = pool.spawns();
+        let sum = AtomicU64::new(0);
+        pool.run(8, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 28);
+        assert_eq!(pool.spawns(), spawns);
+    }
+
+    #[test]
+    fn submit_runs_off_the_calling_thread() {
+        let pool = ExecPool::new(1); // lazily spawns its task worker
+        let caller = std::thread::current().id();
+        let h = pool.submit(move || std::thread::current().id());
+        let worker = h.wait().unwrap();
+        assert_ne!(caller, worker, "task ran on the submitting thread");
+        assert_eq!(pool.spawns(), 1, "one lazy worker");
+        // Second submit reuses it.
+        let h = pool.submit(|| 40 + 2);
+        assert_eq!(h.wait().unwrap(), 42);
+        assert_eq!(pool.spawns(), 1);
+    }
+
+    #[test]
+    fn submit_panic_surfaces_on_the_handle_only() {
+        let pool = ExecPool::new(1);
+        let h = pool.submit(|| -> u32 { panic!("task exploded") });
+        let err = h.wait().unwrap_err();
+        assert!(err.contains("task exploded"), "{err}");
+        // The worker survived and serves the next task.
+        assert_eq!(pool.submit(|| 7u32).wait().unwrap(), 7);
+    }
+
+    #[test]
+    fn fence_waits_for_queued_tasks_and_try_take_polls() {
+        let pool = ExecPool::new(2);
+        let h = pool.submit(|| {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            123u64
+        });
+        pool.fence();
+        // After the fence the result must be immediately available.
+        assert_eq!(h.try_take().expect("fenced task done").unwrap(), 123);
+    }
+
+    #[test]
+    fn jobs_and_tasks_coexist() {
+        let pool = ExecPool::new(4);
+        let h = pool.submit(|| {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            1u8
+        });
+        let sum = AtomicU64::new(0);
+        // A parallel job completes even while a worker runs the task
+        // (the caller participates, so progress never depends on any
+        // single worker being free).
+        pool.run(100, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+        assert_eq!(h.wait().unwrap(), 1);
+    }
+
+    #[test]
+    fn zero_and_one_sized_jobs_run_inline() {
+        let pool = ExecPool::new(4);
+        pool.run(0, |_| panic!("must not run"));
+        let caller = std::thread::current().id();
+        let ran_on = Mutex::new(None);
+        pool.run(1, |_| {
+            *ran_on.lock().unwrap() = Some(std::thread::current().id());
+        });
+        assert_eq!(ran_on.lock().unwrap().unwrap(), caller);
+    }
+}

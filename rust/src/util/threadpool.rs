@@ -1,66 +1,25 @@
 //! Scoped data-parallel helpers built on `std::thread::scope` (no rayon in
 //! this offline environment).
 //!
-//! On this reproduction testbed there is a single CPU core, so the pool
-//! defaults to the available parallelism but all algorithms remain correct
+//! These spawn OS threads on **every call**. The serving hot path now
+//! fans out over the persistent [`crate::util::pool::ExecPool`] instead
+//! (DESIGN.md §12); the scoped helpers remain as the `Executor::Scoped`
+//! fallback so `moepp bench forward --executor both` can measure
+//! pool-vs-scoped, and every spawn is counted into
+//! [`crate::util::pool::thread_spawns`] so the steady-state zero-spawn
+//! regression can see them.
+//!
+//! On this reproduction testbed there is a single CPU core, so callers
+//! default to the available parallelism but all algorithms remain correct
 //! (and are tested) for any worker count.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use crate::util::pool::note_spawn;
+
 /// Number of worker threads to use by default.
 pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-}
-
-/// Run `f(chunk_start, chunk)` over mutable, disjoint chunks of `data` on
-/// `workers` threads. Chunks are contiguous and cover `data` exactly.
-pub fn parallel_chunks_mut<T: Send, F>(
-    data: &mut [T],
-    workers: usize,
-    chunk: usize,
-    f: F,
-) where
-    F: Fn(usize, &mut [T]) + Sync,
-{
-    let workers = workers.max(1);
-    if workers == 1 || data.len() <= chunk {
-        let mut start = 0;
-        let total = data.len();
-        for c in data.chunks_mut(chunk.max(1)) {
-            f(start, c);
-            start += c.len();
-            if start >= total {
-                break;
-            }
-        }
-        return;
-    }
-    let next = AtomicUsize::new(0);
-    let n = data.len();
-    let base = data.as_mut_ptr() as usize;
-    std::thread::scope(|s| {
-        for _ in 0..workers {
-            let next = &next;
-            let f = &f;
-            s.spawn(move || loop {
-                let start = next.fetch_add(chunk, Ordering::Relaxed);
-                if start >= n {
-                    break;
-                }
-                let len = chunk.min(n - start);
-                // SAFETY: [start, start+len) ranges are disjoint because
-                // `next` hands each range to exactly one worker, and the
-                // scope guarantees threads end before `data` is reused.
-                let slice = unsafe {
-                    std::slice::from_raw_parts_mut(
-                        (base as *mut T).add(start),
-                        len,
-                    )
-                };
-                f(start, slice);
-            });
-        }
-    });
 }
 
 /// Parallel iteration over indices [0, n) with a worker-count cap; the body
@@ -78,6 +37,7 @@ pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, workers: usize, f: F) {
         for _ in 0..workers {
             let next = &next;
             let f = &f;
+            note_spawn();
             s.spawn(move || loop {
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
@@ -89,7 +49,11 @@ pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, workers: usize, f: F) {
     });
 }
 
-/// Map [0, n) -> Vec<R> in parallel, preserving order.
+/// Map [0, n) -> Vec<R> in parallel, preserving order. Slots are written
+/// through `Executor::for_each_mut` (the single disjoint-`&mut`
+/// primitive, which dispatches back to [`parallel_for`] for the scoped
+/// variant) — the per-slot `Mutex` this used to take was pure overhead,
+/// since no two workers ever share an index.
 pub fn parallel_map<R: Send + Default + Clone, F>(
     n: usize,
     workers: usize,
@@ -99,14 +63,8 @@ where
     F: Fn(usize) -> R + Sync,
 {
     let mut out = vec![R::default(); n];
-    {
-        let slots: Vec<std::sync::Mutex<&mut R>> =
-            out.iter_mut().map(std::sync::Mutex::new).collect();
-        parallel_for(n, workers, |i| {
-            let mut slot = slots[i].lock().unwrap();
-            **slot = f(i);
-        });
-    }
+    crate::util::pool::Executor::Scoped { workers }
+        .for_each_mut(&mut out, |i, slot| *slot = f(i));
     out
 }
 
@@ -114,21 +72,6 @@ where
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
-
-    #[test]
-    fn chunks_cover_everything() {
-        for workers in [1, 2, 4] {
-            let mut v = vec![0u64; 1003];
-            parallel_chunks_mut(&mut v, workers, 64, |start, c| {
-                for (i, x) in c.iter_mut().enumerate() {
-                    *x = (start + i) as u64;
-                }
-            });
-            for (i, x) in v.iter().enumerate() {
-                assert_eq!(*x, i as u64);
-            }
-        }
-    }
 
     #[test]
     fn parallel_for_hits_every_index_once() {
@@ -141,6 +84,7 @@ mod tests {
 
     #[test]
     fn parallel_map_preserves_order() {
+        // The order/coverage oracle for the lock-free slot writes.
         let out = parallel_map(100, 3, |i| i * i);
         for (i, v) in out.iter().enumerate() {
             assert_eq!(*v, i * i);

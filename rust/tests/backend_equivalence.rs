@@ -15,6 +15,7 @@ use moepp::moe::arena::ExecArena;
 use moepp::moe::exec::{self, NativeSingle};
 use moepp::moe::weights::StackWeights;
 use moepp::tensor::Tensor;
+use moepp::util::pool::Executor;
 use moepp::util::proptest::{gen, Prop};
 use moepp::util::rng::Rng;
 
@@ -73,6 +74,7 @@ fn check_preset(preset: &'static str) {
             let mut arena = ExecArena::new();
             let (y_oracle, s_oracle, _) = exec::forward_stack(
                 &mut oracle, &weights, &cfgs, &x, &mut arena,
+                &Executor::serial(),
             )
             .map_err(|e| format!("oracle: {e:#}"))?;
 
@@ -156,6 +158,7 @@ fn backends_agree_across_tau() {
         let mut arena = ExecArena::new();
         let (y_oracle, s_oracle, _) = exec::forward_stack(
             &mut oracle, &weights, &cfgs, &x, &mut arena,
+            &Executor::serial(),
         )
         .unwrap();
         let mut engine = MoeEngine::native_with_workers(cfg.clone(), 5, 4);

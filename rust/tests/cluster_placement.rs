@@ -183,6 +183,48 @@ fn refined_plan_strictly_beats_round_robin_on_skewed_routing() {
     );
 }
 
+#[test]
+fn apply_placement_respawns_only_affected_devices() {
+    // Incremental migration (ISSUE 5 satellite): the between-batch stall
+    // must scale with the migration, not cluster size — devices whose
+    // owned-expert set did not change keep their worker threads alive,
+    // proven by OS thread identity.
+    let cfg = MoeConfig::preset("test"); // 4 FFN experts
+    let mut sim = ClusterSim::new(cfg.clone(), Topology::new(3), 11);
+    let mut rng = Rng::new(5);
+    let x = Tensor::randn(&mut rng, &[40, cfg.d_model], 1.0);
+    let (y_before, _) = sim.forward(&x);
+    let ids_before = sim.worker_thread_ids();
+    // Round-robin owners are [0, 1, 2, 0]; move only expert 1 from
+    // device 1 to device 0 — device 2 is untouched.
+    let plan = PlacementPlan::from_owner(vec![0, 0, 2, 0], 3).unwrap();
+    assert_eq!(sim.apply_placement(&plan).unwrap(), 1);
+    let ids_after = sim.worker_thread_ids();
+    assert_eq!(ids_before.len(), ids_after.len());
+    for (li, (before, after)) in
+        ids_before.iter().zip(&ids_after).enumerate()
+    {
+        assert_eq!(
+            before[2], after[2],
+            "layer {li}: untouched device 2 was respawned"
+        );
+        assert_ne!(
+            before[0], after[0],
+            "layer {li}: receiving device 0 must respawn"
+        );
+        assert_ne!(
+            before[1], after[1],
+            "layer {li}: sending device 1 must respawn"
+        );
+    }
+    // Migration never changes math.
+    let (y_after, _) = sim.forward(&x);
+    assert_eq!(y_before.data, y_after.data);
+    // Re-applying the same plan is a no-op: every worker survives.
+    assert_eq!(sim.apply_placement(&plan).unwrap(), 0);
+    assert_eq!(sim.worker_thread_ids(), ids_after);
+}
+
 fn test_replanner(cfg: &MoeConfig) -> Replanner {
     Replanner::new(
         Planner::new(CostModel::from_config(cfg)),
@@ -194,6 +236,56 @@ fn test_replanner(cfg: &MoeConfig) -> Replanner {
         },
         cfg.n_ffn_experts,
     )
+}
+
+#[test]
+fn replanning_runs_off_thread_and_applies_at_a_later_boundary() {
+    // The submit → poll → apply-at-boundary protocol (ISSUE 5,
+    // DESIGN.md §12): when the replanner's window fills, note_batch only
+    // *submits* the local search to the sim's pool and returns with the
+    // placement untouched — the search never runs on the calling
+    // (scheduler) thread — and the gated proposal is applied at a
+    // strictly later batch boundary.
+    let cfg = MoeConfig::preset("test");
+    let n_dev = 2;
+    for seed in 0..24u64 {
+        let mut rng = Rng::new(seed ^ 0xBEEF);
+        let batches = skewed_batches(&mut rng, 6, 48, cfg.d_model);
+        let mut sim =
+            ClusterSim::new(cfg.clone(), Topology::new(n_dev), seed)
+                .with_replanner(test_replanner(&cfg));
+        let mut submitted_at = None;
+        for (i, b) in batches.iter().enumerate() {
+            let placement_before = sim.placement();
+            let (_, rep) = sim.forward(b);
+            sim.note_batch(&rep.stats);
+            if submitted_at.is_none() && sim.replan_in_flight() {
+                submitted_at = Some(i);
+                // The boundary that submitted the search returned with
+                // placement untouched — planning did not run inline.
+                assert_eq!(
+                    sim.placement(),
+                    placement_before,
+                    "submit boundary must not apply a plan"
+                );
+            }
+            if sim.replan_count() >= 1 {
+                let s = submitted_at
+                    .expect("a replan applied without ever submitting");
+                assert!(
+                    i > s,
+                    "plan applied at the submit boundary (batch {i})"
+                );
+                assert!(
+                    !sim.replan_in_flight(),
+                    "joined task still reported in flight"
+                );
+                assert!(!sim.placement().is_round_robin());
+                return;
+            }
+        }
+    }
+    panic!("no seed in 0..24 triggered an off-thread replan");
 }
 
 /// Drive the replanning cluster directly (forward + note_batch = exactly

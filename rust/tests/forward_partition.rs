@@ -1,8 +1,9 @@
-//! Token-parallel partitioning + arena acceptance tests (ISSUE 4,
-//! DESIGN.md §11):
+//! Token-parallel partitioning + arena acceptance tests (ISSUE 4 / 5,
+//! DESIGN.md §11/§12):
 //!
-//! * outputs are **bitwise-identical** across workers ∈ {1, 2, 4, 8} and
-//!   both work partitions (batch fan-out vs token shards), including an
+//! * outputs are **bitwise-identical** across workers ∈ {1, 2, 4, 8},
+//!   both work partitions (batch fan-out vs token shards) and both
+//!   executors (persistent pool vs scoped spawn-per-call), including an
 //!   adversarial routing where every token lands on one hot expert —
 //!   the case the shard partition exists for;
 //! * the execution arena stops growing after the first pass over a
@@ -13,11 +14,12 @@
 use moepp::bench::workload::skewed_batches;
 use moepp::config::MoeConfig;
 use moepp::coordinator::dispatch::{DispatchPlan, ExpertBatch};
-use moepp::coordinator::engine::{MoeEngine, Partition};
+use moepp::coordinator::engine::{ExecutorKind, MoeEngine, Partition};
 use moepp::moe::arena::FfnArena;
 use moepp::moe::exec::{ExpertBackend, NativeBatched};
 use moepp::moe::weights::StackWeights;
 use moepp::tensor::Tensor;
+use moepp::util::pool::{ExecPool, Executor};
 use moepp::util::rng::Rng;
 
 #[test]
@@ -33,20 +35,24 @@ fn skewed_workload_is_bitwise_identical_across_workers_and_partitions() {
             reference.push(engine.forward_stack(b).unwrap().0);
         }
     }
-    for partition in Partition::all() {
-        for workers in [1usize, 2, 4, 8] {
-            let mut engine =
-                MoeEngine::native_with_workers(cfg.clone(), 6, workers)
-                    .with_partition(partition);
-            for (b, want) in batches.iter().zip(&reference) {
-                let (y, _) = engine.forward_stack(b).unwrap();
-                assert_eq!(
-                    y.data,
-                    want.data,
-                    "workers={workers} partition={} diverged on the \
-                     skewed workload",
-                    partition.label()
-                );
+    for executor in ExecutorKind::all() {
+        for partition in Partition::all() {
+            for workers in [1usize, 2, 4, 8] {
+                let mut engine =
+                    MoeEngine::native_with_workers(cfg.clone(), 6, workers)
+                        .with_partition(partition)
+                        .with_executor(executor);
+                for (b, want) in batches.iter().zip(&reference) {
+                    let (y, _) = engine.forward_stack(b).unwrap();
+                    assert_eq!(
+                        y.data,
+                        want.data,
+                        "workers={workers} partition={} executor={} \
+                         diverged on the skewed workload",
+                        partition.label(),
+                        executor.label()
+                    );
+                }
             }
         }
     }
@@ -58,7 +64,7 @@ fn single_hot_expert_layer_is_bitwise_identical_for_all_schedules() {
     // Under Partition::Batch that batch is a single unit (one worker
     // computes while the rest idle); under Partition::Shard it splits
     // into row ranges — results must be bit-for-bit the same either way,
-    // for every worker count.
+    // for every worker count and either executor.
     let cfg = MoeConfig::preset("test");
     let weights = StackWeights::init(13, &cfg);
     let t = 61; // awkward row count: uneven shard splits
@@ -79,32 +85,33 @@ fn single_hot_expert_layer_is_bitwise_identical_for_all_schedules() {
         expert_counts,
     };
 
-    let run = |workers: usize, partition: Partition| -> Vec<f32> {
-        let mut be = NativeBatched {
-            layers: &weights.layers,
-            workers,
-            partition,
-        };
+    let run = |partition: Partition, exec: &Executor| -> Vec<f32> {
+        let mut be = NativeBatched { layers: &weights.layers, partition };
         let mut y = Tensor::zeros(&[t, cfg.d_model]);
         let mut arena = FfnArena::new();
-        be.execute_ffn(0, &plan, &h, &mut y, &mut arena).unwrap();
+        be.execute_ffn(0, &plan, &h, &mut y, &mut arena, exec).unwrap();
         y.data
     };
 
-    let want = run(1, Partition::Shard);
+    let want = run(Partition::Shard, &Executor::serial());
     assert!(
         want.iter().any(|&v| v != 0.0),
         "hot expert must produce output"
     );
     for partition in Partition::all() {
         for workers in [1usize, 2, 4, 8] {
-            assert_eq!(
-                run(workers, partition),
-                want,
-                "workers={workers} partition={} diverged on the \
-                 single-hot-expert layer",
-                partition.label()
-            );
+            let pool = ExecPool::new(workers);
+            for exec in
+                [Executor::Scoped { workers }, Executor::Pool(&pool)]
+            {
+                assert_eq!(
+                    run(partition, &exec),
+                    want,
+                    "workers={workers} partition={} diverged on the \
+                     single-hot-expert layer",
+                    partition.label()
+                );
+            }
         }
     }
 }
@@ -115,16 +122,19 @@ fn arena_stops_growing_after_first_pass_of_steady_state_loop() {
     // engine forwarding batch after batch. After one pass over the
     // workload every arena buffer has seen its peak shape, so replaying
     // the batches must perform zero growths — per batch and in total —
-    // while reproducing outputs bitwise.
-    for (workers, partition) in [
-        (1usize, Partition::Shard),
-        (2, Partition::Shard),
-        (4, Partition::Batch),
+    // while reproducing outputs bitwise. Under the pool executor the
+    // same must hold for thread spawns (paid once, before the replay).
+    for (workers, partition, executor) in [
+        (1usize, Partition::Shard, ExecutorKind::Pool),
+        (2, Partition::Shard, ExecutorKind::Pool),
+        (2, Partition::Shard, ExecutorKind::Scoped),
+        (4, Partition::Batch, ExecutorKind::Pool),
     ] {
         let cfg = MoeConfig::preset("test");
         let mut engine =
             MoeEngine::native_with_workers(cfg.clone(), 2, workers)
-                .with_partition(partition);
+                .with_partition(partition)
+                .with_executor(executor);
         let mut rng = Rng::new(77);
         let mut batches = skewed_batches(&mut rng, 3, 48, cfg.d_model);
         batches.push(Tensor::randn(&mut rng, &[48, cfg.d_model], 1.0));
@@ -134,6 +144,10 @@ fn arena_stops_growing_after_first_pass_of_steady_state_loop() {
         }
         let warmed = engine.arena_growths();
         assert!(warmed > 0, "warmup must have grown the arena");
+        let spawned = engine.pool_spawns();
+        if executor == ExecutorKind::Pool {
+            assert_eq!(spawned, workers as u64 - 1);
+        }
         for round in 0..2 {
             for (b, want) in batches.iter().zip(&first_pass) {
                 let (y, _) = engine.forward_stack(b).unwrap();
@@ -148,11 +162,18 @@ fn arena_stops_growing_after_first_pass_of_steady_state_loop() {
                      workers={workers}, {})",
                     partition.label()
                 );
+                assert_eq!(
+                    engine.pool_spawns(),
+                    spawned,
+                    "pool spawned threads in steady state \
+                     (round {round}, workers={workers})"
+                );
             }
         }
         // A strictly smaller batch also grows nothing.
         let small = Tensor::randn(&mut rng, &[9, cfg.d_model], 1.0);
         let _ = engine.forward_stack(&small).unwrap();
         assert_eq!(engine.arena_growths(), warmed, "smaller batch grew");
+        assert_eq!(engine.pool_spawns(), spawned);
     }
 }

@@ -1,0 +1,92 @@
+//! Steady-state thread-spawn regression for the serving loop
+//! (ISSUE 5 / DESIGN.md §12) — the thread twin of the arena's
+//! zero-growth test: once a pool-executor service has executed its first
+//! batch, continuing to serve performs **zero thread spawns**, because
+//! the engine's `ExecPool` workers are spawned once and parked, not
+//! re-created per layer like the scoped helpers.
+//!
+//! This is the only test in this binary on purpose: it reads the
+//! process-global `util::pool::thread_spawns()` counter (which both pool
+//! worker spawns and the scoped helpers' per-call spawns feed), and
+//! cargo integration-test binaries run as separate processes — so
+//! nothing else can race the counter.
+
+use std::time::Duration;
+
+use moepp::config::MoeConfig;
+use moepp::coordinator::batcher::BatcherConfig;
+use moepp::coordinator::engine::{ExecutorKind, MoeEngine};
+use moepp::serve::{MoeService, ServiceConfig};
+use moepp::tensor::Tensor;
+use moepp::util::pool::thread_spawns;
+use moepp::util::rng::Rng;
+
+fn service(engine: MoeEngine) -> MoeService {
+    MoeService::start(
+        engine,
+        ServiceConfig {
+            batcher: BatcherConfig {
+                max_tokens: 64,
+                max_wait: Duration::from_millis(1),
+            },
+            max_queued_tokens: 4096,
+            max_pending_requests: 64,
+            default_deadline: None,
+        },
+    )
+}
+
+fn drive(svc: &MoeService, cfg: &MoeConfig, seed: u64, n: usize) {
+    let mut rng = Rng::new(seed);
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let t = 16 + (i % 3) * 16; // 16/32/48-token requests
+            let x = Tensor::randn(&mut rng, &[t, cfg.d_model], 1.0);
+            svc.submit_tokens(x).unwrap()
+        })
+        .collect();
+    for h in handles {
+        h.wait().unwrap();
+    }
+}
+
+#[test]
+fn steady_state_serve_loop_spawns_zero_threads_on_the_pool_executor() {
+    let cfg = MoeConfig::preset("test");
+
+    // Baseline sanity: the scoped executor spawns per batch, so the
+    // counter visibly moves — proving the instrument actually measures
+    // what the pool assertion below relies on.
+    let scoped = service(
+        MoeEngine::native_with_workers(cfg.clone(), 0, 2)
+            .with_executor(ExecutorKind::Scoped),
+    );
+    let before_scoped = thread_spawns();
+    drive(&scoped, &cfg, 1, 6);
+    scoped.shutdown();
+    assert!(
+        thread_spawns() > before_scoped,
+        "scoped executor should have spawned per-batch threads \
+         (counter broken?)"
+    );
+
+    // The pool executor: after the warmup batches have built the
+    // engine's pool (workers - 1 one-time spawns on the scheduler
+    // thread), a steady-state serve loop performs ZERO further spawns —
+    // mirroring the arena growths() regression.
+    let pool = service(
+        MoeEngine::native_with_workers(cfg.clone(), 0, 4)
+            .with_executor(ExecutorKind::Pool),
+    );
+    drive(&pool, &cfg, 2, 4); // warmup: pool built at first batch
+    let warmed = thread_spawns();
+    drive(&pool, &cfg, 3, 24); // steady state
+    assert_eq!(
+        thread_spawns(),
+        warmed,
+        "steady-state serving spawned threads"
+    );
+    let m = pool.shutdown();
+    assert_eq!(m.requests, 28);
+    assert!(m.batches >= 1);
+}
