@@ -17,15 +17,15 @@ run() {
 }
 
 # Build, failing on any warning in the gated modules (serve/, placement/,
-# tensor/, moe/, bench/, util/). Touch the crate root so cargo re-emits
-# warnings even on a warm cache.
+# cluster/, tensor/, moe/, bench/, util/). Touch the crate root so cargo
+# re-emits warnings even on a warm cache.
 touch src/lib.rs
-echo "==> cargo build --release (warnings in src/{serve,placement,tensor,moe,bench,util}/ are fatal)"
+echo "==> cargo build --release (warnings in src/{serve,placement,cluster,tensor,moe,bench,util}/ are fatal)"
 build_log=$(mktemp)
 cargo build --release 2>&1 | tee "$build_log"
 if grep -A3 '^warning' "$build_log" \
-    | grep -q 'src/serve/\|src/placement/\|src/tensor/\|src/moe/\|src/bench/\|src/util/'; then
-    echo "ci.sh: warnings in a gated module (serve/placement/tensor/moe/bench/util) — fix them" >&2
+    | grep -q 'src/serve/\|src/placement/\|src/cluster/\|src/tensor/\|src/moe/\|src/bench/\|src/util/'; then
+    echo "ci.sh: warnings in a gated module (serve/placement/cluster/tensor/moe/bench/util) — fix them" >&2
     exit 1
 fi
 rm -f "$build_log"
@@ -37,10 +37,12 @@ run cargo test -q
 run cargo run --release --quiet -- serve --preset sm-8e --requests 64 \
     --max-wait-ms 1
 
-# Placement smoke: capture a skewed profile, plan rr/lpt/refined, score
-# and re-simulate each (also writes BENCH_placement.json).
+# Placement smoke: capture a skewed profile, plan rr/lpt/refined/
+# replicated, score and re-simulate each (also writes
+# BENCH_placement.json). --replicas 2 exercises the multi-replica
+# load-split path end to end.
 run cargo run --release --quiet -- placement --devices 4 --profile skewed \
-    --tokens 128 --batches 2
+    --tokens 128 --batches 2 --replicas 2
 
 # Expert-forward smoke: batch vs shard partitioning AND pool vs scoped
 # executors on uniform + skewed routing (writes BENCH_forward.json — the

@@ -359,8 +359,11 @@ pub struct PlacementSweepRow {
     pub measured_makespan_ms: f64,
     pub comm_mib: f64,
     pub load_cv: f64,
-    /// Experts whose owner differs from the round-robin baseline.
+    /// Experts whose replica set differs from the round-robin baseline.
     pub moved_experts: usize,
+    /// Replica slots beyond one-per-expert (0 for single-owner plans) —
+    /// what separates the replicated row from the owner-only rows.
+    pub extra_replicas: usize,
 }
 
 /// The placement sweep: capture a load profile by running the workload on
@@ -371,6 +374,12 @@ pub struct PlacementSweepRow {
 /// gaussian batches. `budget_bytes` is the optional per-device parameter
 /// budget handed to the planner (stack-wide per expert slot). Identical
 /// plans are simulated once (refined often equals its LPT seed).
+///
+/// `max_replicas` bounds the replicated strategy's per-expert replica
+/// count; `device_speeds` (relative flops, 1.0 = baseline, missing
+/// devices default to 1.0) makes the fleet heterogeneous — it reaches
+/// the cost model, the simulated workers and the modeled makespan alike,
+/// so every row is priced and simulated on the same fleet.
 pub fn run_placement_sweep(
     preset: &str,
     n_devices: usize,
@@ -379,8 +388,14 @@ pub fn run_placement_sweep(
     skewed: bool,
     seed: u64,
     budget_bytes: Option<u64>,
+    max_replicas: usize,
+    device_speeds: &[f64],
 ) -> Result<(LoadProfile, Vec<PlacementSweepRow>)> {
     anyhow::ensure!(n_batches > 0, "placement sweep needs >= 1 batch");
+    anyhow::ensure!(max_replicas >= 1, "max_replicas must be >= 1");
+    let speeds: Vec<f64> = (0..n_devices)
+        .map(|d| device_speeds.get(d).copied().unwrap_or(1.0))
+        .collect();
     let cfg = MoeConfig::preset(preset);
     let mut rng = Rng::new(seed ^ 0x9E37);
     let workload = if skewed {
@@ -397,8 +412,11 @@ pub fn run_placement_sweep(
     // the identical configuration twice).
     let mut profile = LoadProfile::new(cfg.n_ffn_experts);
     let baseline_reports: Vec<SimReport> = {
-        let mut sim =
-            ClusterSim::new(cfg.clone(), Topology::new(n_devices), seed);
+        let mut sim = ClusterSim::new(
+            cfg.clone(),
+            Topology::new(n_devices).with_device_speeds(speeds.clone()),
+            seed,
+        );
         workload
             .iter()
             .map(|b| {
@@ -409,8 +427,10 @@ pub fn run_placement_sweep(
             .collect()
     };
 
-    let cost = CostModel::from_config(&cfg);
-    let mut planner = Planner::new(cost.clone());
+    let cost =
+        CostModel::from_config(&cfg).with_device_speeds(speeds.clone());
+    let mut planner =
+        Planner::new(cost.clone()).with_max_replicas(max_replicas);
     if let Some(bytes) = budget_bytes {
         planner = planner.with_budget(bytes);
     }
@@ -429,7 +449,9 @@ pub fn run_placement_sweep(
         } else {
             let mut sim = ClusterSim::new(
                 cfg.clone(),
-                Topology::new(n_devices).with_placement(plan.clone()),
+                Topology::new(n_devices)
+                    .with_device_speeds(speeds.clone())
+                    .with_placement(plan.clone()),
                 seed,
             );
             let reps =
@@ -440,12 +462,18 @@ pub fn run_placement_sweep(
         let (mut modeled, mut measured, mut cv) = (0.0, 0.0, 0.0);
         let mut comm_bytes = 0u64;
         for rep in reports {
-            modeled +=
-                rep.modeled_makespan(cost.compute_s_per_assignment);
+            modeled += rep.modeled_makespan_on(
+                cost.compute_s_per_assignment,
+                &speeds,
+            );
             measured += rep.total_makespan();
             comm_bytes += rep.total_comm_bytes();
             cv += rep.mean_load_cv();
         }
+        let extra_replicas = (0..cfg.n_ffn_experts)
+            .map(|e| plan.replica_count(e))
+            .sum::<usize>()
+            - cfg.n_ffn_experts;
         rows.push(PlacementSweepRow {
             strategy: strategy.label().to_string(),
             predicted_makespan_ms: predicted.makespan_s * 1e3,
@@ -453,7 +481,8 @@ pub fn run_placement_sweep(
             measured_makespan_ms: measured * 1e3,
             comm_mib: comm_bytes as f64 / (1 << 20) as f64,
             load_cv: cv / n_batches as f64,
-            moved_experts: rr.diff(&plan).len(),
+            moved_experts: rr.diff_experts(&plan).len(),
+            extra_replicas,
         });
     }
     Ok((profile, rows))
@@ -461,13 +490,14 @@ pub fn run_placement_sweep(
 
 pub fn render_placement_sweep(rows: &[PlacementSweepRow]) -> String {
     let mut s = format!(
-        "{:<12} {:>14} {:>13} {:>13} {:>10} {:>8} {:>6}\n",
+        "{:<12} {:>14} {:>13} {:>13} {:>10} {:>8} {:>6} {:>9}\n",
         "strategy", "predicted(ms)", "modeled(ms)", "measured(ms)",
-        "a2a (MiB)", "load cv", "moved"
+        "a2a (MiB)", "load cv", "moved", "replicas+"
     );
     for r in rows {
         s.push_str(&format!(
-            "{:<12} {:>14.3} {:>13.3} {:>13.3} {:>10.3} {:>8.3} {:>6}\n",
+            "{:<12} {:>14.3} {:>13.3} {:>13.3} {:>10.3} {:>8.3} {:>6} \
+             {:>9}\n",
             r.strategy,
             r.predicted_makespan_ms,
             r.modeled_makespan_ms,
@@ -475,6 +505,7 @@ pub fn render_placement_sweep(rows: &[PlacementSweepRow]) -> String {
             r.comm_mib,
             r.load_cv,
             r.moved_experts,
+            r.extra_replicas,
         ));
     }
     s
@@ -516,6 +547,10 @@ pub fn placement_sweep_json(
                             (
                                 "moved_experts",
                                 Json::num(r.moved_experts as f64),
+                            ),
+                            (
+                                "extra_replicas",
+                                Json::num(r.extra_replicas as f64),
                             ),
                         ])
                     })
@@ -731,12 +766,14 @@ mod tests {
     #[test]
     fn placement_sweep_is_internally_consistent() {
         let (profile, rows) =
-            run_placement_sweep("test", 2, 64, 2, true, 3, None)
+            run_placement_sweep("test", 2, 64, 2, true, 3, None, 2, &[])
                 .unwrap();
         assert_eq!(profile.batches, 2);
-        assert_eq!(rows.len(), 3);
+        assert_eq!(rows.len(), 4);
         assert_eq!(rows[0].strategy, "round-robin");
         assert_eq!(rows[0].moved_experts, 0);
+        assert_eq!(rows[0].extra_replicas, 0);
+        assert_eq!(rows[3].strategy, "replicated");
         // The never-worse guarantee is exact on the aggregated profile
         // (predicted); the per-batch modeled sum optimises per-batch
         // maxima the planner never saw, so it gets a small slack band.
@@ -756,14 +793,42 @@ mod tests {
         }
         let s = render_placement_sweep(&rows);
         assert!(s.contains("round-robin"));
+        assert!(s.contains("replicated"));
         let j = placement_sweep_json("test", 2, 64, &rows);
         // Round-trips through the writer/parser.
         let back = Json::parse(&j.to_string()).unwrap();
         assert_eq!(
             back.get("rows").unwrap().as_arr().unwrap().len(),
-            3
+            4
         );
         assert_eq!(back.get("devices").unwrap().as_usize(), Some(2));
+        assert!(back.get("rows").unwrap().as_arr().unwrap()[3]
+            .get("extra_replicas")
+            .is_some());
+    }
+
+    #[test]
+    fn placement_sweep_runs_on_a_heterogeneous_fleet() {
+        // Device speeds thread end to end: cost model, simulated
+        // workers and modeled makespan all see the same fleet, and the
+        // never-worse guarantee holds on it just like on the uniform
+        // one.
+        let (_, rows) = run_placement_sweep(
+            "test", 2, 48, 1, true, 7, None, 2, &[2.0, 1.0],
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(r.modeled_makespan_ms > 0.0, "{r:?}");
+        }
+        for r in &rows[1..] {
+            assert!(
+                r.predicted_makespan_ms
+                    <= rows[0].predicted_makespan_ms * (1.0 + 1e-9),
+                "{r:?} vs {:?}",
+                rows[0]
+            );
+        }
     }
 
     #[test]

@@ -10,12 +10,16 @@
 //! simulated output is numerically interchangeable with the single-process
 //! engine, with per-device compute and all-to-all traffic measured on top.
 //!
-//! **Placement** (DESIGN.md §10): which device owns each FFN expert comes
-//! from the topology's [`PlacementPlan`] (round-robin when none is
-//! installed). Placement is pure layout — the combine stage scatter-adds
-//! expert outputs in a canonical order that depends only on the device
-//! count, so *any* plan produces bitwise-identical model outputs, and the
-//! default reproduces the historical device-major order exactly.
+//! **Placement** (DESIGN.md §10, §13): which devices hold each FFN
+//! expert comes from the topology's [`PlacementPlan`] — a replica *set*
+//! per expert (round-robin single replicas when none is installed). A
+//! replicated expert's token micro-batch is split across its replicas in
+//! deterministic contiguous slices. Placement is pure layout — the
+//! combine stage scatter-adds expert outputs in a canonical order that
+//! depends only on the device count, and within an expert every token is
+//! a distinct output row — so *any* plan, replicated or not, produces
+//! bitwise-identical model outputs, and the default reproduces the
+//! historical device-major order exactly.
 //! [`ClusterSim::apply_placement`] migrates experts between batches, and
 //! an attached [`Replanner`] does so automatically on the serving path.
 
@@ -96,12 +100,32 @@ impl SimReport {
     ///
     /// [`CostModel`]: crate::placement::CostModel
     pub fn modeled_makespan(&self, compute_s_per_assignment: f64) -> f64 {
+        self.modeled_makespan_on(compute_s_per_assignment, &[])
+    }
+
+    /// [`SimReport::modeled_makespan`] on a heterogeneous fleet: device
+    /// `d`'s assignments each cost `compute_s_per_assignment /
+    /// device_speed[d]` (missing entries default to 1.0). The bottleneck
+    /// fold matches [`CostModel`]'s — per device, load × per-device
+    /// seconds, max over device index order.
+    ///
+    /// [`CostModel`]: crate::placement::CostModel
+    pub fn modeled_makespan_on(
+        &self,
+        compute_s_per_assignment: f64,
+        device_speed: &[f64],
+    ) -> f64 {
         self.layers
             .iter()
             .map(|l| {
-                l.device_load.iter().copied().max().unwrap_or(0) as f64
-                    * compute_s_per_assignment
-                    + l.comm_s
+                let mut worst = 0.0f64;
+                for (dev, &load) in l.device_load.iter().enumerate() {
+                    let s =
+                        device_speed.get(dev).copied().unwrap_or(1.0);
+                    worst = worst
+                        .max(load as f64 * compute_s_per_assignment / s);
+                }
+                worst + l.comm_s
             })
             .sum()
     }
@@ -143,6 +167,12 @@ pub struct ClusterSim {
     /// that finds it finished — the local search neither runs on nor
     /// blocks the serving scheduler thread (DESIGN.md §12).
     pending_plan: Option<TaskHandle<Option<MigrationPlan>>>,
+    /// Batch boundaries since the in-flight planning task was submitted.
+    /// Past the replanner's staleness bound the handle is abandoned — a
+    /// proposal that old was searched against loads the fleet has since
+    /// outgrown (the dropped handle detaches; the task finishes
+    /// harmlessly on the pool worker and its result is never read).
+    pending_plan_age: usize,
     /// Replans applied since the serving layer last collected the count.
     replans_unreported: u64,
     /// Reusable stack-forward buffers (routing, per-layer y; the worker
@@ -175,6 +205,7 @@ impl ClusterSim {
             workers,
             replanner: None,
             pending_plan: None,
+            pending_plan_age: 0,
             replans_unreported: 0,
             arena: ExecArena::new(),
             pool: ExecPool::new(1),
@@ -209,8 +240,10 @@ impl ClusterSim {
             .collect()
     }
 
-    /// One device's worker for one layer, loaded with the FFN experts
-    /// the topology's placement assigns it.
+    /// One device's worker for one layer, loaded with every FFN expert
+    /// whose replica set includes this device (a replicated expert's
+    /// weights live on each of its replicas), running at the topology's
+    /// per-device speed.
     fn spawn_device_worker(
         layer: &crate::moe::weights::MoeLayerWeights,
         cfg: &MoeConfig,
@@ -218,10 +251,13 @@ impl ClusterSim {
         dev: usize,
     ) -> Worker {
         let owned: Vec<usize> = (0..cfg.n_ffn_experts)
-            .filter(|&e| topo.ffn_owner(e) == dev)
+            .filter(|&e| {
+                (0..topo.ffn_replica_count(e))
+                    .any(|j| topo.ffn_replica(e, j) == dev)
+            })
             .collect();
         let w = owned.iter().map(|&e| layer.ffn[e].clone()).collect();
-        Worker::spawn(dev, owned, w, cfg)
+        Worker::spawn(dev, owned, w, topo.speed(dev), cfg)
     }
 
     /// The effective FFN placement currently executing.
@@ -230,12 +266,14 @@ impl ClusterSim {
     }
 
     /// Migrate to `plan`: install it on the topology and respawn **only
-    /// the workers of devices whose owned-expert set changed** — the
+    /// the workers of devices whose resident-expert set changed** (the
+    /// devices of the replica-delta's adds and drops) — the
     /// between-batch stall scales with the migration (its moved experts
     /// and bytes), not with cluster size; untouched devices' worker
     /// threads survive by identity (asserted in
-    /// `tests/cluster_placement.rs`). Returns the number of experts that
-    /// changed owner. Call between batches — never during a forward.
+    /// `tests/cluster_placement.rs`). Returns the number of experts
+    /// whose replica set changed. Call between batches — never during a
+    /// forward.
     pub fn apply_placement(&mut self, plan: &PlacementPlan)
         -> Result<usize> {
         anyhow::ensure!(
@@ -251,17 +289,19 @@ impl ClusterSim {
             self.cfg.n_ffn_experts
         );
         plan.validate()?;
-        let moves = self.placement().diff(plan);
-        if moves.is_empty() {
+        let current = self.placement();
+        let changed = current.diff_experts(plan);
+        if changed.is_empty() {
             return Ok(0);
         }
         // A manually-applied plan invalidates any in-flight replanner
         // proposal (it was searched against the placement just replaced).
         self.pending_plan = None;
+        self.pending_plan_age = 0;
+        let delta = current.delta(plan);
         let mut affected = vec![false; self.topo.n_devices];
-        for &(_, from, to) in &moves {
-            affected[from] = true;
-            affected[to] = true;
+        for &(_, dev) in delta.adds.iter().chain(delta.drops.iter()) {
+            affected[dev] = true;
         }
         self.topo.set_placement(plan.clone());
         for (layer, workers) in
@@ -275,7 +315,7 @@ impl ClusterSim {
                 }
             }
         }
-        Ok(moves.len())
+        Ok(changed.len())
     }
 
     /// Feed one executed batch's stats to the attached replanner. The
@@ -292,19 +332,36 @@ impl ClusterSim {
     ///    batch executes. A search slower than a batch just stays in
     ///    flight: `note_batch` is O(1) on this thread unconditionally,
     ///    which is what kills the periodic tail-latency spike at large
-    ///    expert counts.
+    ///    expert counts — **bounded by the staleness gate**: a proposal
+    ///    older than `max_proposal_age_batches` boundaries (still
+    ///    running *or* just finished) is abandoned rather than applied,
+    ///    because it was searched against a load profile the fleet has
+    ///    since outgrown. Dropping the handle merely detaches the task;
+    ///    it finishes harmlessly on the pool worker.
     ///
     /// Outputs are unaffected either way: placement never changes math.
     pub fn note_batch(&mut self, stats: &ForwardStats) {
         let Some(mut rp) = self.replanner.take() else { return };
         rp.observe(stats, &self.cfg);
         if let Some(handle) = self.pending_plan.take() {
+            self.pending_plan_age += 1;
+            let stale = rp.proposal_stale(self.pending_plan_age);
             match handle.try_take() {
-                // Still planning: leave it in flight, poll again at the
-                // next boundary — never block the scheduler.
-                None => self.pending_plan = Some(handle),
+                // Still planning: keep polling unless the proposal has
+                // gone stale, in which case abandon it — never block
+                // the scheduler either way.
+                None => {
+                    if stale {
+                        rp.window_reset();
+                    } else {
+                        self.pending_plan = Some(handle);
+                    }
+                }
                 Some(Ok(Some(mig))) => {
-                    if self.apply_placement(&mig.plan).is_ok() {
+                    if stale {
+                        // Finished, but too late to trust.
+                        rp.window_reset();
+                    } else if self.apply_placement(&mig.plan).is_ok() {
                         rp.committed();
                         self.replans_unreported += 1;
                     } else {
@@ -333,8 +390,16 @@ impl ClusterSim {
         } else if rp.ready() {
             let task = rp.plan_task(&self.placement());
             self.pending_plan = Some(self.pool.submit(move || task.run()));
+            self.pending_plan_age = 0;
         }
         self.replanner = Some(rp);
+    }
+
+    /// Backing-allocation growths of the sim's arena (routing, per-layer
+    /// `y`, FFN pools and the cluster wire pool) — the steady-state
+    /// zero-allocation regression signal for the cluster path.
+    pub fn arena_growths(&self) -> u64 {
+        self.arena.growths()
     }
 
     /// True while a submitted planning task has not yet been joined
@@ -395,12 +460,14 @@ impl ClusterSim {
     }
 }
 
-/// The sharded-worker expert backend: each FFN micro-batch is gathered,
-/// charged for any off-device hop (token home -> expert owner and back),
-/// and executed on the owning device's persistent worker thread. Workers
-/// run concurrently; results are scatter-added at the token homes in a
-/// canonical order that depends only on the device count — see
-/// `execute_ffn`.
+/// The sharded-worker expert backend: each FFN micro-batch is split into
+/// contiguous replica slices ([`crate::placement::replica_slices`] — one
+/// slice per device holding the expert, all of it for a single-replica
+/// expert), gathered, charged for any off-device hop (token home ->
+/// replica device and back), and executed on each replica's persistent
+/// worker thread. Workers run concurrently; results are scatter-added at
+/// the token homes in a canonical order that depends only on the device
+/// count — see `execute_ffn`.
 struct ClusterBackend<'a> {
     topo: &'a Topology,
     workers: &'a [Vec<Worker>],
@@ -408,17 +475,17 @@ struct ClusterBackend<'a> {
 }
 
 impl ExpertBackend for ClusterBackend<'_> {
-    // Gathers stage into per-device `WorkUnit` tensors that cross the
-    // (simulated) device boundary, so the host arena's pools do not
-    // apply here — and FFN compute runs on the per-device worker
-    // threads, so the host executor idles too.
+    // FFN compute runs on the per-device worker threads, so the host
+    // executor idles; the gather/output tensors crossing the (simulated)
+    // device boundary come from the arena's wire pool and are echoed
+    // back with each result, so steady-state forwards allocate none.
     fn execute_ffn(
         &mut self,
         layer: usize,
         plan: &DispatchPlan,
         h: &Tensor,
         y: &mut Tensor,
-        _arena: &mut FfnArena,
+        arena: &mut FfnArena,
         _exec: &Executor,
     ) -> Result<FfnLayerReport> {
         let (t, d) = h.dims2();
@@ -429,22 +496,46 @@ impl ExpertBackend for ClusterBackend<'_> {
             (0..n_dev).map(|_| Vec::new()).collect();
         let mut device_load = vec![0usize; n_dev];
         for batch in &plan.ffn_batches {
-            let owner = self.topo.ffn_owner(batch.expert);
-            device_load[owner] += batch.tokens.len();
-            let mut xb = Tensor::zeros(&[batch.tokens.len(), d]);
-            for (i, &tok) in batch.tokens.iter().enumerate() {
-                xb.row_mut(i).copy_from_slice(h.row(tok));
-                let home = self.topo.token_home(tok, t);
-                if home != owner {
-                    traffic.record_assignment(home, owner, token_bytes);
+            let n_rows = batch.tokens.len();
+            let n_rep = self.topo.ffn_replica_count(batch.expert);
+            // Deterministic contiguous split across the expert's replica
+            // enumeration: same ranges as `placement::replica_slices`,
+            // computed inline to stay allocation-free. Depends only on
+            // (n_rows, n_rep) — never on workers or partitions.
+            let base = n_rows / n_rep;
+            let extra = n_rows % n_rep;
+            let mut start = 0usize;
+            for j in 0..n_rep {
+                let len = base + usize::from(j < extra);
+                if len == 0 {
+                    continue; // more replicas than tokens
                 }
+                let dev = self.topo.ffn_replica(batch.expert, j);
+                let slice = &batch.tokens[start..start + len];
+                device_load[dev] += len;
+                let mut xb = arena.wire.take(len, d);
+                let mut yb = arena.wire.take(len, d);
+                // The batched kernel accumulates; pooled buffers carry
+                // stale rows.
+                yb.data.fill(0.0);
+                for (i, &tok) in slice.iter().enumerate() {
+                    xb.row_mut(i).copy_from_slice(h.row(tok));
+                    let home = self.topo.token_home(tok, t);
+                    if home != dev {
+                        traffic.record_assignment(home, dev, token_bytes);
+                    }
+                }
+                per_device[dev].push(WorkUnit {
+                    expert: batch.expert,
+                    part: j,
+                    x: xb,
+                    gates: batch.gates[start..start + len].to_vec(),
+                    tokens: slice.to_vec(),
+                    y: yb,
+                });
+                start += len;
             }
-            per_device[owner].push(WorkUnit {
-                expert: batch.expert,
-                x: xb,
-                gates: batch.gates.clone(),
-                tokens: batch.tokens.clone(),
-            });
+            debug_assert_eq!(start, n_rows);
         }
 
         // Submit all devices, then collect (workers run concurrently).
@@ -455,13 +546,17 @@ impl ExpertBackend for ClusterBackend<'_> {
             .collect();
 
         let mut device_compute = vec![0.0f64; n_dev];
-        let mut expert_results: Vec<Option<WorkResult>> =
-            (0..self.n_ffn).map(|_| None).collect();
+        let mut expert_results: Vec<Vec<Option<WorkResult>>> = (0
+            ..self.n_ffn)
+            .map(|e| {
+                (0..self.topo.ffn_replica_count(e)).map(|_| None).collect()
+            })
+            .collect();
         for (dev, rx) in rxs.into_iter().enumerate() {
             for r in rx.recv().expect("worker reply") {
                 device_compute[dev] += r.compute_s;
-                let e = r.expert;
-                expert_results[e] = Some(r);
+                let (e, part) = (r.expert, r.part);
+                expert_results[e][part] = Some(r);
             }
         }
 
@@ -471,17 +566,25 @@ impl ExpertBackend for ClusterBackend<'_> {
         // placement plan yields bitwise-identical outputs — and it is
         // exactly the device-major order the pre-placement simulator
         // produced, keeping the round-robin default bit-for-bit
-        // compatible with history.
+        // compatible with history. Within an expert, parts merge in
+        // ascending replica order, restoring the canonical token order —
+        // and since each token is a distinct output row, per-row sums
+        // are unaffected by the split anyway: replication is bitwise
+        // invisible (§13).
         for dev in 0..n_dev {
             let mut e = dev;
             while e < self.n_ffn {
-                if let Some(r) = &expert_results[e] {
-                    for (i, &tok) in r.tokens.iter().enumerate() {
-                        axpy(
-                            1.0,
-                            r.y.row(i),
-                            &mut y.data[tok * d..(tok + 1) * d],
-                        );
+                for part in expert_results[e].iter_mut() {
+                    if let Some(r) = part.take() {
+                        for (i, &tok) in r.tokens.iter().enumerate() {
+                            axpy(
+                                1.0,
+                                r.y.row(i),
+                                &mut y.data[tok * d..(tok + 1) * d],
+                            );
+                        }
+                        arena.wire.put(r.x);
+                        arena.wire.put(r.y);
                     }
                 }
                 e += n_dev;
@@ -600,5 +703,120 @@ mod tests {
         assert!(sim
             .apply_placement(&PlacementPlan::round_robin(8, 2))
             .is_err());
+    }
+
+    #[test]
+    fn replicated_plan_preserves_outputs_bitwise() {
+        // Load-split routing is pure layout too: replicating an expert
+        // splits its micro-batch across devices but the canonical
+        // combine (and one-output-row-per-token) keeps outputs
+        // bit-identical to the unreplicated cluster at the same device
+        // count.
+        let cfg = MoeConfig::preset("test"); // 4 FFN experts
+        let mut sim =
+            ClusterSim::new(cfg.clone(), Topology::new(2), 11);
+        let mut rng = Rng::new(5);
+        let x = Tensor::randn(&mut rng, &[40, cfg.d_model], 1.0);
+        let (y_before, rep_before) = sim.forward(&x);
+
+        // Expert 0 on both devices, the rest single-replica.
+        let plan = PlacementPlan::from_replicas(
+            vec![vec![0, 1], vec![1], vec![0], vec![1]],
+            2,
+        )
+        .unwrap();
+        assert!(plan.is_replicated());
+        let changed = sim.apply_placement(&plan).unwrap();
+        assert_eq!(changed, 1, "only expert 0's replica set changed");
+        let (y_after, rep_after) = sim.forward(&x);
+        assert_eq!(y_before.data, y_after.data);
+        // The split moves load, never loses it: per-layer totals match.
+        for (a, b) in rep_before.layers.iter().zip(&rep_after.layers) {
+            assert_eq!(
+                a.device_load.iter().sum::<usize>(),
+                b.device_load.iter().sum::<usize>()
+            );
+        }
+        // Fully replicating everything is also bitwise-invisible.
+        let full = PlacementPlan::from_replicas(
+            vec![vec![0, 1]; 4],
+            2,
+        )
+        .unwrap();
+        sim.apply_placement(&full).unwrap();
+        let (y_full, _) = sim.forward(&x);
+        assert_eq!(y_before.data, y_full.data);
+    }
+
+    #[test]
+    fn cluster_wire_buffers_are_pooled_after_warmup() {
+        // The gather/output tensors shipped to device workers come from
+        // the arena's wire pool: repeating the same batch stops growing
+        // backing storage once the pool has warmed up.
+        let cfg = MoeConfig::preset("test");
+        let mut sim = ClusterSim::new(cfg.clone(), Topology::new(2), 3);
+        let mut rng = Rng::new(9);
+        let x = Tensor::randn(&mut rng, &[32, cfg.d_model], 1.0);
+        for _ in 0..3 {
+            sim.forward(&x);
+        }
+        let warm = sim.arena_growths();
+        assert!(warm > 0);
+        for _ in 0..4 {
+            sim.forward(&x);
+        }
+        assert_eq!(
+            sim.arena_growths(),
+            warm,
+            "steady-state cluster forwards must not allocate"
+        );
+    }
+
+    #[test]
+    fn stale_planning_tasks_are_abandoned() {
+        use crate::placement::{CostModel, Planner, ReplanConfig};
+        use std::sync::mpsc::channel;
+
+        let cfg = MoeConfig::preset("test");
+        let rp = Replanner::new(
+            Planner::new(CostModel::from_config(&cfg)),
+            ReplanConfig {
+                min_interval_batches: 1,
+                max_proposal_age_batches: 2,
+                ..ReplanConfig::default()
+            },
+            cfg.n_ffn_experts,
+        );
+        let mut sim = ClusterSim::new(cfg.clone(), Topology::new(2), 3)
+            .with_replanner(rp);
+        // Occupy the pool's single lazily-spawned task worker so the
+        // planning task can never start — from the scheduler's view, a
+        // planner stuck for many batches.
+        let (gate_tx, gate_rx) = channel::<()>();
+        let blocker = sim.pool.submit(move || {
+            let _ = gate_rx.recv();
+        });
+
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&mut rng, &[16, cfg.d_model], 1.0);
+        let (_, rep) = sim.forward(&x);
+        sim.note_batch(&rep.stats);
+        assert!(sim.replan_in_flight(), "window filled: task submitted");
+        // Two boundaries age it to the bound (still kept)…
+        for _ in 0..2 {
+            let (_, rep) = sim.forward(&x);
+            sim.note_batch(&rep.stats);
+        }
+        assert!(sim.replan_in_flight(), "age 2 == bound: still polled");
+        // …the third goes past it: abandoned, window reset, nothing
+        // committed.
+        let (_, rep) = sim.forward(&x);
+        sim.note_batch(&rep.stats);
+        assert!(!sim.replan_in_flight(), "age 3 > 2: abandoned");
+        assert_eq!(sim.replan_count(), 0);
+        assert_eq!(sim.take_replan_count(), 0);
+        // Unblock; the detached task finishes harmlessly on the worker.
+        gate_tx.send(()).unwrap();
+        blocker.wait().unwrap();
     }
 }

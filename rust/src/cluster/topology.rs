@@ -24,6 +24,14 @@ impl Default for LinkModel {
 pub struct Topology {
     pub n_devices: usize,
     pub link: LinkModel,
+    /// Relative FFN throughput per device (1.0 = the nominal
+    /// [`DEVICE_FLOPS`] device). A heterogeneous fleet sets these from
+    /// `--flops-per-s`; compute *time* on device `d` divides by
+    /// `device_speed[d]`, and speed never changes routing or outputs —
+    /// only modeled/measured time.
+    ///
+    /// [`DEVICE_FLOPS`]: crate::placement::DEVICE_FLOPS
+    pub device_speed: Vec<f64>,
     /// FFN expert placement. `None` is the historical round-robin modulo
     /// (valid for any expert count and bitwise-identical to an explicit
     /// round-robin plan); an installed plan fixes the expert count.
@@ -36,8 +44,29 @@ impl Topology {
         Topology {
             n_devices,
             link: LinkModel::default(),
+            device_speed: vec![1.0; n_devices],
             placement: None,
         }
+    }
+
+    /// Set per-device relative speeds (builder form).
+    pub fn with_device_speeds(mut self, speeds: Vec<f64>) -> Topology {
+        assert_eq!(
+            speeds.len(),
+            self.n_devices,
+            "device speed count does not match topology"
+        );
+        assert!(
+            speeds.iter().all(|&s| s > 0.0),
+            "device speeds must be positive"
+        );
+        self.device_speed = speeds;
+        self
+    }
+
+    /// Relative speed of device `d`.
+    pub fn speed(&self, device: usize) -> f64 {
+        self.device_speed[device]
     }
 
     /// Install an FFN placement plan (builder form).
@@ -73,13 +102,34 @@ impl Topology {
         }
     }
 
-    /// Owner device of FFN expert `e`. Without an installed plan this is
-    /// round-robin sharding (Megatron-style expert parallelism); with a
-    /// plan, whatever the planner decided.
+    /// Owner (primary-replica) device of FFN expert `e`. Without an
+    /// installed plan this is round-robin sharding (Megatron-style expert
+    /// parallelism); with a plan, whatever the planner decided.
     pub fn ffn_owner(&self, expert: usize) -> usize {
         match &self.placement {
             Some(p) => p.owner(expert),
             None => expert % self.n_devices,
+        }
+    }
+
+    /// Number of replicas FFN expert `e` has (1 without a plan).
+    pub fn ffn_replica_count(&self, expert: usize) -> usize {
+        match &self.placement {
+            Some(p) => p.replica_count(expert),
+            None => 1,
+        }
+    }
+
+    /// Device of replica `j` of FFN expert `e` in the canonical (sorted)
+    /// replica enumeration. Allocation-free; used per micro-batch slice
+    /// on the dispatch path.
+    pub fn ffn_replica(&self, expert: usize, j: usize) -> usize {
+        match &self.placement {
+            Some(p) => p.replicas(expert)[j],
+            None => {
+                debug_assert_eq!(j, 0);
+                expert % self.n_devices
+            }
         }
     }
 
@@ -92,7 +142,10 @@ impl Topology {
 
     /// Does serving assignment (token, expert) require an all-to-all hop?
     /// ZC experts never do — they are replicated on every device,
-    /// whatever the FFN placement says.
+    /// whatever the FFN placement says. A multi-replica FFN expert is
+    /// local iff *some* replica sits on the token's home device (the
+    /// load-split dispatch below then sends the home-local slice there,
+    /// see `ClusterSim::forward`).
     pub fn needs_transfer(
         &self,
         cfg: &MoeConfig,
@@ -102,7 +155,9 @@ impl Topology {
     ) -> bool {
         match cfg.kind(expert) {
             ExpertKind::Ffn => {
-                self.ffn_owner(expert) != self.token_home(token, n_tokens)
+                let home = self.token_home(token, n_tokens);
+                (0..self.ffn_replica_count(expert))
+                    .all(|j| self.ffn_replica(expert, j) != home)
             }
             _ => false, // replicated: always local
         }
@@ -233,6 +288,60 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn device_speeds_default_uniform_and_validate() {
+        let t = Topology::new(3);
+        assert_eq!(t.device_speed, vec![1.0; 3]);
+        let t = Topology::new(3).with_device_speeds(vec![2.0, 1.0, 0.5]);
+        assert_eq!(t.speed(0), 2.0);
+        assert_eq!(t.speed(2), 0.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_speed_count_panics() {
+        let _ = Topology::new(2).with_device_speeds(vec![1.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_positive_speed_panics() {
+        let _ = Topology::new(2).with_device_speeds(vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn replica_accessors_follow_plan_or_modulo() {
+        let base = Topology::new(4);
+        for e in 0..8 {
+            assert_eq!(base.ffn_replica_count(e), 1);
+            assert_eq!(base.ffn_replica(e, 0), e % 4);
+        }
+        let mut plan = PlacementPlan::round_robin(8, 4);
+        plan.add_replica(5, 3);
+        plan.add_replica(5, 0);
+        let t = Topology::new(4).with_placement(plan);
+        assert_eq!(t.ffn_replica_count(5), 3);
+        assert_eq!(t.ffn_replica(5, 0), 0);
+        assert_eq!(t.ffn_replica(5, 1), 1);
+        assert_eq!(t.ffn_replica(5, 2), 3);
+        assert_eq!(t.ffn_owner(5), 0, "primary is the smallest replica");
+        assert_eq!(t.ffn_replica_count(0), 1);
+    }
+
+    #[test]
+    fn replicated_expert_is_local_where_any_replica_lives() {
+        let cfg = MoeConfig::preset("sm-8e");
+        // Expert 1 on devices {1, 3}: tokens homed on 1 or 3 are local,
+        // tokens homed on 0 or 2 still pay the hop.
+        let mut plan = PlacementPlan::round_robin(cfg.n_ffn_experts, 4);
+        plan.add_replica(1, 3);
+        let t = Topology::new(4).with_placement(plan);
+        assert!(t.needs_transfer(&cfg, 0, 16, 1)); // home 0
+        assert!(!t.needs_transfer(&cfg, 4, 16, 1)); // home 1
+        assert!(t.needs_transfer(&cfg, 8, 16, 1)); // home 2
+        assert!(!t.needs_transfer(&cfg, 15, 16, 1)); // home 3
     }
 
     #[test]

@@ -1,6 +1,8 @@
-//! Persistent worker threads: each owns the FFN experts of one simulated
-//! device (plus a replica of all ZC experts) and executes its micro-batches
-//! with measured wall-clock compute time.
+//! Persistent worker threads: each owns the FFN experts placed on one
+//! simulated device (plus a replica of all ZC experts) and executes its
+//! micro-batches with measured wall-clock compute time, scaled by the
+//! device's relative speed so heterogeneous fleets report heterogeneous
+//! compute seconds.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
@@ -10,21 +12,34 @@ use crate::config::MoeConfig;
 use crate::moe::experts::{FfnExpert, FfnScratch};
 use crate::tensor::Tensor;
 
-/// One FFN micro-batch for a worker: (layer-local) expert id owned by this
-/// worker, gathered input rows, gates, original token ids.
+/// One FFN micro-batch for a worker: (layer-local) expert id placed on
+/// this worker, which replica slice of that expert's token batch this is,
+/// gathered input rows, gates, original token ids, and the caller-owned
+/// output buffer. `x` and `y` come from the cluster arena's wire pool and
+/// are echoed back on the [`WorkResult`] so the caller can return them.
 pub struct WorkUnit {
     pub expert: usize,
+    /// Replica-slice index within the expert's canonical token order
+    /// (0 for single-replica experts). The combiner merges parts in
+    /// ascending `part` order, which — with contiguous slices — restores
+    /// the exact single-owner token order.
+    pub part: usize,
     pub x: Tensor, // [n, D] gathered rows
     pub gates: Vec<f32>,
     pub tokens: Vec<usize>,
+    /// Output buffer, `[n, D]`, pre-zeroed by the caller (the batched
+    /// kernel accumulates into it).
+    pub y: Tensor,
 }
 
 /// Result of a work unit: gated outputs to scatter-add at the token homes.
-/// Echoes the unit's expert id so callers attribute results without
-/// relying on reply ordering.
+/// Echoes the unit's expert/part ids so callers attribute results without
+/// relying on reply ordering, and echoes both tensors for buffer reuse.
 pub struct WorkResult {
     pub expert: usize,
+    pub part: usize,
     pub tokens: Vec<usize>,
+    pub x: Tensor, // the unit's input buffer, returned for pooling
     pub y: Tensor, // [n, D], already gate-scaled
     pub compute_s: f64,
 }
@@ -44,13 +59,18 @@ pub struct Worker {
 
 impl Worker {
     /// Spawn a worker owning `experts` (global FFN ids -> weights).
+    /// `speed` is the device's relative compute rate (1.0 = baseline);
+    /// reported `compute_s` is wall-clock divided by it, so a 2x device
+    /// finishes the same unit in half the modeled time.
     pub fn spawn(
         device: usize,
         owned_experts: Vec<usize>,
         weights: Vec<FfnExpert>,
+        speed: f64,
         _cfg: &MoeConfig,
     ) -> Worker {
         assert_eq!(owned_experts.len(), weights.len());
+        assert!(speed > 0.0, "device speed must be positive");
         let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
         let owned = owned_experts.clone();
         let handle = std::thread::Builder::new()
@@ -70,27 +90,29 @@ impl Worker {
                         Msg::Work(units, reply) => {
                             let results = units
                                 .into_iter()
-                                .map(|u| {
+                                .map(|mut u| {
                                     let t0 = Instant::now();
                                     let w = &weights[index[&u.expert]];
-                                    let (n, d) = u.x.dims2();
-                                    let mut y = Tensor::zeros(&[n, d]);
-                                    // Gate-scaled batched forward: rows
+                                    // Gate-scaled batched forward into the
+                                    // caller's pre-zeroed buffer: rows
                                     // arrive back already `g * FFN(x)`.
                                     w.forward_batch_into(
                                         &u.x,
                                         Some(u.gates.as_slice()),
                                         &mut scratch,
-                                        &mut y.data,
+                                        &mut u.y.data,
                                         None,
                                     );
                                     WorkResult {
                                         expert: u.expert,
+                                        part: u.part,
                                         tokens: u.tokens,
-                                        y,
+                                        x: u.x,
+                                        y: u.y,
                                         compute_s: t0
                                             .elapsed()
-                                            .as_secs_f64(),
+                                            .as_secs_f64()
+                                            / speed,
                                     }
                                 })
                                 .collect();
@@ -142,18 +164,22 @@ mod tests {
         let e = FfnExpert::init(&mut rng, cfg.d_model, cfg.d_ff);
         let want_raw =
             e.forward(&Tensor::full(&[2, cfg.d_model], 0.5));
-        let w = Worker::spawn(0, vec![3], vec![e], &cfg);
+        let w = Worker::spawn(0, vec![3], vec![e], 1.0, &cfg);
         let rx = w.submit(vec![WorkUnit {
             expert: 3,
+            part: 0,
             x: Tensor::full(&[2, cfg.d_model], 0.5),
             gates: vec![1.0, 0.5],
             tokens: vec![10, 11],
+            y: Tensor::zeros(&[2, cfg.d_model]),
         }]);
         let results = rx.recv().unwrap();
         assert_eq!(results.len(), 1);
         let r = &results[0];
         assert_eq!(r.expert, 3);
+        assert_eq!(r.part, 0);
         assert_eq!(r.tokens, vec![10, 11]);
+        assert_eq!(r.x.dims2(), (2, cfg.d_model), "input echoed back");
         assert!(r.compute_s >= 0.0);
         let d = cfg.d_model;
         for j in 0..d {
@@ -168,13 +194,15 @@ mod tests {
         let cfg = MoeConfig::preset("test");
         let mut rng = Rng::new(1);
         let e = FfnExpert::init(&mut rng, cfg.d_model, cfg.d_ff);
-        let w = Worker::spawn(1, vec![0], vec![e], &cfg);
+        let w = Worker::spawn(1, vec![0], vec![e], 2.0, &cfg);
         for _ in 0..5 {
             let rx = w.submit(vec![WorkUnit {
                 expert: 0,
+                part: 0,
                 x: Tensor::zeros(&[1, cfg.d_model]),
                 gates: vec![1.0],
                 tokens: vec![0],
+                y: Tensor::zeros(&[1, cfg.d_model]),
             }]);
             let r = rx.recv().unwrap();
             assert_eq!(r.len(), 1);

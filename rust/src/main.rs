@@ -306,6 +306,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
 fn cmd_placement(args: &Args) -> Result<()> {
     use moepp::placement::{
         CostModel, LoadProfile, PlacementPlan, Planner, Strategy,
+        DEVICE_FLOPS,
     };
     let preset = args.get_or("preset", "sm-8e");
     let devices = args.get_usize("devices", 4);
@@ -313,6 +314,27 @@ fn cmd_placement(args: &Args) -> Result<()> {
     let tokens = args.get_usize("tokens", 256);
     let batches = args.get_usize("batches", 4);
     let seed = args.get_usize("seed", 0) as u64;
+    // Replica cap for the replicated strategy (1 disables replication).
+    let max_replicas = args.get_usize("replicas", 2);
+    anyhow::ensure!(max_replicas >= 1, "--replicas must be >= 1");
+    // Heterogeneous fleet: comma-separated per-device flops/s (e.g.
+    // `--flops-per-s 200e9,100e9`); devices past the list run at the
+    // baseline rate. Speeds are relative to the homogeneous baseline.
+    let device_speeds: Vec<f64> = match args.get("flops-per-s") {
+        Some(list) => list
+            .split(',')
+            .map(|v| {
+                let f: f64 =
+                    v.trim().parse().context("--flops-per-s")?;
+                anyhow::ensure!(
+                    f > 0.0,
+                    "--flops-per-s entries must be positive"
+                );
+                Ok(f / DEVICE_FLOPS)
+            })
+            .collect::<Result<_>>()?,
+        None => Vec::new(),
+    };
     let cfg = MoeConfig::preset(preset);
     // Per-device parameter budget (stack-wide per expert slot), honored
     // by both the sweep and the plan-only path.
@@ -336,8 +358,10 @@ fn cmd_placement(args: &Args) -> Result<()> {
             profile.n_ffn_experts(),
             cfg.n_ffn_experts
         );
-        let cost = CostModel::from_config(&cfg);
-        let mut planner = Planner::new(cost.clone());
+        let cost = CostModel::from_config(&cfg)
+            .with_device_speeds(device_speeds.clone());
+        let mut planner =
+            Planner::new(cost.clone()).with_max_replicas(max_replicas);
         if let Some(bytes) = budget_bytes {
             planner = planner.with_budget(bytes);
         }
@@ -366,7 +390,7 @@ fn cmd_placement(args: &Args) -> Result<()> {
                 s.makespan_s * 1e3,
                 s.comm_bytes as f64 / (1 << 20) as f64,
                 s.mean_load_cv(),
-                rr.diff(&plan).len(),
+                rr.diff_experts(&plan).len(),
             ));
         }
         return report("placement", &body);
@@ -380,7 +404,15 @@ fn cmd_placement(args: &Args) -> Result<()> {
         ),
     };
     let (profile, rows) = harness::run_placement_sweep(
-        preset, devices, tokens, batches, skewed, seed, budget_bytes,
+        preset,
+        devices,
+        tokens,
+        batches,
+        skewed,
+        seed,
+        budget_bytes,
+        max_replicas,
+        &device_speeds,
     )?;
     if let Some(path) = args.get("capture") {
         std::fs::write(path, format!("{}\n", profile.to_json()))?;
@@ -394,8 +426,9 @@ fn cmd_placement(args: &Args) -> Result<()> {
     let body = format!(
         "FFN-expert placement sweep: preset {preset}, {devices} devices, \
          {batches}x{tokens}-token {profile_arg} batches (seed {seed})\n\
-         ZC experts replicated everywhere; plans move only FFN experts \
-         and never change model outputs\n\n{}",
+         ZC experts replicated everywhere; plans move or replicate only \
+         FFN experts (<= {max_replicas} replicas) and never change model \
+         outputs\n\n{}",
         harness::render_placement_sweep(&rows),
     );
     report("placement", &body)

@@ -149,8 +149,9 @@ impl RouteArena {
 
 // ----------------------------------------------------------- FFN stage
 
-/// What a backend may allocate from: serial gather + scratch, and the
-/// per-shard buffers of the token-parallel path.
+/// What a backend may allocate from: serial gather + scratch, the
+/// per-shard buffers of the token-parallel path, and the wire pool of
+/// the cluster path.
 pub struct FfnArena {
     /// Serial-path micro-batch gather buffer.
     pub(crate) gather: Tensor,
@@ -161,6 +162,10 @@ pub struct FfnArena {
     pub(crate) shards: Vec<ShardSpec>,
     /// One buffer set per in-flight shard; workers write disjoint entries.
     pub(crate) shard_bufs: Vec<ShardBuf>,
+    /// Pool for tensors that must *leave* the arena — the cluster path's
+    /// `WorkUnit` gather/output tensors cross a channel to a device
+    /// worker and come back with its `WorkResult`.
+    pub(crate) wire: TensorPool,
     pub(crate) l1_budget_bytes: usize,
     pub(crate) growths: u64,
 }
@@ -178,6 +183,7 @@ impl FfnArena {
             scratch: FfnScratch::new(0),
             shards: Vec::new(),
             shard_bufs: Vec::new(),
+            wire: TensorPool::new(),
             l1_budget_bytes: DEFAULT_L1_BUDGET_BYTES,
             growths: 0,
         }
@@ -185,6 +191,7 @@ impl FfnArena {
 
     fn growths(&self) -> u64 {
         self.growths
+            + self.wire.growths
             + self.shard_bufs.iter().map(|b| b.growths).sum::<u64>()
     }
 
@@ -210,6 +217,40 @@ impl FfnArena {
         while self.shard_bufs.len() < n {
             self.shard_bufs.push(ShardBuf::new());
         }
+    }
+}
+
+/// A free-list of reusable tensors for buffers that must cross a thread
+/// boundary by value. The cluster backend `take`s a WorkUnit's gather
+/// and output tensors here, sends them to a device worker, and `put`s
+/// them back when the WorkResult echoes them — so once every free-list
+/// slot has grown to the workload's largest shape, steady-state cluster
+/// forwards perform zero wire-buffer allocations.
+pub(crate) struct TensorPool {
+    free: Vec<Tensor>,
+    pub(crate) growths: u64,
+}
+
+impl TensorPool {
+    fn new() -> TensorPool {
+        TensorPool { free: Vec::new(), growths: 0 }
+    }
+
+    /// Pop a pooled tensor (or start an empty one) and shape it to
+    /// `[rows, cols]`. Contents are unspecified — callers that hand the
+    /// buffer to an accumulating kernel must zero it first.
+    pub(crate) fn take(&mut self, rows: usize, cols: usize) -> Tensor {
+        let mut t =
+            self.free.pop().unwrap_or_else(|| Tensor::zeros(&[0, 0]));
+        if t.reshape_in_place(&[rows, cols]) {
+            self.growths += 1;
+        }
+        t
+    }
+
+    /// Return a tensor to the free list for reuse.
+    pub(crate) fn put(&mut self, t: Tensor) {
+        self.free.push(t);
     }
 }
 
@@ -327,6 +368,33 @@ mod tests {
         assert_eq!(a.growths(), warm);
         a.prepare_y(64, 8); // larger does
         assert!(a.growths() > warm);
+    }
+
+    #[test]
+    fn tensor_pool_reuses_buffers_without_regrowing() {
+        let mut p = TensorPool::new();
+        // Warm-up: two concurrent buffers of the batch's largest shapes.
+        let a = p.take(8, 4);
+        let b = p.take(3, 4);
+        assert_eq!(a.dims2(), (8, 4));
+        assert_eq!(b.dims2(), (3, 4));
+        let warm = p.growths;
+        assert!(warm >= 2);
+        p.put(a);
+        p.put(b);
+        // Steady state: the same take/put sequence grows nothing. The
+        // free list is LIFO, so the second round pops (3,4) for the
+        // (8,4) request — one more growth — after which every slot holds
+        // the max shape and the counter is flat.
+        for round in 0..3 {
+            let a = p.take(8, 4);
+            let b = p.take(3, 4);
+            if round > 0 {
+                assert_eq!(p.growths, warm + 1, "round {round}");
+            }
+            p.put(a);
+            p.put(b);
+        }
     }
 
     #[test]

@@ -1,13 +1,18 @@
 //! The α–β placement cost model: score a [`PlacementPlan`] against an
 //! observed [`LoadProfile`] without running the cluster.
 //!
-//! Per layer, the model charges every device `compute_s_per_assignment`
-//! seconds per FFN assignment it owns, and prices the all-to-all with the
-//! same [`LinkModel`]/[`LayerTraffic`] math the simulator uses, under a
-//! uniform-home assumption: a batch's tokens are sharded evenly across
-//! devices, so `1/n_devices` of an expert's load is local and the rest
-//! arrives over the interconnect. Predicted makespan is
-//! `sum_l (max_d compute_d + comm_l)`.
+//! Per layer, the model charges every device
+//! `compute_s_per_assignment / device_speed[d]` seconds per FFN
+//! assignment it holds — compute cost is *seconds*, not FLOPs, so a
+//! heterogeneous fleet (per-device `flops_per_s`) is planned correctly —
+//! and prices the all-to-all with the same [`LinkModel`]/[`LayerTraffic`]
+//! math the simulator uses, under a uniform-home assumption: a batch's
+//! tokens are sharded evenly across devices, so `1/n_devices` of a
+//! replica's slice is local and the rest arrives over the interconnect.
+//! A multi-replica expert's load splits across its replicas with the
+//! exact integral [`replica_share`] the runtime dispatch uses, so the
+//! model and the simulator agree on per-device work. Predicted makespan
+//! is `sum_l (max_d compute_d + comm_l)`.
 //!
 //! This is an *approximation* of [`SimReport::modeled_makespan`], not an
 //! identity: the simulator charges comm for each token's actual
@@ -25,7 +30,7 @@ use crate::cluster::topology::{LinkModel, Topology};
 use crate::config::MoeConfig;
 use crate::moe::balance::load_cv;
 
-use super::plan::PlacementPlan;
+use super::plan::{replica_share, PlacementPlan};
 use super::profile::LoadProfile;
 
 /// Nominal FFN throughput of one simulated device. Only the *ratio* of
@@ -44,8 +49,14 @@ pub struct CostModel {
     /// a plan's `owner[e]` applies to every layer, so placing (or
     /// migrating) expert `e` places `n_layers` per-layer weight copies.
     /// Memory budgets and migration pricing both use this stack-wide
-    /// figure.
+    /// figure. Every *replica* occupies one slot of this size, and
+    /// adding a replica is priced as one α–β transfer of it (drops are
+    /// free — the source keeps its copy).
     pub expert_bytes: u64,
+    /// Relative FFN throughput per device (`flops_per_s / DEVICE_FLOPS`).
+    /// Empty means a uniform fleet: `speed(d)` of a missing device is
+    /// 1.0, so the homogeneous model is the zero-config special case.
+    pub device_speed: Vec<f64>,
 }
 
 impl CostModel {
@@ -57,7 +68,28 @@ impl CostModel {
             token_bytes: (cfg.d_model * 4) as u64,
             expert_bytes: cfg.ffn_expert_bytes()
                 * cfg.n_layers.max(1) as u64,
+            device_speed: Vec::new(),
         }
+    }
+
+    /// Set per-device relative speeds (builder form).
+    pub fn with_device_speeds(mut self, speeds: Vec<f64>) -> CostModel {
+        assert!(
+            speeds.iter().all(|&s| s > 0.0),
+            "device speeds must be positive"
+        );
+        self.device_speed = speeds;
+        self
+    }
+
+    /// Relative speed of device `d` (1.0 when unspecified).
+    pub fn speed(&self, device: usize) -> f64 {
+        self.device_speed.get(device).copied().unwrap_or(1.0)
+    }
+
+    /// Seconds of FFN compute per assignment *on device `d`*.
+    pub fn compute_s_on(&self, device: usize) -> f64 {
+        self.compute_s_per_assignment / self.speed(device)
     }
 
     /// α–β time to migrate `bytes` of expert weights between devices.
@@ -66,6 +98,17 @@ impl CostModel {
             return 0.0;
         }
         self.link.alpha_s + self.link.beta_s_per_byte * bytes as f64
+    }
+
+    /// Rounded uniform-home share bytes of replica `j` of an expert with
+    /// total load `load` split `r` ways. The single expression both
+    /// [`CostModel::score`] and [`DeltaScorer`] price traffic with —
+    /// shared so they stay bitwise-equal. For `r == 1` this reduces to
+    /// the historical `round(load / n_dev * token_bytes)`.
+    fn share_bytes(&self, load: u64, r: usize, j: usize, n_dev: usize)
+        -> u64 {
+        let share = replica_share(load, r, j) as f64 / n_dev as f64;
+        (share * self.token_bytes as f64).round() as u64
     }
 
     /// Score `plan` against `profile` (accumulated over its batches).
@@ -87,32 +130,41 @@ impl CostModel {
             let loads = profile.layer(l);
             let mut device_load = vec![0u64; n_dev];
             for (e, &load) in loads.iter().enumerate() {
-                device_load[plan.owner(e)] += load;
+                let r = plan.replica_count(e);
+                for (j, &d) in plan.replicas(e).iter().enumerate() {
+                    device_load[d] += replica_share(load, r, j);
+                }
             }
-            let max_load =
-                device_load.iter().copied().max().unwrap_or(0);
-            let compute_s =
-                max_load as f64 * self.compute_s_per_assignment;
+            // Bottleneck device in *seconds*: a fast device absorbs more
+            // assignments per wall-second. f64 max over device index
+            // order — the identical fold `DeltaScorer` uses.
+            let mut compute_s = 0.0f64;
+            for (d, &load) in device_load.iter().enumerate() {
+                compute_s = compute_s
+                    .max(load as f64 * self.compute_s_on(d));
+            }
 
-            // Uniform-home all-to-all: expert e's load arrives evenly
-            // from every device; the 1/n_dev share homed on the owner is
-            // local (diagonal, free).
+            // Uniform-home all-to-all: each replica's slice of expert
+            // e's load arrives evenly from every device; the 1/n_dev
+            // share homed on the replica itself is local (diagonal,
+            // free). Splitting a hot expert thus also splits its
+            // incast: no single device receives the whole micro-batch.
             let mut traffic = LayerTraffic::new(n_dev);
             for (e, &load) in loads.iter().enumerate() {
                 if load == 0 {
                     continue;
                 }
-                let owner = plan.owner(e);
-                let share = load as f64 / n_dev as f64;
-                let bytes =
-                    (share * self.token_bytes as f64).round() as u64;
-                if bytes == 0 {
-                    continue;
-                }
-                for home in 0..n_dev {
-                    if home != owner {
-                        traffic.dispatch.add(home, owner, bytes);
-                        traffic.combine.add(owner, home, bytes);
+                let r = plan.replica_count(e);
+                for (j, &dev) in plan.replicas(e).iter().enumerate() {
+                    let bytes = self.share_bytes(load, r, j, n_dev);
+                    if bytes == 0 {
+                        continue;
+                    }
+                    for home in 0..n_dev {
+                        if home != dev {
+                            traffic.dispatch.add(home, dev, bytes);
+                            traffic.combine.add(dev, home, bytes);
+                        }
                     }
                 }
             }
@@ -137,34 +189,54 @@ impl CostModel {
 
 // ---------------------------------------------------------- delta score
 
+/// A candidate local-search step over a (possibly replicated) plan.
+///
+/// `Move`/`Swap` reassign *single-replica* experts — the historical
+/// owner-map moves; the planner never proposes them for a replicated
+/// expert (it drops replicas first). `Replicate`/`Drop` grow or shrink
+/// one expert's replica set by one device.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Edit {
+    /// Move single-replica `expert` to device `to`.
+    Move { expert: usize, to: usize },
+    /// Swap the owners of single-replica experts `a` and `b`.
+    Swap { a: usize, b: usize },
+    /// Add a replica of `expert` on device `on`.
+    Replicate { expert: usize, on: usize },
+    /// Drop `expert`'s replica on device `on` (not its last).
+    Drop { expert: usize, on: usize },
+}
+
 /// Incremental rescoring for the planner's local search (the ROADMAP
-/// "incremental plan scoring" follow-on): a single-expert move (or a
-/// pairwise swap) only changes two devices' compute and the moved
-/// experts' traffic, so candidates are evaluated from maintained
-/// per-layer, per-device aggregates instead of re-walking every expert.
+/// "incremental plan scoring" follow-on): a candidate [`Edit`] only
+/// changes the contributions of one or two experts, so it is evaluated
+/// from maintained per-layer, per-device aggregates instead of
+/// re-walking every expert.
 ///
 /// **Exactness.** All maintained state is integral (u64 loads, u64 share
 /// bytes); every evaluation re-derives the float makespan from those
 /// integers with the same expressions, in the same layer order,
-/// [`CostModel::score`] uses — the uniform-home traffic matrix has
-/// `dispatch[h][o] = combine[o][h] = B_o` (the byte total of device `o`'s
-/// owned experts) for `h != o`, and u64 sums are order-independent. So
-/// `eval_move`/`eval_swap` equal a full `score()` of the mutated plan
-/// **bitwise**, which the planner property test pins down; the local
-/// search therefore walks the identical trajectory the full-rescore
-/// implementation did, only cheaper: O(D²) per candidate instead of
-/// O(L·E + D²), with E·D + E² candidates per round.
+/// [`CostModel::score`] uses — the compute term is the identical f64 max
+/// fold of `load_d × compute_s_on(d)` over device index order, the
+/// uniform-home traffic matrix has `dispatch[h][d] = combine[d][h] = B_d`
+/// (the byte total of device `d`'s resident replica slices) for
+/// `h != d`, and u64 sums are order-independent. Replica-set changes
+/// re-split an expert's load, so an edit's per-device delta subtracts
+/// the expert's [`replica_share`] contributions under the old set and
+/// adds them under the new set — index arithmetic over the sorted set,
+/// no allocation per evaluation. So `eval` equals a full `score()` of
+/// the mutated plan **bitwise**, which the planner property test pins
+/// down across moves, swaps, replications and drops.
 pub struct DeltaScorer<'a> {
     cost: &'a CostModel,
     profile: &'a LoadProfile,
     plan: PlacementPlan,
     topo: Topology,
-    /// `device_load[l][d]` — FFN assignments device `d` owns in layer `l`.
+    /// `device_load[l][d]` — FFN assignment shares resident on device
+    /// `d` in layer `l` (replica slices, not whole experts).
     device_load: Vec<Vec<u64>>,
-    /// `device_bytes[l][d]` — uniform-home share bytes of `d`'s experts.
+    /// `device_bytes[l][d]` — uniform-home share bytes of `d`'s slices.
     device_bytes: Vec<Vec<u64>>,
-    /// `expert_bytes[l][e]` — the rounded per-home share bytes of `e`.
-    expert_bytes: Vec<Vec<u64>>,
     /// Scratch traffic matrix reused across evaluations.
     scratch: LayerTraffic,
 }
@@ -186,20 +258,16 @@ impl<'a> DeltaScorer<'a> {
         let n_layers = profile.n_layers();
         let mut device_load = vec![vec![0u64; n_dev]; n_layers];
         let mut device_bytes = vec![vec![0u64; n_dev]; n_layers];
-        let mut expert_bytes =
-            vec![vec![0u64; profile.n_ffn_experts()]; n_layers];
         for l in 0..n_layers {
             for (e, &load) in profile.layer(l).iter().enumerate() {
-                let owner = plan.owner(e);
-                device_load[l][owner] += load;
-                if load == 0 {
-                    continue;
+                let r = plan.replica_count(e);
+                for (j, &d) in plan.replicas(e).iter().enumerate() {
+                    device_load[l][d] += replica_share(load, r, j);
+                    if load > 0 {
+                        device_bytes[l][d] +=
+                            cost.share_bytes(load, r, j, n_dev);
+                    }
                 }
-                let share = load as f64 / n_dev as f64;
-                let bytes =
-                    (share * cost.token_bytes as f64).round() as u64;
-                expert_bytes[l][e] = bytes;
-                device_bytes[l][owner] += bytes;
             }
         }
         DeltaScorer {
@@ -209,7 +277,6 @@ impl<'a> DeltaScorer<'a> {
             topo,
             device_load,
             device_bytes,
-            expert_bytes,
             scratch: LayerTraffic::new(n_dev),
         }
     }
@@ -232,32 +299,66 @@ impl<'a> DeltaScorer<'a> {
         self.makespan_with(&[])
     }
 
+    /// Makespan if `edit` were committed (state unchanged).
+    pub fn eval(&mut self, edit: Edit) -> f64 {
+        match edit {
+            Edit::Swap { a, b } => self.eval_swap(a, b),
+            e => self.makespan_with(&[e]),
+        }
+    }
+
     /// Makespan if `expert` moved to device `to` (state unchanged).
     pub fn eval_move(&mut self, expert: usize, to: usize) -> f64 {
-        self.makespan_with(&[(expert, to)])
+        self.makespan_with(&[Edit::Move { expert, to }])
     }
 
     /// Makespan if experts `a` and `b` swapped owners (state unchanged).
     pub fn eval_swap(&mut self, a: usize, b: usize) -> f64 {
         let (da, db) = (self.plan.owner(a), self.plan.owner(b));
-        self.makespan_with(&[(a, db), (b, da)])
+        self.makespan_with(&[
+            Edit::Move { expert: a, to: db },
+            Edit::Move { expert: b, to: da },
+        ])
     }
 
-    /// Commit a move, updating the integral aggregates exactly.
+    /// Commit `edit`, updating the integral aggregates exactly.
+    pub fn apply(&mut self, edit: Edit) {
+        match edit {
+            Edit::Move { expert, to } => self.apply_move(expert, to),
+            Edit::Swap { a, b } => self.apply_swap(a, b),
+            Edit::Replicate { expert, on } => {
+                let old = self.plan.replicas(expert).to_vec();
+                if old.contains(&on) {
+                    return;
+                }
+                self.plan.add_replica(expert, on);
+                let new = self.plan.replicas(expert).to_vec();
+                self.reindex_expert(expert, &old, &new);
+            }
+            Edit::Drop { expert, on } => {
+                let old = self.plan.replicas(expert).to_vec();
+                self.plan.remove_replica(expert, on);
+                let new = self.plan.replicas(expert).to_vec();
+                self.reindex_expert(expert, &old, &new);
+            }
+        }
+    }
+
+    /// Commit a move of single-replica `expert` to `to`.
     pub fn apply_move(&mut self, expert: usize, to: usize) {
+        assert_eq!(
+            self.plan.replica_count(expert),
+            1,
+            "move applies to single-replica experts only"
+        );
         let from = self.plan.owner(expert);
         if from == to {
             return;
         }
-        for l in 0..self.device_load.len() {
-            let load = self.profile.layer(l)[expert];
-            self.device_load[l][from] -= load;
-            self.device_load[l][to] += load;
-            let bytes = self.expert_bytes[l][expert];
-            self.device_bytes[l][from] -= bytes;
-            self.device_bytes[l][to] += bytes;
-        }
+        let old = [from];
+        let new = [to];
         self.plan.set_owner(expert, to);
+        self.reindex_expert(expert, &old, &new);
     }
 
     /// Commit a swap of `a` and `b`'s owners.
@@ -267,55 +368,150 @@ impl<'a> DeltaScorer<'a> {
         self.apply_move(b, da);
     }
 
-    /// Makespan of the current plan with up to two hypothetical
-    /// reassignments applied on the fly (owners read *before* any of the
-    /// moves, which is what `eval_swap` relies on).
-    fn makespan_with(&mut self, moves: &[(usize, usize)]) -> f64 {
+    /// Exactly transfer `expert`'s per-device contributions from replica
+    /// set `old` to replica set `new` in every layer's aggregates.
+    fn reindex_expert(
+        &mut self,
+        expert: usize,
+        old: &[usize],
+        new: &[usize],
+    ) {
+        let n_dev = self.plan.n_devices();
+        for l in 0..self.device_load.len() {
+            let load = self.profile.layer(l)[expert];
+            for (j, &d) in old.iter().enumerate() {
+                self.device_load[l][d] -=
+                    replica_share(load, old.len(), j);
+                if load > 0 {
+                    self.device_bytes[l][d] -=
+                        self.cost.share_bytes(load, old.len(), j, n_dev);
+                }
+            }
+            for (j, &d) in new.iter().enumerate() {
+                self.device_load[l][d] +=
+                    replica_share(load, new.len(), j);
+                if load > 0 {
+                    self.device_bytes[l][d] +=
+                        self.cost.share_bytes(load, new.len(), j, n_dev);
+                }
+            }
+        }
+    }
+
+    /// `expert`'s hypothetical (load, bytes) contribution delta on
+    /// device `dv` in layer `l` if `edit` were applied — pure index
+    /// arithmetic over the sorted replica set, no allocation. `Swap` is
+    /// expanded into two `Move`s before reaching here.
+    fn edit_delta(&self, l: usize, edit: Edit, dv: usize) -> (i64, i64) {
+        let n_dev = self.plan.n_devices();
+        let (expert, reps, r) = match edit {
+            Edit::Move { expert, .. }
+            | Edit::Replicate { expert, .. }
+            | Edit::Drop { expert, .. } => {
+                let reps = self.plan.replicas(expert);
+                (expert, reps, reps.len())
+            }
+            Edit::Swap { .. } => {
+                unreachable!("swap is expanded into moves")
+            }
+        };
+        let load = self.profile.layer(l)[expert];
+        let contrib = |r: usize, j: usize| -> (i64, i64) {
+            let bytes = if load > 0 {
+                self.cost.share_bytes(load, r, j, n_dev) as i64
+            } else {
+                0
+            };
+            (replica_share(load, r, j) as i64, bytes)
+        };
+        // Contribution `dv` currently receives from this expert.
+        let old = match reps.binary_search(&dv) {
+            Ok(j) => contrib(r, j),
+            Err(_) => (0, 0),
+        };
+        // Contribution `dv` would receive under the edited replica set.
+        let new = match edit {
+            Edit::Move { to, .. } => {
+                debug_assert_eq!(r, 1);
+                if dv == to {
+                    contrib(1, 0)
+                } else {
+                    (0, 0)
+                }
+            }
+            Edit::Replicate { on, .. } => {
+                match reps.binary_search(&on) {
+                    Ok(_) => old, // already present: no-op edit
+                    Err(p) => {
+                        if dv == on {
+                            contrib(r + 1, p)
+                        } else {
+                            match reps.binary_search(&dv) {
+                                Ok(j) => contrib(
+                                    r + 1,
+                                    if j < p { j } else { j + 1 },
+                                ),
+                                Err(_) => (0, 0),
+                            }
+                        }
+                    }
+                }
+            }
+            Edit::Drop { on, .. } => {
+                let p = reps
+                    .binary_search(&on)
+                    .expect("dropping a replica that does not exist");
+                debug_assert!(r > 1, "cannot drop the last replica");
+                if dv == on {
+                    (0, 0)
+                } else {
+                    match reps.binary_search(&dv) {
+                        Ok(j) => contrib(
+                            r - 1,
+                            if j < p { j } else { j - 1 },
+                        ),
+                        Err(_) => (0, 0),
+                    }
+                }
+            }
+            Edit::Swap { .. } => unreachable!(),
+        };
+        (new.0 - old.0, new.1 - old.1)
+    }
+
+    /// Makespan of the current plan with up to two hypothetical edits
+    /// applied on the fly (owners read *before* any edit, which is what
+    /// the swap expansion relies on).
+    fn makespan_with(&mut self, edits: &[Edit]) -> f64 {
         let n_dev = self.plan.n_devices();
         let mut total = 0.0;
         for l in 0..self.device_load.len() {
-            let mut max_load = 0u64;
+            let mut compute_s = 0.0f64;
             for dv in 0..n_dev {
-                let mut load = self.device_load[l][dv];
-                for &(e, to) in moves {
-                    let from = self.plan.owner(e);
-                    if to == from {
-                        continue;
-                    }
-                    if dv == from {
-                        load -= self.profile.layer(l)[e];
-                    }
-                    if dv == to {
-                        load += self.profile.layer(l)[e];
-                    }
+                let mut load = self.device_load[l][dv] as i64;
+                for &edit in edits {
+                    load += self.edit_delta(l, edit, dv).0;
                 }
-                max_load = max_load.max(load);
+                debug_assert!(load >= 0);
+                compute_s = compute_s
+                    .max(load as u64 as f64 * self.cost.compute_s_on(dv));
             }
-            let compute_s =
-                max_load as f64 * self.cost.compute_s_per_assignment;
 
             self.scratch.clear();
-            for o in 0..n_dev {
-                let mut bytes = self.device_bytes[l][o];
-                for &(e, to) in moves {
-                    let from = self.plan.owner(e);
-                    if to == from {
-                        continue;
-                    }
-                    if o == from {
-                        bytes -= self.expert_bytes[l][e];
-                    }
-                    if o == to {
-                        bytes += self.expert_bytes[l][e];
-                    }
+            for dv in 0..n_dev {
+                let mut bytes = self.device_bytes[l][dv] as i64;
+                for &edit in edits {
+                    bytes += self.edit_delta(l, edit, dv).1;
                 }
+                debug_assert!(bytes >= 0);
+                let bytes = bytes as u64;
                 if bytes == 0 {
                     continue;
                 }
                 for h in 0..n_dev {
-                    if h != o {
-                        self.scratch.dispatch.add(h, o, bytes);
-                        self.scratch.combine.add(o, h, bytes);
+                    if h != dv {
+                        self.scratch.dispatch.add(h, dv, bytes);
+                        self.scratch.combine.add(dv, h, bytes);
                     }
                 }
             }
@@ -412,5 +608,107 @@ mod tests {
         assert_eq!(cost.migration_s(0), 0.0);
         let want = cost.link.alpha_s + cost.link.beta_s_per_byte * 1e6;
         assert!((cost.migration_s(1_000_000) - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn heterogeneous_fleet_loads_fast_device_proportionally_more() {
+        // ISSUE 6 acceptance: one device with 2× flops_per_s. Four
+        // equal-load experts on 2 devices: in *seconds*, the 3/1 split
+        // onto the fast device beats the FLOP-balanced 2/2 split
+        // (150·c vs 200·c compute), so a seconds-aware model must prefer
+        // it and must load the fast device strictly more.
+        let profile =
+            LoadProfile::from_counts(vec![vec![100, 100, 100, 100]])
+                .unwrap();
+        let cost = model().with_device_speeds(vec![2.0, 1.0]);
+        assert_eq!(cost.speed(0), 2.0);
+        assert_eq!(cost.speed(1), 1.0);
+        assert_eq!(cost.speed(7), 1.0, "missing devices default to 1.0");
+        assert!(
+            (cost.compute_s_on(0) - cost.compute_s_per_assignment / 2.0)
+                .abs()
+                < 1e-18
+        );
+        let fast_heavy =
+            PlacementPlan::from_owner(vec![0, 0, 0, 1], 2).unwrap();
+        let flop_balanced =
+            PlacementPlan::from_owner(vec![0, 1, 0, 1], 2).unwrap();
+        let s_fast = cost.score(&fast_heavy, &profile);
+        let s_bal = cost.score(&flop_balanced, &profile);
+        assert!(
+            s_fast.compute_s < s_bal.compute_s,
+            "{} vs {}",
+            s_fast.compute_s,
+            s_bal.compute_s
+        );
+        assert!(s_fast.makespan_s < s_bal.makespan_s);
+        assert_eq!(s_fast.device_assignments, vec![300, 100]);
+        assert!(
+            s_fast.device_assignments[0] > s_fast.device_assignments[1],
+            "fast device must hold proportionally more load"
+        );
+        // A uniform fleet still prefers the balanced split.
+        let uniform = model();
+        assert!(
+            uniform.score(&flop_balanced, &profile).makespan_s
+                < uniform.score(&fast_heavy, &profile).makespan_s
+        );
+    }
+
+    #[test]
+    fn replicating_a_hot_expert_splits_its_load_and_cost() {
+        // One hot expert, two devices: replicating it halves the
+        // bottleneck compute (the model charges integral replica_share
+        // splits) and splits the incast across both replicas.
+        let profile =
+            LoadProfile::from_counts(vec![vec![100, 0, 0, 0]]).unwrap();
+        let cost = model();
+        let single = PlacementPlan::round_robin(4, 2);
+        let mut replicated = single.clone();
+        replicated.add_replica(0, 1);
+        let s_one = cost.score(&single, &profile);
+        let s_two = cost.score(&replicated, &profile);
+        assert_eq!(s_one.device_assignments, vec![100, 0]);
+        assert_eq!(s_two.device_assignments, vec![50, 50]);
+        assert!(
+            s_two.makespan_s < s_one.makespan_s,
+            "{} vs {}",
+            s_two.makespan_s,
+            s_one.makespan_s
+        );
+        assert!(s_two.compute_s < s_one.compute_s);
+    }
+
+    #[test]
+    fn delta_scorer_replica_edits_match_full_rescore_bitwise() {
+        let profile = LoadProfile::from_counts(vec![
+            vec![40, 7, 0, 13, 100, 3],
+            vec![0, 21, 9, 2, 55, 55],
+        ])
+        .unwrap();
+        let cost = model().with_device_speeds(vec![2.0, 1.0, 1.0]);
+        let plan = PlacementPlan::round_robin(6, 3);
+        let mut ds = DeltaScorer::new(&cost, &profile, plan.clone());
+        assert_eq!(ds.makespan(), cost.score(&plan, &profile).makespan_s);
+        let edits = [
+            Edit::Replicate { expert: 4, on: 0 },
+            Edit::Replicate { expert: 4, on: 2 },
+            Edit::Move { expert: 3, to: 2 },
+            Edit::Drop { expert: 4, on: 1 },
+            Edit::Swap { a: 0, b: 5 },
+            Edit::Replicate { expert: 5, on: 1 },
+        ];
+        for edit in edits {
+            // eval must predict the post-edit full rescore bitwise,
+            // and apply must land the state exactly there.
+            let predicted = ds.eval(edit);
+            ds.apply(edit);
+            let full =
+                cost.score(ds.plan(), &profile).makespan_s;
+            assert_eq!(predicted, full, "eval diverged on {edit:?}");
+            assert_eq!(ds.makespan(), full, "state diverged on {edit:?}");
+        }
+        assert_eq!(ds.plan().replicas(4), &[0, 2]);
+        assert_eq!(ds.plan().replicas(5), &[0, 1]);
     }
 }

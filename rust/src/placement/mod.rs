@@ -1,4 +1,4 @@
-//! Load-aware expert placement (DESIGN.md §10) — the planning layer
+//! Load-aware expert placement (DESIGN.md §10, §13) — the planning layer
 //! behind the paper's deployment-friendliness claim (Sec. 3.4).
 //!
 //! MoE++ replicates the near-zero-parameter zero/copy/constant experts on
@@ -7,25 +7,37 @@
 //! expert colliding with another hot expert on one device stalls the
 //! whole step. This module owns that decision:
 //!
-//! * [`plan::PlacementPlan`] — the FFN expert → device map (ZC experts
-//!   are structurally replicated and never planned or migrated);
+//! * [`plan::PlacementPlan`] — the FFN expert → device *replica set* map
+//!   (ZC experts are structurally replicated and never planned or
+//!   migrated). A multi-replica expert's token micro-batch is split
+//!   across its replicas in deterministic contiguous slices
+//!   ([`plan::replica_slices`] / [`plan::replica_share`]);
 //! * [`profile::LoadProfile`] — observed per-layer per-expert token
 //!   loads, recovered exactly from [`ForwardStats`] capacity accounting;
 //! * [`cost::CostModel`] — α–β + per-assignment compute scoring of a
-//!   plan against a profile, reusing the cluster's [`LinkModel`] /
-//!   [`LayerTraffic`] math;
-//! * [`planner::Planner`] — round-robin baseline, greedy LPT bin-packing
-//!   and local-search refinement under a per-device memory budget, with a
-//!   never-worse-than-baseline guarantee;
+//!   plan against a profile on a possibly heterogeneous fleet
+//!   (per-device speeds), reusing the cluster's [`LinkModel`] /
+//!   [`LayerTraffic`] math; [`cost::DeltaScorer`] re-scores single
+//!   [`cost::Edit`]s (move/swap/replicate/drop) incrementally,
+//!   bitwise-equal to a full rescore;
+//! * [`planner::Planner`] — round-robin baseline, speed-aware greedy LPT
+//!   bin-packing, local-search refinement and a replicate-hottest
+//!   refinement stage, all under the same per-device memory budget
+//!   (every replica occupies a slot), with a never-worse-than-baseline
+//!   guarantee — the replicated plan never scores worse than the best
+//!   single-owner plan;
 //! * [`replan::Replanner`] — online replanning with hysteresis: proposes
-//!   a [`replan::MigrationPlan`] (experts to move, bytes, predicted
+//!   a [`replan::MigrationPlan`] (replica adds/drops, bytes, predicted
 //!   makespan delta) only when the predicted gain clears the migration
-//!   cost.
+//!   cost, and flags in-flight proposals as stale past a batch-age
+//!   bound.
 //!
 //! Placement is pure layout: [`cluster::Topology`] consumes a plan (round
 //! robin remains the default, bitwise-unchanged), and the cluster combine
-//! order is placement-independent, so **no plan ever changes model
-//! outputs** — enforced by `rust/tests/cluster_placement.rs`.
+//! order is placement-independent — within an expert each token is a
+//! distinct output row, so even load-split replication cannot reorder
+//! any float sum — so **no plan ever changes model outputs** — enforced
+//! by `rust/tests/cluster_placement.rs`.
 //!
 //! [`ForwardStats`]: crate::moe::exec::ForwardStats
 //! [`LinkModel`]: crate::cluster::topology::LinkModel
@@ -38,10 +50,13 @@ pub mod planner;
 pub mod profile;
 pub mod replan;
 
-pub use cost::{CostModel, DeltaScorer, PlanScore};
-pub use plan::PlacementPlan;
+pub use cost::{CostModel, DeltaScorer, Edit, PlanScore, DEVICE_FLOPS};
+pub use plan::{
+    replica_share, replica_slices, PlacementPlan, ReplicaDelta,
+};
 pub use planner::{Planner, Strategy};
 pub use profile::LoadProfile;
 pub use replan::{
-    ExpertMove, MigrationPlan, PlanTask, ReplanConfig, Replanner,
+    DeltaKind, ExpertMove, MigrationPlan, PlanTask, ReplanConfig,
+    Replanner,
 };

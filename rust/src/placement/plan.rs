@@ -1,14 +1,22 @@
-//! [`PlacementPlan`] — the FFN-expert → device map.
+//! [`PlacementPlan`] — the FFN-expert → device-set map.
 //!
 //! The plan only ever places **FFN** experts: zero-computation experts are
 //! structurally replicated on every device (paper Sec. 3.4), so they never
-//! appear in a plan and never migrate. Invariants (DESIGN.md §10):
+//! appear in a plan and never migrate. Since ISSUE 6 an FFN expert may
+//! live on *several* devices (multi-replica placement for hot experts);
+//! the historical owner-vector plan is the special case where every
+//! replica set has size one. Invariants (DESIGN.md §10/§13):
 //!
-//! * every FFN expert is placed on exactly one device (the `owner` vector
-//!   representation makes duplicates impossible by construction);
-//! * every owner is a valid device index;
+//! * every FFN expert has a non-empty replica set; sets are sorted
+//!   ascending and duplicate-free, so a given (expert, device) replica
+//!   exists at most once and replica *index* is a canonical notion;
+//! * every replica device is a valid device index;
 //! * a plan is pure *layout*: applying any valid plan never changes model
-//!   outputs — the cluster combine order is placement-independent.
+//!   outputs — the cluster combine order is placement-independent and the
+//!   token → replica split below is a deterministic function of the
+//!   expert's micro-batch alone (DESIGN.md §13).
+
+use std::ops::Range;
 
 use anyhow::Result;
 
@@ -19,39 +27,118 @@ use crate::util::json::Json;
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PlacementPlan {
     n_devices: usize,
-    /// `owner[e]` = device holding FFN expert `e`.
-    owner: Vec<usize>,
+    /// `replicas[e]` = sorted, deduplicated, non-empty devices holding
+    /// FFN expert `e`. `replicas[e][0]` is the *primary* (the historical
+    /// single owner).
+    replicas: Vec<Vec<usize>>,
+}
+
+/// The replica-set difference between two plans, as per-(expert, device)
+/// deltas. An owner *move* decomposes into one add plus one drop; adds
+/// are what cost interconnect bytes (replication keeps the source, a
+/// drop just frees memory).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ReplicaDelta {
+    /// `(expert, device)` replicas present in `to` but not in `self`.
+    pub adds: Vec<(usize, usize)>,
+    /// `(expert, device)` replicas present in `self` but not in `to`.
+    pub drops: Vec<(usize, usize)>,
+}
+
+impl ReplicaDelta {
+    pub fn is_empty(&self) -> bool {
+        self.adds.is_empty() && self.drops.is_empty()
+    }
+}
+
+/// Deterministic token → replica split: `n_rows` micro-batch rows over
+/// `n_replicas` contiguous slices, sizes as balanced as possible (the
+/// first `n_rows % n_replicas` slices take one extra row). The slice a
+/// row lands in depends only on (row index, row count, replica count) —
+/// never on workers, partitioning or where replicas live — and
+/// concatenating the slices in replica order reproduces the original
+/// micro-batch row order, which is what keeps replicated combine bitwise
+/// identical (DESIGN.md §13).
+pub fn replica_slices(n_rows: usize, n_replicas: usize) -> Vec<Range<usize>> {
+    assert!(n_replicas > 0, "expert with empty replica set");
+    let base = n_rows / n_replicas;
+    let extra = n_rows % n_replicas;
+    let mut start = 0;
+    (0..n_replicas)
+        .map(|j| {
+            let len = base + usize::from(j < extra);
+            let r = start..start + len;
+            start += len;
+            r
+        })
+        .collect()
+}
+
+/// Integral load share of replica `j` of `n_replicas` for a total load of
+/// `load` assignments — exactly `replica_slices(load, n_replicas)[j].len()`,
+/// so the cost model's per-replica accounting matches the runtime split.
+pub fn replica_share(load: u64, n_replicas: usize, j: usize) -> u64 {
+    debug_assert!(j < n_replicas);
+    load / n_replicas as u64
+        + u64::from((j as u64) < load % n_replicas as u64)
 }
 
 impl PlacementPlan {
-    /// The historical default: expert `e` lives on device `e % n_devices`.
+    /// The historical default: expert `e` lives (only) on device
+    /// `e % n_devices`.
     pub fn round_robin(n_ffn_experts: usize, n_devices: usize)
         -> PlacementPlan {
         assert!(n_devices > 0, "placement needs at least one device");
         PlacementPlan {
             n_devices,
-            owner: (0..n_ffn_experts).map(|e| e % n_devices).collect(),
+            replicas: (0..n_ffn_experts)
+                .map(|e| vec![e % n_devices])
+                .collect(),
         }
     }
 
-    /// Build from an explicit owner vector, validating the invariants.
+    /// Build a single-replica plan from an explicit owner vector,
+    /// validating the invariants.
     pub fn from_owner(owner: Vec<usize>, n_devices: usize)
         -> Result<PlacementPlan> {
-        let plan = PlacementPlan { n_devices, owner };
+        PlacementPlan::from_replicas(
+            owner.into_iter().map(|d| vec![d]).collect(),
+            n_devices,
+        )
+    }
+
+    /// Build from explicit replica sets, validating the invariants.
+    pub fn from_replicas(
+        replicas: Vec<Vec<usize>>,
+        n_devices: usize,
+    ) -> Result<PlacementPlan> {
+        let plan = PlacementPlan { n_devices, replicas };
         plan.validate()?;
         Ok(plan)
     }
 
-    /// Check the plan invariants (device count positive, every owner in
-    /// range). Expert uniqueness is inherent in the representation.
+    /// Check the plan invariants: device count positive, every replica
+    /// set non-empty, strictly ascending (sorted + deduplicated) and in
+    /// device range.
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(self.n_devices > 0, "plan has no devices");
-        for (e, &d) in self.owner.iter().enumerate() {
+        for (e, reps) in self.replicas.iter().enumerate() {
             anyhow::ensure!(
-                d < self.n_devices,
-                "expert {e} placed on device {d} (n_devices {})",
-                self.n_devices
+                !reps.is_empty(),
+                "expert {e} has an empty replica set"
             );
+            for (j, &d) in reps.iter().enumerate() {
+                anyhow::ensure!(
+                    d < self.n_devices,
+                    "expert {e} placed on device {d} (n_devices {})",
+                    self.n_devices
+                );
+                anyhow::ensure!(
+                    j == 0 || reps[j - 1] < d,
+                    "expert {e} replica set {reps:?} is not strictly \
+                     ascending"
+                );
+            }
         }
         Ok(())
     }
@@ -61,79 +148,193 @@ impl PlacementPlan {
     }
 
     pub fn n_ffn_experts(&self) -> usize {
-        self.owner.len()
+        self.replicas.len()
     }
 
-    /// Owner device of FFN expert `e`.
+    /// Primary (first-replica) device of FFN expert `e` — the historical
+    /// single owner for single-replica plans.
     pub fn owner(&self, expert: usize) -> usize {
-        self.owner[expert]
+        self.replicas[expert][0]
     }
 
-    pub fn owners(&self) -> &[usize] {
-        &self.owner
+    /// Primary device per expert (for display/diagnostics; replicated
+    /// plans carry more than this).
+    pub fn owners(&self) -> Vec<usize> {
+        self.replicas.iter().map(|r| r[0]).collect()
     }
 
-    /// Reassign one expert (planner-internal moves go through here so the
+    /// Sorted replica devices of FFN expert `e`.
+    pub fn replicas(&self, expert: usize) -> &[usize] {
+        &self.replicas[expert]
+    }
+
+    pub fn replica_count(&self, expert: usize) -> usize {
+        self.replicas[expert].len()
+    }
+
+    /// Does any expert have more than one replica?
+    pub fn is_replicated(&self) -> bool {
+        self.replicas.iter().any(|r| r.len() > 1)
+    }
+
+    /// Replace `expert`'s whole replica set with the single `device`
+    /// (planner-internal single-owner moves go through here so the
     /// invariants cannot be broken by construction).
     pub fn set_owner(&mut self, expert: usize, device: usize) {
         assert!(device < self.n_devices, "device {device} out of range");
-        self.owner[expert] = device;
+        self.replicas[expert].clear();
+        self.replicas[expert].push(device);
     }
 
-    /// FFN experts living on `device`, ascending.
+    /// Add a replica of `expert` on `device` (no-op if already present).
+    /// Returns whether the set grew.
+    pub fn add_replica(&mut self, expert: usize, device: usize) -> bool {
+        assert!(device < self.n_devices, "device {device} out of range");
+        match self.replicas[expert].binary_search(&device) {
+            Ok(_) => false,
+            Err(i) => {
+                self.replicas[expert].insert(i, device);
+                true
+            }
+        }
+    }
+
+    /// Drop `expert`'s replica on `device`. Panics if it would leave the
+    /// expert unplaced (the non-empty invariant is structural).
+    pub fn remove_replica(&mut self, expert: usize, device: usize) {
+        let reps = &mut self.replicas[expert];
+        assert!(
+            reps.len() > 1,
+            "cannot drop expert {expert}'s last replica"
+        );
+        match reps.binary_search(&device) {
+            Ok(i) => {
+                reps.remove(i);
+            }
+            Err(_) => panic!(
+                "expert {expert} has no replica on device {device}"
+            ),
+        }
+    }
+
+    /// FFN experts with a replica on `device`, ascending.
     pub fn device_experts(&self, device: usize) -> Vec<usize> {
-        (0..self.owner.len())
-            .filter(|&e| self.owner[e] == device)
+        (0..self.replicas.len())
+            .filter(|&e| self.replicas[e].contains(&device))
             .collect()
     }
 
-    /// Number of FFN experts per device.
+    /// FFN expert *slots* per device — every replica occupies one slot,
+    /// so these are what a per-device memory budget constrains.
     pub fn device_counts(&self) -> Vec<usize> {
         let mut counts = vec![0usize; self.n_devices];
-        for &d in &self.owner {
-            counts[d] += 1;
+        for reps in &self.replicas {
+            for &d in reps {
+                counts[d] += 1;
+            }
         }
         counts
     }
 
     pub fn is_round_robin(&self) -> bool {
-        self.owner.iter().enumerate().all(|(e, &d)| d == e % self.n_devices)
+        self.replicas
+            .iter()
+            .enumerate()
+            .all(|(e, r)| r.len() == 1 && r[0] == e % self.n_devices)
     }
 
-    /// Experts whose owner differs between `self` and `to`:
-    /// `(expert, from_device, to_device)`.
-    pub fn diff(&self, to: &PlacementPlan) -> Vec<(usize, usize, usize)> {
-        assert_eq!(self.owner.len(), to.owner.len(), "plan size mismatch");
-        self.owner
-            .iter()
-            .zip(&to.owner)
-            .enumerate()
-            .filter(|(_, (a, b))| a != b)
-            .map(|(e, (&a, &b))| (e, a, b))
+    /// Experts whose replica set differs between `self` and `to`.
+    pub fn diff_experts(&self, to: &PlacementPlan) -> Vec<usize> {
+        assert_eq!(
+            self.replicas.len(),
+            to.replicas.len(),
+            "plan size mismatch"
+        );
+        (0..self.replicas.len())
+            .filter(|&e| self.replicas[e] != to.replicas[e])
             .collect()
+    }
+
+    /// Per-(expert, device) replica deltas turning `self` into `to`.
+    /// Both sets are sorted, so this is a linear merge per expert.
+    pub fn delta(&self, to: &PlacementPlan) -> ReplicaDelta {
+        assert_eq!(
+            self.replicas.len(),
+            to.replicas.len(),
+            "plan size mismatch"
+        );
+        let mut delta = ReplicaDelta::default();
+        for (e, (a, b)) in
+            self.replicas.iter().zip(&to.replicas).enumerate()
+        {
+            for &d in b {
+                if !a.contains(&d) {
+                    delta.adds.push((e, d));
+                }
+            }
+            for &d in a {
+                if !b.contains(&d) {
+                    delta.drops.push((e, d));
+                }
+            }
+        }
+        delta
     }
 
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("n_devices", Json::num(self.n_devices as f64)),
             (
-                "owner",
+                "replicas",
                 Json::Arr(
-                    self.owner.iter().map(|&d| Json::num(d as f64)).collect(),
+                    self.replicas
+                        .iter()
+                        .map(|reps| {
+                            Json::Arr(
+                                reps.iter()
+                                    .map(|&d| Json::num(d as f64))
+                                    .collect(),
+                            )
+                        })
+                        .collect(),
                 ),
             ),
         ])
     }
 
+    /// Parse either the replica-set form written by [`Self::to_json`] or
+    /// the legacy single-owner `{"owner": [..]}` form (profiles captured
+    /// before multi-replica placement stay loadable).
     pub fn from_json(j: &Json) -> Result<PlacementPlan> {
         let n_devices = j
             .get("n_devices")
             .and_then(Json::as_usize)
             .ok_or_else(|| anyhow::anyhow!("plan json: missing n_devices"))?;
+        if let Some(reps) = j.get("replicas").and_then(Json::as_arr) {
+            let replicas = reps
+                .iter()
+                .map(|set| {
+                    set.as_arr()
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("plan json: bad replica set")
+                        })?
+                        .iter()
+                        .map(|v| {
+                            v.as_usize().ok_or_else(|| {
+                                anyhow::anyhow!("plan json: bad replica")
+                            })
+                        })
+                        .collect::<Result<Vec<usize>>>()
+                })
+                .collect::<Result<Vec<Vec<usize>>>>()?;
+            return PlacementPlan::from_replicas(replicas, n_devices);
+        }
         let owner = j
             .get("owner")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow::anyhow!("plan json: missing owner"))?
+            .ok_or_else(|| {
+                anyhow::anyhow!("plan json: missing replicas/owner")
+            })?
             .iter()
             .map(|v| {
                 v.as_usize()
@@ -152,8 +353,10 @@ mod tests {
     fn round_robin_matches_modulo() {
         let p = PlacementPlan::round_robin(10, 4);
         assert!(p.is_round_robin());
+        assert!(!p.is_replicated());
         for e in 0..10 {
             assert_eq!(p.owner(e), e % 4);
+            assert_eq!(p.replicas(e), &[e % 4]);
         }
         assert_eq!(p.device_counts(), vec![3, 3, 2, 2]);
         assert_eq!(p.device_experts(1), vec![1, 5, 9]);
@@ -168,23 +371,111 @@ mod tests {
     }
 
     #[test]
-    fn diff_lists_moved_experts() {
-        let a = PlacementPlan::round_robin(4, 2); // [0,1,0,1]
-        let b = PlacementPlan::from_owner(vec![0, 1, 1, 0], 2).unwrap();
-        assert_eq!(a.diff(&b), vec![(2, 0, 1), (3, 1, 0)]);
-        assert!(a.diff(&a).is_empty());
-        assert!(!b.is_round_robin());
+    fn replica_set_invariants() {
+        // Sorted, deduped, non-empty, in range.
+        assert!(PlacementPlan::from_replicas(
+            vec![vec![0, 1], vec![1]], 2).is_ok());
+        assert!(PlacementPlan::from_replicas(vec![vec![]], 2).is_err());
+        assert!(PlacementPlan::from_replicas(
+            vec![vec![1, 0]], 2).is_err()); // unsorted
+        assert!(PlacementPlan::from_replicas(
+            vec![vec![0, 0]], 2).is_err()); // duplicate
+        assert!(PlacementPlan::from_replicas(
+            vec![vec![0, 2]], 2).is_err()); // out of range
     }
 
     #[test]
-    fn json_roundtrip() {
+    fn add_and_remove_replicas_keep_sets_sorted() {
+        let mut p = PlacementPlan::round_robin(4, 3); // [0],[1],[2],[0]
+        assert!(p.add_replica(1, 0));
+        assert!(!p.add_replica(1, 0)); // idempotent
+        assert!(p.add_replica(1, 2));
+        assert_eq!(p.replicas(1), &[0, 1, 2]);
+        assert!(p.is_replicated());
+        assert_eq!(p.owner(1), 0, "primary is the smallest device");
+        assert_eq!(p.device_counts(), vec![3, 1, 2]);
+        p.remove_replica(1, 1);
+        assert_eq!(p.replicas(1), &[0, 2]);
+        assert!(p.validate().is_ok());
+        // set_owner collapses back to a single replica.
+        p.set_owner(1, 1);
+        assert_eq!(p.replicas(1), &[1]);
+        assert!(!p.is_replicated());
+    }
+
+    #[test]
+    #[should_panic]
+    fn removing_the_last_replica_panics() {
+        let mut p = PlacementPlan::round_robin(2, 2);
+        p.remove_replica(0, 0);
+    }
+
+    #[test]
+    fn delta_lists_replica_adds_and_drops() {
+        let a = PlacementPlan::round_robin(4, 2); // [0],[1],[0],[1]
+        let b = PlacementPlan::from_owner(vec![0, 1, 1, 0], 2).unwrap();
+        let d = a.delta(&b);
+        assert_eq!(d.adds, vec![(2, 1), (3, 0)]);
+        assert_eq!(d.drops, vec![(2, 0), (3, 1)]);
+        assert_eq!(a.diff_experts(&b), vec![2, 3]);
+        assert!(a.delta(&a).is_empty());
+        assert!(!b.is_round_robin());
+        // Pure replication: adds only, no drops.
+        let mut c = a.clone();
+        c.add_replica(0, 1);
+        let d = a.delta(&c);
+        assert_eq!(d.adds, vec![(0, 1)]);
+        assert!(d.drops.is_empty());
+        assert_eq!(c.delta(&a).drops, vec![(0, 1)]);
+    }
+
+    #[test]
+    fn replica_slices_are_balanced_contiguous_and_exhaustive() {
+        assert_eq!(replica_slices(10, 1), vec![0..10]);
+        assert_eq!(replica_slices(10, 3), vec![0..4, 4..7, 7..10]);
+        assert_eq!(replica_slices(2, 3), vec![0..1, 1..2, 2..2]);
+        assert_eq!(replica_slices(0, 2), vec![0..0, 0..0]);
+        for (n, r) in [(17usize, 4usize), (4, 4), (1, 3), (100, 7)] {
+            let slices = replica_slices(n, r);
+            assert_eq!(slices.len(), r);
+            let mut next = 0;
+            for (j, s) in slices.iter().enumerate() {
+                assert_eq!(s.start, next, "slices must be contiguous");
+                next = s.end;
+                assert_eq!(
+                    s.len() as u64,
+                    replica_share(n as u64, r, j),
+                    "cost-model share must match the runtime split"
+                );
+            }
+            assert_eq!(next, n, "slices must cover every row");
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_and_legacy_owner_form() {
         let p = PlacementPlan::from_owner(vec![2, 0, 1, 1], 3).unwrap();
         let back = PlacementPlan::from_json(&p.to_json()).unwrap();
         assert_eq!(p, back);
-        // Parse through the text form too.
-        let txt = p.to_json().to_string();
+        // A replicated plan roundtrips through the text form too.
+        let mut r = p.clone();
+        r.add_replica(0, 1);
+        r.add_replica(3, 2);
+        let txt = r.to_json().to_string();
         let back2 =
             PlacementPlan::from_json(&Json::parse(&txt).unwrap()).unwrap();
-        assert_eq!(p, back2);
+        assert_eq!(r, back2);
+        // Legacy owner-vector JSON still parses.
+        let legacy = Json::parse(
+            "{\"n_devices\": 3, \"owner\": [2, 0, 1, 1]}",
+        )
+        .unwrap();
+        assert_eq!(PlacementPlan::from_json(&legacy).unwrap(), p);
+        // Invalid replica sets are rejected at parse time.
+        let bad = Json::parse(
+            "{\"n_devices\": 2, \"replicas\": [[1, 0]]}",
+        )
+        .unwrap();
+        assert!(PlacementPlan::from_json(&bad).is_err());
     }
 }

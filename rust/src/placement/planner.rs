@@ -1,18 +1,22 @@
 //! Placement search: round-robin baseline, greedy LPT bin-packing on
-//! observed load, and local-search swap/move refinement — all under an
-//! optional per-device parameter-memory budget.
+//! observed load, local-search swap/move refinement, and replicated
+//! refinement that additionally grows/shrinks hot experts' replica sets —
+//! all under an optional per-device parameter-memory budget (every
+//! replica occupies one budget slot).
 //!
-//! **Never-worse guarantee** (DESIGN.md §10): `plan()` scores every
+//! **Never-worse guarantee** (DESIGN.md §10/§13): `plan()` scores every
 //! candidate with the [`CostModel`] and returns the round-robin baseline
 //! whenever a heuristic loses to it, so LPT and refined plans never score
 //! worse than round-robin on the profile they were planned from — the
 //! invariant the placement property test pins down. (Greedy LPT alone has
 //! no such guarantee: an adversarial load vector can make modulo layout
-//! beat it.)
+//! beat it.) The replicated search is seeded with the *refined* plan and
+//! only takes strictly improving steps, so a replicated plan never scores
+//! worse than the best single-owner plan under the same budget either.
 
 use anyhow::Result;
 
-use super::cost::{CostModel, DeltaScorer};
+use super::cost::{CostModel, DeltaScorer, Edit};
 use super::plan::PlacementPlan;
 use super::profile::LoadProfile;
 
@@ -28,11 +32,15 @@ const REFINE_MIN_GAIN: f64 = 1e-9;
 pub enum Strategy {
     /// `e % n_devices` — the historical baseline.
     RoundRobin,
-    /// Longest-processing-time greedy: heaviest expert onto the
-    /// least-loaded device with memory headroom.
+    /// Longest-processing-time greedy: heaviest expert onto the device
+    /// with the earliest projected *finish time* (seconds, so fast
+    /// devices absorb more) among those with memory headroom.
     Lpt,
     /// LPT seed + best-improvement move/swap local search.
     Refined,
+    /// Refined seed + replicate/drop steps: hot experts may be split
+    /// across up to `max_replicas` devices (never worse than refined).
+    Replicated,
 }
 
 impl Strategy {
@@ -41,9 +49,12 @@ impl Strategy {
             "rr" | "round-robin" | "roundrobin" => Ok(Strategy::RoundRobin),
             "lpt" | "greedy" => Ok(Strategy::Lpt),
             "refined" | "refine" | "local-search" => Ok(Strategy::Refined),
+            "replicated" | "replicate" | "replicas" => {
+                Ok(Strategy::Replicated)
+            }
             other => anyhow::bail!(
                 "unknown placement strategy '{other}' \
-                 (expected rr|lpt|refined)"
+                 (expected rr|lpt|refined|replicated)"
             ),
         }
     }
@@ -53,11 +64,17 @@ impl Strategy {
             Strategy::RoundRobin => "round-robin",
             Strategy::Lpt => "lpt",
             Strategy::Refined => "refined",
+            Strategy::Replicated => "replicated",
         }
     }
 
-    pub fn all() -> [Strategy; 3] {
-        [Strategy::RoundRobin, Strategy::Lpt, Strategy::Refined]
+    pub fn all() -> [Strategy; 4] {
+        [
+            Strategy::RoundRobin,
+            Strategy::Lpt,
+            Strategy::Refined,
+            Strategy::Replicated,
+        ]
     }
 }
 
@@ -65,17 +82,27 @@ impl Strategy {
 #[derive(Clone, Debug)]
 pub struct Planner {
     pub cost: CostModel,
-    /// Per-device FFN parameter budget; `None` = unbounded.
+    /// Per-device FFN parameter budget; `None` = unbounded. Every
+    /// replica occupies one `expert_bytes` slot against it.
     pub mem_budget_bytes: Option<u64>,
+    /// Replica-set size cap for [`Strategy::Replicated`] (1 disables
+    /// replication and makes it identical to refined).
+    pub max_replicas: usize,
 }
 
 impl Planner {
     pub fn new(cost: CostModel) -> Planner {
-        Planner { cost, mem_budget_bytes: None }
+        Planner { cost, mem_budget_bytes: None, max_replicas: 2 }
     }
 
     pub fn with_budget(mut self, bytes: u64) -> Planner {
         self.mem_budget_bytes = Some(bytes);
+        self
+    }
+
+    pub fn with_max_replicas(mut self, max_replicas: usize) -> Planner {
+        assert!(max_replicas >= 1, "max_replicas must be >= 1");
+        self.max_replicas = max_replicas;
         self
     }
 
@@ -116,7 +143,23 @@ impl Planner {
             Strategy::Refined => {
                 let lpt = self.lpt(n_devices, profile, cap);
                 let seed = self.best_of(vec![rr, lpt], profile);
-                Ok(self.refine(seed, profile, cap))
+                Ok(self.refine(seed, profile, cap, 1))
+            }
+            Strategy::Replicated => {
+                // Seed with the fully refined single-owner plan, then
+                // let strictly improving replicate/drop (and further
+                // move/swap) steps grow replica sets: monotone seeding
+                // makes replicated >= refined >= best(rr, lpt)
+                // impossible to violate by construction.
+                let lpt = self.lpt(n_devices, profile, cap);
+                let seed = self.best_of(vec![rr, lpt], profile);
+                let refined = self.refine(seed, profile, cap, 1);
+                Ok(self.refine(
+                    refined,
+                    profile,
+                    cap,
+                    self.max_replicas.min(n_devices),
+                ))
             }
         }
     }
@@ -143,7 +186,11 @@ impl Planner {
     }
 
     /// Greedy LPT: experts by total load descending (index ascending on
-    /// ties), each onto the least-loaded device with headroom.
+    /// ties), each onto the device with the earliest projected finish
+    /// time in *seconds* among those with headroom — on a uniform fleet
+    /// this is exactly "least loaded", on a heterogeneous one a 2× device
+    /// absorbs proportionally more load (ISSUE 6 acceptance). Ties break
+    /// on device index, keeping the search deterministic.
     fn lpt(
         &self,
         n_devices: usize,
@@ -160,7 +207,15 @@ impl Planner {
         for &e in &order {
             let dev = (0..n_devices)
                 .filter(|&d| dev_count[d] < cap)
-                .min_by_key(|&d| (dev_load[d], d))
+                .min_by(|&a, &b| {
+                    let fa = (dev_load[a] + totals[e]) as f64
+                        * self.cost.compute_s_on(a);
+                    let fb = (dev_load[b] + totals[e]) as f64
+                        * self.cost.compute_s_on(b);
+                    fa.partial_cmp(&fb)
+                        .expect("finite finish times")
+                        .then(a.cmp(&b))
+                })
                 .expect("feasibility checked in plan()");
             owner[e] = dev;
             dev_load[dev] += totals[e];
@@ -170,10 +225,16 @@ impl Planner {
             .expect("lpt produces valid owners")
     }
 
-    /// Best-improvement local search over single-expert moves and
-    /// pairwise swaps, scored by the full cost model (so comm effects,
-    /// not just the load sum, steer refinement). Monotone: only strictly
-    /// improving steps are taken, hence never worse than its seed.
+    /// Best-improvement local search over single-expert moves, pairwise
+    /// swaps and — when `max_replicas > 1` — replicate/drop steps that
+    /// grow or shrink a hot expert's replica set, scored by the full
+    /// cost model (so comm effects, not just the load sum, steer
+    /// refinement). Monotone: only strictly improving steps are taken,
+    /// hence never worse than its seed. Moves and swaps only touch
+    /// single-replica experts — a replicated expert is reshaped through
+    /// replicate/drop steps, which keeps every step a well-defined
+    /// [`Edit`] — and every replica counts against the per-device cap,
+    /// so replication never exceeds the memory budget.
     ///
     /// Candidates are evaluated with [`DeltaScorer`] — bitwise equal to a
     /// full rescore (property-tested below), so the search walks exactly
@@ -185,6 +246,7 @@ impl Planner {
         seed: PlacementPlan,
         profile: &LoadProfile,
         cap: usize,
+        max_replicas: usize,
     ) -> PlacementPlan {
         let n_ffn = seed.n_ffn_experts();
         let n_dev = seed.n_devices();
@@ -192,50 +254,84 @@ impl Planner {
         let mut cur = scorer.makespan();
         for _ in 0..REFINE_MAX_ROUNDS {
             let counts = scorer.device_counts();
-            // (new makespan, expert a, target device / swap partner b,
-            //  is_swap)
-            let mut best: Option<(f64, usize, usize, bool)> = None;
+            let mut best: Option<(f64, Edit)> = None;
             let consider =
-                |m: f64, a: usize, b: usize, swap: bool,
-                 best: &mut Option<(f64, usize, usize, bool)>| {
+                |m: f64, edit: Edit, best: &mut Option<(f64, Edit)>| {
                     let better = match best {
                         None => true,
-                        Some((bm, ..)) => m < *bm,
+                        Some((bm, _)) => m < *bm,
                     };
                     if better {
-                        *best = Some((m, a, b, swap));
+                        *best = Some((m, edit));
                     }
                 };
             for e in 0..n_ffn {
+                if scorer.plan().replica_count(e) != 1 {
+                    continue;
+                }
                 let from = scorer.plan().owner(e);
                 for d in 0..n_dev {
                     if d == from || counts[d] >= cap {
                         continue;
                     }
-                    let m = scorer.eval_move(e, d);
-                    consider(m, e, d, false, &mut best);
+                    let edit = Edit::Move { expert: e, to: d };
+                    let m = scorer.eval(edit);
+                    consider(m, edit, &mut best);
                 }
             }
             for a in 0..n_ffn {
+                if scorer.plan().replica_count(a) != 1 {
+                    continue;
+                }
                 for b in (a + 1)..n_ffn {
+                    if scorer.plan().replica_count(b) != 1 {
+                        continue;
+                    }
                     let (da, db) =
                         (scorer.plan().owner(a), scorer.plan().owner(b));
                     if da == db {
                         continue;
                     }
-                    let m = scorer.eval_swap(a, b);
-                    consider(m, a, b, true, &mut best);
+                    let edit = Edit::Swap { a, b };
+                    let m = scorer.eval(edit);
+                    consider(m, edit, &mut best);
+                }
+            }
+            if max_replicas > 1 {
+                for e in 0..n_ffn {
+                    let r = scorer.plan().replica_count(e);
+                    if r < max_replicas {
+                        for d in 0..n_dev {
+                            if counts[d] >= cap
+                                || scorer
+                                    .plan()
+                                    .replicas(e)
+                                    .binary_search(&d)
+                                    .is_ok()
+                            {
+                                continue;
+                            }
+                            let edit =
+                                Edit::Replicate { expert: e, on: d };
+                            let m = scorer.eval(edit);
+                            consider(m, edit, &mut best);
+                        }
+                    }
+                    if r > 1 {
+                        for j in 0..r {
+                            let d = scorer.plan().replicas(e)[j];
+                            let edit = Edit::Drop { expert: e, on: d };
+                            let m = scorer.eval(edit);
+                            consider(m, edit, &mut best);
+                        }
+                    }
                 }
             }
             match best {
-                Some((m, a, b, swap))
+                Some((m, edit))
                     if m < cur * (1.0 - REFINE_MIN_GAIN) =>
                 {
-                    if swap {
-                        scorer.apply_swap(a, b);
-                    } else {
-                        scorer.apply_move(a, b);
-                    }
+                    scorer.apply(edit);
                     cur = m;
                 }
                 _ => break,
@@ -308,17 +404,92 @@ mod tests {
             Strategy::parse("refined").unwrap(),
             Strategy::Refined
         );
+        assert_eq!(
+            Strategy::parse("replicated").unwrap(),
+            Strategy::Replicated
+        );
         assert!(Strategy::parse("bogus").is_err());
         assert_eq!(Strategy::Refined.label(), "refined");
+        assert_eq!(Strategy::Replicated.label(), "replicated");
+        assert_eq!(Strategy::all().len(), 4);
+    }
+
+    #[test]
+    fn replicated_splits_a_hot_expert_across_devices() {
+        // One dominant expert: no single-owner layout can relieve its
+        // device, but a second replica halves the bottleneck. The
+        // replicated plan must actually replicate and strictly beat the
+        // refined single-owner plan.
+        let profile = LoadProfile::from_counts(vec![vec![
+            1000, 10, 10, 10, 10, 10, 10, 10,
+        ]])
+        .unwrap();
+        let p = planner();
+        let refined = p.plan(Strategy::Refined, 4, &profile).unwrap();
+        let repl = p.plan(Strategy::Replicated, 4, &profile).unwrap();
+        assert!(!refined.is_replicated());
+        assert!(repl.is_replicated(), "hot expert must gain a replica");
+        assert!(repl.replica_count(0) > 1);
+        let m_ref = p.cost.score(&refined, &profile).makespan_s;
+        let m_rep = p.cost.score(&repl, &profile).makespan_s;
+        assert!(m_rep < m_ref, "{m_rep} vs {m_ref}");
+        // max_replicas = 1 disables replication entirely.
+        let single = p
+            .clone()
+            .with_max_replicas(1)
+            .plan(Strategy::Replicated, 4, &profile)
+            .unwrap();
+        assert!(!single.is_replicated());
+    }
+
+    #[test]
+    fn replication_respects_the_memory_budget() {
+        // cap = 3 slots/device on 2 devices with 4 experts: at most 2
+        // extra replica slots exist fleet-wide, and no device may exceed
+        // its cap even when replication would pay.
+        let profile =
+            LoadProfile::from_counts(vec![vec![900, 5, 5, 5]]).unwrap();
+        let base = planner();
+        let p = Planner {
+            mem_budget_bytes: Some(base.cost.expert_bytes * 3),
+            ..base
+        }
+        .with_max_replicas(4);
+        let plan = p.plan(Strategy::Replicated, 2, &profile).unwrap();
+        assert!(
+            plan.device_counts().iter().all(|&c| c <= 3),
+            "budget violated: {:?}",
+            plan.device_counts()
+        );
+    }
+
+    #[test]
+    fn heterogeneous_lpt_loads_fast_device_more() {
+        // ISSUE 6 acceptance: 4 equal experts, one 2x-speed device. The
+        // seconds-aware greedy lands 3 experts on the fast device (150·c
+        // makespan) instead of the FLOP-balanced 2/2 split (200·c).
+        let profile =
+            LoadProfile::from_counts(vec![vec![100, 100, 100, 100]])
+                .unwrap();
+        let cost = CostModel::from_config(&MoeConfig::preset("test"))
+            .with_device_speeds(vec![2.0, 1.0]);
+        let p = Planner::new(cost);
+        let plan = p.plan(Strategy::Lpt, 2, &profile).unwrap();
+        let counts = p.cost.score(&plan, &profile).device_assignments;
+        assert_eq!(
+            counts,
+            vec![300, 100],
+            "fast device must absorb proportionally more"
+        );
     }
 
     #[test]
     fn property_delta_score_equals_full_rescore() {
         // The incremental scorer must agree with CostModel::score
-        // *bitwise* on random profiles, plans and candidate move/swap
-        // sequences — that is what lets refine() use it without changing
-        // the search trajectory.
-        let p = planner();
+        // *bitwise* on random profiles, plans and candidate
+        // move/swap/replicate/drop sequences — on heterogeneous fleets
+        // too — that is what lets refine() use it without changing the
+        // search trajectory.
         Prop::new("delta-equals-full-rescore").cases(40).run(
             |rng| {
                 let n_dev = gen::usize_in(rng, 1, 5);
@@ -333,10 +504,10 @@ mod tests {
                     .collect();
                 let owner: Vec<usize> =
                     (0..n_ffn).map(|_| rng.below(n_dev)).collect();
-                let steps: Vec<(bool, usize, usize)> = (0..12)
+                let steps: Vec<(usize, usize, usize)> = (0..16)
                     .map(|_| {
                         (
-                            rng.next_f32() < 0.5,
+                            rng.below(4),
                             rng.below(n_ffn),
                             rng.below(n_ffn.max(n_dev)),
                         )
@@ -347,60 +518,101 @@ mod tests {
             |(n_dev, layers, owner, steps)| {
                 let profile =
                     LoadProfile::from_counts(layers.clone()).unwrap();
+                // A deterministic mixed fleet: exercises the per-device
+                // seconds fold, not just uniform speeds.
+                let speeds: Vec<f64> = (0..*n_dev)
+                    .map(|d| 1.0 + (d % 3) as f64 * 0.5)
+                    .collect();
+                let cost =
+                    CostModel::from_config(&MoeConfig::preset("test"))
+                        .with_device_speeds(speeds);
                 let plan = PlacementPlan::from_owner(
                     owner.clone(),
                     *n_dev,
                 )
                 .unwrap();
                 let mut scorer =
-                    DeltaScorer::new(&p.cost, &profile, plan.clone());
-                let full =
-                    p.cost.score(&plan, &profile).makespan_s;
+                    DeltaScorer::new(&cost, &profile, plan.clone());
+                let full = cost.score(&plan, &profile).makespan_s;
                 if scorer.makespan() != full {
                     return Err(format!(
                         "base: delta {} != full {full}",
                         scorer.makespan()
                     ));
                 }
-                for &(is_swap, a, b) in steps {
-                    if is_swap {
-                        let b = b % scorer.plan().n_ffn_experts();
-                        if a == b {
-                            continue;
+                for &(kind, a, b) in steps {
+                    // Interpret the raw tuple as the first legal edit of
+                    // its kind, mirroring the planner's own gating.
+                    let edit = match kind {
+                        0 => {
+                            if scorer.plan().replica_count(a) != 1 {
+                                continue;
+                            }
+                            Edit::Move { expert: a, to: b % *n_dev }
                         }
-                        let delta = scorer.eval_swap(a, b);
-                        let mut cand = scorer.plan().clone();
-                        let (da, db) = (cand.owner(a), cand.owner(b));
-                        cand.set_owner(a, db);
-                        cand.set_owner(b, da);
-                        let full =
-                            p.cost.score(&cand, &profile).makespan_s;
-                        if delta != full {
-                            return Err(format!(
-                                "swap({a},{b}): {delta} != {full}"
-                            ));
+                        1 => {
+                            let b = b % scorer.plan().n_ffn_experts();
+                            if a == b
+                                || scorer.plan().replica_count(a) != 1
+                                || scorer.plan().replica_count(b) != 1
+                            {
+                                continue;
+                            }
+                            Edit::Swap { a, b }
                         }
-                        // Commit and re-check the maintained state.
-                        scorer.apply_swap(a, b);
-                        if scorer.makespan() != full {
-                            return Err("state after swap".into());
+                        2 => {
+                            let on = b % *n_dev;
+                            if scorer
+                                .plan()
+                                .replicas(a)
+                                .contains(&on)
+                            {
+                                continue;
+                            }
+                            Edit::Replicate { expert: a, on }
                         }
-                    } else {
-                        let to = b % *n_dev;
-                        let delta = scorer.eval_move(a, to);
-                        let mut cand = scorer.plan().clone();
-                        cand.set_owner(a, to);
-                        let full =
-                            p.cost.score(&cand, &profile).makespan_s;
-                        if delta != full {
-                            return Err(format!(
-                                "move({a}->{to}): {delta} != {full}"
-                            ));
+                        _ => {
+                            let r = scorer.plan().replica_count(a);
+                            if r < 2 {
+                                continue;
+                            }
+                            let on = scorer.plan().replicas(a)[b % r];
+                            Edit::Drop { expert: a, on }
                         }
-                        scorer.apply_move(a, to);
-                        if scorer.makespan() != full {
-                            return Err("state after move".into());
+                    };
+                    let predicted = scorer.eval(edit);
+                    // Build the mutated plan independently and rescore
+                    // it from scratch.
+                    let mut cand = scorer.plan().clone();
+                    match edit {
+                        Edit::Move { expert, to } => {
+                            cand.set_owner(expert, to)
                         }
+                        Edit::Swap { a, b } => {
+                            let (da, db) = (cand.owner(a), cand.owner(b));
+                            cand.set_owner(a, db);
+                            cand.set_owner(b, da);
+                        }
+                        Edit::Replicate { expert, on } => {
+                            cand.add_replica(expert, on);
+                        }
+                        Edit::Drop { expert, on } => {
+                            cand.remove_replica(expert, on)
+                        }
+                    }
+                    let full = cost.score(&cand, &profile).makespan_s;
+                    if predicted != full {
+                        return Err(format!(
+                            "{edit:?}: {predicted} != {full}"
+                        ));
+                    }
+                    // Commit and re-check the maintained state.
+                    scorer.apply(edit);
+                    if scorer.makespan() != full {
+                        return Err(format!("state after {edit:?}"));
+                    }
+                    if scorer.plan() != &cand {
+                        return Err(format!("plan after {edit:?}"));
                     }
                 }
                 Ok(())
@@ -453,17 +665,30 @@ mod tests {
                     .map_err(|e| e.to_string())?;
                 let m_rr =
                     planner.cost.score(&rr, &profile).makespan_s;
-                for strat in [Strategy::Lpt, Strategy::Refined] {
+                let mut m_refined = f64::INFINITY;
+                for strat in [
+                    Strategy::Lpt,
+                    Strategy::Refined,
+                    Strategy::Replicated,
+                ] {
                     let plan = planner
                         .plan(strat, *n_dev, &profile)
                         .map_err(|e| e.to_string())?;
                     plan.validate().map_err(|e| e.to_string())?;
-                    // Exactly-once placement: owners partition experts.
+                    // Every expert stays placed; only the replicated
+                    // strategy may occupy extra slots.
                     if plan.n_ffn_experts() != n_ffn {
                         return Err("plan lost experts".into());
                     }
                     let counts = plan.device_counts();
-                    if counts.iter().sum::<usize>() != n_ffn {
+                    let slots: usize = counts.iter().sum();
+                    if strat == Strategy::Replicated {
+                        if slots < n_ffn {
+                            return Err(format!(
+                                "replica slots {slots} < {n_ffn}"
+                            ));
+                        }
+                    } else if slots != n_ffn {
                         return Err(format!(
                             "device counts {counts:?} != {n_ffn}"
                         ));
@@ -480,6 +705,20 @@ mod tests {
                         return Err(format!(
                             "{strat:?} makespan {m} worse than \
                              round-robin {m_rr}"
+                        ));
+                    }
+                    if strat == Strategy::Refined {
+                        m_refined = m;
+                    }
+                    // The satellite property: replication never scores
+                    // worse than the best single-owner plan under the
+                    // same budget (monotone seeding from refined).
+                    if strat == Strategy::Replicated
+                        && m > m_refined * (1.0 + 1e-12)
+                    {
+                        return Err(format!(
+                            "replicated makespan {m} worse than \
+                             refined {m_refined}"
                         ));
                     }
                 }

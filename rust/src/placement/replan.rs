@@ -44,6 +44,12 @@ pub struct ReplanConfig {
     /// The migration cost must be repaid within this many batches of
     /// predicted per-batch gain.
     pub payback_batches: f64,
+    /// An off-thread proposal still unfinished after this many batch
+    /// boundaries is *stale* — it was planned against a load profile the
+    /// fleet has since outgrown, so the owner drops the handle and
+    /// resets the window instead of applying it
+    /// ([`Replanner::proposal_stale`]).
+    pub max_proposal_age_batches: usize,
 }
 
 impl Default for ReplanConfig {
@@ -53,16 +59,31 @@ impl Default for ReplanConfig {
             min_interval_batches: 8,
             min_gain_frac: 0.05,
             payback_batches: 32.0,
+            max_proposal_age_batches: 4,
         }
     }
 }
 
-/// One expert relocation inside a [`MigrationPlan`].
+/// Whether a replica is being added or dropped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeltaKind {
+    /// A new replica: its weights cross the interconnect.
+    Add,
+    /// A replica is freed: no transfer, the source keeps nothing to
+    /// send — dropping is how an owner *move* (add elsewhere + drop
+    /// here) charges only one copy.
+    Drop,
+}
+
+/// One replica-set change inside a [`MigrationPlan`]: add or drop the
+/// replica of `expert` on `device`. A historical single-owner move
+/// decomposes into one `Add` (priced at `expert_bytes`) plus one `Drop`
+/// (free).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ExpertMove {
     pub expert: usize,
-    pub from: usize,
-    pub to: usize,
+    pub device: usize,
+    pub kind: DeltaKind,
     pub bytes: u64,
 }
 
@@ -160,6 +181,15 @@ impl Replanner {
         self.profile = LoadProfile::new(self.n_ffn_experts);
     }
 
+    /// Is an in-flight proposal that has aged `age_batches` boundaries
+    /// since submission too old to apply? A stale proposal was computed
+    /// against loads the fleet has since outgrown; the owner abandons it
+    /// (drop the handle, [`Replanner::window_reset`]) rather than
+    /// migrate toward a dead profile.
+    pub fn proposal_stale(&self, age_batches: usize) -> bool {
+        age_batches > self.cfg.max_proposal_age_batches
+    }
+
     /// Snapshot everything one detached planning attempt needs — the
     /// planner, the window's profile and the current plan — so the
     /// local search can run on another thread ([`PlanTask::run`]) while
@@ -247,16 +277,28 @@ impl PlanTask {
             .makespan_s;
         let after =
             self.planner.cost.score(&proposed, &self.profile).makespan_s;
-        let moves: Vec<ExpertMove> = self
-            .current
-            .diff(&proposed)
-            .into_iter()
-            .map(|(expert, from, to)| ExpertMove {
+        // Replica-set deltas: adds ship weights (α–β priced), drops are
+        // free. A plain owner move therefore costs exactly one
+        // expert-copy, as before; pure replication costs its adds and
+        // nothing on the (kept) source.
+        let delta = self.current.delta(&proposed);
+        let moves: Vec<ExpertMove> = delta
+            .adds
+            .iter()
+            .map(|&(expert, device)| ExpertMove {
                 expert,
-                from,
-                to,
+                device,
+                kind: DeltaKind::Add,
                 bytes: self.planner.cost.expert_bytes,
             })
+            .chain(delta.drops.iter().map(|&(expert, device)| {
+                ExpertMove {
+                    expert,
+                    device,
+                    kind: DeltaKind::Drop,
+                    bytes: 0,
+                }
+            }))
             .collect();
         let migration_bytes: u64 = moves.iter().map(|m| m.bytes).sum();
         let mig = MigrationPlan {
@@ -324,10 +366,22 @@ mod tests {
         assert!(mig.predicted_gain_s() > 0.0);
         assert!(mig.predicted_gain_frac() >= rp.cfg.min_gain_frac);
         assert!(!mig.moves.is_empty());
+        // Only Add deltas ship weights; Drops are free.
+        let adds = mig
+            .moves
+            .iter()
+            .filter(|m| m.kind == DeltaKind::Add)
+            .count() as u64;
+        assert!(adds > 0);
         assert_eq!(
             mig.migration_bytes,
-            mig.moves.len() as u64 * rp.planner.cost.expert_bytes
+            adds * rp.planner.cost.expert_bytes
         );
+        assert!(mig
+            .moves
+            .iter()
+            .all(|m| (m.kind == DeltaKind::Add)
+                == (m.bytes == rp.planner.cost.expert_bytes)));
         // Hot experts separated in the proposal.
         assert_ne!(mig.plan.owner(0), mig.plan.owner(2));
         // Commit starts a fresh window: the gate closes again.
@@ -393,5 +447,52 @@ mod tests {
         let mig = rp.maybe_replan(&current).unwrap();
         // Once on the proposed plan, the same profile proposes no move.
         assert!(rp.maybe_replan(&mig.plan).is_none());
+    }
+
+    #[test]
+    fn stale_proposals_are_flagged_by_age() {
+        let rp = replanner(1);
+        assert_eq!(rp.cfg.max_proposal_age_batches, 4);
+        assert!(!rp.proposal_stale(0));
+        assert!(!rp.proposal_stale(4));
+        assert!(rp.proposal_stale(5), "age past the bound is stale");
+        let mut tight = replanner(1);
+        tight.cfg.max_proposal_age_batches = 0;
+        assert!(!tight.proposal_stale(0));
+        assert!(tight.proposal_stale(1));
+    }
+
+    #[test]
+    fn replicated_strategy_migration_prices_adds_only() {
+        // A single dominant expert: the replicated planner's proposal
+        // grows its replica set, and only the Add deltas are priced —
+        // one expert copy per new replica — while kept sources ship
+        // nothing.
+        let cost = CostModel::from_config(&MoeConfig::preset("test"));
+        let mut rp = Replanner::new(
+            Planner::new(cost),
+            ReplanConfig {
+                strategy: Strategy::Replicated,
+                min_interval_batches: 1,
+                ..ReplanConfig::default()
+            },
+            4,
+        );
+        let current = PlacementPlan::round_robin(4, 2);
+        rp.observe_loads(&[vec![1000, 2, 2, 2], vec![1000, 2, 2, 2]]);
+        let mig = rp
+            .maybe_replan(&current)
+            .expect("hot expert must justify replication");
+        assert!(mig.plan.is_replicated());
+        let adds = mig
+            .moves
+            .iter()
+            .filter(|m| m.kind == DeltaKind::Add)
+            .count() as u64;
+        assert_eq!(
+            mig.migration_bytes,
+            adds * rp.planner().cost.expert_bytes
+        );
+        assert!(mig.migration_s > 0.0);
     }
 }

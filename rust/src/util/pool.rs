@@ -71,11 +71,24 @@ struct Job {
     /// `done == n`, so the pointee outlives every dereference.
     f: *const (dyn Fn(usize) + Sync),
     n: usize,
+    /// Indices claimed per `fetch_add` — 1 for small jobs, larger when
+    /// `n` dwarfs the pool width so claim traffic amortises
+    /// ([`claim_chunk`]).
+    chunk: usize,
     /// Next index to claim (may overshoot `n`; overshoots never touch `f`).
     next: AtomicUsize,
     /// Indices fully executed. `done == n` is the job-complete signal.
     done: AtomicUsize,
     panics: AtomicUsize,
+}
+
+/// Claim granularity for an `n`-index job on a width-`width` pool:
+/// single-index claims until the job is much larger than `width * 4`
+/// (so small jobs still balance perfectly), then `n / (width * 4)` —
+/// every thread sees ~4 claims even if one chunk runs long — capped at
+/// 32 indices so tail imbalance from one slow chunk stays bounded.
+fn claim_chunk(n: usize, width: usize) -> usize {
+    (n / (width.max(1) * 4)).clamp(1, 32)
 }
 
 // SAFETY: `f` points at a `Sync` closure, so shared references to it may
@@ -110,16 +123,21 @@ impl Job {
     // thread-local marker.
     fn drain_inner(&self, shared: &Shared) {
         loop {
-            let i = self.next.fetch_add(1, Ordering::Relaxed);
-            if i >= self.n {
+            let start = self.next.fetch_add(self.chunk, Ordering::Relaxed);
+            if start >= self.n {
                 return;
             }
-            // SAFETY: `i < n` — see the field docs.
+            let end = (start + self.chunk).min(self.n);
+            // SAFETY: every executed index is `< n` — see the field docs.
             let f = unsafe { &*self.f };
-            if catch_unwind(AssertUnwindSafe(|| f(i))).is_err() {
-                self.panics.fetch_add(1, Ordering::Relaxed);
+            for i in start..end {
+                if catch_unwind(AssertUnwindSafe(|| f(i))).is_err() {
+                    self.panics.fetch_add(1, Ordering::Relaxed);
+                }
             }
-            if self.done.fetch_add(1, Ordering::AcqRel) + 1 == self.n {
+            let ran = end - start;
+            if self.done.fetch_add(ran, Ordering::AcqRel) + ran == self.n
+            {
                 // Lock-then-notify pairs with the fence's check-then-wait
                 // under the same lock: no lost wakeup.
                 let _guard = shared.state.lock().unwrap();
@@ -262,6 +280,7 @@ impl ExecPool {
         let job = Arc::new(Job {
             f: f_erased as *const (dyn Fn(usize) + Sync),
             n,
+            chunk: claim_chunk(n, self.width),
             next: AtomicUsize::new(0),
             done: AtomicUsize::new(0),
             panics: AtomicUsize::new(0),
@@ -550,6 +569,40 @@ mod tests {
             );
             assert_eq!(pool.spawns(), width.max(1) as u64 - 1);
         }
+    }
+
+    #[test]
+    fn claim_chunk_scales_with_job_size_and_is_bounded() {
+        // Small jobs claim one index at a time (perfect balance)…
+        assert_eq!(claim_chunk(16, 4), 1);
+        assert_eq!(claim_chunk(64, 4), 4);
+        // …mid-size jobs amortise claims at ~4 per thread…
+        assert_eq!(claim_chunk(501, 4), 31);
+        // …and huge jobs cap at 32 so tail imbalance stays bounded.
+        assert_eq!(claim_chunk(100_000, 4), 32);
+        // Degenerate widths never divide by zero or return zero.
+        assert_eq!(claim_chunk(0, 0), 1);
+        assert_eq!(claim_chunk(3, 1), 1);
+    }
+
+    #[test]
+    fn chunked_claims_still_hit_every_index_exactly_once() {
+        // Large enough that claims are chunked (10_000 / 16 caps at 32):
+        // the oracle from the single-index days must keep holding.
+        let pool = ExecPool::new(4);
+        let hits: Vec<AtomicU64> =
+            (0..10_000).map(|_| AtomicU64::new(0)).collect();
+        pool.run(10_000, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        // A ragged size (not a multiple of the chunk) too.
+        let hits: Vec<AtomicU64> =
+            (0..10_007).map(|_| AtomicU64::new(0)).collect();
+        pool.run(10_007, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
     }
 
     #[test]

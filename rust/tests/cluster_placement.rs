@@ -7,6 +7,12 @@
 //!     simulated (analytic, deterministic) makespan and the mean device
 //!     load CV versus round-robin — while model outputs stay bitwise
 //!     identical, because placement may never change math;
+//! (c) multi-replica load-split routing (ISSUE 6 / DESIGN.md §13):
+//!     replicated plans — any replica count, including empty slices when
+//!     replicas outnumber tokens — stay bitwise identical to the
+//!     unplanned cluster at the same device count, and on a skewed
+//!     workload the replicated plan strictly reduces the modeled
+//!     makespan below the best single-owner refined plan;
 //! plus the online-replanning path: a `Replanner` attached to the cluster
 //! backend migrates experts between served batches and the serving
 //! metrics report it.
@@ -184,6 +190,134 @@ fn refined_plan_strictly_beats_round_robin_on_skewed_routing() {
 }
 
 #[test]
+fn replicated_plans_are_bitwise_identical_across_replica_counts() {
+    // Acceptance criterion (c), bitwise half: whatever the replica count
+    // — 1 (single owner), 2, or all devices, for one expert or all —
+    // load-split routing cannot change a single bit of the outputs at
+    // a fixed device count. Ragged token counts (including T < replica
+    // count, which leaves some replica slices empty) are exercised too.
+    let cfg = MoeConfig::preset("test"); // 4 FFN experts
+    let n_dev = 4;
+    let mut rng = Rng::new(17);
+    for t in [3usize, 17, 40] {
+        let x = Tensor::randn(&mut rng, &[t, cfg.d_model], 1.0);
+        let baseline = {
+            let mut sim =
+                ClusterSim::new(cfg.clone(), Topology::new(n_dev), 13);
+            sim.forward(&x).0
+        };
+        let plans = [
+            PlacementPlan::from_owner(vec![0, 1, 2, 3], 4).unwrap(),
+            PlacementPlan::from_replicas(
+                vec![vec![0, 2], vec![1], vec![2], vec![3]],
+                4,
+            )
+            .unwrap(),
+            PlacementPlan::from_replicas(
+                vec![vec![0, 1, 2, 3], vec![1], vec![2], vec![3]],
+                4,
+            )
+            .unwrap(),
+            PlacementPlan::from_replicas(vec![vec![0, 1, 2, 3]; 4], 4)
+                .unwrap(),
+        ];
+        for plan in plans {
+            let mut sim = ClusterSim::new(
+                cfg.clone(),
+                Topology::new(n_dev).with_placement(plan.clone()),
+                13,
+            );
+            let (y, rep) = sim.forward(&x);
+            assert_eq!(
+                baseline.data, y.data,
+                "replicated plan changed outputs at T={t}"
+            );
+            // Work is split, never duplicated or lost.
+            for l in &rep.layers {
+                assert_eq!(l.device_load.len(), n_dev);
+            }
+        }
+    }
+}
+
+#[test]
+fn replicated_plan_strictly_beats_best_single_owner_on_skewed_routing() {
+    // Acceptance criterion (c), performance half: on a skewed 4-device
+    // workload, the replicated strategy's plan strictly reduces the
+    // modeled makespan below the best single-owner refined plan — with
+    // outputs bitwise identical to the unplanned cluster. The planner's
+    // never-worse-than-refined guarantee holds for every seed (asserted
+    // in the loop); strict improvement is asserted on a found seed
+    // where the predicted win is solid enough (>= 4%) to survive the
+    // small aggregated-profile vs per-batch deviation.
+    let cfg = MoeConfig::preset("sm-8e"); // 8 FFN experts
+    let n_dev = 4;
+    let tokens = 128;
+    let cost = CostModel::from_config(&cfg);
+    let planner = Planner::new(cost.clone()); // max_replicas = 2
+    let mut found = None;
+    for seed in 0..48u64 {
+        let mut rng = Rng::new(seed ^ 0x51ED);
+        let batches =
+            skewed_batches(&mut rng, 2, tokens, cfg.d_model);
+        let mut sim =
+            ClusterSim::new(cfg.clone(), Topology::new(n_dev), seed);
+        let profile = profile_of(&mut sim, &cfg, &batches);
+        let refined = planner
+            .plan(Strategy::Refined, n_dev, &profile)
+            .unwrap();
+        let repl = planner
+            .plan(Strategy::Replicated, n_dev, &profile)
+            .unwrap();
+        let m_ref = cost.score(&refined, &profile).makespan_s;
+        let m_rep = cost.score(&repl, &profile).makespan_s;
+        assert!(
+            m_rep <= m_ref * (1.0 + 1e-9),
+            "replicated scored worse than refined at seed {seed}: \
+             {m_rep} vs {m_ref}"
+        );
+        if repl.is_replicated() && m_rep < m_ref * 0.96 {
+            found = Some((seed, batches, refined, repl));
+            break;
+        }
+    }
+    let (seed, batches, refined, repl) = found.expect(
+        "no seed in 0..48 produced a skew where replication wins >= 4%",
+    );
+
+    let mut sim_plain =
+        ClusterSim::new(cfg.clone(), Topology::new(n_dev), seed);
+    let mut sim_ref = ClusterSim::new(
+        cfg.clone(),
+        Topology::new(n_dev).with_placement(refined),
+        seed,
+    );
+    let mut sim_rep = ClusterSim::new(
+        cfg.clone(),
+        Topology::new(n_dev).with_placement(repl),
+        seed,
+    );
+    let c = cost.compute_s_per_assignment;
+    let (mut mk_ref, mut mk_rep) = (0.0, 0.0);
+    for b in &batches {
+        let (y_plain, _) = sim_plain.forward(b);
+        let (y_ref, rep_ref) = sim_ref.forward(b);
+        let (y_rep, rep_rep) = sim_rep.forward(b);
+        // Load-split routing may never change math: bitwise equal to
+        // the unplanned cluster (and hence to every other plan).
+        assert_eq!(y_plain.data, y_rep.data);
+        assert_eq!(y_plain.data, y_ref.data);
+        mk_ref += rep_ref.modeled_makespan(c);
+        mk_rep += rep_rep.modeled_makespan(c);
+    }
+    assert!(
+        mk_rep < mk_ref,
+        "replicated modeled makespan {mk_rep} !< best single-owner \
+         {mk_ref}"
+    );
+}
+
+#[test]
 fn apply_placement_respawns_only_affected_devices() {
     // Incremental migration (ISSUE 5 satellite): the between-batch stall
     // must scale with the migration, not cluster size — devices whose
@@ -233,6 +367,7 @@ fn test_replanner(cfg: &MoeConfig) -> Replanner {
             min_interval_batches: 2,
             min_gain_frac: 0.01,
             payback_batches: 1e9,
+            ..ReplanConfig::default()
         },
         cfg.n_ffn_experts,
     )
