@@ -1,0 +1,423 @@
+//! A hand-rolled, dependency-free Rust *lexical* model — just enough
+//! tokenization to tell code from comments from literals, so lint
+//! patterns never fire inside a string, a doc comment or a `#[cfg(test)]`
+//! fixture.
+//!
+//! Per source line the model exposes:
+//!
+//! * `code` — the line with comments removed and the *contents* of
+//!   string/char literals blanked (a string literal collapses to `""`),
+//!   so pattern searches see real code only;
+//! * `comment` — the concatenated text of every comment overlapping the
+//!   line (`//`, `///`, `//!` and `/* .. */`, nested), which is where
+//!   the annotation grammar (`SAFETY:`, `ordering:`, `alloc-ok:`,
+//!   `det-ok:` and region markers) lives;
+//! * `test_mask` — whether the line sits inside a `#[cfg(test)]`-gated
+//!   item (attribute through matching close brace), which lints skip:
+//!   test fixtures may intentionally contain seeded violations.
+//!
+//! Handled literal forms: `"…"` with escapes, raw strings `r"…"` /
+//! `r#"…"#` with any hash count, byte strings `b"…"` / `br#"…"#`, char
+//! and byte-char literals (`'x'`, `'\n'`, `b'x'`), and the char-vs-
+//! lifetime ambiguity (`'a` in `&'a str` stays code). Block comments
+//! nest, as in Rust proper.
+
+/// One source line, split into its code and comment projections.
+#[derive(Clone, Debug, Default)]
+pub struct Line {
+    /// Code with comments stripped and literal contents blanked.
+    pub code: String,
+    /// Text of all comments on the line.
+    pub comment: String,
+}
+
+/// The lexical projection of one file.
+#[derive(Clone, Debug, Default)]
+pub struct SourceModel {
+    /// Original source lines (for diagnostics snippets).
+    pub raw: Vec<String>,
+    pub lines: Vec<Line>,
+    /// `true` for lines inside a `#[cfg(test)]`-gated item.
+    pub test_mask: Vec<bool>,
+}
+
+impl SourceModel {
+    pub fn parse(text: &str) -> SourceModel {
+        let mut model = SourceModel {
+            raw: text.split('\n').map(str::to_string).collect(),
+            ..SourceModel::default()
+        };
+        lex(text, &mut model);
+        model.test_mask = test_mask(&model.lines);
+        model
+    }
+
+    pub fn n_lines(&self) -> usize {
+        self.lines.len()
+    }
+
+    /// Original text of 1-based line `n`, trimmed, for diagnostics.
+    pub fn snippet(&self, line_no: usize) -> &str {
+        self.raw
+            .get(line_no - 1)
+            .map(|s| s.trim())
+            .unwrap_or("")
+    }
+}
+
+enum State {
+    Code,
+    LineComment,
+    /// Nesting depth — Rust block comments nest.
+    BlockComment(u32),
+    /// `None` = escaped string; `Some(n)` = raw string closed by `"` +
+    /// `n` hashes.
+    Str(Option<u32>),
+    CharLit,
+}
+
+fn lex(text: &str, model: &mut SourceModel) {
+    let chars: Vec<char> = text.chars().collect();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut state = State::Code;
+    // Last code char emitted on this line, to keep `r`/`b` that are the
+    // tail of an identifier (e.g. `for`) from opening a raw string.
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(state, State::LineComment) {
+                state = State::Code;
+            }
+            model.lines.push(Line {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+            });
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    state = State::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    state = State::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    code.push_str("\"\"");
+                    state = State::Str(None);
+                    i += 1;
+                } else if c == '\'' {
+                    // Char literal iff `'\…` or `'x'`; otherwise a
+                    // lifetime (or loop label), which stays code.
+                    if next == Some('\\')
+                        || (next.is_some()
+                            && chars.get(i + 2) == Some(&'\''))
+                    {
+                        code.push_str("' '");
+                        state = State::CharLit;
+                        i += 1;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if (c == 'r' || c == 'b')
+                    && !prev_is_ident(&code)
+                {
+                    // Possible raw/byte string: [b] r? #* " — scan the
+                    // prefix without consuming unless it really opens
+                    // one.
+                    if let Some((skip, hashes)) = raw_string_open(
+                        &chars[i..],
+                    ) {
+                        code.push_str("\"\"");
+                        state = State::Str(Some(hashes));
+                        i += skip;
+                    } else if c == 'b'
+                        && next == Some('\'')
+                    {
+                        // Byte-char literal `b'x'`.
+                        code.push_str("' '");
+                        state = State::CharLit;
+                        i += 2;
+                    } else if c == 'b' && next == Some('"') {
+                        code.push_str("\"\"");
+                        state = State::Str(None);
+                        i += 2;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    state = State::BlockComment(depth + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    state = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str(None) => {
+                if c == '\\' {
+                    // Escaped char (incl. \" and \\) — but leave a
+                    // line-continuation's newline to the top-level
+                    // handler so line indices stay aligned.
+                    i += if chars.get(i + 1) == Some(&'\n') {
+                        1
+                    } else {
+                        2
+                    };
+                } else if c == '"' {
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::Str(Some(hashes)) => {
+                if c == '"'
+                    && chars[i + 1..]
+                        .iter()
+                        .take(hashes as usize)
+                        .filter(|&&h| h == '#')
+                        .count()
+                        == hashes as usize
+                {
+                    state = State::Code;
+                    i += 1 + hashes as usize;
+                } else {
+                    i += 1;
+                }
+            }
+            State::CharLit => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '\'' {
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    // Final line when the file does not end in a newline.
+    if !code.is_empty() || !comment.is_empty() {
+        model.lines.push(Line { code, comment });
+    }
+    // `split('\n')` on trailing-newline input yields one extra empty
+    // raw line; mirror it so raw and lines stay index-aligned.
+    while model.lines.len() < model.raw.len() {
+        model.lines.push(Line::default());
+    }
+    while model.raw.len() < model.lines.len() {
+        model.raw.push(String::new());
+    }
+}
+
+fn prev_is_ident(code: &str) -> bool {
+    code.chars()
+        .last()
+        .is_some_and(|p| p.is_alphanumeric() || p == '_')
+}
+
+/// Does `chars` open a raw/byte-raw string (`r"`, `r#"`, `br##"`, …)?
+/// Returns (chars to skip through the opening quote, hash count).
+fn raw_string_open(chars: &[char]) -> Option<(usize, u32)> {
+    let mut j = 0;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((j + 1, hashes))
+    } else {
+        None
+    }
+}
+
+/// Mark every line belonging to a `#[cfg(test)]`-gated item: from the
+/// attribute line through the matching close brace of the item it gates
+/// (or through the terminating `;` of a braceless item).
+fn test_mask(lines: &[Line]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut i = 0;
+    while i < lines.len() {
+        if !lines[i].code.contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        let mut depth = 0i64;
+        let mut opened = false;
+        let mut k = i;
+        while k < lines.len() {
+            mask[k] = true;
+            for c in lines[k].code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    ';' if !opened && depth == 0 => {
+                        depth = i64::MIN; // braceless item: done
+                    }
+                    _ => {}
+                }
+                if (opened && depth == 0) || depth == i64::MIN {
+                    break;
+                }
+            }
+            if (opened && depth == 0) || depth < 0 {
+                break;
+            }
+            k += 1;
+        }
+        i = k + 1;
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_are_split_from_code() {
+        let m = SourceModel::parse(
+            "let x = 1; // trailing note\n/* block */ let y = 2;\n",
+        );
+        assert_eq!(m.lines[0].code.trim(), "let x = 1;");
+        assert!(m.lines[0].comment.contains("trailing note"));
+        assert_eq!(m.lines[1].code.trim(), "let y = 2;");
+        assert!(m.lines[1].comment.contains("block"));
+    }
+
+    #[test]
+    fn nested_block_comments_and_multiline() {
+        let m = SourceModel::parse(
+            "a(); /* outer /* inner */ still comment */ b();\n/*\nx()\n*/ c();\n",
+        );
+        assert_eq!(m.lines[0].code.replace(' ', ""), "a();b();");
+        assert_eq!(m.lines[1].code, "");
+        assert_eq!(m.lines[2].code, "");
+        assert!(m.lines[2].comment.contains("x()"));
+        assert_eq!(m.lines[3].code.trim(), "c();");
+    }
+
+    #[test]
+    fn string_contents_are_blanked() {
+        let m = SourceModel::parse(
+            r#"println!("vec![no // comment] unsafe"); call();"#,
+        );
+        assert!(!m.lines[0].code.contains("vec!["));
+        assert!(!m.lines[0].code.contains("unsafe"));
+        assert!(m.lines[0].comment.is_empty());
+        assert!(m.lines[0].code.contains("call();"));
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_strings() {
+        let m = SourceModel::parse(
+            r#"let s = "a\"b // not a comment"; t();"#,
+        );
+        assert!(m.lines[0].comment.is_empty());
+        assert!(m.lines[0].code.contains("t();"));
+        assert!(!m.lines[0].code.contains("not a comment"));
+    }
+
+    #[test]
+    fn raw_strings_any_hash_count() {
+        let src = "let a = r\"x // y\"; let b = r##\"unsafe \"# inner\"##; u();\n";
+        let m = SourceModel::parse(src);
+        assert!(m.lines[0].comment.is_empty());
+        assert!(!m.lines[0].code.contains("unsafe"));
+        assert!(m.lines[0].code.contains("u();"));
+    }
+
+    #[test]
+    fn multiline_strings_stay_strings() {
+        let m = SourceModel::parse(
+            "let s = \"line one\nvec![] // two\";\nafter();\n",
+        );
+        assert!(m.lines[1].comment.is_empty());
+        assert!(!m.lines[1].code.contains("vec!["));
+        assert_eq!(m.lines[2].code.trim(), "after();");
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let m = SourceModel::parse(
+            "fn f<'a>(x: &'a str) -> &'a str { x }\nlet c = 'y'; let n = '\\n'; g();\n",
+        );
+        assert!(m.lines[0].code.contains("&'a str"));
+        assert!(!m.lines[1].code.contains('y'), "char contents blanked");
+        assert!(m.lines[1].code.contains("g();"));
+    }
+
+    #[test]
+    fn byte_strings_and_byte_chars() {
+        let m = SourceModel::parse(
+            "let a = b\"unsafe\"; let c = b'x'; let r = br#\"vec![\"#; h();\n",
+        );
+        assert!(!m.lines[0].code.contains("unsafe"));
+        assert!(!m.lines[0].code.contains("vec!["));
+        assert!(m.lines[0].code.contains("h();"));
+    }
+
+    #[test]
+    fn identifier_tails_do_not_open_raw_strings() {
+        // `for`/`br` as identifier tails must not eat the rest of the
+        // file as a raw string.
+        let m = SourceModel::parse("for x in abr { y(\"s\"); }\nz();\n");
+        assert!(m.lines[0].code.contains("for x in abr"));
+        assert_eq!(m.lines[1].code.trim(), "z();");
+    }
+
+    #[test]
+    fn cfg_test_items_are_masked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { unsafe {} }\n}\nfn live2() {}\n";
+        let m = SourceModel::parse(src);
+        assert_eq!(
+            m.test_mask,
+            vec![false, true, true, true, true, false, false]
+        );
+    }
+
+    #[test]
+    fn cfg_test_on_braceless_item() {
+        let src = "#[cfg(test)]\nuse foo::bar;\nfn live() {}\n";
+        let m = SourceModel::parse(src);
+        assert_eq!(m.test_mask, vec![true, true, false, false]);
+        // Trailing empty raw line stays aligned.
+        assert_eq!(m.raw.len(), m.lines.len());
+    }
+}

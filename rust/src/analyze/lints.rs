@@ -1,0 +1,642 @@
+//! The five project-invariant lints (DESIGN.md §14), run over the
+//! lexical [`SourceModel`] so string literals, comments and
+//! `#[cfg(test)]` fixtures can never trip them.
+//!
+//! Every lint suppresses through an *annotation*: a justification
+//! comment on the offending line or in the contiguous comment block
+//! directly above it. Annotations are the static twin of the runtime
+//! counters (`ExecArena::growths`, `ExecPool::spawns`): the reviewer
+//! reads the justification, CI only checks it exists where required.
+
+use super::lexer::SourceModel;
+use super::Finding;
+
+/// Files (path suffixes) allowed to contain `unsafe`. The crate's only
+/// unsafety is the disjoint-&mut dispatch in `Executor::for_each_mut`
+/// and the pool's lifetime-erased job handoff — both in `util/pool.rs`.
+/// A second entry here should be a load-bearing design decision.
+pub const UNSAFE_ALLOWLIST: &[&str] = &["util/pool.rs"];
+
+/// Files (path suffixes) allowed to spawn OS threads. Everything else
+/// must run on the persistent [`crate::util::pool::ExecPool`] or the
+/// scoped helpers — steady-state serving spawns nothing.
+pub const SPAWN_ALLOWLIST: &[&str] = &[
+    "util/pool.rs",
+    "util/threadpool.rs",
+    "cluster/worker.rs",
+    "serve/service.rs",
+];
+
+/// Allocating calls forbidden inside `no-alloc` regions unless
+/// annotated. Lexical patterns, matched with identifier boundaries.
+const ALLOC_PATTERNS: &[&str] = &[
+    "Vec::new",
+    "vec!",
+    "to_vec",
+    "Box::new",
+    "String::from",
+    ".clone()",
+];
+
+const SPAWN_PATTERNS: &[&str] =
+    &["thread::spawn", "thread::Builder", "thread::scope"];
+
+/// Run every lint over one file. `path` is the repo-relative path with
+/// `/` separators — allowlists and scopes match on its suffix.
+pub fn lint_file(path: &str, model: &SourceModel) -> Vec<Finding> {
+    let mut out = Vec::new();
+    unsafe_audit(path, model, &mut out);
+    no_alloc_regions(path, model, &mut out);
+    spawn_sites(path, model, &mut out);
+    atomics_ordering(path, model, &mut out);
+    determinism(path, model, &mut out);
+    out
+}
+
+fn push(
+    out: &mut Vec<Finding>,
+    path: &str,
+    model: &SourceModel,
+    line_idx: usize,
+    lint: &'static str,
+    message: String,
+) {
+    out.push(Finding {
+        file: path.to_string(),
+        line: line_idx + 1,
+        lint,
+        message,
+        snippet: model.snippet(line_idx + 1).to_string(),
+    });
+}
+
+/// Is `marker` present in the comment on line `i`, or in the contiguous
+/// run of comment-only lines directly above it? A blank or code line
+/// ends the walk — annotations must be adjacent to what they justify.
+fn annotated(model: &SourceModel, i: usize, marker: &str) -> bool {
+    if model.lines[i].comment.contains(marker) {
+        return true;
+    }
+    let mut k = i;
+    while k > 0 {
+        k -= 1;
+        let l = &model.lines[k];
+        if !l.code.trim().is_empty() {
+            return false; // a code line breaks adjacency
+        }
+        if l.comment.contains(marker) {
+            return true;
+        }
+        if l.comment.is_empty() {
+            return false; // fully blank line breaks adjacency
+        }
+    }
+    false
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Substring search with identifier boundaries on whichever ends of the
+/// pattern are identifier characters (so `to_vec` does not match
+/// `into_vec`, and `unsafe` does not match `unsafe_audit`).
+fn find_token(code: &str, pat: &str) -> bool {
+    let pat_head_ident = pat.chars().next().is_some_and(is_ident);
+    let pat_tail_ident = pat.chars().last().is_some_and(is_ident);
+    let mut from = 0;
+    while let Some(off) = code[from..].find(pat) {
+        let start = from + off;
+        let end = start + pat.len();
+        let head_ok = !pat_head_ident
+            || !code[..start].chars().last().is_some_and(is_ident);
+        let tail_ok = !pat_tail_ident
+            || !code[end..].chars().next().is_some_and(is_ident);
+        if head_ok && tail_ok {
+            return true;
+        }
+        from = start + 1;
+    }
+    false
+}
+
+fn path_in(path: &str, list: &[&str]) -> bool {
+    list.iter().any(|suffix| path.ends_with(suffix))
+}
+
+// ------------------------------------------------------- 1 unsafe-audit
+
+/// Every `unsafe` must (a) live in an allowlisted file and (b) carry a
+/// `SAFETY:` comment on or directly above its line.
+fn unsafe_audit(path: &str, model: &SourceModel, out: &mut Vec<Finding>) {
+    for i in 0..model.n_lines() {
+        if model.test_mask[i] || !find_token(&model.lines[i].code, "unsafe")
+        {
+            continue;
+        }
+        if !path_in(path, UNSAFE_ALLOWLIST) {
+            push(
+                out,
+                path,
+                model,
+                i,
+                "unsafe-audit",
+                format!(
+                    "unsafe outside the allowlist ({}); all unsafety \
+                     belongs in util/pool.rs",
+                    UNSAFE_ALLOWLIST.join(", ")
+                ),
+            );
+        }
+        if !annotated(model, i, "SAFETY:") {
+            push(
+                out,
+                path,
+                model,
+                i,
+                "unsafe-audit",
+                "unsafe without a `SAFETY:` comment on or above the line"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------ 2 no-alloc regions
+
+/// Inside a region bracketed by a comment line starting `lint: no-alloc`
+/// and one starting `lint: end`, allocating calls are forbidden unless
+/// the line (or the comment block above it) carries `alloc-ok: <reason>`.
+/// Unbalanced markers are findings too — a region that silently never
+/// closes would swallow the rest of the file.
+fn no_alloc_regions(
+    path: &str,
+    model: &SourceModel,
+    out: &mut Vec<Finding>,
+) {
+    let mut open_at: Option<usize> = None;
+    for i in 0..model.n_lines() {
+        let comment = model.lines[i].comment.trim();
+        if comment.starts_with("lint: no-alloc") {
+            if open_at.is_some() {
+                push(
+                    out,
+                    path,
+                    model,
+                    i,
+                    "no-alloc",
+                    "nested `lint: no-alloc` region".to_string(),
+                );
+            }
+            open_at = Some(i);
+            continue;
+        }
+        if comment.starts_with("lint: end") {
+            if open_at.is_none() {
+                push(
+                    out,
+                    path,
+                    model,
+                    i,
+                    "no-alloc",
+                    "`lint: end` without an open region".to_string(),
+                );
+            }
+            open_at = None;
+            continue;
+        }
+        if open_at.is_none() || model.test_mask[i] {
+            continue;
+        }
+        for pat in ALLOC_PATTERNS {
+            if find_token(&model.lines[i].code, pat)
+                && !annotated(model, i, "alloc-ok:")
+            {
+                push(
+                    out,
+                    path,
+                    model,
+                    i,
+                    "no-alloc",
+                    format!(
+                        "allocating call `{pat}` in a no-alloc region \
+                         (annotate `alloc-ok: <reason>` if intended)"
+                    ),
+                );
+            }
+        }
+    }
+    if let Some(i) = open_at {
+        push(
+            out,
+            path,
+            model,
+            i,
+            "no-alloc",
+            "`lint: no-alloc` region never closed".to_string(),
+        );
+    }
+}
+
+// -------------------------------------------------------- 3 spawn-sites
+
+/// OS-thread creation is confined to the spawn allowlist; every other
+/// module must borrow the persistent pool.
+fn spawn_sites(path: &str, model: &SourceModel, out: &mut Vec<Finding>) {
+    if path_in(path, SPAWN_ALLOWLIST) {
+        return;
+    }
+    for i in 0..model.n_lines() {
+        if model.test_mask[i] {
+            continue;
+        }
+        for pat in SPAWN_PATTERNS {
+            if find_token(&model.lines[i].code, pat) {
+                push(
+                    out,
+                    path,
+                    model,
+                    i,
+                    "spawn-sites",
+                    format!(
+                        "`{pat}` outside the spawn allowlist ({})",
+                        SPAWN_ALLOWLIST.join(", ")
+                    ),
+                );
+            }
+        }
+    }
+}
+
+// --------------------------------------------------- 4 atomics-ordering
+
+/// Every `Ordering::Relaxed` needs an `ordering: <why relaxed is sound>`
+/// comment — the PR 5 memory-ordering argument, machine-checked.
+fn atomics_ordering(
+    path: &str,
+    model: &SourceModel,
+    out: &mut Vec<Finding>,
+) {
+    for i in 0..model.n_lines() {
+        if model.test_mask[i] {
+            continue;
+        }
+        if find_token(&model.lines[i].code, "Ordering::Relaxed")
+            && !annotated(model, i, "ordering:")
+        {
+            push(
+                out,
+                path,
+                model,
+                i,
+                "atomics-ordering",
+                "Ordering::Relaxed without an `ordering:` justification \
+                 comment"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------- 5 determinism
+
+/// Hash-order iteration is the classic way bitwise determinism dies:
+/// in `placement/`, `cluster/` and `moe/exec.rs`, iterating a
+/// `HashMap`/`HashSet` binding is flagged unless annotated
+/// `det-ok: <reason>`. Keyed lookups are fine — only iteration order is
+/// nondeterministic.
+fn determinism(path: &str, model: &SourceModel, out: &mut Vec<Finding>) {
+    let in_scope = path.contains("placement/")
+        || path.contains("cluster/")
+        || path.ends_with("moe/exec.rs");
+    if !in_scope {
+        return;
+    }
+    // Pass 1: names bound to hash collections (lets and struct fields).
+    let mut names: Vec<String> = Vec::new();
+    for i in 0..model.n_lines() {
+        let code = &model.lines[i].code;
+        if !(code.contains("HashMap") || code.contains("HashSet")) {
+            continue;
+        }
+        if let Some(name) = hash_binding_name(code) {
+            if !names.contains(&name) {
+                names.push(name);
+            }
+        }
+    }
+    // Pass 2: iteration over those names.
+    const ITER_CALLS: &[&str] = &[
+        ".iter()",
+        ".iter_mut()",
+        ".keys()",
+        ".values()",
+        ".values_mut()",
+        ".into_iter()",
+        ".drain(",
+    ];
+    for i in 0..model.n_lines() {
+        if model.test_mask[i] {
+            continue;
+        }
+        let code = &model.lines[i].code;
+        for name in &names {
+            let called = ITER_CALLS.iter().any(|call| {
+                find_token(code, &format!("{name}{call}"))
+            });
+            let for_loop = code.contains("for ")
+                && code.contains(" in ")
+                && code
+                    .split(" in ")
+                    .nth(1)
+                    .is_some_and(|rhs| find_token(rhs, name));
+            if (called || for_loop) && !annotated(model, i, "det-ok:") {
+                push(
+                    out,
+                    path,
+                    model,
+                    i,
+                    "determinism",
+                    format!(
+                        "iteration over hash collection `{name}` in a \
+                         determinism-critical module (annotate \
+                         `det-ok: <reason>` if order cannot leak into \
+                         outputs)"
+                    ),
+                );
+                break;
+            }
+        }
+    }
+}
+
+/// The identifier a `HashMap`/`HashSet` is bound to on this line, if the
+/// line declares one: `let [mut] NAME: HashMap…`, `let [mut] NAME =
+/// HashMap::new…`, or a struct field `NAME: HashMap…`.
+fn hash_binding_name(code: &str) -> Option<String> {
+    let trimmed = code.trim();
+    if let Some(rest) = trimmed
+        .strip_prefix("let ")
+        .map(|r| r.strip_prefix("mut ").unwrap_or(r))
+    {
+        let name: String =
+            rest.chars().take_while(|&c| is_ident(c)).collect();
+        if !name.is_empty() {
+            return Some(name);
+        }
+    }
+    // Struct field / typed binding: the identifier directly before the
+    // `:` that precedes the hash type.
+    let hash_pos = code.find("HashMap").or_else(|| code.find("HashSet"))?;
+    let before = &code[..hash_pos];
+    let colon = before.rfind(':')?;
+    // `::` (e.g. `std::collections::HashMap`) is a path, not a binding.
+    if before[..colon].ends_with(':') || before[colon + 1..].contains(':')
+    {
+        return None;
+    }
+    let name: String = before[..colon]
+        .trim_end()
+        .chars()
+        .rev()
+        .take_while(|&c| is_ident(c))
+        .collect::<String>()
+        .chars()
+        .rev()
+        .collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(path: &str, src: &str) -> Vec<Finding> {
+        lint_file(path, &SourceModel::parse(src))
+    }
+
+    fn lints(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.lint).collect()
+    }
+
+    // -- unsafe-audit ---------------------------------------------------
+
+    #[test]
+    fn unsafe_outside_allowlist_is_flagged() {
+        let f = run(
+            "src/moe/exec.rs",
+            "// SAFETY: justified but misplaced\nlet p = unsafe { *q };\n",
+        );
+        assert_eq!(lints(&f), vec!["unsafe-audit"]);
+        assert!(f[0].message.contains("allowlist"));
+        assert_eq!(f[0].line, 2);
+        assert!(f[0].snippet.contains("unsafe"));
+    }
+
+    #[test]
+    fn unsafe_without_safety_comment_is_flagged() {
+        let f = run(
+            "src/util/pool.rs",
+            "fn f() {\n    let p = unsafe { *q };\n}\n",
+        );
+        assert_eq!(lints(&f), vec!["unsafe-audit"]);
+        assert!(f[0].message.contains("SAFETY"));
+    }
+
+    #[test]
+    fn safety_comment_above_or_inline_passes() {
+        assert!(run(
+            "src/util/pool.rs",
+            "// SAFETY: disjoint indices, fenced.\n// Second line of argument.\nlet p = unsafe { *q };\n",
+        )
+        .is_empty());
+        assert!(run(
+            "src/util/pool.rs",
+            "let p = unsafe { *q }; // SAFETY: disjoint\n",
+        )
+        .is_empty());
+        // A blank line between comment and site breaks adjacency.
+        assert_eq!(
+            run(
+                "src/util/pool.rs",
+                "// SAFETY: stale\n\nlet p = unsafe { *q };\n",
+            )
+            .len(),
+            1
+        );
+    }
+
+    #[test]
+    fn unsafe_in_strings_comments_and_tests_is_ignored() {
+        assert!(run(
+            "src/moe/exec.rs",
+            "let s = \"unsafe\"; // unsafe is discussed here only\n/* unsafe */\n#[cfg(test)]\nmod tests {\n    fn t() { let p = unsafe { *q }; }\n}\n",
+        )
+        .is_empty());
+    }
+
+    // -- no-alloc -------------------------------------------------------
+
+    #[test]
+    fn alloc_in_region_is_flagged_each_pattern() {
+        for line in [
+            "let v = Vec::new();",
+            "let v = vec![0; n];",
+            "let v = xs.to_vec();",
+            "let b = Box::new(f);",
+            "let s = String::from(x);",
+            "let c = arc.clone();",
+        ] {
+            let src = format!(
+                "// lint: no-alloc\n{line}\n// lint: end\n"
+            );
+            let f = run("src/moe/arena.rs", &src);
+            assert_eq!(lints(&f), vec!["no-alloc"], "missed: {line}");
+        }
+    }
+
+    #[test]
+    fn alloc_ok_annotation_suppresses() {
+        let src = "// lint: no-alloc\n// alloc-ok: growth path, counted by the arena\nlet v = Vec::new();\nlet w = xs.to_vec(); // alloc-ok: cold init\n// lint: end\n";
+        assert!(run("src/moe/arena.rs", src).is_empty());
+    }
+
+    #[test]
+    fn alloc_outside_region_is_fine() {
+        assert!(run("src/moe/arena.rs", "let v = Vec::new();\n").is_empty());
+    }
+
+    #[test]
+    fn alloc_in_region_string_or_test_is_ignored() {
+        let src = "// lint: no-alloc\nlet s = \"Vec::new() vec![]\";\n#[cfg(test)]\nfn t() { let v = Vec::new(); }\n// lint: end\n";
+        assert!(run("src/moe/arena.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unbalanced_region_markers_are_findings() {
+        let f = run("src/moe/arena.rs", "// lint: no-alloc\nlet x = 1;\n");
+        assert_eq!(lints(&f), vec!["no-alloc"]);
+        assert!(f[0].message.contains("never closed"));
+        let f = run("src/moe/arena.rs", "let x = 1;\n// lint: end\n");
+        assert!(f[0].message.contains("without an open region"));
+    }
+
+    #[test]
+    fn into_vec_is_not_to_vec() {
+        let src = "// lint: no-alloc\nlet v = xs.into_vec();\n// lint: end\n";
+        assert!(run("src/moe/arena.rs", src).is_empty());
+    }
+
+    // -- spawn-sites ----------------------------------------------------
+
+    #[test]
+    fn spawns_outside_allowlist_are_flagged() {
+        for pat in [
+            "std::thread::spawn(|| {});",
+            "let b = std::thread::Builder::new();",
+            "std::thread::scope(|s| {});",
+        ] {
+            let f = run("src/moe/exec.rs", &format!("{pat}\n"));
+            assert_eq!(lints(&f), vec!["spawn-sites"], "missed: {pat}");
+        }
+    }
+
+    #[test]
+    fn spawns_in_allowlisted_files_pass() {
+        for path in [
+            "src/util/pool.rs",
+            "src/util/threadpool.rs",
+            "src/cluster/worker.rs",
+            "src/serve/service.rs",
+        ] {
+            assert!(run(path, "std::thread::spawn(|| {});\n").is_empty());
+        }
+    }
+
+    #[test]
+    fn spawn_in_test_code_is_ignored() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() { std::thread::spawn(|| {}); }\n}\n";
+        assert!(run("src/serve/handle.rs", src).is_empty());
+    }
+
+    // -- atomics-ordering -----------------------------------------------
+
+    #[test]
+    fn relaxed_without_justification_is_flagged() {
+        let f = run(
+            "src/util/logging.rs",
+            "LEVEL.store(1, Ordering::Relaxed);\n",
+        );
+        assert_eq!(lints(&f), vec!["atomics-ordering"]);
+    }
+
+    #[test]
+    fn relaxed_with_ordering_comment_passes() {
+        assert!(run(
+            "src/util/logging.rs",
+            "// ordering: monotone counter, no dependent reads.\nLEVEL.store(1, Ordering::Relaxed);\nX.load(Ordering::Relaxed); // ordering: hint only\n",
+        )
+        .is_empty());
+        // Stronger orderings need no annotation.
+        assert!(run(
+            "src/serve/handle.rs",
+            "X.load(Ordering::Acquire);\nY.store(1, Ordering::Release);\n",
+        )
+        .is_empty());
+    }
+
+    // -- determinism ----------------------------------------------------
+
+    #[test]
+    fn hash_iteration_in_scope_is_flagged() {
+        for iter in [
+            "for (k, v) in &index {",
+            "for k in index.keys() {",
+            "index.iter().for_each(|_| {});",
+            "let v: Vec<_> = index.values().collect();",
+            "index.drain();",
+        ] {
+            let src = format!(
+                "let index: std::collections::HashMap<usize, usize> = make();\n{iter}\n"
+            );
+            let f = run("src/cluster/worker.rs", &src);
+            assert_eq!(lints(&f), vec!["determinism"], "missed: {iter}");
+        }
+    }
+
+    #[test]
+    fn hash_lookup_is_not_iteration() {
+        let src = "let index: std::collections::HashMap<usize, usize> = make();\nlet i = index[&expert];\nlet j = index.get(&expert);\n";
+        assert!(run("src/cluster/worker.rs", src).is_empty());
+    }
+
+    #[test]
+    fn det_ok_annotation_suppresses() {
+        let src = "let seen: HashSet<usize> = HashSet::new();\n// det-ok: result is re-sorted before use\nfor s in seen.iter() {\n}\n";
+        assert!(run("src/placement/planner.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hash_iteration_out_of_scope_is_ignored() {
+        let src = "let m: HashMap<u32, u32> = HashMap::new();\nfor (k, v) in &m {\n}\n";
+        assert!(run("src/training/data.rs", src).is_empty());
+        assert!(run("src/serve/service.rs", src).is_empty());
+    }
+
+    #[test]
+    fn struct_field_hash_bindings_are_tracked() {
+        let src = "struct S {\n    cache: HashMap<u32, u32>,\n}\nfn f(s: &S) {\n    for k in s.cache.keys() {\n    }\n}\n";
+        let f = run("src/placement/profile.rs", src);
+        assert_eq!(lints(&f), vec!["determinism"]);
+    }
+
+    #[test]
+    fn btreemap_iteration_is_fine() {
+        let src = "let m: BTreeMap<u32, u32> = BTreeMap::new();\nfor (k, v) in &m {\n}\n";
+        assert!(run("src/placement/planner.rs", src).is_empty());
+    }
+}

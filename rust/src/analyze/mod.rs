@@ -1,0 +1,170 @@
+//! Self-hosted static analysis (DESIGN.md §14) — `moepp analyze`.
+//!
+//! A dependency-free lint pass that machine-checks the invariants this
+//! codebase argues for in prose: unsafety confined and justified,
+//! steady-state paths allocation-free, thread creation centralised,
+//! relaxed atomics justified, and hash-order iteration kept out of the
+//! determinism-critical modules. The analyzer runs over its own crate
+//! in CI (`./ci.sh` invokes `moepp analyze` against `rust/src/`), so
+//! every invariant holds for the analyzer itself too.
+//!
+//! Structure:
+//!
+//! * [`lexer::SourceModel`] — a hand-rolled lexical projection of each
+//!   file into per-line code / comment channels plus a `#[cfg(test)]`
+//!   mask, so lints never fire inside literals, comments or test
+//!   fixtures;
+//! * [`lints`] — the five lints and their annotation grammar
+//!   (`SAFETY:`, `alloc-ok:`, `ordering:`, `det-ok:`, and the
+//!   `lint: no-alloc` / `lint: end` region markers);
+//! * [`analyze_dir`] — the recursive `.rs` walker, deterministic
+//!   (paths sorted) so finding order is stable run to run.
+//!
+//! Exit contract: `moepp analyze` prints one diagnostic per finding
+//! (`file:line: [lint] message` plus the offending source line) and
+//! exits nonzero iff any finding exists; `--json` emits the findings
+//! as a machine-readable array instead.
+
+pub mod lexer;
+pub mod lints;
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+pub use lints::{SPAWN_ALLOWLIST, UNSAFE_ALLOWLIST};
+
+/// One diagnostic: where, which lint, why, and the offending line.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Path relative to the analyzed root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub lint: &'static str,
+    pub message: String,
+    /// The original source line, trimmed.
+    pub snippet: String,
+}
+
+impl Finding {
+    pub fn render(&self) -> String {
+        format!(
+            "{}:{}: [{}] {}\n    {}",
+            self.file, self.line, self.lint, self.message, self.snippet
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("file", Json::str(self.file.as_str())),
+            ("line", Json::num(self.line as f64)),
+            ("lint", Json::str(self.lint)),
+            ("message", Json::str(self.message.as_str())),
+            ("snippet", Json::str(self.snippet.as_str())),
+        ])
+    }
+}
+
+/// Render a finding list as a JSON array (the `--json` output).
+pub fn findings_json(findings: &[Finding]) -> Json {
+    Json::Arr(findings.iter().map(Finding::to_json).collect())
+}
+
+/// Lint one file's text. `rel_path` should be repo-relative with `/`
+/// separators — the allowlists match on its suffix.
+pub fn analyze_source(rel_path: &str, text: &str) -> Vec<Finding> {
+    let model = lexer::SourceModel::parse(text);
+    lints::lint_file(rel_path, &model)
+}
+
+/// Recursively lint every `.rs` file under `root`. Files are visited
+/// in sorted path order so output is deterministic.
+pub fn analyze_dir(root: &Path) -> Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for path in &files {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        out.extend(analyze_source(&rel, &text));
+    }
+    Ok(out)
+}
+
+fn collect_rs_files(
+    dir: &Path,
+    out: &mut Vec<std::path::PathBuf>,
+) -> Result<()> {
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("listing {}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_source_has_no_findings() {
+        let src = "fn main() {\n    let v = vec![1, 2];\n    println!(\"{v:?}\");\n}\n";
+        assert!(analyze_source("src/bin/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn findings_render_and_serialize() {
+        let src = "let p = unsafe { *q };\n";
+        let f = analyze_source("src/moe/exec.rs", src);
+        assert_eq!(f.len(), 2, "allowlist + missing SAFETY");
+        let human = f[0].render();
+        assert!(human.contains("src/moe/exec.rs:1:"));
+        assert!(human.contains("[unsafe-audit]"));
+        assert!(human.contains("unsafe { *q }"));
+        let js = findings_json(&f).to_string();
+        let parsed = Json::parse(&js).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(
+            arr[0].get("file").unwrap().as_str(),
+            Some("src/moe/exec.rs")
+        );
+        assert_eq!(arr[0].get("line").unwrap().as_usize(), Some(1));
+        assert_eq!(
+            arr[0].get("lint").unwrap().as_str(),
+            Some("unsafe-audit")
+        );
+    }
+
+    #[test]
+    fn analyze_dir_walks_and_relativizes() {
+        let dir = std::env::temp_dir().join("moepp_analyze_walk_test");
+        let sub = dir.join("moe");
+        std::fs::create_dir_all(&sub).unwrap();
+        std::fs::write(
+            sub.join("exec.rs"),
+            "std::thread::spawn(|| {});\n",
+        )
+        .unwrap();
+        std::fs::write(dir.join("clean.rs"), "fn ok() {}\n").unwrap();
+        std::fs::write(dir.join("notes.txt"), "unsafe\n").unwrap();
+        let findings = analyze_dir(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].file, "moe/exec.rs");
+        assert_eq!(findings[0].lint, "spawn-sites");
+    }
+}

@@ -14,7 +14,9 @@
 //! expert comes from the topology's [`PlacementPlan`] — a replica *set*
 //! per expert (round-robin single replicas when none is installed). A
 //! replicated expert's token micro-batch is split across its replicas in
-//! deterministic contiguous slices. Placement is pure layout — the
+//! deterministic contiguous slices, sized by the replica devices' speed
+//! weights (a 2× device takes ~2× the rows). Placement is pure layout —
+//! the
 //! combine stage scatter-adds expert outputs in a canonical order that
 //! depends only on the device count, and within an expert every token is
 //! a distinct output row — so *any* plan, replicated or not, produces
@@ -31,7 +33,9 @@ use crate::moe::arena::{ExecArena, FfnArena};
 use crate::moe::balance::load_cv;
 use crate::moe::exec::{self, ExpertBackend, FfnLayerReport, ForwardStats};
 use crate::moe::weights::StackWeights;
-use crate::placement::{MigrationPlan, PlacementPlan, Replanner};
+use crate::placement::{
+    speed_weight, weighted_share, MigrationPlan, PlacementPlan, Replanner,
+};
 use crate::tensor::ops::axpy;
 use crate::tensor::Tensor;
 use crate::util::pool::{ExecPool, Executor, TaskHandle};
@@ -498,19 +502,29 @@ impl ExpertBackend for ClusterBackend<'_> {
         for batch in &plan.ffn_batches {
             let n_rows = batch.tokens.len();
             let n_rep = self.topo.ffn_replica_count(batch.expert);
-            // Deterministic contiguous split across the expert's replica
-            // enumeration: same ranges as `placement::replica_slices`,
-            // computed inline to stay allocation-free. Depends only on
-            // (n_rows, n_rep) — never on workers or partitions.
-            let base = n_rows / n_rep;
-            let extra = n_rows % n_rep;
+            // Deterministic speed-weighted contiguous split across the
+            // expert's replica enumeration: same boundaries as
+            // `placement::replica_slices` fed the replica devices'
+            // `speed_weight`s, computed inline to stay allocation-free.
+            // Depends only on (n_rows, replica devices' speeds) — never
+            // on workers or partitions.
+            let mut total_w = 0u64;
+            for j in 0..n_rep {
+                let dev = self.topo.ffn_replica(batch.expert, j);
+                total_w += speed_weight(self.topo.speed(dev));
+            }
+            let mut prefix_w = 0u64;
             let mut start = 0usize;
             for j in 0..n_rep {
-                let len = base + usize::from(j < extra);
-                if len == 0 {
-                    continue; // more replicas than tokens
-                }
                 let dev = self.topo.ffn_replica(batch.expert, j);
+                let w = speed_weight(self.topo.speed(dev));
+                let len =
+                    weighted_share(n_rows as u64, total_w, prefix_w, w)
+                        as usize;
+                prefix_w += w;
+                if len == 0 {
+                    continue; // slow replica or more replicas than tokens
+                }
                 let slice = &batch.tokens[start..start + len];
                 device_load[dev] += len;
                 let mut xb = arena.wire.take(len, d);
@@ -746,6 +760,54 @@ mod tests {
         sim.apply_placement(&full).unwrap();
         let (y_full, _) = sim.forward(&x);
         assert_eq!(y_before.data, y_full.data);
+    }
+
+    #[test]
+    fn speed_weighted_split_shifts_load_but_not_outputs() {
+        // Heterogeneous fleet: the same replicated plan sends the fast
+        // device a larger contiguous slice of each replicated expert's
+        // micro-batch, but speeds are pure scheduling — outputs stay
+        // bit-identical to the uniform-fleet cluster.
+        let cfg = MoeConfig::preset("test"); // 4 FFN experts
+        let plan = PlacementPlan::from_replicas(
+            vec![vec![0, 1]; 4],
+            2,
+        )
+        .unwrap();
+        let mut uniform = ClusterSim::new(
+            cfg.clone(),
+            Topology::new(2).with_placement(plan.clone()),
+            11,
+        );
+        let mut skewed = ClusterSim::new(
+            cfg.clone(),
+            Topology::new(2)
+                .with_device_speeds(vec![3.0, 1.0])
+                .with_placement(plan),
+            11,
+        );
+        let mut rng = Rng::new(5);
+        let x = Tensor::randn(&mut rng, &[40, cfg.d_model], 1.0);
+        let (y_uni, rep_uni) = uniform.forward(&x);
+        let (y_skw, rep_skw) = skewed.forward(&x);
+        assert_eq!(y_uni.data, y_skw.data);
+        let (mut fast_uni, mut fast_skw) = (0usize, 0usize);
+        for (a, b) in rep_uni.layers.iter().zip(&rep_skw.layers) {
+            // The split moves rows toward the fast device without
+            // losing any: per-layer totals match, and the ~3/4 share
+            // never leaves the fast device with fewer rows.
+            assert_eq!(
+                a.device_load.iter().sum::<usize>(),
+                b.device_load.iter().sum::<usize>()
+            );
+            assert!(b.device_load[0] >= a.device_load[0]);
+            fast_uni += a.device_load[0];
+            fast_skw += b.device_load[0];
+        }
+        assert!(
+            fast_skw > fast_uni,
+            "fast device got {fast_skw} rows vs uniform {fast_uni}"
+        );
     }
 
     #[test]

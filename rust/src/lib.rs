@@ -36,6 +36,7 @@
 //! The shared execution layer all forward paths delegate to lives in
 //! [`moe::exec`] — see DESIGN.md §7 for the backend contract.
 
+pub mod analyze;
 pub mod bench;
 pub mod cluster;
 pub mod config;

@@ -7,6 +7,7 @@
 //!   cluster   --preset P --devices A,B,..   expert-parallel deployment sim
 //!   placement --devices N --profile skewed  plan/score/compare FFN placement
 //!   bench     forward|table1|table3|table3-quality|table4|table5|table6|fig3
+//!   analyze   [--json] [path]               static lints over the crate
 //!   analyze   load|tokens|gating            figures 4 / 5 / 6
 //!
 //! Reports are printed and mirrored under reports/; sweeps also emit
@@ -645,11 +646,13 @@ fn cmd_bench(args: &Args) -> Result<()> {
 // ---------------------------------------------------------------- analyze
 
 fn cmd_analyze(args: &Args) -> Result<()> {
-    let which = args
-        .positional
-        .first()
-        .map(String::as_str)
-        .unwrap_or("load");
+    let which = args.positional.first().map(String::as_str);
+    // Anything that is not a figure name runs the static analyzer
+    // (DESIGN.md §14): `moepp analyze [--json] [path]`.
+    if !matches!(which, Some("load" | "tokens" | "gating")) {
+        return cmd_lint(args);
+    }
+    let which = which.unwrap();
     let preset = args.get_or("preset", "sm-8e");
     let cfg = MoeConfig::preset(preset);
     match which {
@@ -746,4 +749,50 @@ fn cmd_analyze(args: &Args) -> Result<()> {
         }
         other => anyhow::bail!("unknown analysis '{other}'"),
     }
+}
+
+/// `moepp analyze [--json] [path]` — run the self-hosted static lints
+/// (moepp::analyze, DESIGN.md §14) and exit nonzero on any finding.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let json = args.has("json") || args.get("json").is_some();
+    // The CLI parser treats a value after a bare switch as its value,
+    // so `moepp analyze --json src` lands "src" in get("json"); accept
+    // it as the path alongside the plain positional spelling.
+    let path = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.get("json").filter(|v| !v.is_empty()))
+        .map(std::path::PathBuf::from);
+    let root = match path {
+        Some(p) => p,
+        // ci.sh runs from rust/; the repo root works too.
+        None => ["src", "rust/src"]
+            .iter()
+            .map(std::path::PathBuf::from)
+            .find(|p| p.is_dir())
+            .context("no src/ or rust/src/ to analyze; pass a path")?,
+    };
+    let findings = moepp::analyze::analyze_dir(&root)?;
+    if json {
+        println!("{}", moepp::analyze::findings_json(&findings));
+    } else {
+        for f in &findings {
+            println!("{}", f.render());
+        }
+        if findings.is_empty() {
+            info!("analyze: clean ({})", root.display());
+        }
+    }
+    if !findings.is_empty() {
+        if !json {
+            eprintln!(
+                "analyze: {} finding(s) in {}",
+                findings.len(),
+                root.display()
+            );
+        }
+        std::process::exit(1);
+    }
+    Ok(())
 }

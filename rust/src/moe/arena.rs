@@ -76,6 +76,7 @@ impl ExecArena {
         self.y_growths + self.route.growths + self.ffn.growths()
     }
 
+    // lint: no-alloc — steady-state reuse: reshape-in-place only.
     /// Shape `y` to `[t, d]` and zero it for the next layer.
     pub(crate) fn prepare_y(&mut self, t: usize, d: usize) {
         if self.y.reshape_in_place(&[t, d]) {
@@ -92,6 +93,7 @@ impl ExecArena {
     ) -> (&Routing, &mut Tensor, &mut FfnArena) {
         (&self.route.routing, &mut self.y, &mut self.ffn)
     }
+    // lint: end
 }
 
 // ------------------------------------------------------------- routing
@@ -118,6 +120,7 @@ impl RouteArena {
         }
     }
 
+    // lint: no-alloc — per-layer routing reuses the arena's buffers.
     /// Route one layer into the reused buffers. `use_prev` must be false
     /// for the first layer of a stack — the carry holds the *previous
     /// batch's* last scores until then.
@@ -145,6 +148,7 @@ impl RouteArena {
     pub(crate) fn end_layer(&mut self) {
         std::mem::swap(&mut self.prev_scores, &mut self.routing.scores);
     }
+    // lint: end
 }
 
 // ----------------------------------------------------------- FFN stage
@@ -236,6 +240,8 @@ impl TensorPool {
         TensorPool { free: Vec::new(), growths: 0 }
     }
 
+    // lint: no-alloc — take/put recycle wire buffers; growth is counted
+    // by `reshape_in_place` and pinned to zero at steady state.
     /// Pop a pooled tensor (or start an empty one) and shape it to
     /// `[rows, cols]`. Contents are unspecified — callers that hand the
     /// buffer to an accumulating kernel must zero it first.
@@ -269,6 +275,7 @@ pub(crate) fn gather_rows(
         gather.data[i * d..(i + 1) * d].copy_from_slice(h.row(tok));
     }
 }
+// lint: end
 
 /// One (expert micro-batch, row range) unit of FFN work.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -301,6 +308,8 @@ impl ShardBuf {
         }
     }
 
+    // lint: no-alloc — per-shard reuse: reshape/resize against warmed
+    // capacity only, every growth counted.
     /// Disjoint borrows for the kernel call: gather input (shared),
     /// output block and scratch (exclusive).
     pub(crate) fn parts(
@@ -335,6 +344,7 @@ impl ShardBuf {
         }
         self.scratch.f_tile = f_tile;
     }
+    // lint: end
 }
 
 #[cfg(test)]

@@ -239,6 +239,8 @@ pub trait ExpertBackend {
     ) -> Result<FfnLayerReport>;
 }
 
+// lint: no-alloc — the steady-state forward path: from here to the test
+// module, per-token work must not touch the allocator (DESIGN.md §11).
 /// The single implementation of zero-computation expert application
 /// (paper Sec. 3.1): zero discards, copy adds `g*x`, constant adds the
 /// learned convex mix. ZC experts always run inline on the token's home
@@ -277,6 +279,8 @@ pub fn layer_stats(
 ) -> LayerStats {
     let ffn_assignments = plan.ffn_assignments();
     LayerStats {
+        // alloc-ok: per-layer stats snapshot returned to the caller —
+        // part of the output, not the per-token loop.
         expert_counts: plan.expert_counts.clone(),
         dropped: plan.dropped.len(),
         ffn_assignments,
@@ -353,6 +357,8 @@ pub fn forward_stack(
         ..Default::default()
     };
     let mut execs = Vec::with_capacity(weights.layers.len());
+    // alloc-ok: the residual stream is the returned output tensor —
+    // one clone per forward, sized once.
     let mut h = x.clone();
     for (li, layer) in weights.layers.iter().enumerate() {
         let lcfg = &layer_cfgs[li];
@@ -379,6 +385,7 @@ pub fn forward_stack(
         stats.ffn_s += ex.ffn_s;
         stats.zc_s += ex.zc_s;
         stats.expert_forward_s += ex.ffn_s + ex.zc_s;
+        // alloc-ok: stats are caller-visible output, not hot-loop state.
         stats.per_layer.push(ex.stats.clone());
         execs.push(ex);
 
@@ -673,6 +680,7 @@ impl ExpertBackend for NativeBatched<'_> {
         Ok(FfnLayerReport::default())
     }
 }
+// lint: end
 
 #[cfg(test)]
 mod tests {

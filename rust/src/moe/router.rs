@@ -85,6 +85,8 @@ pub fn route(
 /// whenever a buffer had to grow (arena accounting, DESIGN.md §11).
 /// Numerically identical to [`route`] — same matmuls, same softmax, and
 /// `topk_into` preserves the exact `lax.top_k` order.
+// lint: no-alloc — steady-state routing: reshape-in-place and the parked
+// top-k pool only; every growth is counted.
 pub fn route_into(
     x: &Tensor,
     weights: &RouterWeights,
@@ -125,6 +127,7 @@ pub fn route_into(
         topk_into(probs.row(i), k, tk);
     }
 }
+// lint: end
 
 #[cfg(test)]
 mod tests {

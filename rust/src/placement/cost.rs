@@ -10,9 +10,10 @@
 //! tokens are sharded evenly across devices, so `1/n_devices` of a
 //! replica's slice is local and the rest arrives over the interconnect.
 //! A multi-replica expert's load splits across its replicas with the
-//! exact integral [`replica_share`] the runtime dispatch uses, so the
-//! model and the simulator agree on per-device work. Predicted makespan
-//! is `sum_l (max_d compute_d + comm_l)`.
+//! exact integral speed-weighted share ([`CostModel::device_share`],
+//! built on [`weighted_share`] over [`speed_weight`]s) the runtime
+//! dispatch uses, so the model and the simulator agree on per-device
+//! work. Predicted makespan is `sum_l (max_d compute_d + comm_l)`.
 //!
 //! This is an *approximation* of [`SimReport::modeled_makespan`], not an
 //! identity: the simulator charges comm for each token's actual
@@ -30,7 +31,7 @@ use crate::cluster::topology::{LinkModel, Topology};
 use crate::config::MoeConfig;
 use crate::moe::balance::load_cv;
 
-use super::plan::{replica_share, PlacementPlan};
+use super::plan::{speed_weight, weighted_share, PlacementPlan};
 use super::profile::LoadProfile;
 
 /// Nominal FFN throughput of one simulated device. Only the *ratio* of
@@ -100,15 +101,39 @@ impl CostModel {
         self.link.alpha_s + self.link.beta_s_per_byte * bytes as f64
     }
 
-    /// Rounded uniform-home share bytes of replica `j` of an expert with
-    /// total load `load` split `r` ways. The single expression both
-    /// [`CostModel::score`] and [`DeltaScorer`] price traffic with —
-    /// shared so they stay bitwise-equal. For `r == 1` this reduces to
-    /// the historical `round(load / n_dev * token_bytes)`.
-    fn share_bytes(&self, load: u64, r: usize, j: usize, n_dev: usize)
+    /// Integer split weight of device `d` — the quantised relative
+    /// speed the runtime dispatch feeds [`crate::placement::replica_slices`],
+    /// shared here so planner shares match runtime slices exactly.
+    pub fn replica_weight(&self, device: usize) -> u64 {
+        speed_weight(self.speed(device))
+    }
+
+    /// Integral load share of replica `j` of the (sorted) replica device
+    /// list `devs` under speed-weighted apportionment — exactly
+    /// `replica_slices(load, weights)[j].len()` for the same devices.
+    pub fn device_share(&self, load: u64, devs: &[usize], j: usize)
         -> u64 {
-        let share = replica_share(load, r, j) as f64 / n_dev as f64;
-        (share * self.token_bytes as f64).round() as u64
+        let total: u64 =
+            devs.iter().map(|&d| self.replica_weight(d)).sum();
+        let prefix: u64 =
+            devs[..j].iter().map(|&d| self.replica_weight(d)).sum();
+        weighted_share(load, total, prefix, self.replica_weight(devs[j]))
+    }
+
+    /// Rounded uniform-home bytes of an integral assignment `share`. The
+    /// single expression both [`CostModel::score`] and [`DeltaScorer`]
+    /// price traffic with — shared so they stay bitwise-equal. For a
+    /// single replica this reduces to the historical
+    /// `round(load / n_dev * token_bytes)`.
+    fn bytes_of_share(&self, share: u64, n_dev: usize) -> u64 {
+        (share as f64 / n_dev as f64 * self.token_bytes as f64).round()
+            as u64
+    }
+
+    /// [`Self::bytes_of_share`] of replica `j`'s [`Self::device_share`].
+    fn share_bytes(&self, load: u64, devs: &[usize], j: usize,
+        n_dev: usize) -> u64 {
+        self.bytes_of_share(self.device_share(load, devs, j), n_dev)
     }
 
     /// Score `plan` against `profile` (accumulated over its batches).
@@ -130,9 +155,9 @@ impl CostModel {
             let loads = profile.layer(l);
             let mut device_load = vec![0u64; n_dev];
             for (e, &load) in loads.iter().enumerate() {
-                let r = plan.replica_count(e);
-                for (j, &d) in plan.replicas(e).iter().enumerate() {
-                    device_load[d] += replica_share(load, r, j);
+                let reps = plan.replicas(e);
+                for (j, &d) in reps.iter().enumerate() {
+                    device_load[d] += self.device_share(load, reps, j);
                 }
             }
             // Bottleneck device in *seconds*: a fast device absorbs more
@@ -154,9 +179,9 @@ impl CostModel {
                 if load == 0 {
                     continue;
                 }
-                let r = plan.replica_count(e);
-                for (j, &dev) in plan.replicas(e).iter().enumerate() {
-                    let bytes = self.share_bytes(load, r, j, n_dev);
+                let reps = plan.replicas(e);
+                for (j, &dev) in reps.iter().enumerate() {
+                    let bytes = self.share_bytes(load, reps, j, n_dev);
                     if bytes == 0 {
                         continue;
                     }
@@ -222,9 +247,10 @@ pub enum Edit {
 /// (the byte total of device `d`'s resident replica slices) for
 /// `h != d`, and u64 sums are order-independent. Replica-set changes
 /// re-split an expert's load, so an edit's per-device delta subtracts
-/// the expert's [`replica_share`] contributions under the old set and
-/// adds them under the new set — index arithmetic over the sorted set,
-/// no allocation per evaluation. So `eval` equals a full `score()` of
+/// the expert's speed-weighted [`CostModel::device_share`] contributions
+/// under the old set and adds them under the new set — weighted prefix
+/// sums over the sorted set, no allocation per evaluation. So `eval`
+/// equals a full `score()` of
 /// the mutated plan **bitwise**, which the planner property test pins
 /// down across moves, swaps, replications and drops.
 pub struct DeltaScorer<'a> {
@@ -260,12 +286,12 @@ impl<'a> DeltaScorer<'a> {
         let mut device_bytes = vec![vec![0u64; n_dev]; n_layers];
         for l in 0..n_layers {
             for (e, &load) in profile.layer(l).iter().enumerate() {
-                let r = plan.replica_count(e);
-                for (j, &d) in plan.replicas(e).iter().enumerate() {
-                    device_load[l][d] += replica_share(load, r, j);
+                let reps = plan.replicas(e);
+                for (j, &d) in reps.iter().enumerate() {
+                    device_load[l][d] += cost.device_share(load, reps, j);
                     if load > 0 {
                         device_bytes[l][d] +=
-                            cost.share_bytes(load, r, j, n_dev);
+                            cost.share_bytes(load, reps, j, n_dev);
                     }
                 }
             }
@@ -381,60 +407,68 @@ impl<'a> DeltaScorer<'a> {
             let load = self.profile.layer(l)[expert];
             for (j, &d) in old.iter().enumerate() {
                 self.device_load[l][d] -=
-                    replica_share(load, old.len(), j);
+                    self.cost.device_share(load, old, j);
                 if load > 0 {
                     self.device_bytes[l][d] -=
-                        self.cost.share_bytes(load, old.len(), j, n_dev);
+                        self.cost.share_bytes(load, old, j, n_dev);
                 }
             }
             for (j, &d) in new.iter().enumerate() {
                 self.device_load[l][d] +=
-                    replica_share(load, new.len(), j);
+                    self.cost.device_share(load, new, j);
                 if load > 0 {
                     self.device_bytes[l][d] +=
-                        self.cost.share_bytes(load, new.len(), j, n_dev);
+                        self.cost.share_bytes(load, new, j, n_dev);
                 }
             }
         }
     }
 
     /// `expert`'s hypothetical (load, bytes) contribution delta on
-    /// device `dv` in layer `l` if `edit` were applied — pure index
-    /// arithmetic over the sorted replica set, no allocation. `Swap` is
+    /// device `dv` in layer `l` if `edit` were applied — weighted prefix
+    /// sums over the sorted replica set, no allocation. `Swap` is
     /// expanded into two `Move`s before reaching here.
     fn edit_delta(&self, l: usize, edit: Edit, dv: usize) -> (i64, i64) {
         let n_dev = self.plan.n_devices();
-        let (expert, reps, r) = match edit {
+        let (expert, reps) = match edit {
             Edit::Move { expert, .. }
             | Edit::Replicate { expert, .. }
             | Edit::Drop { expert, .. } => {
-                let reps = self.plan.replicas(expert);
-                (expert, reps, reps.len())
+                (expert, self.plan.replicas(expert))
             }
             Edit::Swap { .. } => {
                 unreachable!("swap is expanded into moves")
             }
         };
         let load = self.profile.layer(l)[expert];
-        let contrib = |r: usize, j: usize| -> (i64, i64) {
+        let wt = |d: usize| self.cost.replica_weight(d);
+        // Weight of the current set's first `k` replicas / whole set.
+        let prefix_w =
+            |k: usize| -> u64 { reps[..k].iter().map(|&d| wt(d)).sum() };
+        let total_cur = prefix_w(reps.len());
+        // (share, bytes) of a replica weighing `w` after `prefix` of
+        // `total` in a hypothetical enumeration — the same
+        // `weighted_share` the aggregates were built from.
+        let contrib = |total: u64, prefix: u64, w: u64| -> (i64, i64) {
+            let share = weighted_share(load, total, prefix, w);
             let bytes = if load > 0 {
-                self.cost.share_bytes(load, r, j, n_dev) as i64
+                self.cost.bytes_of_share(share, n_dev) as i64
             } else {
                 0
             };
-            (replica_share(load, r, j) as i64, bytes)
+            (share as i64, bytes)
         };
         // Contribution `dv` currently receives from this expert.
         let old = match reps.binary_search(&dv) {
-            Ok(j) => contrib(r, j),
+            Ok(j) => contrib(total_cur, prefix_w(j), wt(dv)),
             Err(_) => (0, 0),
         };
         // Contribution `dv` would receive under the edited replica set.
         let new = match edit {
             Edit::Move { to, .. } => {
-                debug_assert_eq!(r, 1);
+                debug_assert_eq!(reps.len(), 1);
                 if dv == to {
-                    contrib(1, 0)
+                    contrib(wt(to), 0, wt(to))
                 } else {
                     (0, 0)
                 }
@@ -443,13 +477,20 @@ impl<'a> DeltaScorer<'a> {
                 match reps.binary_search(&on) {
                     Ok(_) => old, // already present: no-op edit
                     Err(p) => {
+                        let total = total_cur + wt(on);
                         if dv == on {
-                            contrib(r + 1, p)
+                            contrib(total, prefix_w(p), wt(on))
                         } else {
                             match reps.binary_search(&dv) {
+                                // `on` slots in at p: replicas past it
+                                // gain its weight in their prefix.
+                                Ok(j) if j < p => {
+                                    contrib(total, prefix_w(j), wt(dv))
+                                }
                                 Ok(j) => contrib(
-                                    r + 1,
-                                    if j < p { j } else { j + 1 },
+                                    total,
+                                    prefix_w(j) + wt(on),
+                                    wt(dv),
                                 ),
                                 Err(_) => (0, 0),
                             }
@@ -461,14 +502,22 @@ impl<'a> DeltaScorer<'a> {
                 let p = reps
                     .binary_search(&on)
                     .expect("dropping a replica that does not exist");
-                debug_assert!(r > 1, "cannot drop the last replica");
+                debug_assert!(
+                    reps.len() > 1,
+                    "cannot drop the last replica"
+                );
+                let total = total_cur - wt(on);
                 if dv == on {
                     (0, 0)
                 } else {
                     match reps.binary_search(&dv) {
+                        Ok(j) if j < p => {
+                            contrib(total, prefix_w(j), wt(dv))
+                        }
                         Ok(j) => contrib(
-                            r - 1,
-                            if j < p { j } else { j - 1 },
+                            total,
+                            prefix_w(j) - wt(on),
+                            wt(dv),
                         ),
                         Err(_) => (0, 0),
                     }
@@ -677,6 +726,21 @@ mod tests {
             s_one.makespan_s
         );
         assert!(s_two.compute_s < s_one.compute_s);
+    }
+
+    #[test]
+    fn replica_split_is_speed_weighted() {
+        // A 3× device holding one of two replicas takes 3/4 of the hot
+        // expert's load — the model mirrors the runtime's weighted split.
+        let profile =
+            LoadProfile::from_counts(vec![vec![100, 0, 0, 0]]).unwrap();
+        let cost = model().with_device_speeds(vec![3.0, 1.0]);
+        let mut replicated = PlacementPlan::round_robin(4, 2);
+        replicated.add_replica(0, 1);
+        let s = cost.score(&replicated, &profile);
+        assert_eq!(s.device_assignments, vec![75, 25]);
+        assert_eq!(cost.device_share(100, &[0, 1], 0), 75);
+        assert_eq!(cost.device_share(100, &[0, 1], 1), 25);
     }
 
     #[test]

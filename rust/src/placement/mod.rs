@@ -10,8 +10,9 @@
 //! * [`plan::PlacementPlan`] — the FFN expert → device *replica set* map
 //!   (ZC experts are structurally replicated and never planned or
 //!   migrated). A multi-replica expert's token micro-batch is split
-//!   across its replicas in deterministic contiguous slices
-//!   ([`plan::replica_slices`] / [`plan::replica_share`]);
+//!   across its replicas in deterministic contiguous slices weighted by
+//!   per-device speed ([`plan::replica_slices`] / [`plan::replica_share`]
+//!   over [`plan::speed_weight`]s — a 2× device gets ~2× the rows);
 //! * [`profile::LoadProfile`] — observed per-layer per-expert token
 //!   loads, recovered exactly from [`ForwardStats`] capacity accounting;
 //! * [`cost::CostModel`] — α–β + per-assignment compute scoring of a
@@ -52,7 +53,8 @@ pub mod replan;
 
 pub use cost::{CostModel, DeltaScorer, Edit, PlanScore, DEVICE_FLOPS};
 pub use plan::{
-    replica_share, replica_slices, PlacementPlan, ReplicaDelta,
+    replica_share, replica_slices, speed_weight, weighted_share,
+    PlacementPlan, ReplicaDelta,
 };
 pub use planner::{Planner, Strategy};
 pub use profile::LoadProfile;

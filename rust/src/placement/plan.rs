@@ -14,7 +14,8 @@
 //! * a plan is pure *layout*: applying any valid plan never changes model
 //!   outputs — the cluster combine order is placement-independent and the
 //!   token → replica split below is a deterministic function of the
-//!   expert's micro-batch alone (DESIGN.md §13).
+//!   expert's micro-batch and the replica devices' speed weights alone
+//!   (DESIGN.md §13); speeds shift slice *boundaries*, never row order.
 
 use std::ops::Range;
 
@@ -51,36 +52,70 @@ impl ReplicaDelta {
     }
 }
 
+/// Deterministic integer weight of a relative device speed, used to
+/// apportion a replicated expert's micro-batch. Quantised to 1/1024ths
+/// (rounded, floored at 1) so the split is pure integer arithmetic —
+/// bitwise-reproducible across platforms — and a uniform fleet (all
+/// speeds 1.0) degenerates to equal weights.
+pub fn speed_weight(speed: f64) -> u64 {
+    debug_assert!(speed > 0.0, "device speed must be positive");
+    ((speed * 1024.0).round() as u64).max(1)
+}
+
+/// Core weighted-apportionment primitive: the integral share of a
+/// replica with weight `w` whose predecessors (in canonical replica
+/// order) weigh `prefix_w` of `total_w`, splitting `load` rows on the
+/// cumulative boundaries `floor(load · prefix / total)`. Boundaries are
+/// monotone and end at `load`, so shares are non-negative and sum to
+/// `load` exactly; u128 intermediates make the products overflow-proof.
+pub fn weighted_share(load: u64, total_w: u64, prefix_w: u64, w: u64)
+    -> u64 {
+    debug_assert!(w > 0 && prefix_w + w <= total_w);
+    let hi = (load as u128 * (prefix_w + w) as u128 / total_w as u128)
+        as u64;
+    let lo = (load as u128 * prefix_w as u128 / total_w as u128) as u64;
+    hi - lo
+}
+
 /// Deterministic token → replica split: `n_rows` micro-batch rows over
-/// `n_replicas` contiguous slices, sizes as balanced as possible (the
-/// first `n_rows % n_replicas` slices take one extra row). The slice a
-/// row lands in depends only on (row index, row count, replica count) —
+/// one contiguous slice per replica, sized in proportion to the
+/// replica's [`speed_weight`] (equal weights split as evenly as
+/// possible, any remainder rows landing at the end). The slice a row
+/// lands in depends only on (row index, row count, replica weights) —
 /// never on workers, partitioning or where replicas live — and
 /// concatenating the slices in replica order reproduces the original
 /// micro-batch row order, which is what keeps replicated combine bitwise
 /// identical (DESIGN.md §13).
-pub fn replica_slices(n_rows: usize, n_replicas: usize) -> Vec<Range<usize>> {
-    assert!(n_replicas > 0, "expert with empty replica set");
-    let base = n_rows / n_replicas;
-    let extra = n_rows % n_replicas;
-    let mut start = 0;
-    (0..n_replicas)
-        .map(|j| {
-            let len = base + usize::from(j < extra);
-            let r = start..start + len;
-            start += len;
+pub fn replica_slices(n_rows: usize, weights: &[u64])
+    -> Vec<Range<usize>> {
+    assert!(!weights.is_empty(), "expert with empty replica set");
+    assert!(weights.iter().all(|&w| w > 0), "replica weight of zero");
+    let total: u64 = weights.iter().sum();
+    let mut prefix = 0u64;
+    let mut start = 0usize;
+    weights
+        .iter()
+        .map(|&w| {
+            let end = start
+                + weighted_share(n_rows as u64, total, prefix, w)
+                    as usize;
+            prefix += w;
+            let r = start..end;
+            start = end;
             r
         })
         .collect()
 }
 
-/// Integral load share of replica `j` of `n_replicas` for a total load of
-/// `load` assignments — exactly `replica_slices(load, n_replicas)[j].len()`,
-/// so the cost model's per-replica accounting matches the runtime split.
-pub fn replica_share(load: u64, n_replicas: usize, j: usize) -> u64 {
-    debug_assert!(j < n_replicas);
-    load / n_replicas as u64
-        + u64::from((j as u64) < load % n_replicas as u64)
+/// Integral load share of the replica at index `j` of `weights` for a
+/// total load of `load` assignments — exactly
+/// `replica_slices(load, weights)[j].len()`, so the cost model's
+/// per-replica accounting matches the runtime split.
+pub fn replica_share(load: u64, weights: &[u64], j: usize) -> u64 {
+    debug_assert!(j < weights.len());
+    let total: u64 = weights.iter().sum();
+    let prefix: u64 = weights[..j].iter().sum();
+    weighted_share(load, total, prefix, weights[j])
 }
 
 impl PlacementPlan {
@@ -431,25 +466,54 @@ mod tests {
 
     #[test]
     fn replica_slices_are_balanced_contiguous_and_exhaustive() {
-        assert_eq!(replica_slices(10, 1), vec![0..10]);
-        assert_eq!(replica_slices(10, 3), vec![0..4, 4..7, 7..10]);
-        assert_eq!(replica_slices(2, 3), vec![0..1, 1..2, 2..2]);
-        assert_eq!(replica_slices(0, 2), vec![0..0, 0..0]);
-        for (n, r) in [(17usize, 4usize), (4, 4), (1, 3), (100, 7)] {
-            let slices = replica_slices(n, r);
-            assert_eq!(slices.len(), r);
-            let mut next = 0;
-            for (j, s) in slices.iter().enumerate() {
-                assert_eq!(s.start, next, "slices must be contiguous");
-                next = s.end;
-                assert_eq!(
-                    s.len() as u64,
-                    replica_share(n as u64, r, j),
-                    "cost-model share must match the runtime split"
-                );
+        // Uniform weights: as even as possible, remainder at the end.
+        assert_eq!(replica_slices(10, &[1]), vec![0..10]);
+        assert_eq!(replica_slices(10, &[1, 1, 1]), vec![0..3, 3..6, 6..10]);
+        assert_eq!(replica_slices(2, &[1, 1, 1]), vec![0..0, 0..1, 1..2]);
+        assert_eq!(replica_slices(0, &[1, 1]), vec![0..0, 0..0]);
+        // Speed-weighted: a 3× replica takes three quarters of the rows.
+        assert_eq!(
+            replica_slices(8, &[speed_weight(3.0), speed_weight(1.0)]),
+            vec![0..6, 6..8]
+        );
+        let weight_sets: &[&[u64]] = &[
+            &[1, 1, 1, 1],
+            &[2048, 1024, 1024, 512],
+            &[speed_weight(0.5), speed_weight(2.0), speed_weight(1.0)],
+            &[3],
+            &[7, 1, 1, 1, 1, 1, 100],
+        ];
+        for &weights in weight_sets {
+            for n in [0usize, 1, 4, 17, 100] {
+                let slices = replica_slices(n, weights);
+                assert_eq!(slices.len(), weights.len());
+                let mut next = 0;
+                for (j, s) in slices.iter().enumerate() {
+                    assert_eq!(s.start, next, "slices must be contiguous");
+                    next = s.end;
+                    assert_eq!(
+                        s.len() as u64,
+                        replica_share(n as u64, weights, j),
+                        "cost-model share must match the runtime split"
+                    );
+                }
+                assert_eq!(next, n, "slices must cover every row");
             }
-            assert_eq!(next, n, "slices must cover every row");
         }
+        // Heavier weight never gets fewer rows when loads are large
+        // enough to split.
+        let s = replica_slices(1000, &[speed_weight(2.0), 1024]);
+        assert!(s[0].len() > s[1].len());
+        assert_eq!(s[0].len(), 666, "floor(1000·2048/3072)");
+    }
+
+    #[test]
+    fn speed_weights_quantise_and_floor() {
+        assert_eq!(speed_weight(1.0), 1024);
+        assert_eq!(speed_weight(2.0), 2048);
+        assert_eq!(speed_weight(0.5), 512);
+        // Sub-quantum speeds still get a positive weight.
+        assert_eq!(speed_weight(1e-9), 1);
     }
 
     #[test]

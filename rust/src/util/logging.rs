@@ -8,11 +8,13 @@ static LEVEL: AtomicU8 = AtomicU8::new(1); // 0=error 1=info 2=debug
 static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
 
 pub fn set_verbose(on: bool) {
+    // ordering: standalone level flag, no data published alongside it.
     LEVEL.store(if on { 2 } else { 1 }, Ordering::Relaxed);
 }
 
 pub fn set_quiet(on: bool) {
     if on {
+        // ordering: standalone level flag, no dependent data.
         LEVEL.store(0, Ordering::Relaxed);
     }
 }
@@ -22,6 +24,7 @@ fn stamp() -> f64 {
 }
 
 pub fn log(level: u8, tag: &str, msg: std::fmt::Arguments) {
+    // ordering: a stale level only drops/keeps a log line — harmless.
     if level <= LEVEL.load(Ordering::Relaxed) {
         eprintln!("[{:9.3}s {tag}] {msg}", stamp());
     }

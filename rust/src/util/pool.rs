@@ -53,10 +53,12 @@ use anyhow::Result;
 static THREAD_SPAWNS: AtomicU64 = AtomicU64::new(0);
 
 pub fn thread_spawns() -> u64 {
+    // ordering: monotone diagnostic counter; no data published with it.
     THREAD_SPAWNS.load(Ordering::Relaxed)
 }
 
 pub(crate) fn note_spawn() {
+    // ordering: monotone diagnostic counter; no data published with it.
     THREAD_SPAWNS.fetch_add(1, Ordering::Relaxed);
 }
 
@@ -95,6 +97,8 @@ fn claim_chunk(n: usize, width: usize) -> usize {
 // cross threads; the raw pointer itself is only dereferenced under the
 // `i < n` claim rule above, within the lifetime `run` guarantees.
 unsafe impl Send for Job {}
+// SAFETY: same argument — `&Job` exposes only atomics and the shared
+// reference to a `Sync` closure, so concurrent shared access is sound.
 unsafe impl Sync for Job {}
 
 std::thread_local! {
@@ -108,6 +112,7 @@ std::thread_local! {
         const { std::cell::Cell::new(std::ptr::null()) };
 }
 
+// lint: no-alloc — job drain is the per-index hot loop (DESIGN.md §12).
 impl Job {
     /// Claim-and-execute until the index queue runs dry. Shared by the
     /// workers and the submitting thread (which participates instead of
@@ -123,6 +128,8 @@ impl Job {
     // thread-local marker.
     fn drain_inner(&self, shared: &Shared) {
         loop {
+            // ordering: pure claim ticket — no data rides on the index;
+            // completion is published through `done` (AcqRel) below.
             let start = self.next.fetch_add(self.chunk, Ordering::Relaxed);
             if start >= self.n {
                 return;
@@ -132,6 +139,8 @@ impl Job {
             let f = unsafe { &*self.f };
             for i in start..end {
                 if catch_unwind(AssertUnwindSafe(|| f(i))).is_err() {
+                    // ordering: tally only read after the fence's
+                    // acquire of `done == n`, which orders it.
                     self.panics.fetch_add(1, Ordering::Relaxed);
                 }
             }
@@ -146,6 +155,7 @@ impl Job {
         }
     }
 }
+// lint: end
 
 type Task = Box<dyn FnOnce() + Send>;
 
@@ -222,6 +232,8 @@ impl ExecPool {
     /// construction (plus at most one lazy `submit` worker), which is the
     /// steady-state zero-spawn regression signal.
     pub fn spawns(&self) -> u64 {
+        // ordering: diagnostic counter; spawns happen-before any use of
+        // the pool that could observe them.
         self.shared.spawns.load(Ordering::Relaxed)
     }
 
@@ -238,6 +250,7 @@ impl ExecPool {
             .expect("spawn pool worker");
         self.handles.lock().unwrap().push(handle);
         st.threads += 1;
+        // ordering: diagnostic counter, bumped under the state lock.
         self.shared.spawns.fetch_add(1, Ordering::Relaxed);
         note_spawn();
     }
@@ -255,6 +268,8 @@ impl ExecPool {
     /// caller keeps busy — a guaranteed self-deadlock. Nesting across
     /// *different* pools, and `run` from inside a `submit` task, are
     /// fine (those always make progress).
+    // lint: no-alloc — steady-state dispatch: one Arc per job, no other
+    // heap traffic (the zero-allocation twin of `ExecArena`).
     pub fn run<F: Fn(usize) + Sync>(&self, n: usize, f: F) {
         if n == 0 {
             return;
@@ -291,6 +306,7 @@ impl ExecPool {
             while st.job.is_some() {
                 st = self.shared.done_cv.wait(st).unwrap();
             }
+            // alloc-ok: Arc refcount bump, not a heap allocation.
             st.job = Some(job.clone());
             self.shared.work_cv.notify_all();
         }
@@ -305,12 +321,15 @@ impl ExecPool {
             // Wake run-exclusion and fence() waiters.
             self.shared.done_cv.notify_all();
         }
+        // ordering: read after the fence acquired `done == n`, which
+        // orders every worker's tally bump before this load.
         let panics = job.panics.load(Ordering::Relaxed);
         if panics > 0 {
             panic!("ExecPool::run: {panics} of {n} parallel task(s) \
                     panicked (workers contained and still parked)");
         }
     }
+    // lint: end
 
     /// Enqueue a detached one-shot task; the returned [`TaskHandle`]
     /// yields the result (or the panic message). Tasks execute on pool
@@ -380,6 +399,7 @@ fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
+// lint: no-alloc — parked workers allocate nothing between jobs.
 fn worker_loop(shared: &Shared) {
     enum Work {
         Job(Arc<Job>),
@@ -390,7 +410,10 @@ fn worker_loop(shared: &Shared) {
             let mut st = shared.state.lock().unwrap();
             loop {
                 if let Some(job) = &st.job {
+                    // ordering: cheap already-drained probe; a stale
+                    // read only costs one harmless claim attempt.
                     if job.next.load(Ordering::Relaxed) < job.n {
+                        // alloc-ok: Arc refcount bump, no allocation.
                         break Work::Job(job.clone());
                     }
                 }
@@ -418,6 +441,7 @@ fn worker_loop(shared: &Shared) {
         }
     }
 }
+// lint: end
 
 // -------------------------------------------------------------- handles
 

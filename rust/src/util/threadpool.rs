@@ -39,6 +39,8 @@ pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, workers: usize, f: F) {
             let f = &f;
             note_spawn();
             s.spawn(move || loop {
+                // ordering: pure claim ticket; scope join publishes the
+                // workers' writes back to the caller.
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;

@@ -1,0 +1,108 @@
+//! Self-hosting gate for the static analyzer (DESIGN.md §14): the
+//! crate's own sources must come back clean, and the allowlists must be
+//! encoded tightly enough that a *new* violation — a second `unsafe`
+//! file, a stray spawn — would fail.
+
+use moepp::analyze::{
+    analyze_dir, analyze_source, SPAWN_ALLOWLIST, UNSAFE_ALLOWLIST,
+};
+use std::path::Path;
+
+/// The whole crate is lint-clean — the same invocation `./ci.sh` runs.
+#[test]
+fn own_crate_has_zero_findings() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let findings = analyze_dir(&src).expect("walk src/");
+    assert!(
+        findings.is_empty(),
+        "static analysis findings in our own crate:\n{}",
+        findings
+            .iter()
+            .map(|f| f.render())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+/// `unsafe` is confined to exactly `util/pool.rs`: the allowlist is that
+/// single entry, so a justified-looking `unsafe` in any *other* file —
+/// e.g. `moe/exec.rs`, which is unsafe-free by design — still fails.
+#[test]
+fn a_second_unsafe_site_outside_pool_fails() {
+    assert_eq!(UNSAFE_ALLOWLIST, ["util/pool.rs"]);
+    let src = "// SAFETY: disjoint rows, fenced by the executor.\n\
+               let row = unsafe { &mut *ptr.add(i) };\n";
+    let findings = analyze_source("src/moe/exec.rs", src);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].lint, "unsafe-audit");
+    assert!(findings[0].message.contains("allowlist"));
+    // The same code in the allowlisted file passes.
+    assert!(analyze_source("src/util/pool.rs", src).is_empty());
+}
+
+/// `moe/exec.rs` really is unsafe-free (the lint would allow none).
+#[test]
+fn exec_rs_contains_no_unsafe() {
+    let path =
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("src/moe/exec.rs");
+    let text = std::fs::read_to_string(&path).expect("read exec.rs");
+    let model = moepp::analyze::lexer::SourceModel::parse(&text);
+    for (i, line) in model.lines.iter().enumerate() {
+        assert!(
+            !line.code.contains("unsafe"),
+            "unsafe at src/moe/exec.rs:{}",
+            i + 1
+        );
+    }
+}
+
+/// Seeded violations per lint class all produce nonzero findings — the
+/// acceptance contract for `moepp analyze` run against a dirty tree.
+#[test]
+fn each_lint_class_fires_on_seeded_fixtures() {
+    let cases: &[(&str, &str, &str)] = &[
+        ("unsafe-audit", "src/tensor/ops.rs", "let v = unsafe { *p };\n"),
+        (
+            "no-alloc",
+            "src/moe/exec.rs",
+            "// lint: no-alloc\nlet v = data.to_vec();\n// lint: end\n",
+        ),
+        (
+            "spawn-sites",
+            "src/placement/planner.rs",
+            "std::thread::spawn(|| plan());\n",
+        ),
+        (
+            "atomics-ordering",
+            "src/serve/service.rs",
+            "DEPTH.fetch_add(1, Ordering::Relaxed);\n",
+        ),
+        (
+            "determinism",
+            "src/placement/profile.rs",
+            "let m: HashMap<usize, u64> = profile();\n\
+             for (e, load) in m.iter() {\n}\n",
+        ),
+    ];
+    for (lint, path, src) in cases {
+        let findings = analyze_source(path, src);
+        assert!(
+            findings.iter().any(|f| f.lint == *lint),
+            "seeded {lint} fixture produced {findings:?}"
+        );
+    }
+}
+
+/// The spawn allowlist is exactly the four thread-owning modules.
+#[test]
+fn spawn_allowlist_is_the_four_thread_owners() {
+    assert_eq!(
+        SPAWN_ALLOWLIST,
+        [
+            "util/pool.rs",
+            "util/threadpool.rs",
+            "cluster/worker.rs",
+            "serve/service.rs",
+        ]
+    );
+}
