@@ -32,9 +32,21 @@ run cargo run --release --quiet -- analyze
 # Includes the serve unit tests and tests/serve_equivalence.rs.
 run cargo test -q
 
-# Serving smoke: the full MoeService path end to end via the CLI.
+# Serving smoke: the full MoeService path end to end via the CLI, with
+# observability enabled (DESIGN.md §15) — registry exported as
+# Prometheus text, trace as JSONL.
+OBS_DIR="$(mktemp -d)"
+trap 'rm -rf "$OBS_DIR"' EXIT
 run cargo run --release --quiet -- serve --preset sm-8e --requests 64 \
-    --max-wait-ms 1
+    --max-wait-ms 1 --metrics-out "$OBS_DIR/metrics.prom" \
+    --trace-out "$OBS_DIR/trace.jsonl"
+
+# Obs smoke: the trace round-trips through `obs summarize` (per-stage
+# latency table + tokens-per-expert-count distribution), and the
+# exported registry passes the Prometheus line-format gate. Runs in
+# fast mode too — the exporters are pure string work and cheap.
+run cargo run --release --quiet -- obs summarize "$OBS_DIR/trace.jsonl"
+run cargo run --release --quiet -- obs prom-check "$OBS_DIR/metrics.prom"
 
 # Placement smoke: capture a skewed profile, plan rr/lpt/refined/
 # replicated, score and re-simulate each (also writes
@@ -47,8 +59,10 @@ run cargo run --release --quiet -- placement --devices 4 --profile skewed \
 # executors on uniform + skewed routing (writes BENCH_forward.json — the
 # perf-trajectory artifact; the pool-vs-scoped small-batch latency rows
 # carry speedup_vs_scoped).
+# --metrics-out with a .json suffix exercises the JSON registry export.
 run cargo run --release --quiet -- bench --forward --presets sm-8e \
-    --workers 1,4 --tokens 96 --batches 2 --executor both
+    --workers 1,4 --tokens 96 --batches 2 --executor both \
+    --metrics-out "$OBS_DIR/bench_metrics.json"
 
 if [ "${1:-}" != "fast" ]; then
     if cargo clippy --version >/dev/null 2>&1; then

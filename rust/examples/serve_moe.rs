@@ -43,6 +43,7 @@ fn main() -> anyhow::Result<()> {
             max_queued_tokens: 512,
             max_pending_requests: 64,
             default_deadline: None,
+            obs: None,
         },
     );
 

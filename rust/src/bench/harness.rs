@@ -132,6 +132,10 @@ pub struct ForwardSweepRow {
 /// seed), so the shard-vs-batch and pool-vs-scoped ratios isolate one
 /// axis each — outputs are bitwise-identical across every cell by the
 /// §7/§11/§12 equivalence contract, only the schedule changes.
+/// `obs`: optional observability bundle (DESIGN.md §15) installed on
+/// every measured engine, so `moepp bench forward --trace-out` captures
+/// the per-layer dispatch/shard trail of a real sweep. Bitwise-neutral:
+/// rows and outputs are identical with or without it.
 pub fn run_forward_sweep(
     presets: &[&str],
     workers_list: &[usize],
@@ -140,6 +144,7 @@ pub fn run_forward_sweep(
     tokens: usize,
     n_batches: usize,
     seed: u64,
+    obs: Option<&std::sync::Arc<crate::obs::Obs>>,
 ) -> Result<Vec<ForwardSweepRow>> {
     anyhow::ensure!(n_batches > 0, "forward sweep needs >= 1 batch");
     anyhow::ensure!(
@@ -172,6 +177,9 @@ pub fn run_forward_sweep(
                         )
                         .with_partition(partition)
                         .with_executor(executor);
+                        if let Some(o) = obs {
+                            engine.set_obs(o.clone());
+                        }
                         // Warm: arena growth, routing caches and the
                         // pool's one-time worker spawns settle here.
                         let _ = engine.forward_stack(&batches[0])?;
@@ -707,6 +715,7 @@ mod tests {
             32,
             2,
             5,
+            None,
         )
         .unwrap();
         // 1 preset x 2 workloads x 2 partitions x 2 executors x
@@ -863,6 +872,7 @@ mod tests {
                 max_queued_tokens: 64,
                 max_pending_requests: 128,
                 default_deadline: None,
+                obs: None,
             },
         );
         let mut rng = Rng::new(9);

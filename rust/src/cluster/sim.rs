@@ -25,6 +25,8 @@
 //! [`ClusterSim::apply_placement`] migrates experts between batches, and
 //! an attached [`Replanner`] does so automatically on the serving path.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::config::MoeConfig;
@@ -33,6 +35,7 @@ use crate::moe::arena::{ExecArena, FfnArena};
 use crate::moe::balance::load_cv;
 use crate::moe::exec::{self, ExpertBackend, FfnLayerReport, ForwardStats};
 use crate::moe::weights::StackWeights;
+use crate::obs::{EventKind, Obs};
 use crate::placement::{
     speed_weight, weighted_share, MigrationPlan, PlacementPlan, Replanner,
 };
@@ -187,6 +190,9 @@ pub struct ClusterSim {
     /// side idles; its task side carries the replanner's local search off
     /// the scheduler thread (one lazily-spawned worker, spawned once).
     pool: ExecPool,
+    /// Observability bundle (DESIGN.md §15): forwards stamp per-layer
+    /// and replica-split records, `note_batch` stamps the replan trail.
+    obs: Option<Arc<Obs>>,
 }
 
 impl ClusterSim {
@@ -213,7 +219,15 @@ impl ClusterSim {
             replans_unreported: 0,
             arena: ExecArena::new(),
             pool: ExecPool::new(1),
+            obs: None,
         }
+    }
+
+    /// Install an observability bundle: subsequent forwards stamp their
+    /// per-layer/per-replica records and `note_batch` stamps the replan
+    /// trail into it (DESIGN.md §15).
+    pub fn set_obs(&mut self, obs: Arc<Obs>) {
+        self.obs = Some(obs);
     }
 
     /// Attach an online replanner; on the serving path it observes every
@@ -356,16 +370,20 @@ impl ClusterSim {
                 // the scheduler either way.
                 None => {
                     if stale {
+                        self.stamp_replan_abandoned();
                         rp.window_reset();
                     } else {
                         self.pending_plan = Some(handle);
                     }
                 }
                 Some(Ok(Some(mig))) => {
+                    self.stamp_replan_proposed(&mig);
                     if stale {
                         // Finished, but too late to trust.
+                        self.stamp_replan_abandoned();
                         rp.window_reset();
                     } else if self.apply_placement(&mig.plan).is_ok() {
+                        self.stamp_replan_committed(&mig);
                         rp.committed();
                         self.replans_unreported += 1;
                     } else {
@@ -397,6 +415,46 @@ impl ClusterSim {
             self.pending_plan_age = 0;
         }
         self.replanner = Some(rp);
+    }
+
+    /// Replan trail (DESIGN.md §15): a finished planning task produced a
+    /// proposal (whether or not it will be applied).
+    fn stamp_replan_proposed(&self, mig: &MigrationPlan) {
+        if let Some(o) = &self.obs {
+            o.registry().inc(o.h.replan_proposed);
+            o.trace.push(EventKind::ReplanProposed {
+                batch: o.current_batch(),
+                moves: mig.moves.len() as u32,
+                gain_ppm: mig.gain_ppm(),
+            });
+        }
+    }
+
+    /// Replan trail: the proposal survived the gates and was applied at
+    /// this batch boundary.
+    fn stamp_replan_committed(&self, mig: &MigrationPlan) {
+        if let Some(o) = &self.obs {
+            o.registry().inc(o.h.replan_committed);
+            o.registry()
+                .add(o.h.migration_bytes, mig.migration_bytes);
+            o.trace.push(EventKind::ReplanCommitted {
+                batch: o.current_batch(),
+                moves: mig.moves.len() as u32,
+                bytes: mig.migration_bytes,
+            });
+        }
+    }
+
+    /// Replan trail: an in-flight or just-finished proposal aged past
+    /// the staleness bound and was dropped, not applied.
+    fn stamp_replan_abandoned(&self) {
+        if let Some(o) = &self.obs {
+            o.registry().inc(o.h.replan_abandoned);
+            o.trace.push(EventKind::ReplanAbandoned {
+                batch: o.current_batch(),
+                age_batches: self.pending_plan_age as u32,
+            });
+        }
     }
 
     /// Backing-allocation growths of the sim's arena (routing, per-layer
@@ -441,10 +499,12 @@ impl ClusterSim {
             topo: &self.topo,
             workers: &self.workers,
             n_ffn: self.cfg.n_ffn_experts,
+            obs: self.obs.as_deref(),
         };
         let (y, stats, execs) = exec::forward_stack(
             &mut backend, &self.weights, &self.layer_cfgs, x,
             &mut self.arena, &Executor::Pool(&self.pool),
+            self.obs.as_deref(),
         )
         .expect("cluster execution is infallible");
         let layers = execs
@@ -476,6 +536,10 @@ struct ClusterBackend<'a> {
     topo: &'a Topology,
     workers: &'a [Vec<Worker>],
     n_ffn: usize,
+    /// When installed, replicated experts' per-replica slices are
+    /// stamped as [`EventKind::ReplicaSplit`] records (the driver reads
+    /// the batch id it claimed at `forward_stack` entry).
+    obs: Option<&'a Obs>,
 }
 
 impl ExpertBackend for ClusterBackend<'_> {
@@ -527,6 +591,17 @@ impl ExpertBackend for ClusterBackend<'_> {
                 }
                 let slice = &batch.tokens[start..start + len];
                 device_load[dev] += len;
+                if n_rep > 1 {
+                    if let Some(o) = self.obs {
+                        o.trace.push(EventKind::ReplicaSplit {
+                            batch: o.current_batch(),
+                            layer: layer as u16,
+                            expert: batch.expert as u16,
+                            device: dev as u16,
+                            rows: len as u32,
+                        });
+                    }
+                }
                 let mut xb = arena.wire.take(len, d);
                 let mut yb = arena.wire.take(len, d);
                 // The batched kernel accumulates; pooled buffers carry

@@ -29,6 +29,7 @@ use crate::config::MoeConfig;
 use crate::moe::arena::{ExecArena, FfnArena};
 use crate::moe::exec::{self, ExpertBackend, FfnLayerReport, NativeBatched};
 use crate::moe::weights::StackWeights;
+use crate::obs::Obs;
 use crate::runtime::host::HostValue;
 use crate::runtime::{Executable, Runtime};
 use crate::tensor::Tensor;
@@ -76,6 +77,10 @@ pub struct MoeEngine {
     /// Built lazily on the thread that runs forwards; `None` until then
     /// or when the scoped executor is selected.
     pool: Option<ExecPool>,
+    /// Observability bundle (DESIGN.md §15). When installed, forwards
+    /// stamp per-layer routing/dispatch/expert/combine timing and shard
+    /// records into it; recording never changes the math.
+    obs: Option<Arc<Obs>>,
 }
 
 impl MoeEngine {
@@ -104,6 +109,7 @@ impl MoeEngine {
             arena: ExecArena::new(),
             executor: ExecutorKind::default(),
             pool: None,
+            obs: None,
         }
     }
 
@@ -126,6 +132,12 @@ impl MoeEngine {
             self.pool = None;
         }
         self
+    }
+
+    /// Install an observability bundle: subsequent forwards stamp their
+    /// per-layer/per-shard records into it (DESIGN.md §15).
+    pub fn set_obs(&mut self, obs: Arc<Obs>) {
+        self.obs = Some(obs);
     }
 
     /// Arena growth count (see [`ExecArena::growths`]): constant across
@@ -183,6 +195,7 @@ impl MoeEngine {
             arena: ExecArena::new(),
             executor: ExecutorKind::default(),
             pool: None,
+            obs: None,
         }
     }
 
@@ -240,6 +253,7 @@ impl MoeEngine {
             arena: ExecArena::new(),
             executor: ExecutorKind::default(),
             pool: None,
+            obs: None,
         })
     }
 
@@ -292,6 +306,7 @@ impl MoeEngine {
             x,
             &mut self.arena,
             &exec,
+            self.obs.as_deref(),
         )?;
         Ok((y, stats))
     }

@@ -130,6 +130,40 @@ impl ServingMetrics {
         self.tokens as f64 / self.expert_forward_s.max(1e-12)
     }
 
+    /// Rebuild the metrics purely from an observability registry
+    /// (DESIGN.md §15). The serving layer mirrors every counter update
+    /// into the registry at the same site it updates the lock-guarded
+    /// struct, so at quiescence every integer field here is `==` to its
+    /// [`ServingMetrics`] twin; the float second fields are derived from
+    /// the integer-nanosecond counters (`_ns / 1e9`), exact to the
+    /// per-batch truncation of the cast.
+    pub fn from_registry(obs: &crate::obs::Obs) -> ServingMetrics {
+        let r = obs.registry();
+        let h = &obs.h;
+        ServingMetrics {
+            requests: r.counter_value(h.requests),
+            batches: r.counter_value(h.batches),
+            tokens: r.counter_value(h.tokens),
+            dropped_assignments: r.counter_value(h.dropped_assignments),
+            ffn_assignments: r.counter_value(h.ffn_assignments),
+            zc_assignments: r.counter_value(h.zc_assignments),
+            expert_forward_s: r.counter_value(h.expert_forward_ns)
+                as f64
+                / 1e9,
+            routing_s: r.counter_value(h.routing_ns) as f64 / 1e9,
+            rejected: r.counter_value(h.rejected),
+            cancelled: r.counter_value(h.cancelled),
+            expired: r.counter_value(h.expired),
+            failed: r.counter_value(h.failed),
+            peak_queue_tokens: r.gauge_value(h.peak_queue_tokens),
+            time_to_first_batch_s: r
+                .gauge_value(h.time_to_first_batch_ns)
+                as f64
+                / 1e9,
+            replans: r.counter_value(h.replans),
+        }
+    }
+
     pub fn report(&self) -> String {
         let mut s = format!(
             "requests={} batches={} tokens={} expert_tput={:.0} tok/s \
@@ -228,5 +262,169 @@ mod tests {
         assert_eq!(m.expert_throughput(), 200.0);
         assert!(m.report().contains("tokens=100"));
         assert!(m.report().contains("rejected=3"));
+    }
+
+    fn fake_stats() -> crate::coordinator::engine::ForwardStats {
+        let mut s = crate::coordinator::engine::ForwardStats::default();
+        s.tokens = 6;
+        s.expert_forward_s = 0.5;
+        s.routing_s = 0.125;
+        s.per_layer = vec![
+            crate::moe::layer::LayerStats {
+                expert_counts: Vec::new(),
+                dropped: 1,
+                ffn_assignments: 7,
+                zc_assignments: 4,
+                ffn_per_token: 0.0,
+                balance_loss: 0.0,
+            },
+            crate::moe::layer::LayerStats {
+                expert_counts: Vec::new(),
+                dropped: 0,
+                ffn_assignments: 3,
+                zc_assignments: 9,
+                ffn_per_token: 0.0,
+                balance_loss: 0.0,
+            },
+        ];
+        s
+    }
+
+    #[test]
+    fn merge_forward_is_purely_additive_across_repeated_calls() {
+        // Regression guard: merging the same batch stats twice must give
+        // exactly double of one merge — no per-call double counting of
+        // the per-layer walk, no hidden resets between calls.
+        let stats = fake_stats();
+        let mut once = ServingMetrics::default();
+        once.merge_forward(&stats);
+        assert_eq!(once.tokens, 6);
+        assert_eq!(once.ffn_assignments, 10);
+        assert_eq!(once.zc_assignments, 13);
+        assert_eq!(once.dropped_assignments, 1);
+        let mut twice = ServingMetrics::default();
+        twice.merge_forward(&stats);
+        twice.merge_forward(&stats);
+        assert_eq!(twice.tokens, 2 * once.tokens);
+        assert_eq!(twice.ffn_assignments, 2 * once.ffn_assignments);
+        assert_eq!(twice.zc_assignments, 2 * once.zc_assignments);
+        assert_eq!(
+            twice.dropped_assignments,
+            2 * once.dropped_assignments
+        );
+        assert_eq!(
+            twice.expert_forward_s,
+            2.0 * once.expert_forward_s
+        );
+        assert_eq!(twice.routing_s, 2.0 * once.routing_s);
+    }
+
+    #[test]
+    fn time_to_first_batch_set_once_across_restartless_reuse() {
+        // The service keeps serving batch after batch without restarting;
+        // time_to_first_batch_s must latch at the first batch and stay
+        // put (and never remain at its 0 default once a batch ran).
+        use crate::config::MoeConfig;
+        use crate::coordinator::engine::MoeEngine;
+        use crate::serve::service::{MoeService, ServiceConfig};
+        use crate::util::rng::Rng;
+        let cfg = MoeConfig::preset("test");
+        let service = MoeService::start(
+            MoeEngine::native(cfg.clone(), 0),
+            ServiceConfig {
+                batcher: crate::coordinator::batcher::BatcherConfig {
+                    max_tokens: 4,
+                    max_wait: Duration::from_millis(1),
+                },
+                ..ServiceConfig::default()
+            },
+        );
+        let mut rng = Rng::new(11);
+        let x = crate::tensor::Tensor::randn(
+            &mut rng,
+            &[4, cfg.d_model],
+            1.0,
+        );
+        service.submit_tokens(x.clone()).unwrap().wait().unwrap();
+        let first = service.metrics();
+        assert!(first.batches >= 1);
+        assert!(first.time_to_first_batch_s > 0.0);
+        for _ in 0..3 {
+            service.submit_tokens(x.clone()).unwrap().wait().unwrap();
+        }
+        let later = service.shutdown();
+        assert!(later.batches > first.batches);
+        assert_eq!(
+            later.time_to_first_batch_s,
+            first.time_to_first_batch_s,
+            "later batches must not restamp time_to_first_batch_s"
+        );
+    }
+
+    #[test]
+    fn registry_rebuild_reconciles_exactly_with_serving_metrics() {
+        // The PR 2 reconciliation discipline extended to the obs layer:
+        // replay a small serve run with the bundle installed, then the
+        // registry-rebuilt ServingMetrics must equal the lock-guarded
+        // one field-for-field on every integer counter/gauge.
+        use crate::config::MoeConfig;
+        use crate::coordinator::engine::MoeEngine;
+        use crate::obs::Obs;
+        use crate::serve::service::{MoeService, ServiceConfig};
+        use crate::util::rng::Rng;
+        let obs = Obs::shared();
+        obs.trace.set_enabled(true);
+        let cfg = MoeConfig::preset("test");
+        let service = MoeService::start(
+            MoeEngine::native(cfg.clone(), 0),
+            ServiceConfig {
+                batcher: crate::coordinator::batcher::BatcherConfig {
+                    max_tokens: 8,
+                    max_wait: Duration::from_millis(1),
+                },
+                obs: Some(obs.clone()),
+                ..ServiceConfig::default()
+            },
+        );
+        let mut rng = Rng::new(12);
+        for _ in 0..5 {
+            let x = crate::tensor::Tensor::randn(
+                &mut rng,
+                &[4, cfg.d_model],
+                1.0,
+            );
+            service.submit_tokens(x).unwrap().wait().unwrap();
+        }
+        let rebuilt = service.metrics_from_registry().unwrap();
+        let m = service.shutdown();
+        assert_eq!(rebuilt.requests, m.requests);
+        let r = ServingMetrics::from_registry(&obs);
+        assert_eq!(r.requests, m.requests);
+        assert_eq!(r.batches, m.batches);
+        assert_eq!(r.tokens, m.tokens);
+        assert_eq!(r.ffn_assignments, m.ffn_assignments);
+        assert_eq!(r.zc_assignments, m.zc_assignments);
+        assert_eq!(r.dropped_assignments, m.dropped_assignments);
+        assert_eq!(r.rejected, m.rejected);
+        assert_eq!(r.cancelled, m.cancelled);
+        assert_eq!(r.expired, m.expired);
+        assert_eq!(r.failed, m.failed);
+        assert_eq!(r.peak_queue_tokens, m.peak_queue_tokens);
+        assert_eq!(r.replans, m.replans);
+        // Float seconds come from the integer-ns twins: exact up to the
+        // sub-nanosecond truncation of one cast per batch.
+        let tol = 1e-9 * m.batches as f64 + 1e-12;
+        assert!(
+            (r.expert_forward_s - m.expert_forward_s).abs() <= tol,
+            "expert_forward ns twin drifted: {} vs {}",
+            r.expert_forward_s,
+            m.expert_forward_s
+        );
+        assert!((r.routing_s - m.routing_s).abs() <= tol);
+        assert!(
+            (r.time_to_first_batch_s - m.time_to_first_batch_s).abs()
+                <= 2e-9
+        );
+        assert!(r.time_to_first_batch_s > 0.0);
     }
 }

@@ -35,6 +35,9 @@
 //! property-testing harness) is implemented in [`util`] and [`bench`].
 //! The shared execution layer all forward paths delegate to lives in
 //! [`moe::exec`] — see DESIGN.md §7 for the backend contract.
+//! Observability (metrics registry, span traces, Prometheus/JSON
+//! exporters) lives in [`obs`] — see DESIGN.md §15; recording is
+//! infallible, bitwise-neutral and allocation-free in steady state.
 
 pub mod analyze;
 pub mod bench;
@@ -42,6 +45,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod moe;
+pub mod obs;
 pub mod placement;
 pub mod runtime;
 pub mod serve;

@@ -9,6 +9,13 @@
 //!   bench     forward|table1|table3|table3-quality|table4|table5|table6|fig3
 //!   analyze   [--json] [path]               static lints over the crate
 //!   analyze   load|tokens|gating            figures 4 / 5 / 6
+//!   obs       summarize <trace.jsonl>       per-stage latency + k-distribution
+//!   obs       prom-check <metrics.prom>     Prometheus line-format gate
+//!
+//! `serve` and `bench forward` accept `--metrics-out <file>` (Prometheus
+//! text, or JSON when the path ends in .json) and `--trace-out
+//! <file.jsonl>` to capture the observability registry and span trace
+//! (DESIGN.md §15).
 //!
 //! Reports are printed and mirrored under reports/; sweeps also emit
 //! machine-readable `BENCH_<name>.json` files for cross-PR tracking.
@@ -43,6 +50,7 @@ fn main() {
         Some("placement") => cmd_placement(&args),
         Some("bench") => cmd_bench(&args),
         Some("analyze") => cmd_analyze(&args),
+        Some("obs") => cmd_obs(&args),
         _ => {
             eprintln!("{}", USAGE);
             std::process::exit(2);
@@ -55,7 +63,7 @@ fn main() {
 }
 
 const USAGE: &str = "usage: moepp \
-<info|serve|train|cluster|placement|bench|analyze> \
+<info|serve|train|cluster|placement|bench|analyze|obs> \
 [args]\n  see README.md";
 
 fn report(name: &str, body: &str) -> Result<()> {
@@ -69,6 +77,46 @@ fn report(name: &str, body: &str) -> Result<()> {
 fn open_runtime(args: &Args) -> Result<Runtime> {
     Runtime::open(args.get_or("artifacts", "artifacts"))
         .context("open artifacts (run `make artifacts` first)")
+}
+
+/// Build the shared observability bundle when `--metrics-out` or
+/// `--trace-out` ask for one (the trace ring is enabled only then;
+/// registry counters are atomic adds either way).
+fn obs_from_args(args: &Args) -> Option<std::sync::Arc<moepp::obs::Obs>> {
+    if args.get("metrics-out").is_none()
+        && args.get("trace-out").is_none()
+    {
+        return None;
+    }
+    let obs = moepp::obs::Obs::shared();
+    obs.trace.set_enabled(true);
+    Some(obs)
+}
+
+/// Render the requested obs exports: `--metrics-out` as Prometheus text
+/// exposition (JSON when the path ends in `.json`), `--trace-out` as
+/// JSONL, one event per line. All string work happens here, after the
+/// measured run.
+fn write_obs_outputs(args: &Args, obs: &moepp::obs::Obs) -> Result<()> {
+    if let Some(path) = args.get("metrics-out") {
+        let text = if path.ends_with(".json") {
+            format!("{}\n", moepp::obs::registry_json(obs))
+        } else {
+            moepp::obs::prometheus(obs)
+        };
+        std::fs::write(path, text)
+            .with_context(|| format!("write {path}"))?;
+        info!("wrote {path}");
+    }
+    if let Some(path) = args.get("trace-out") {
+        std::fs::write(path, moepp::obs::trace_jsonl(obs))
+            .with_context(|| format!("write {path}"))?;
+        info!(
+            "wrote {path} ({} events dropped by the ring)",
+            obs.trace.dropped_events()
+        );
+    }
+    Ok(())
 }
 
 // ---------------------------------------------------------------- info
@@ -105,6 +153,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_requests = args.get_usize("requests", 200);
     let backend = args.get_or("backend", "native");
     let cfg = MoeConfig::preset(preset);
+    let obs = obs_from_args(args);
     let service_cfg = ServiceConfig {
         batcher: BatcherConfig {
             max_tokens: args.get_usize("max-batch-tokens", 256),
@@ -115,6 +164,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_queued_tokens: args.get_usize("max-queued-tokens", 4096),
         max_pending_requests: args.get_usize("max-pending", 1024),
         default_deadline: None,
+        obs: obs.clone(),
     };
     // All serving goes through the MoeService continuous-batching API;
     // the backend choice only selects the ServeBackend behind it.
@@ -189,6 +239,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let trace = harness::run_serve_trace(&service, inputs)?;
     let latency = service.latency();
     let metrics = service.shutdown();
+    // With obs installed, report from registry reads — the mirrored
+    // counters reconcile exactly with the lock-guarded metrics
+    // (regression-tested in coordinator/metrics.rs).
+    let metrics = match obs.as_deref() {
+        Some(o) => {
+            moepp::coordinator::metrics::ServingMetrics::from_registry(o)
+        }
+        None => metrics,
+    };
+    if let Some(o) = obs.as_deref() {
+        write_obs_outputs(args, o)?;
+    }
     let bench = Json::obj(vec![
         ("bench", Json::str("serve")),
         ("preset", Json::str(preset)),
@@ -502,10 +564,14 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 };
             let tokens = args.get_usize("tokens", 256);
             let batches = args.get_usize("batches", 4);
+            let obs = obs_from_args(args);
             let rows = harness::run_forward_sweep(
                 &presets, &workers, &partitions, &executors, tokens,
-                batches, seed,
+                batches, seed, obs.as_ref(),
             )?;
+            if let Some(o) = obs.as_deref() {
+                write_obs_outputs(args, o)?;
+            }
             let bench_path = harness::write_bench_json(
                 "forward",
                 &harness::forward_sweep_json(tokens, batches, &rows),
@@ -640,6 +706,44 @@ fn cmd_bench(args: &Args) -> Result<()> {
             report("layerwise", &body)
         }
         other => anyhow::bail!("unknown bench '{other}'"),
+    }
+}
+
+// ------------------------------------------------------------------ obs
+
+/// `moepp obs summarize <trace.jsonl>` — render the per-stage latency
+/// breakdown and tokens-per-expert-count distribution from a captured
+/// serve/bench trace; `moepp obs prom-check <file>` — validate that a
+/// `--metrics-out` Prometheus export parses line by line (the ci.sh
+/// format gate).
+fn cmd_obs(args: &Args) -> Result<()> {
+    let verb = args.positional.first().map(String::as_str);
+    let path = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .context("usage: moepp obs <summarize|prom-check> <file>")?;
+    match verb {
+        Some("summarize") => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("read trace {path}"))?;
+            let summary = moepp::obs::summarize_jsonl(&text)?;
+            report("obs_summary", &summary.render())
+        }
+        Some("prom-check") => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("read metrics {path}"))?;
+            let samples = moepp::obs::parse_prometheus(&text)?;
+            anyhow::ensure!(
+                samples > 0,
+                "{path}: no Prometheus samples found"
+            );
+            println!("prom-check ok: {samples} samples in {path}");
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown obs verb {other:?} (expected summarize|prom-check)"
+        ),
     }
 }
 

@@ -50,6 +50,9 @@ pub struct ExecArena {
     pub(crate) y: Tensor,
     /// FFN-stage buffers handed to the backend.
     pub(crate) ffn: FfnArena,
+    /// Obs scratch: per-token FFN-assignment counts for the current
+    /// layer (the tokens-per-expert-count distribution, DESIGN.md §15).
+    pub(crate) tok_k: Vec<u32>,
     y_growths: u64,
 }
 
@@ -65,6 +68,7 @@ impl ExecArena {
             route: RouteArena::new(),
             y: Tensor::zeros(&[0, 0]),
             ffn: FfnArena::new(),
+            tok_k: Vec::new(),
             y_growths: 0,
         }
     }
@@ -92,6 +96,20 @@ impl ExecArena {
         &mut self,
     ) -> (&Routing, &mut Tensor, &mut FfnArena) {
         (&self.route.routing, &mut self.y, &mut self.ffn)
+    }
+
+    /// Zeroed per-token obs scratch for `t` tokens (reused across
+    /// layers/batches; growth counted like every other buffer).
+    pub(crate) fn prepare_tok_k(&mut self, t: usize) -> &mut [u32] {
+        if t > self.tok_k.capacity() {
+            self.y_growths += 1;
+        }
+        if self.tok_k.len() < t {
+            self.tok_k.resize(t, 0);
+        }
+        let s = &mut self.tok_k[..t];
+        s.fill(0);
+        s
     }
     // lint: end
 }
@@ -164,6 +182,10 @@ pub struct FfnArena {
     /// Shard descriptors of the current layer (rebuilt per layer, storage
     /// reused).
     pub(crate) shards: Vec<ShardSpec>,
+    /// How many of `shards`/`shard_bufs` the *most recent* `execute_ffn`
+    /// actually ran in parallel (0 on the serial path), so the driver
+    /// never stamps stale shard timings from an earlier layer.
+    pub(crate) last_shards: usize,
     /// One buffer set per in-flight shard; workers write disjoint entries.
     pub(crate) shard_bufs: Vec<ShardBuf>,
     /// Pool for tensors that must *leave* the arena — the cluster path's
@@ -186,6 +208,7 @@ impl FfnArena {
             gather: Tensor::zeros(&[0, 0]),
             scratch: FfnScratch::new(0),
             shards: Vec::new(),
+            last_shards: 0,
             shard_bufs: Vec::new(),
             wire: TensorPool::new(),
             l1_budget_bytes: DEFAULT_L1_BUDGET_BYTES,
@@ -295,6 +318,11 @@ pub struct ShardBuf {
     pub(crate) gather: Tensor,
     pub(crate) out: Vec<f32>,
     pub(crate) scratch: FfnScratch,
+    /// Wall nanoseconds of this shard's last kernel run, written by the
+    /// worker that owns the buffer (exclusive `&mut` via
+    /// `for_each_mut`), read by the driver when stamping obs — no
+    /// locks, no extra channel.
+    pub(crate) ns: u64,
     growths: u64,
 }
 
@@ -304,6 +332,7 @@ impl ShardBuf {
             gather: Tensor::zeros(&[0, 0]),
             out: Vec::new(),
             scratch: FfnScratch::new(0),
+            ns: 0,
             growths: 0,
         }
     }

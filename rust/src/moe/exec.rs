@@ -38,6 +38,7 @@ use crate::moe::experts::{ConstExpert, FFN_TOKEN_BLOCK};
 use crate::moe::layer::{Assignment, LayerStats};
 use crate::moe::router::Routing;
 use crate::moe::weights::{MoeLayerWeights, StackWeights};
+use crate::obs::{EventKind, Obs, TOK_K_BINS};
 use crate::tensor::ops::axpy;
 use crate::tensor::Tensor;
 use crate::util::pool::Executor;
@@ -293,7 +294,10 @@ pub fn layer_stats(
 /// Execute one planned layer: FFN micro-batches on the backend, ZC experts
 /// inline, both timed, plus stats. `y` receives the layer output (the
 /// caller owns the residual-stream update); `arena` supplies the
-/// backend's reusable buffers.
+/// backend's reusable buffers. When `obs` is present the stage timings,
+/// per-shard worker timings (native token-shard path) and per-device
+/// busy times (sharded backends) are stamped into its trace and
+/// histograms — recording only, never affecting the math (§15).
 #[allow(clippy::too_many_arguments)]
 pub fn execute_layer(
     backend: &mut dyn ExpertBackend,
@@ -306,14 +310,74 @@ pub fn execute_layer(
     y: &mut Tensor,
     arena: &mut FfnArena,
     exec: &Executor,
+    obs: Option<&Obs>,
+    batch: u64,
 ) -> Result<LayerExec> {
+    // Staleness guard: only the backend call below may raise it, so a
+    // serial (or non-native) layer never re-stamps the previous layer's
+    // shard buffers.
+    arena.last_shards = 0;
     let t0 = Instant::now();
     let report = backend.execute_ffn(layer, plan, h, y, arena, exec)?;
-    let ffn_s = t0.elapsed().as_secs_f64();
+    let ffn_el = t0.elapsed();
+    let ffn_s = ffn_el.as_secs_f64();
 
     let t1 = Instant::now();
     apply_zc_inline(&plan.zc_inline, cfg, consts, h, y);
-    let zc_s = t1.elapsed().as_secs_f64();
+    let zc_el = t1.elapsed();
+    let zc_s = zc_el.as_secs_f64();
+
+    if let Some(o) = obs {
+        let li = layer as u16;
+        let ffn_ns = ffn_el.as_nanos() as u64;
+        let zc_ns = zc_el.as_nanos() as u64;
+        o.registry().record(o.h.ffn_stage_ns, ffn_ns);
+        o.registry().record(o.h.zc_stage_ns, zc_ns);
+        o.trace.push(EventKind::ExpertForward {
+            batch,
+            layer: li,
+            ffn_ns,
+            zc_ns,
+        });
+        // Per-shard worker timings, written by the workers into their
+        // exclusive `ShardBuf.ns` slots; `last_shards` bounds the stamp
+        // to buffers this very backend call actually ran.
+        for (si, (spec, buf)) in arena
+            .shards
+            .iter()
+            .zip(arena.shard_bufs.iter())
+            .take(arena.last_shards)
+            .enumerate()
+        {
+            o.registry().record(o.h.shard_ns, buf.ns);
+            o.trace.push(EventKind::ShardForward {
+                batch,
+                layer: li,
+                device: 0,
+                shard: si as u16,
+                rows: spec.len as u32,
+                ns: buf.ns,
+            });
+        }
+        // Per-device busy time from the backend's report (cluster path;
+        // native backends leave the report empty).
+        for (dev, (&busy_s, &rows)) in report
+            .device_compute_s
+            .iter()
+            .zip(report.device_load.iter())
+            .enumerate()
+        {
+            let ns = (busy_s * 1e9) as u64;
+            o.registry().record(o.h.device_busy_ns, ns);
+            o.trace.push(EventKind::DeviceBusy {
+                batch,
+                layer: li,
+                device: dev as u16,
+                rows: rows as u32,
+                ns,
+            });
+        }
+    }
 
     Ok(LayerExec {
         stats: layer_stats(plan, routing, cfg, h.dims2().0),
@@ -344,6 +408,7 @@ pub fn forward_stack(
     x: &Tensor,
     arena: &mut ExecArena,
     exec: &Executor,
+    obs: Option<&Obs>,
 ) -> Result<(Tensor, ForwardStats, Vec<LayerExec>)> {
     let (t, d) = x.dims2();
     assert_eq!(
@@ -351,6 +416,9 @@ pub fn forward_stack(
         weights.layers.len(),
         "one config per layer"
     );
+    // Claim this forward's batch id up front so mid-forward stamps from
+    // backends (e.g. the cluster's replica splits) share it.
+    let batch = obs.map_or(0, Obs::next_batch);
     let mut stats = ForwardStats {
         tokens: t,
         token_counts: TokenCounts::new(t),
@@ -372,15 +440,29 @@ pub fn forward_stack(
             lcfg.gating_residual && li > 0,
             lcfg.top_k,
         );
-        stats.routing_s += t0.elapsed().as_secs_f64();
+        let route_el = t0.elapsed();
+        stats.routing_s += route_el.as_secs_f64();
+        if let Some(o) = obs {
+            let ns = route_el.as_nanos() as u64;
+            o.registry().record(o.h.route_ns, ns);
+            o.trace.push(EventKind::Route {
+                batch,
+                layer: li as u16,
+                ns,
+            });
+        }
 
+        let t1 = Instant::now();
         let plan = DispatchPlan::build(&arena.route.routing, lcfg, t);
         stats.token_counts.record_layer(&plan, lcfg);
+        if let Some(o) = obs {
+            stamp_dispatch(o, batch, li as u16, &plan, arena, t, t1);
+        }
         arena.prepare_y(t, d);
         let (routing, y, ffn) = arena.split();
         let ex = execute_layer(
             backend, li, &plan, routing, lcfg, &layer.consts, &h, y, ffn,
-            exec,
+            exec, obs, batch,
         )?;
         stats.ffn_s += ex.ffn_s;
         stats.zc_s += ex.zc_s;
@@ -389,12 +471,73 @@ pub fn forward_stack(
         stats.per_layer.push(ex.stats.clone());
         execs.push(ex);
 
+        let t2 = Instant::now();
         for (hv, yv) in h.data.iter_mut().zip(&y.data) {
             *hv += yv;
+        }
+        if let Some(o) = obs {
+            let ns = t2.elapsed().as_nanos() as u64;
+            o.registry().record(o.h.combine_ns, ns);
+            o.trace.push(EventKind::Combine {
+                batch,
+                layer: li as u16,
+                ns,
+            });
         }
         arena.route.end_layer();
     }
     Ok((h, stats, execs))
+}
+
+/// Stamp one layer's dispatch-plan record: assignment split histograms,
+/// the tokens-per-FFN-expert-count distribution (built in the arena's
+/// reusable `tok_k` scratch — no per-layer allocation) and the
+/// [`EventKind::Dispatch`] trace event. Only called when obs is
+/// installed, so the obs-off path never touches the scratch.
+fn stamp_dispatch(
+    o: &Obs,
+    batch: u64,
+    layer: u16,
+    plan: &DispatchPlan,
+    arena: &mut ExecArena,
+    t: usize,
+    t1: Instant,
+) {
+    let ffn = plan.ffn_assignments() as u64;
+    let zc = plan.zc_inline.len() as u64;
+    let dropped = plan.dropped.len() as u64;
+    o.registry().record(o.h.layer_ffn_assignments, ffn);
+    o.registry().record(o.h.layer_zc_assignments, zc);
+    let tk = arena.prepare_tok_k(t);
+    for b in &plan.ffn_batches {
+        for &tok in &b.tokens {
+            tk[tok] += 1;
+        }
+    }
+    let mut tok_by_k = [0u32; TOK_K_BINS];
+    for &k in tk.iter() {
+        tok_by_k[(k as usize).min(TOK_K_BINS - 1)] += 1;
+    }
+    for (k, &n) in tok_by_k.iter().enumerate() {
+        if n > 0 {
+            o.registry().record_n(
+                o.h.tokens_per_expert_count,
+                k as u64,
+                n as u64,
+            );
+        }
+    }
+    let ns = t1.elapsed().as_nanos() as u64;
+    o.registry().record(o.h.dispatch_ns, ns);
+    o.trace.push(EventKind::Dispatch {
+        batch,
+        layer,
+        ffn: ffn as u32,
+        zc: zc as u32,
+        dropped: dropped as u32,
+        ns,
+        tok_by_k,
+    });
 }
 
 // ------------------------------------------------------------- backends
@@ -629,11 +772,16 @@ impl ExpertBackend for NativeBatched<'_> {
         // the dense compute out over the executor (each worker writing
         // its own arena-owned shard buffer), then scatter-add serially.
         arena.ensure_shard_bufs(n_shards);
+        // Record which shard buffers this call actually runs so the
+        // driver can stamp exactly these (and never a previous layer's
+        // stale set) — see `FfnArena::last_shards`.
+        arena.last_shards = n_shards;
         let l1_budget = arena.l1_budget_bytes;
         let shards = &arena.shards;
         exec.for_each_mut(
             &mut arena.shard_bufs[..n_shards],
             |idx, buf| {
+                let w0 = Instant::now();
                 let spec = &shards[idx];
                 let batch = &batches[spec.batch];
                 let e = &w.ffn[batch.expert];
@@ -660,6 +808,10 @@ impl ExpertBackend for NativeBatched<'_> {
                     &mut out[..spec.len * d],
                     None,
                 );
+                // Worker-side wall time for this shard, written into the
+                // worker's exclusive buffer; the driver stamps it after
+                // the join (no locks, no atomics on the worker path).
+                buf.ns = w0.elapsed().as_nanos() as u64;
             },
         );
         // Canonical serial combine: shards are generated in (batch,
@@ -709,9 +861,10 @@ mod tests {
     ) -> (Tensor, ForwardStats) {
         let cfgs = vec![cfg.clone(); cfg.n_layers];
         let mut arena = ExecArena::new();
-        let (y, stats, _) =
-            forward_stack(backend, weights, &cfgs, x, &mut arena, exec)
-                .unwrap();
+        let (y, stats, _) = forward_stack(
+            backend, weights, &cfgs, x, &mut arena, exec, None,
+        )
+        .unwrap();
         (y, stats)
     }
 

@@ -100,7 +100,7 @@ pub fn layer_forward(
     let mut arena = FfnArena::new();
     let ex = exec::execute_layer(
         &mut backend, 0, &plan, &routing, cfg, &weights.consts, x,
-        &mut y, &mut arena, &Executor::serial(),
+        &mut y, &mut arena, &Executor::serial(), None, 0,
     )
     .expect("native single-layer execution is infallible");
     (y, routing, ex.stats)

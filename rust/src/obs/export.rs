@@ -1,0 +1,884 @@
+//! Exporters (DESIGN.md §15) — every byte of string work lives here,
+//! strictly off the hot path:
+//!
+//! * [`prometheus`] — the registry as Prometheus text exposition
+//!   (counters, gauges, log2 histograms with power-of-two `le` bounds).
+//! * [`registry_json`] — the same data as a [`Json`] document.
+//! * [`trace_jsonl`] / [`event_json`] — the trace ring as JSONL, one
+//!   typed event per line, with [`event_from_json`] as the exact
+//!   inverse (round-trip tested).
+//! * [`TraceSummary`] — per-stage latency breakdown and the
+//!   tokens-per-FFN-expert-count distribution, computed from events
+//!   in memory or re-read from a JSONL file (`moepp obs summarize`).
+//! * [`parse_prometheus`] — a line-format validator used by ci.sh to
+//!   gate that the exposition output actually parses.
+
+use anyhow::Result;
+
+use super::trace::{Event, EventKind, TOK_K_BINS};
+use super::Obs;
+use crate::util::json::Json;
+
+/// Render the registry (plus the process-wide warning / obs-allocation
+/// counters and the trace drop counter) as Prometheus text exposition.
+pub fn prometheus(obs: &Obs) -> String {
+    super::note_alloc();
+    let mut out = String::new();
+    for (name, v) in obs.registry().counters() {
+        out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+    }
+    for (name, v) in [
+        ("moepp_warnings_total", super::warnings_total()),
+        ("moepp_obs_allocations_total", super::alloc_count()),
+        ("moepp_trace_dropped_events_total", obs.trace.dropped_events()),
+    ] {
+        out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+    }
+    for (name, v) in obs.registry().gauges() {
+        out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+    }
+    for (name, s) in obs.registry().hists() {
+        out.push_str(&format!("# TYPE {name} histogram\n"));
+        let top = (0..super::hist::N_BUCKETS)
+            .rev()
+            .find(|&b| s.buckets[b] > 0)
+            .unwrap_or(0)
+            .min(63);
+        let mut cum = 0u64;
+        for b in 0..=top {
+            cum += s.buckets[b];
+            out.push_str(&format!(
+                "{name}_bucket{{le=\"{}\"}} {cum}\n",
+                super::hist::bucket_bound(b)
+            ));
+        }
+        out.push_str(&format!(
+            "{name}_bucket{{le=\"+Inf\"}} {}\n{name}_sum {}\n\
+             {name}_count {}\n",
+            s.count, s.sum, s.count
+        ));
+    }
+    out
+}
+
+/// Render the registry as a JSON document (`--metrics-out foo.json`).
+pub fn registry_json(obs: &Obs) -> Json {
+    super::note_alloc();
+    let counters: Vec<(&str, Json)> = obs
+        .registry()
+        .counters()
+        .chain([
+            ("moepp_warnings_total", super::warnings_total()),
+            ("moepp_obs_allocations_total", super::alloc_count()),
+            (
+                "moepp_trace_dropped_events_total",
+                obs.trace.dropped_events(),
+            ),
+        ])
+        .map(|(n, v)| (n, Json::num(v as f64)))
+        .collect();
+    let gauges: Vec<(&str, Json)> = obs
+        .registry()
+        .gauges()
+        .map(|(n, v)| (n, Json::num(v as f64)))
+        .collect();
+    let hists: Vec<(&str, Json)> = obs
+        .registry()
+        .hists()
+        .map(|(n, s)| {
+            let buckets: Vec<Json> = s
+                .buckets
+                .iter()
+                .enumerate()
+                .filter(|(_, &c)| c > 0)
+                .map(|(b, &c)| {
+                    Json::Arr(vec![
+                        Json::num(super::hist::bucket_bound(b) as f64),
+                        Json::num(c as f64),
+                    ])
+                })
+                .collect();
+            (
+                n,
+                Json::obj(vec![
+                    ("count", Json::num(s.count as f64)),
+                    ("sum", Json::num(s.sum as f64)),
+                    ("buckets", Json::Arr(buckets)),
+                ]),
+            )
+        })
+        .collect();
+    Json::obj(vec![
+        ("counters", Json::obj(counters)),
+        ("gauges", Json::obj(gauges)),
+        ("histograms", Json::obj(hists)),
+    ])
+}
+
+/// One event as a JSON object (`None` for unfilled ring slots).
+pub fn event_json(ev: &Event) -> Option<Json> {
+    let t = ("t_ns", Json::num(ev.t_ns as f64));
+    let n = |v: u64| Json::num(v as f64);
+    let pairs: Vec<(&str, Json)> = match ev.kind {
+        EventKind::Empty => return None,
+        EventKind::Admit { req, prio, tokens } => vec![
+            t,
+            ("ev", Json::str("admit")),
+            ("req", n(req)),
+            ("prio", n(prio as u64)),
+            ("tokens", n(tokens as u64)),
+        ],
+        EventKind::Reject { prio, tokens } => vec![
+            t,
+            ("ev", Json::str("reject")),
+            ("prio", n(prio as u64)),
+            ("tokens", n(tokens as u64)),
+        ],
+        EventKind::QueueDepart { req, wait_ns } => vec![
+            t,
+            ("ev", Json::str("queue_depart")),
+            ("req", n(req)),
+            ("wait_ns", n(wait_ns)),
+        ],
+        EventKind::BatchForm { batch, requests, tokens } => vec![
+            t,
+            ("ev", Json::str("batch_form")),
+            ("batch", n(batch)),
+            ("requests", n(requests as u64)),
+            ("tokens", n(tokens as u64)),
+        ],
+        EventKind::Route { batch, layer, ns } => vec![
+            t,
+            ("ev", Json::str("route")),
+            ("batch", n(batch)),
+            ("layer", n(layer as u64)),
+            ("ns", n(ns)),
+        ],
+        EventKind::Dispatch {
+            batch,
+            layer,
+            ffn,
+            zc,
+            dropped,
+            ns,
+            tok_by_k,
+        } => vec![
+            t,
+            ("ev", Json::str("dispatch")),
+            ("batch", n(batch)),
+            ("layer", n(layer as u64)),
+            ("ffn", n(ffn as u64)),
+            ("zc", n(zc as u64)),
+            ("dropped", n(dropped as u64)),
+            ("ns", n(ns)),
+            (
+                "tok_by_k",
+                Json::Arr(
+                    tok_by_k.iter().map(|&c| n(c as u64)).collect(),
+                ),
+            ),
+        ],
+        EventKind::ShardForward {
+            batch,
+            layer,
+            device,
+            shard,
+            rows,
+            ns,
+        } => vec![
+            t,
+            ("ev", Json::str("shard_forward")),
+            ("batch", n(batch)),
+            ("layer", n(layer as u64)),
+            ("device", n(device as u64)),
+            ("shard", n(shard as u64)),
+            ("rows", n(rows as u64)),
+            ("ns", n(ns)),
+        ],
+        EventKind::ExpertForward { batch, layer, ffn_ns, zc_ns } => vec![
+            t,
+            ("ev", Json::str("expert_forward")),
+            ("batch", n(batch)),
+            ("layer", n(layer as u64)),
+            ("ffn_ns", n(ffn_ns)),
+            ("zc_ns", n(zc_ns)),
+        ],
+        EventKind::Combine { batch, layer, ns } => vec![
+            t,
+            ("ev", Json::str("combine")),
+            ("batch", n(batch)),
+            ("layer", n(layer as u64)),
+            ("ns", n(ns)),
+        ],
+        EventKind::BatchExec { batch, ns } => vec![
+            t,
+            ("ev", Json::str("batch_exec")),
+            ("batch", n(batch)),
+            ("ns", n(ns)),
+        ],
+        EventKind::Deliver { req, tokens, queue_ns, service_ns } => vec![
+            t,
+            ("ev", Json::str("deliver")),
+            ("req", n(req)),
+            ("tokens", n(tokens as u64)),
+            ("queue_ns", n(queue_ns)),
+            ("service_ns", n(service_ns)),
+        ],
+        EventKind::Cancel { req } => {
+            vec![t, ("ev", Json::str("cancel")), ("req", n(req))]
+        }
+        EventKind::Expire { req } => {
+            vec![t, ("ev", Json::str("expire")), ("req", n(req))]
+        }
+        EventKind::Fail { req } => {
+            vec![t, ("ev", Json::str("fail")), ("req", n(req))]
+        }
+        EventKind::ReplanProposed { batch, moves, gain_ppm } => vec![
+            t,
+            ("ev", Json::str("replan_proposed")),
+            ("batch", n(batch)),
+            ("moves", n(moves as u64)),
+            ("gain_ppm", n(gain_ppm)),
+        ],
+        EventKind::ReplanCommitted { batch, moves, bytes } => vec![
+            t,
+            ("ev", Json::str("replan_committed")),
+            ("batch", n(batch)),
+            ("moves", n(moves as u64)),
+            ("bytes", n(bytes)),
+        ],
+        EventKind::ReplanAbandoned { batch, age_batches } => vec![
+            t,
+            ("ev", Json::str("replan_abandoned")),
+            ("batch", n(batch)),
+            ("age_batches", n(age_batches as u64)),
+        ],
+        EventKind::DeviceBusy { batch, layer, device, rows, ns } => vec![
+            t,
+            ("ev", Json::str("device_busy")),
+            ("batch", n(batch)),
+            ("layer", n(layer as u64)),
+            ("device", n(device as u64)),
+            ("rows", n(rows as u64)),
+            ("ns", n(ns)),
+        ],
+        EventKind::ReplicaSplit { batch, layer, expert, device, rows } => {
+            vec![
+                t,
+                ("ev", Json::str("replica_split")),
+                ("batch", n(batch)),
+                ("layer", n(layer as u64)),
+                ("expert", n(expert as u64)),
+                ("device", n(device as u64)),
+                ("rows", n(rows as u64)),
+            ]
+        }
+    };
+    Some(Json::obj(pairs))
+}
+
+/// Exact inverse of [`event_json`] (round-trip tested below).
+pub fn event_from_json(v: &Json) -> Option<Event> {
+    let u = |key: &str| -> Option<u64> {
+        v.get(key).and_then(Json::as_f64).map(|f| f as u64)
+    };
+    let t_ns = u("t_ns")?;
+    let kind = match v.get("ev").and_then(Json::as_str)? {
+        "admit" => EventKind::Admit {
+            req: u("req")?,
+            prio: u("prio")? as u8,
+            tokens: u("tokens")? as u32,
+        },
+        "reject" => EventKind::Reject {
+            prio: u("prio")? as u8,
+            tokens: u("tokens")? as u32,
+        },
+        "queue_depart" => EventKind::QueueDepart {
+            req: u("req")?,
+            wait_ns: u("wait_ns")?,
+        },
+        "batch_form" => EventKind::BatchForm {
+            batch: u("batch")?,
+            requests: u("requests")? as u32,
+            tokens: u("tokens")? as u32,
+        },
+        "route" => EventKind::Route {
+            batch: u("batch")?,
+            layer: u("layer")? as u16,
+            ns: u("ns")?,
+        },
+        "dispatch" => {
+            let arr = v.get("tok_by_k")?.as_arr()?;
+            let mut tok_by_k = [0u32; TOK_K_BINS];
+            for (slot, j) in tok_by_k.iter_mut().zip(arr) {
+                *slot = j.as_f64()? as u32;
+            }
+            EventKind::Dispatch {
+                batch: u("batch")?,
+                layer: u("layer")? as u16,
+                ffn: u("ffn")? as u32,
+                zc: u("zc")? as u32,
+                dropped: u("dropped")? as u32,
+                ns: u("ns")?,
+                tok_by_k,
+            }
+        }
+        "shard_forward" => EventKind::ShardForward {
+            batch: u("batch")?,
+            layer: u("layer")? as u16,
+            device: u("device")? as u16,
+            shard: u("shard")? as u16,
+            rows: u("rows")? as u32,
+            ns: u("ns")?,
+        },
+        "expert_forward" => EventKind::ExpertForward {
+            batch: u("batch")?,
+            layer: u("layer")? as u16,
+            ffn_ns: u("ffn_ns")?,
+            zc_ns: u("zc_ns")?,
+        },
+        "combine" => EventKind::Combine {
+            batch: u("batch")?,
+            layer: u("layer")? as u16,
+            ns: u("ns")?,
+        },
+        "batch_exec" => {
+            EventKind::BatchExec { batch: u("batch")?, ns: u("ns")? }
+        }
+        "deliver" => EventKind::Deliver {
+            req: u("req")?,
+            tokens: u("tokens")? as u32,
+            queue_ns: u("queue_ns")?,
+            service_ns: u("service_ns")?,
+        },
+        "cancel" => EventKind::Cancel { req: u("req")? },
+        "expire" => EventKind::Expire { req: u("req")? },
+        "fail" => EventKind::Fail { req: u("req")? },
+        "replan_proposed" => EventKind::ReplanProposed {
+            batch: u("batch")?,
+            moves: u("moves")? as u32,
+            gain_ppm: u("gain_ppm")?,
+        },
+        "replan_committed" => EventKind::ReplanCommitted {
+            batch: u("batch")?,
+            moves: u("moves")? as u32,
+            bytes: u("bytes")?,
+        },
+        "replan_abandoned" => EventKind::ReplanAbandoned {
+            batch: u("batch")?,
+            age_batches: u("age_batches")? as u32,
+        },
+        "device_busy" => EventKind::DeviceBusy {
+            batch: u("batch")?,
+            layer: u("layer")? as u16,
+            device: u("device")? as u16,
+            rows: u("rows")? as u32,
+            ns: u("ns")?,
+        },
+        "replica_split" => EventKind::ReplicaSplit {
+            batch: u("batch")?,
+            layer: u("layer")? as u16,
+            expert: u("expert")? as u16,
+            device: u("device")? as u16,
+            rows: u("rows")? as u32,
+        },
+        _ => return None,
+    };
+    Some(Event { t_ns, kind })
+}
+
+/// The whole trace ring as JSONL, oldest event first.
+pub fn trace_jsonl(obs: &Obs) -> String {
+    super::note_alloc();
+    let mut out = String::new();
+    for ev in obs.trace.snapshot() {
+        if let Some(j) = event_json(&ev) {
+            out.push_str(&j.to_string());
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// One per-stage latency row of a [`TraceSummary`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageRow {
+    pub name: &'static str,
+    pub count: u64,
+    pub total_ns: u64,
+    pub max_ns: u64,
+}
+
+impl StageRow {
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_ns as f64 / self.count as f64
+        }
+    }
+}
+
+/// Aggregates derived from a trace: lifecycle counts (the quantities
+/// that reconcile exactly with `ServingMetrics`), per-stage latency and
+/// the tokens-per-FFN-expert-count distribution.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSummary {
+    pub admits: u64,
+    pub rejects: u64,
+    pub batches: u64,
+    pub batch_tokens: u64,
+    pub delivers: u64,
+    pub delivered_tokens: u64,
+    pub cancels: u64,
+    pub expires: u64,
+    pub fails: u64,
+    pub ffn: u64,
+    pub zc: u64,
+    pub dropped: u64,
+    pub replan_proposed: u64,
+    pub replan_committed: u64,
+    pub replan_abandoned: u64,
+    pub stages: Vec<StageRow>,
+    pub tok_by_k: [u64; TOK_K_BINS],
+}
+
+/// Fixed stage order of `TraceSummary::stages`.
+const STAGE_NAMES: [&str; 10] = [
+    "queue",
+    "route",
+    "dispatch",
+    "ffn",
+    "zc",
+    "shard",
+    "combine",
+    "batch_exec",
+    "service",
+    "device_busy",
+];
+
+impl TraceSummary {
+    pub fn from_events(events: &[Event]) -> TraceSummary {
+        let mut s = TraceSummary {
+            stages: STAGE_NAMES
+                .iter()
+                .map(|&name| StageRow { name, ..Default::default() })
+                .collect(),
+            ..Default::default()
+        };
+        // Edition-2021 closures capture `s.stages` alone, so the
+        // lifecycle counters stay mutable in the match below.
+        let mut note = |stage: usize, ns: u64| {
+            let row = &mut s.stages[stage];
+            row.count += 1;
+            row.total_ns += ns;
+            row.max_ns = row.max_ns.max(ns);
+        };
+        for ev in events {
+            match ev.kind {
+                EventKind::Empty => {}
+                EventKind::Admit { .. } => s.admits += 1,
+                EventKind::Reject { .. } => s.rejects += 1,
+                EventKind::QueueDepart { wait_ns, .. } => {
+                    note(0, wait_ns)
+                }
+                EventKind::BatchForm { tokens, .. } => {
+                    s.batches += 1;
+                    s.batch_tokens += tokens as u64;
+                }
+                EventKind::Route { ns, .. } => note(1, ns),
+                EventKind::Dispatch {
+                    ffn, zc, dropped, ns, tok_by_k, ..
+                } => {
+                    s.ffn += ffn as u64;
+                    s.zc += zc as u64;
+                    s.dropped += dropped as u64;
+                    for (bin, &c) in tok_by_k.iter().enumerate() {
+                        s.tok_by_k[bin] += c as u64;
+                    }
+                    note(2, ns);
+                }
+                EventKind::ExpertForward { ffn_ns, zc_ns, .. } => {
+                    note(3, ffn_ns);
+                    note(4, zc_ns);
+                }
+                EventKind::ShardForward { ns, .. } => note(5, ns),
+                EventKind::Combine { ns, .. } => note(6, ns),
+                EventKind::BatchExec { ns, .. } => note(7, ns),
+                EventKind::Deliver {
+                    tokens, queue_ns: _, service_ns, ..
+                } => {
+                    s.delivers += 1;
+                    s.delivered_tokens += tokens as u64;
+                    note(8, service_ns);
+                }
+                EventKind::Cancel { .. } => s.cancels += 1,
+                EventKind::Expire { .. } => s.expires += 1,
+                EventKind::Fail { .. } => s.fails += 1,
+                EventKind::ReplanProposed { .. } => {
+                    s.replan_proposed += 1
+                }
+                EventKind::ReplanCommitted { .. } => {
+                    s.replan_committed += 1
+                }
+                EventKind::ReplanAbandoned { .. } => {
+                    s.replan_abandoned += 1
+                }
+                EventKind::DeviceBusy { ns, .. } => note(9, ns),
+                EventKind::ReplicaSplit { .. } => {}
+            }
+        }
+        s
+    }
+
+    /// Render the human table `moepp obs summarize` prints.
+    pub fn render(&self) -> String {
+        super::note_alloc();
+        let mut out = String::new();
+        out.push_str("== trace summary ==\n");
+        out.push_str(&format!(
+            "requests: {} admitted, {} delivered, {} cancelled, \
+             {} expired, {} failed, {} rejected\n",
+            self.admits,
+            self.delivers,
+            self.cancels,
+            self.expires,
+            self.fails,
+            self.rejects
+        ));
+        out.push_str(&format!(
+            "batches:  {} ({} tokens); replans: {} proposed, \
+             {} committed, {} abandoned\n",
+            self.batches,
+            self.batch_tokens,
+            self.replan_proposed,
+            self.replan_committed,
+            self.replan_abandoned
+        ));
+        out.push_str(&format!(
+            "assignments: ffn {}, zc {}, dropped {}\n\n",
+            self.ffn, self.zc, self.dropped
+        ));
+        out.push_str(&format!(
+            "{:<12} {:>8} {:>12} {:>12} {:>12}\n",
+            "stage", "count", "total_ms", "mean_us", "max_us"
+        ));
+        for row in &self.stages {
+            if row.count == 0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "{:<12} {:>8} {:>12.3} {:>12.2} {:>12.2}\n",
+                row.name,
+                row.count,
+                row.total_ns as f64 / 1e6,
+                row.mean_ns() / 1e3,
+                row.max_ns as f64 / 1e3
+            ));
+        }
+        let total_tok: u64 = self.tok_by_k.iter().sum();
+        if total_tok > 0 {
+            out.push_str(
+                "\ntokens per FFN-expert count (token-layers):\n",
+            );
+            for (k, &c) in self.tok_by_k.iter().enumerate() {
+                if c == 0 {
+                    continue;
+                }
+                let label = if k + 1 == TOK_K_BINS {
+                    format!("k>={k}")
+                } else {
+                    format!("k={k}")
+                };
+                out.push_str(&format!(
+                    "  {:<6} {:>10}  {:>5.1}%\n",
+                    label,
+                    c,
+                    100.0 * c as f64 / total_tok as f64
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// Parse a JSONL trace file's text back into a summary
+/// (`moepp obs summarize <trace.jsonl>`).
+pub fn summarize_jsonl(text: &str) -> Result<TraceSummary> {
+    let mut events = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| {
+            anyhow::anyhow!("trace line {}: {e}", i + 1)
+        })?;
+        let ev = event_from_json(&j).ok_or_else(|| {
+            anyhow::anyhow!("trace line {}: unrecognized event", i + 1)
+        })?;
+        events.push(ev);
+    }
+    Ok(TraceSummary::from_events(&events))
+}
+
+/// Validate Prometheus text exposition line format; returns the sample
+/// count. Accepts comment lines (`# ...`, with `# TYPE` shape-checked)
+/// and `name[{labels}] value` samples.
+pub fn parse_prometheus(text: &str) -> Result<usize> {
+    let name_ok = |s: &str| {
+        !s.is_empty()
+            && s.chars().next().is_some_and(|c| {
+                c.is_ascii_alphabetic() || c == '_' || c == ':'
+            })
+            && s.chars().all(|c| {
+                c.is_ascii_alphanumeric() || c == '_' || c == ':'
+            })
+    };
+    let mut samples = 0usize;
+    for (i, line) in text.lines().enumerate() {
+        let lineno = i + 1;
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            let mut words = rest.split_whitespace();
+            if words.next() == Some("TYPE") {
+                let name = words.next().unwrap_or("");
+                let kind = words.next().unwrap_or("");
+                anyhow::ensure!(
+                    name_ok(name)
+                        && matches!(
+                            kind,
+                            "counter" | "gauge" | "histogram"
+                                | "summary" | "untyped"
+                        )
+                        && words.next().is_none(),
+                    "line {lineno}: malformed TYPE comment"
+                );
+            }
+            continue;
+        }
+        // name[{labels}] value
+        let (head, value) = match line.find('}') {
+            Some(close) => {
+                let (h, v) = line.split_at(close + 1);
+                let open = h.find('{').ok_or_else(|| {
+                    anyhow::anyhow!("line {lineno}: '}}' without '{{'")
+                })?;
+                let labels = &h[open + 1..h.len() - 1];
+                for pair in
+                    labels.split(',').filter(|p| !p.is_empty())
+                {
+                    let (k, v) =
+                        pair.split_once('=').ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "line {lineno}: label without '='"
+                            )
+                        })?;
+                    anyhow::ensure!(
+                        name_ok(k)
+                            && v.len() >= 2
+                            && v.starts_with('"')
+                            && v.ends_with('"'),
+                        "line {lineno}: malformed label '{pair}'"
+                    );
+                }
+                (&h[..open], v)
+            }
+            None => {
+                let sp = line.find(' ').ok_or_else(|| {
+                    anyhow::anyhow!("line {lineno}: no value")
+                })?;
+                line.split_at(sp)
+            }
+        };
+        anyhow::ensure!(
+            name_ok(head.trim()),
+            "line {lineno}: bad metric name '{}'",
+            head.trim()
+        );
+        let value = value.trim();
+        anyhow::ensure!(
+            value.parse::<f64>().is_ok()
+                || matches!(value, "+Inf" | "-Inf" | "NaN"),
+            "line {lineno}: bad sample value '{value}'"
+        );
+        samples += 1;
+    }
+    anyhow::ensure!(samples > 0, "no samples in exposition output");
+    Ok(samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<Event> {
+        let mut tok_by_k = [0u32; TOK_K_BINS];
+        tok_by_k[0] = 3;
+        tok_by_k[2] = 5;
+        vec![
+            Event {
+                t_ns: 10,
+                kind: EventKind::Admit { req: 1, prio: 0, tokens: 8 },
+            },
+            Event {
+                t_ns: 20,
+                kind: EventKind::QueueDepart { req: 1, wait_ns: 10 },
+            },
+            Event {
+                t_ns: 21,
+                kind: EventKind::BatchForm {
+                    batch: 0,
+                    requests: 1,
+                    tokens: 8,
+                },
+            },
+            Event {
+                t_ns: 25,
+                kind: EventKind::Route { batch: 0, layer: 0, ns: 4 },
+            },
+            Event {
+                t_ns: 30,
+                kind: EventKind::Dispatch {
+                    batch: 0,
+                    layer: 0,
+                    ffn: 11,
+                    zc: 5,
+                    dropped: 0,
+                    ns: 5,
+                    tok_by_k,
+                },
+            },
+            Event {
+                t_ns: 40,
+                kind: EventKind::ExpertForward {
+                    batch: 0,
+                    layer: 0,
+                    ffn_ns: 9,
+                    zc_ns: 1,
+                },
+            },
+            Event {
+                t_ns: 41,
+                kind: EventKind::Combine { batch: 0, layer: 0, ns: 1 },
+            },
+            Event {
+                t_ns: 45,
+                kind: EventKind::BatchExec { batch: 0, ns: 24 },
+            },
+            Event {
+                t_ns: 50,
+                kind: EventKind::Deliver {
+                    req: 1,
+                    tokens: 8,
+                    queue_ns: 10,
+                    service_ns: 40,
+                },
+            },
+        ]
+    }
+
+    #[test]
+    fn events_round_trip_through_json() {
+        for ev in sample_events() {
+            let j = event_json(&ev).expect("non-empty");
+            let back = event_from_json(
+                &Json::parse(&j.to_string()).unwrap(),
+            )
+            .expect("inverse");
+            assert_eq!(ev, back);
+        }
+        assert!(event_json(&Event::default()).is_none());
+    }
+
+    #[test]
+    fn summary_aggregates_lifecycle_and_stages() {
+        let s = TraceSummary::from_events(&sample_events());
+        assert_eq!(s.admits, 1);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.batch_tokens, 8);
+        assert_eq!(s.delivers, 1);
+        assert_eq!(s.ffn, 11);
+        assert_eq!(s.zc, 5);
+        assert_eq!(s.tok_by_k[0], 3);
+        assert_eq!(s.tok_by_k[2], 5);
+        let queue = &s.stages[0];
+        assert_eq!((queue.count, queue.total_ns), (1, 10));
+        let rendered = s.render();
+        assert!(rendered.contains("queue"));
+        assert!(rendered.contains("k=2"));
+    }
+
+    #[test]
+    fn summarize_jsonl_round_trips_and_rejects_garbage() {
+        let mut text = String::new();
+        for ev in sample_events() {
+            text.push_str(&event_json(&ev).unwrap().to_string());
+            text.push('\n');
+        }
+        let s = summarize_jsonl(&text).unwrap();
+        assert_eq!(s.admits, 1);
+        assert_eq!(s.delivered_tokens, 8);
+        assert!(summarize_jsonl("not json\n").is_err());
+        assert!(summarize_jsonl("{\"ev\":\"nope\",\"t_ns\":1}\n")
+            .is_err());
+    }
+
+    #[test]
+    fn prometheus_export_passes_its_own_format_check() {
+        let obs = Obs::new(16);
+        obs.registry().inc(obs.h.requests);
+        obs.registry().record(obs.h.queue_wait_ns, 900);
+        obs.registry().record(obs.h.queue_wait_ns, 0);
+        obs.registry().set_gauge(obs.h.peak_queue_tokens, 5);
+        let text = prometheus(&obs);
+        let samples = parse_prometheus(&text).unwrap();
+        assert!(samples > 10, "{samples} samples\n{text}");
+        assert!(text.contains("moepp_requests_total 1"));
+        // Cumulative histogram: le="1023" covers both the 0 and 900.
+        assert!(
+            text.contains("moepp_queue_wait_ns_bucket{le=\"1023\"} 2"),
+            "{text}"
+        );
+        assert!(text.contains("moepp_queue_wait_ns_count 2"));
+        assert!(text.contains("moepp_queue_wait_ns_sum 900"));
+        assert!(text.contains("moepp_warnings_total"));
+    }
+
+    #[test]
+    fn format_check_rejects_malformed_lines() {
+        assert!(parse_prometheus("metric_a 1\n").is_ok());
+        assert!(parse_prometheus("2metric 1\n").is_err());
+        assert!(parse_prometheus("metric_a\n").is_err());
+        assert!(parse_prometheus("metric_a one\n").is_err());
+        assert!(parse_prometheus("m{le=\"1\"} 2\n").is_ok());
+        assert!(parse_prometheus("m{le=1} 2\n").is_err());
+        assert!(parse_prometheus("").is_err());
+    }
+
+    #[test]
+    fn registry_json_contains_all_sections() {
+        let obs = Obs::new(16);
+        obs.registry().add(obs.h.tokens, 64);
+        obs.registry().record(obs.h.batch_tokens, 64);
+        let j = registry_json(&obs);
+        assert_eq!(
+            j.get("counters")
+                .unwrap()
+                .get("moepp_tokens_total")
+                .unwrap()
+                .as_f64(),
+            Some(64.0)
+        );
+        let h = j
+            .get("histograms")
+            .unwrap()
+            .get("moepp_batch_tokens")
+            .unwrap();
+        assert_eq!(h.get("count").unwrap().as_f64(), Some(1.0));
+        assert_eq!(h.get("sum").unwrap().as_f64(), Some(64.0));
+    }
+}

@@ -1,0 +1,192 @@
+//! Deterministic log2-bucketed integer histograms (DESIGN.md §15).
+//!
+//! Values are nonnegative integers — nanosecond durations, token counts,
+//! assignment counts. A value `v` lands in bucket `64 - v.leading_zeros()`
+//! (bucket 0 holds exactly `v == 0`), so bucket `b >= 1` covers
+//! `[2^(b-1), 2^b - 1]`. The bucket index is a pure function of the bit
+//! pattern: no floats, no configured edge list, no binary search — and
+//! two histograms taken on different threads or machines merge by plain
+//! integer addition, bucket by bucket. Recording is one leading-zeros
+//! instruction plus three relaxed atomic adds; it never allocates and
+//! never fails (the no-alloc lint region below is checked by
+//! `moepp analyze`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bucket count: one for zero plus one per possible leading-one position.
+pub const N_BUCKETS: usize = 65;
+
+/// Bucket index for a value: 0 for 0, else the position of the leading
+/// one bit (1-based), i.e. `floor(log2(v)) + 1`.
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    (64 - v.leading_zeros()) as usize
+}
+
+/// Inclusive upper bound of bucket `b` (`u64::MAX` for bucket 64).
+pub fn bucket_bound(b: usize) -> u64 {
+    if b >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << b) - 1
+    }
+}
+
+/// A fixed-shape concurrent histogram: exact count and sum plus 65
+/// power-of-two buckets. All state is atomic; `&Hist` records from any
+/// thread.
+pub struct Hist {
+    count: AtomicU64,
+    sum: AtomicU64,
+    buckets: [AtomicU64; N_BUCKETS],
+}
+
+/// Plain-integer copy of a histogram's state at one moment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub buckets: [u64; N_BUCKETS],
+}
+
+impl Default for Hist {
+    fn default() -> Hist {
+        Hist::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    // lint: no-alloc — recording is the hot path: an index computation
+    // plus relaxed atomic adds, nothing else (DESIGN.md §15).
+    /// Record one observation of `v`.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.record_n(v, 1);
+    }
+
+    /// Record `n` observations of `v` in one shot (used for weighted
+    /// distributions like "n tokens saw k FFN experts this layer").
+    #[inline]
+    pub fn record_n(&self, v: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        // ordering: monotone statistics counters — readers only ever
+        // see a histogram that is at most a few events behind; no other
+        // memory is published through these adds.
+        self.count.fetch_add(n, Ordering::Relaxed);
+        self.sum.fetch_add(v.wrapping_mul(n), Ordering::Relaxed);
+        self.buckets[bucket_of(v)].fetch_add(n, Ordering::Relaxed);
+    }
+    // lint: end
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        // ordering: read-side of the monotone counters above; exactness
+        // is only claimed for quiescent reads (export after a run).
+        HistSnapshot {
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            buckets: std::array::from_fn(|b| {
+                self.buckets[b].load(Ordering::Relaxed)
+            }),
+        }
+    }
+
+    /// Merge another histogram's snapshot into this one — bucket-wise
+    /// integer addition, the mergeability the log2 shape buys.
+    pub fn merge(&self, other: &HistSnapshot) {
+        // ordering: same monotone-counter discipline as record_n.
+        self.count.fetch_add(other.count, Ordering::Relaxed);
+        self.sum.fetch_add(other.sum, Ordering::Relaxed);
+        for (b, &n) in other.buckets.iter().enumerate() {
+            self.buckets[b].fetch_add(n, Ordering::Relaxed);
+        }
+    }
+}
+
+impl HistSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_powers_of_two() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(7), 3);
+        assert_eq!(bucket_of(8), 4);
+        assert_eq!(bucket_of(u64::MAX), 64);
+        // Every bucket's bound is the largest value it admits.
+        for b in 0..N_BUCKETS {
+            let bound = bucket_bound(b);
+            assert_eq!(bucket_of(bound), b);
+            if b < 64 {
+                assert_eq!(bucket_of(bound + 1), b + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn record_keeps_exact_count_and_sum() {
+        let h = Hist::new();
+        for v in [0u64, 1, 1, 5, 1023, 1024, 999_999_937] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 7);
+        assert_eq!(s.sum, 1 + 1 + 5 + 1023 + 1024 + 999_999_937);
+        assert_eq!(s.buckets[0], 1); // the zero
+        assert_eq!(s.buckets[1], 2); // the two ones
+        assert_eq!(s.buckets[3], 1); // 5
+        assert_eq!(s.buckets[10], 1); // 1023
+        assert_eq!(s.buckets[11], 1); // 1024
+        assert_eq!(s.buckets.iter().sum::<u64>(), s.count);
+    }
+
+    #[test]
+    fn record_n_is_equivalent_to_n_records() {
+        let a = Hist::new();
+        let b = Hist::new();
+        a.record_n(3, 5);
+        for _ in 0..5 {
+            b.record(3);
+        }
+        assert_eq!(a.snapshot(), b.snapshot());
+    }
+
+    #[test]
+    fn merge_is_bucketwise_addition() {
+        let a = Hist::new();
+        let b = Hist::new();
+        a.record(7);
+        a.record(100);
+        b.record(7);
+        b.record(0);
+        a.merge(&b.snapshot());
+        let s = a.snapshot();
+        assert_eq!(s.count, 4);
+        assert_eq!(s.sum, 7 + 100 + 7);
+        assert_eq!(s.buckets[3], 2);
+        assert_eq!(s.buckets[0], 1);
+    }
+}

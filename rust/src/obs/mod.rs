@@ -1,0 +1,281 @@
+//! `moepp::obs` — zero-overhead observability (DESIGN.md §15): a
+//! metrics registry of counters/gauges/log2-histograms behind
+//! preregistered handles, a preallocated span-trace ring buffer, and
+//! off-hot-path exporters (Prometheus text, JSON, JSONL).
+//!
+//! The contract every recording site relies on:
+//!
+//! * **Infallible** — no obs call returns a `Result` or panics on full
+//!   buffers; a full trace overwrites its oldest event and counts the
+//!   drop.
+//! * **Bitwise-neutral** — obs never touches model math; outputs are
+//!   bitwise-identical with obs installed, enabled, or absent
+//!   (regression-tested in `tests/obs_steady_state.rs`).
+//! * **Allocation- and thread-free in steady state** — handles are
+//!   preregistered, the ring is preallocated, and recording is atomic
+//!   adds + a slot copy. The obs modules own **no** threads (they are
+//!   deliberately absent from the analyzer's spawn allowlist) and the
+//!   process-wide [`alloc_count`] stays flat across steady-state
+//!   requests.
+//!
+//! One [`Obs`] instance is shared per run (`Arc<Obs>`): the serving
+//! layer stamps the request lifecycle, the execution layer stamps
+//! per-layer/per-shard timing, and the cluster/placement layers stamp
+//! device loads and the replan trail — all against the same registry,
+//! trace and epoch, which is what makes trace-derived aggregates
+//! reconcile exactly with `ServingMetrics`.
+
+pub mod export;
+pub mod hist;
+pub mod registry;
+pub mod trace;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+pub use export::{
+    parse_prometheus, prometheus, registry_json, summarize_jsonl,
+    trace_jsonl, TraceSummary,
+};
+pub use hist::{bucket_bound, bucket_of, Hist, HistSnapshot, N_BUCKETS};
+pub use registry::{CounterH, GaugeH, HistH, Registry, RegistryBuilder};
+pub use trace::{Event, EventKind, Trace, DEFAULT_CAPACITY, TOK_K_BINS};
+
+/// Process-wide warning counter: every `warn_log!` lands here even when
+/// `--quiet` suppresses the print, so suppressed warnings stay
+/// countable. Exported as `moepp_warnings_total`.
+static WARNINGS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide count of allocations performed *by obs code itself*
+/// (builder registration, ring preallocation, export rendering). The
+/// steady-state test pins this flat across replayed requests: recording
+/// paths must never move it. Exported as `moepp_obs_allocations_total`.
+static OBS_ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Note one `warn_log!` firing (called by the logging macro).
+pub fn note_warning() {
+    // ordering: monotone event counter, read at quiescence.
+    WARNINGS.fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn warnings_total() -> u64 {
+    // ordering: quiescent read of a monotone counter.
+    WARNINGS.load(Ordering::Relaxed)
+}
+
+/// Note one allocation on an obs code path (never a recording path).
+pub(crate) fn note_alloc() {
+    // ordering: monotone event counter, read at quiescence.
+    OBS_ALLOCS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Allocations obs code has performed so far, process-wide.
+pub fn alloc_count() -> u64 {
+    // ordering: quiescent read of a monotone counter.
+    OBS_ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Every handle the runtime records against, preregistered at
+/// [`Obs::new`] so steady-state stamping never registers, looks up or
+/// allocates. Names follow Prometheus conventions (`_total` counters,
+/// `_ns` integer-nanosecond histograms).
+pub struct Handles {
+    // --- serve lifecycle counters (reconcile with `ServingMetrics`) ---
+    pub requests: CounterH,
+    pub rejected: CounterH,
+    pub cancelled: CounterH,
+    pub expired: CounterH,
+    pub failed: CounterH,
+    pub batches: CounterH,
+    pub tokens: CounterH,
+    pub ffn_assignments: CounterH,
+    pub zc_assignments: CounterH,
+    pub dropped_assignments: CounterH,
+    pub replans: CounterH,
+    /// Integer-nanosecond twins of the float second sums in
+    /// `ServingMetrics` (`(s * 1e9) as u64`, summed in the ns domain).
+    pub expert_forward_ns: CounterH,
+    pub routing_ns: CounterH,
+    // --- placement / replan trail ---
+    pub replan_proposed: CounterH,
+    pub replan_committed: CounterH,
+    pub replan_abandoned: CounterH,
+    pub migration_bytes: CounterH,
+    // --- gauges ---
+    pub peak_queue_tokens: GaugeH,
+    pub time_to_first_batch_ns: GaugeH,
+    // --- per-stage latency histograms (ns) ---
+    pub queue_wait_ns: HistH,
+    pub service_ns: HistH,
+    pub batch_exec_ns: HistH,
+    pub route_ns: HistH,
+    pub dispatch_ns: HistH,
+    pub ffn_stage_ns: HistH,
+    pub zc_stage_ns: HistH,
+    pub combine_ns: HistH,
+    pub shard_ns: HistH,
+    pub device_busy_ns: HistH,
+    // --- distribution histograms (counts) ---
+    pub batch_tokens: HistH,
+    pub layer_ffn_assignments: HistH,
+    pub layer_zc_assignments: HistH,
+    /// Distribution of FFN experts per token per layer — the paper's
+    /// dynamic experts-per-token evidence.
+    pub tokens_per_expert_count: HistH,
+}
+
+impl Handles {
+    fn preregister(b: &mut RegistryBuilder) -> Handles {
+        Handles {
+            requests: b.counter("moepp_requests_total"),
+            rejected: b.counter("moepp_rejected_total"),
+            cancelled: b.counter("moepp_cancelled_total"),
+            expired: b.counter("moepp_expired_total"),
+            failed: b.counter("moepp_failed_total"),
+            batches: b.counter("moepp_batches_total"),
+            tokens: b.counter("moepp_tokens_total"),
+            ffn_assignments: b.counter("moepp_ffn_assignments_total"),
+            zc_assignments: b.counter("moepp_zc_assignments_total"),
+            dropped_assignments: b
+                .counter("moepp_dropped_assignments_total"),
+            replans: b.counter("moepp_replans_total"),
+            expert_forward_ns: b.counter("moepp_expert_forward_ns_total"),
+            routing_ns: b.counter("moepp_routing_ns_total"),
+            replan_proposed: b.counter("moepp_replan_proposed_total"),
+            replan_committed: b.counter("moepp_replan_committed_total"),
+            replan_abandoned: b.counter("moepp_replan_abandoned_total"),
+            migration_bytes: b.counter("moepp_migration_bytes_total"),
+            peak_queue_tokens: b.gauge("moepp_peak_queue_tokens"),
+            time_to_first_batch_ns: b.gauge("moepp_time_to_first_batch_ns"),
+            queue_wait_ns: b.hist("moepp_queue_wait_ns"),
+            service_ns: b.hist("moepp_service_ns"),
+            batch_exec_ns: b.hist("moepp_batch_exec_ns"),
+            route_ns: b.hist("moepp_route_ns"),
+            dispatch_ns: b.hist("moepp_dispatch_ns"),
+            ffn_stage_ns: b.hist("moepp_ffn_stage_ns"),
+            zc_stage_ns: b.hist("moepp_zc_stage_ns"),
+            combine_ns: b.hist("moepp_combine_ns"),
+            shard_ns: b.hist("moepp_shard_ns"),
+            device_busy_ns: b.hist("moepp_device_busy_ns"),
+            batch_tokens: b.hist("moepp_batch_tokens"),
+            layer_ffn_assignments: b.hist("moepp_layer_ffn_assignments"),
+            layer_zc_assignments: b.hist("moepp_layer_zc_assignments"),
+            tokens_per_expert_count: b
+                .hist("moepp_tokens_per_expert_count"),
+        }
+    }
+}
+
+/// One run's observability bundle: frozen registry + preregistered
+/// handles + trace ring. Shared as `Arc<Obs>` across the service, the
+/// engine/cluster backend and the replanner so every stamp shares one
+/// clock and one counter space.
+pub struct Obs {
+    reg: Registry,
+    pub h: Handles,
+    pub trace: Trace,
+    /// Monotone batch sequence: `forward_stack` claims the next id at
+    /// entry; backends stamping mid-forward read the current one.
+    batch_seq: AtomicU64,
+}
+
+impl Obs {
+    /// Build with `trace_capacity` preallocated trace slots. The trace
+    /// starts disabled; metrics are always on (they are atomic adds).
+    pub fn new(trace_capacity: usize) -> Obs {
+        let mut b = RegistryBuilder::new();
+        let h = Handles::preregister(&mut b);
+        Obs {
+            reg: b.build(),
+            h,
+            trace: Trace::new(trace_capacity),
+            batch_seq: AtomicU64::new(0),
+        }
+    }
+
+    /// `Arc`-wrapped [`Obs::new`] with the default trace capacity.
+    pub fn shared() -> Arc<Obs> {
+        note_alloc();
+        Arc::new(Obs::new(DEFAULT_CAPACITY))
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.reg
+    }
+
+    /// Claim the next batch id (called once per `forward_stack`).
+    pub fn next_batch(&self) -> u64 {
+        // ordering: a monotone sequence claimed by the single forward
+        // driver; stamps only need ids to be distinct and increasing.
+        self.batch_seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// The most recently claimed batch id (0 before any forward).
+    pub fn current_batch(&self) -> u64 {
+        // ordering: read on the same driver thread that claimed it.
+        self.batch_seq.load(Ordering::Relaxed).saturating_sub(1)
+    }
+
+    /// The id the *next* forward will claim — what the serving scheduler
+    /// stamps on `BatchForm` just before handing the batch to the
+    /// backend (same thread later runs the forward, so no race).
+    pub fn peek_batch(&self) -> u64 {
+        // ordering: read on the scheduler thread that will also claim it.
+        self.batch_seq.load(Ordering::Relaxed)
+    }
+}
+
+/// `ServiceConfig` (and other carriers) derive `Debug`; the bundle's
+/// interesting state is its counters, not its internals.
+impl std::fmt::Debug for Obs {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Obs")
+            .field("trace_enabled", &self.trace.enabled())
+            .field("batch_seq", &self.peek_batch())
+            .finish_non_exhaustive()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obs_bundle_preregisters_everything_up_front() {
+        let obs = Obs::new(16);
+        // A representative handle of each kind works immediately.
+        obs.registry().inc(obs.h.requests);
+        obs.registry().set_gauge(obs.h.peak_queue_tokens, 9);
+        obs.registry().record(obs.h.queue_wait_ns, 1234);
+        assert_eq!(obs.registry().counter_value(obs.h.requests), 1);
+        assert_eq!(
+            obs.registry().counter_by_name("moepp_requests_total"),
+            Some(1)
+        );
+        assert_eq!(obs.registry().gauge_value(obs.h.peak_queue_tokens), 9);
+        assert_eq!(
+            obs.registry().hist_snapshot(obs.h.queue_wait_ns).count,
+            1
+        );
+    }
+
+    #[test]
+    fn batch_sequence_is_monotone() {
+        let obs = Obs::new(16);
+        assert_eq!(obs.next_batch(), 0);
+        assert_eq!(obs.current_batch(), 0);
+        assert_eq!(obs.next_batch(), 1);
+        assert_eq!(obs.current_batch(), 1);
+    }
+
+    #[test]
+    fn warning_and_alloc_counters_are_monotone() {
+        let w0 = warnings_total();
+        note_warning();
+        note_warning();
+        assert_eq!(warnings_total(), w0 + 2);
+        let a0 = alloc_count();
+        let _t = Trace::new(4);
+        assert!(alloc_count() > a0);
+    }
+}

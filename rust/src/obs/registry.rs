@@ -1,0 +1,215 @@
+//! The metrics registry (DESIGN.md §15): named counters, gauges and
+//! log2 histograms behind **preregistered handles**.
+//!
+//! Registration happens once, at build time, through the exclusive
+//! [`RegistryBuilder`]; it hands back typed index handles
+//! ([`CounterH`]/[`GaugeH`]/[`HistH`]) and freezes into an immutable
+//! [`Registry`] whose storage is three boxed slices of atomics. Every
+//! steady-state operation — `add`, `inc`, `set_gauge`, `max_gauge`,
+//! `record` — is an array index plus a relaxed atomic RMW: no map
+//! lookups, no locks, no allocation, no failure path. Names exist only
+//! for the exporters ([`super::export`]), which run strictly off the
+//! hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::hist::{Hist, HistSnapshot};
+
+/// Handle to a preregistered counter (monotone u64).
+#[derive(Clone, Copy, Debug)]
+pub struct CounterH(u32);
+
+/// Handle to a preregistered gauge (last-written or max-tracked u64).
+#[derive(Clone, Copy, Debug)]
+pub struct GaugeH(u32);
+
+/// Handle to a preregistered log2 histogram.
+#[derive(Clone, Copy, Debug)]
+pub struct HistH(u32);
+
+/// Accumulates registrations, then freezes into a [`Registry`].
+#[derive(Default)]
+pub struct RegistryBuilder {
+    counters: Vec<&'static str>,
+    gauges: Vec<&'static str>,
+    hists: Vec<&'static str>,
+}
+
+impl RegistryBuilder {
+    pub fn new() -> RegistryBuilder {
+        RegistryBuilder::default()
+    }
+
+    pub fn counter(&mut self, name: &'static str) -> CounterH {
+        super::note_alloc();
+        self.counters.push(name);
+        CounterH(self.counters.len() as u32 - 1)
+    }
+
+    pub fn gauge(&mut self, name: &'static str) -> GaugeH {
+        super::note_alloc();
+        self.gauges.push(name);
+        GaugeH(self.gauges.len() as u32 - 1)
+    }
+
+    pub fn hist(&mut self, name: &'static str) -> HistH {
+        super::note_alloc();
+        self.hists.push(name);
+        HistH(self.hists.len() as u32 - 1)
+    }
+
+    pub fn build(self) -> Registry {
+        super::note_alloc();
+        Registry {
+            counters: self
+                .counters
+                .iter()
+                .map(|_| AtomicU64::new(0))
+                .collect(),
+            gauges: self.gauges.iter().map(|_| AtomicU64::new(0)).collect(),
+            hists: self.hists.iter().map(|_| Hist::new()).collect(),
+            counter_names: self.counters.into_boxed_slice(),
+            gauge_names: self.gauges.into_boxed_slice(),
+            hist_names: self.hists.into_boxed_slice(),
+        }
+    }
+}
+
+/// The frozen registry. Shared by reference (`&Registry` /
+/// `Arc<super::Obs>`); all mutation is through relaxed atomics.
+pub struct Registry {
+    counters: Box<[AtomicU64]>,
+    gauges: Box<[AtomicU64]>,
+    hists: Box<[Hist]>,
+    counter_names: Box<[&'static str]>,
+    gauge_names: Box<[&'static str]>,
+    hist_names: Box<[&'static str]>,
+}
+
+impl Registry {
+    // lint: no-alloc — the steady-state recording surface: every method
+    // down to the lint: end marker is an array index + relaxed atomic
+    // op, and must stay allocation- and lock-free (DESIGN.md §15).
+    /// Add `v` to a counter.
+    #[inline]
+    pub fn add(&self, h: CounterH, v: u64) {
+        // ordering: monotone event counter; nothing is published
+        // through it and exact reads only happen at quiescence.
+        self.counters[h.0 as usize].fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Add one to a counter.
+    #[inline]
+    pub fn inc(&self, h: CounterH) {
+        self.add(h, 1);
+    }
+
+    /// Overwrite a gauge.
+    #[inline]
+    pub fn set_gauge(&self, h: GaugeH, v: u64) {
+        // ordering: last-writer-wins sample; readers tolerate any
+        // recent value.
+        self.gauges[h.0 as usize].store(v, Ordering::Relaxed);
+    }
+
+    /// Raise a gauge to `v` if `v` is larger (peak tracking).
+    #[inline]
+    pub fn max_gauge(&self, h: GaugeH, v: u64) {
+        // ordering: monotone max; fetch_max commutes, so concurrent
+        // writers converge to the true peak regardless of order.
+        self.gauges[h.0 as usize].fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Record one observation into a histogram.
+    #[inline]
+    pub fn record(&self, h: HistH, v: u64) {
+        self.hists[h.0 as usize].record(v);
+    }
+
+    /// Record `n` observations of `v` into a histogram.
+    #[inline]
+    pub fn record_n(&self, h: HistH, v: u64, n: u64) {
+        self.hists[h.0 as usize].record_n(v, n);
+    }
+    // lint: end
+
+    pub fn counter_value(&self, h: CounterH) -> u64 {
+        // ordering: quiescent read of a monotone counter.
+        self.counters[h.0 as usize].load(Ordering::Relaxed)
+    }
+
+    pub fn gauge_value(&self, h: GaugeH) -> u64 {
+        // ordering: quiescent read of a sampled gauge.
+        self.gauges[h.0 as usize].load(Ordering::Relaxed)
+    }
+
+    pub fn hist_snapshot(&self, h: HistH) -> HistSnapshot {
+        self.hists[h.0 as usize].snapshot()
+    }
+
+    /// Iterate `(name, value)` over all counters (export path).
+    pub fn counters(&self) -> impl Iterator<Item = (&'static str, u64)> + '_ {
+        self.counter_names.iter().zip(self.counters.iter()).map(
+            // ordering: quiescent export read.
+            |(&n, c)| (n, c.load(Ordering::Relaxed)),
+        )
+    }
+
+    /// Iterate `(name, value)` over all gauges (export path).
+    pub fn gauges(&self) -> impl Iterator<Item = (&'static str, u64)> + '_ {
+        self.gauge_names.iter().zip(self.gauges.iter()).map(
+            // ordering: quiescent export read.
+            |(&n, g)| (n, g.load(Ordering::Relaxed)),
+        )
+    }
+
+    /// Iterate `(name, snapshot)` over all histograms (export path).
+    pub fn hists(
+        &self,
+    ) -> impl Iterator<Item = (&'static str, HistSnapshot)> + '_ {
+        self.hist_names
+            .iter()
+            .zip(self.hists.iter())
+            .map(|(&n, h)| (n, h.snapshot()))
+    }
+
+    /// Look a counter up by name — test/debug convenience only; the
+    /// runtime always goes through handles.
+    pub fn counter_by_name(&self, name: &str) -> Option<u64> {
+        self.counters().find(|(n, _)| *n == name).map(|(_, v)| v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_index_their_own_metrics() {
+        let mut b = RegistryBuilder::new();
+        let c1 = b.counter("a_total");
+        let c2 = b.counter("b_total");
+        let g = b.gauge("depth");
+        let h = b.hist("lat_ns");
+        let reg = b.build();
+        reg.add(c1, 3);
+        reg.inc(c2);
+        reg.inc(c2);
+        reg.set_gauge(g, 7);
+        reg.max_gauge(g, 5); // lower: no effect
+        reg.max_gauge(g, 11);
+        reg.record(h, 100);
+        reg.record(h, 200);
+        assert_eq!(reg.counter_value(c1), 3);
+        assert_eq!(reg.counter_value(c2), 2);
+        assert_eq!(reg.gauge_value(g), 11);
+        let s = reg.hist_snapshot(h);
+        assert_eq!(s.count, 2);
+        assert_eq!(s.sum, 300);
+        assert_eq!(reg.counter_by_name("a_total"), Some(3));
+        assert_eq!(reg.counter_by_name("missing"), None);
+        assert_eq!(reg.counters().count(), 2);
+        assert_eq!(reg.gauges().count(), 1);
+        assert_eq!(reg.hists().count(), 1);
+    }
+}

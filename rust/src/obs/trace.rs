@@ -1,0 +1,263 @@
+//! The span trace ring buffer (DESIGN.md §15): a fixed-capacity,
+//! preallocated buffer of typed lifecycle events with relative-`Instant`
+//! timestamps.
+//!
+//! Recording never blocks on capacity and never allocates: when the ring
+//! is full the oldest event is overwritten and `dropped_events` is
+//! bumped. Events are plain `Copy` records — writing one is a slot copy
+//! under a short uncontended mutex (the ring has a single steady-state
+//! writer, the scheduler thread; submit-side admits and worker-free
+//! backend stamps share it briefly). All string/JSON work happens in
+//! [`super::export`], strictly off the hot path.
+//!
+//! Timestamps are nanoseconds since the trace's `epoch` `Instant`, so
+//! every component stamping through one [`Trace`] shares a clock and the
+//! exported JSONL is self-consistent.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Bins for the tokens-per-FFN-expert-count distribution carried by
+/// [`EventKind::Dispatch`]: bin `k` counts tokens that were assigned `k`
+/// FFN experts this layer, with the last bin collecting `k >= 8` (the
+/// paper's "dynamic experts per token" evidence).
+pub const TOK_K_BINS: usize = 9;
+
+/// Default ring capacity (events). ~64 bytes per slot.
+pub const DEFAULT_CAPACITY: usize = 16384;
+
+/// One trace record: relative timestamp + typed payload.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Event {
+    /// Nanoseconds since the owning [`Trace`]'s epoch.
+    pub t_ns: u64,
+    pub kind: EventKind,
+}
+
+/// The typed event vocabulary — the request/batch lifecycle
+/// (admit → queue → batch-form → route → dispatch → expert-forward →
+/// combine → deliver) plus placement/replan and per-device records.
+/// Every variant is fixed-size `Copy` data; no strings, no heap.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum EventKind {
+    /// Unfilled ring slot; never exported.
+    #[default]
+    Empty,
+    /// Request accepted into a priority queue.
+    Admit { req: u64, prio: u8, tokens: u32 },
+    /// Request refused at admission (queue bound / shape / stopping).
+    Reject { prio: u8, tokens: u32 },
+    /// Request left its queue for a forming batch; `wait_ns` is the
+    /// full queue residence time.
+    QueueDepart { req: u64, wait_ns: u64 },
+    /// A batch was formed from `requests` spans totalling `tokens` rows.
+    BatchForm { batch: u64, requests: u32, tokens: u32 },
+    /// Router scores + top-k for one layer.
+    Route { batch: u64, layer: u16, ns: u64 },
+    /// Dispatch-plan build for one layer, with the layer's assignment
+    /// split and the tokens-per-FFN-expert-count bins.
+    Dispatch {
+        batch: u64,
+        layer: u16,
+        ffn: u32,
+        zc: u32,
+        dropped: u32,
+        ns: u64,
+        tok_by_k: [u32; TOK_K_BINS],
+    },
+    /// One (device, shard) unit of FFN work (native token-shard path).
+    ShardForward {
+        batch: u64,
+        layer: u16,
+        device: u16,
+        shard: u16,
+        rows: u32,
+        ns: u64,
+    },
+    /// One layer's expert stage: FFN wall time + inline-ZC wall time.
+    ExpertForward { batch: u64, layer: u16, ffn_ns: u64, zc_ns: u64 },
+    /// Residual-stream combine for one layer.
+    Combine { batch: u64, layer: u16, ns: u64 },
+    /// Whole-batch forward wall time (driver-measured).
+    BatchExec { batch: u64, ns: u64 },
+    /// Request output scattered back and the waiter woken.
+    Deliver { req: u64, tokens: u32, queue_ns: u64, service_ns: u64 },
+    /// Request cancelled while queued.
+    Cancel { req: u64 },
+    /// Request deadline expired while queued.
+    Expire { req: u64 },
+    /// Batch execution failed; request completed with an error.
+    Fail { req: u64 },
+    /// Replanner produced a migration proposal (gain in parts-per-million
+    /// of the pre-migration makespan).
+    ReplanProposed { batch: u64, moves: u32, gain_ppm: u64 },
+    /// Proposal survived the gates and was applied at a batch boundary.
+    ReplanCommitted { batch: u64, moves: u32, bytes: u64 },
+    /// Proposal discarded: stale (older than the staleness bound) or
+    /// gates no longer hold.
+    ReplanAbandoned { batch: u64, age_batches: u32 },
+    /// Per-device busy time and row load for one layer (cluster path).
+    DeviceBusy { batch: u64, layer: u16, device: u16, rows: u32, ns: u64 },
+    /// One replica's slice of a replicated expert's micro-batch
+    /// (speed-weighted load split, DESIGN.md §13).
+    ReplicaSplit {
+        batch: u64,
+        layer: u16,
+        expert: u16,
+        device: u16,
+        rows: u32,
+    },
+}
+
+/// The preallocated ring. Single-owner mutable state, wrapped by
+/// [`Trace`] for shared access.
+struct Ring {
+    slots: Box<[Event]>,
+    /// Index of the oldest live event.
+    head: usize,
+    /// Number of live events (<= capacity).
+    len: usize,
+    /// Events overwritten because the ring was full.
+    dropped: u64,
+}
+
+impl Ring {
+    // lint: no-alloc — push is the hot recording path: a slot copy and
+    // index arithmetic on preallocated storage, never a reallocation
+    // (DESIGN.md §15).
+    fn push(&mut self, ev: Event) {
+        let cap = self.slots.len();
+        if self.len == cap {
+            self.slots[self.head] = ev;
+            self.head = (self.head + 1) % cap;
+            self.dropped += 1;
+        } else {
+            self.slots[(self.head + self.len) % cap] = ev;
+            self.len += 1;
+        }
+    }
+    // lint: end
+}
+
+/// Shared handle around the ring: an enabled flag (so a disabled trace
+/// costs one relaxed load per stamp site), the epoch, and the mutex'd
+/// ring itself.
+pub struct Trace {
+    enabled: AtomicBool,
+    epoch: Instant,
+    ring: Mutex<Ring>,
+}
+
+impl Trace {
+    /// Build a disabled trace with `capacity` preallocated slots.
+    pub fn new(capacity: usize) -> Trace {
+        super::note_alloc();
+        let cap = capacity.max(1);
+        Trace {
+            enabled: AtomicBool::new(false),
+            epoch: Instant::now(),
+            ring: Mutex::new(Ring {
+                slots: vec![Event::default(); cap].into_boxed_slice(),
+                head: 0,
+                len: 0,
+                dropped: 0,
+            }),
+        }
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        // ordering: independent flag; stamps that race the flip may
+        // record or skip one event, which tracing tolerates by design.
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        // ordering: see set_enabled — a stale read is harmless.
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    // lint: no-alloc — the public stamp: flag check, clock read, slot
+    // copy under an uncontended lock; no allocation on any branch.
+    /// Record `kind` now. Infallible, non-blocking on capacity, and a
+    /// single relaxed load when tracing is disabled.
+    #[inline]
+    pub fn push(&self, kind: EventKind) {
+        if !self.enabled() {
+            return;
+        }
+        let t_ns = self.epoch.elapsed().as_nanos() as u64;
+        let mut ring = self.ring.lock().expect("trace ring lock");
+        ring.push(Event { t_ns, kind });
+    }
+    // lint: end
+
+    /// Events overwritten so far.
+    pub fn dropped_events(&self) -> u64 {
+        self.ring.lock().expect("trace ring lock").dropped
+    }
+
+    /// Copy the live events out, oldest first (export path; allocates).
+    pub fn snapshot(&self) -> Vec<Event> {
+        super::note_alloc();
+        let ring = self.ring.lock().expect("trace ring lock");
+        let cap = ring.slots.len();
+        let mut out = Vec::with_capacity(ring.len);
+        for i in 0..ring.len {
+            out.push(ring.slots[(ring.head + i) % cap]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        let t = Trace::new(8);
+        t.push(EventKind::Cancel { req: 1 });
+        assert!(t.snapshot().is_empty());
+        assert_eq!(t.dropped_events(), 0);
+    }
+
+    #[test]
+    fn push_preserves_order_and_timestamps_are_monotone() {
+        let t = Trace::new(64);
+        t.set_enabled(true);
+        for req in 0..10u64 {
+            t.push(EventKind::Cancel { req });
+        }
+        let evs = t.snapshot();
+        assert_eq!(evs.len(), 10);
+        for (i, ev) in evs.iter().enumerate() {
+            assert_eq!(ev.kind, EventKind::Cancel { req: i as u64 });
+        }
+        for w in evs.windows(2) {
+            assert!(w[0].t_ns <= w[1].t_ns);
+        }
+    }
+
+    #[test]
+    fn full_ring_overwrites_oldest_and_counts_drops() {
+        let t = Trace::new(4);
+        t.set_enabled(true);
+        for req in 0..7u64 {
+            t.push(EventKind::Cancel { req });
+        }
+        assert_eq!(t.dropped_events(), 3);
+        let evs = t.snapshot();
+        assert_eq!(evs.len(), 4);
+        // The survivors are the newest four, still oldest-first.
+        let reqs: Vec<u64> = evs
+            .iter()
+            .map(|e| match e.kind {
+                EventKind::Cancel { req } => req,
+                other => panic!("unexpected {other:?}"),
+            })
+            .collect();
+        assert_eq!(reqs, [3, 4, 5, 6]);
+    }
+}

@@ -119,6 +119,13 @@ impl MigrationPlan {
     pub fn gain_per_batch_s(&self) -> f64 {
         self.predicted_gain_s() / self.window_batches.max(1) as f64
     }
+
+    /// Predicted relative gain in parts-per-million — the integer form
+    /// the observability trace carries ([`crate::obs::EventKind`]'s
+    /// `ReplanProposed`), so the replan trail stays float-free.
+    pub fn gain_ppm(&self) -> u64 {
+        (self.predicted_gain_frac().max(0.0) * 1e6) as u64
+    }
 }
 
 /// Accumulates load observations and proposes gated migrations.

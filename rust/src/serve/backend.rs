@@ -11,11 +11,14 @@
 //! (multi-node dispatch, speculative ZC, quantized experts) plug in the
 //! same way.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::cluster::sim::ClusterSim;
 use crate::coordinator::engine::{Backend, MoeEngine};
 use crate::moe::exec::ForwardStats;
+use crate::obs::Obs;
 use crate::tensor::Tensor;
 
 /// A synchronous batch-forward substrate the serving scheduler can own.
@@ -49,6 +52,11 @@ pub trait ServeBackend: Send {
     fn take_replans(&mut self) -> u64 {
         0
     }
+
+    /// Install an observability bundle (DESIGN.md §15): subsequent
+    /// forwards stamp per-layer/per-shard records into it. Backends
+    /// without instrumentation ignore it (default no-op).
+    fn set_obs(&mut self, _obs: Arc<Obs>) {}
 }
 
 impl ServeBackend for MoeEngine {
@@ -68,6 +76,10 @@ impl ServeBackend for MoeEngine {
             ),
             Backend::Pjrt { .. } => "engine:pjrt".to_string(),
         }
+    }
+
+    fn set_obs(&mut self, obs: Arc<Obs>) {
+        MoeEngine::set_obs(self, obs);
     }
 }
 
@@ -98,6 +110,10 @@ impl ServeBackend for ClusterSim {
 
     fn take_replans(&mut self) -> u64 {
         self.take_replan_count()
+    }
+
+    fn set_obs(&mut self, obs: Arc<Obs>) {
+        ClusterSim::set_obs(self, obs);
     }
 }
 

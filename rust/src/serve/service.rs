@@ -38,6 +38,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::{Batch, Batcher, BatcherConfig, Request};
 use crate::coordinator::metrics::{LatencyStats, ServingMetrics};
+use crate::obs::{EventKind, Obs};
 use crate::tensor::Tensor;
 
 use super::backend::ServeBackend;
@@ -170,6 +171,13 @@ pub struct ServiceConfig {
     pub max_pending_requests: usize,
     /// Queue deadline applied to requests that do not carry their own.
     pub default_deadline: Option<Duration>,
+    /// Observability bundle (DESIGN.md §15). When set, the service
+    /// installs it on the backend at `start`, stamps the request
+    /// lifecycle (admit → queue → batch-form → execute → deliver) into
+    /// its trace, and mirrors every `ServingMetrics` update into its
+    /// registry — so registry reads reconcile exactly with both the
+    /// lock-guarded metrics and trace-derived aggregates.
+    pub obs: Option<Arc<Obs>>,
 }
 
 impl Default for ServiceConfig {
@@ -179,6 +187,7 @@ impl Default for ServiceConfig {
             max_queued_tokens: 4096,
             max_pending_requests: 1024,
             default_deadline: None,
+            obs: None,
         }
     }
 }
@@ -272,6 +281,7 @@ fn transfer_admissions(
     inflight: &mut HashMap<u64, Inflight>,
     now: Instant,
     cap: usize,
+    obs: Option<&Obs>,
 ) -> TransferOutcome {
     let mut out = TransferOutcome::default();
     'refill: for q in 0..N_PRIORITIES {
@@ -288,13 +298,27 @@ fn transfer_admissions(
                 p.slot.fulfill(Err(RequestError::Cancelled));
                 inner.pending_requests -= 1;
                 out.cancelled += 1;
+                if let Some(o) = obs {
+                    o.trace.push(EventKind::Cancel { req: p.id });
+                }
                 continue;
             }
             if p.deadline.map_or(false, |d| now >= d) {
                 p.slot.fulfill(Err(RequestError::DeadlineExpired));
                 inner.pending_requests -= 1;
                 out.expired += 1;
+                if let Some(o) = obs {
+                    o.trace.push(EventKind::Expire { req: p.id });
+                }
                 continue;
+            }
+            if let Some(o) = obs {
+                o.trace.push(EventKind::QueueDepart {
+                    req: p.id,
+                    wait_ns: now
+                        .saturating_duration_since(p.submitted)
+                        .as_nanos() as u64,
+                });
             }
             inflight.insert(
                 p.id,
@@ -329,6 +353,7 @@ fn sweep_parked(
     batcher: &mut Batcher,
     inflight: &mut HashMap<u64, Inflight>,
     now: Instant,
+    obs: Option<&Obs>,
 ) -> TransferOutcome {
     let mut out = TransferOutcome::default();
     let ids: Vec<(u64, bool)> = inflight
@@ -349,9 +374,15 @@ fn sweep_parked(
             if *is_cancel {
                 meta.slot.fulfill(Err(RequestError::Cancelled));
                 out.cancelled += 1;
+                if let Some(o) = obs {
+                    o.trace.push(EventKind::Cancel { req: *id });
+                }
             } else {
                 meta.slot.fulfill(Err(RequestError::DeadlineExpired));
                 out.expired += 1;
+                if let Some(o) = obs {
+                    o.trace.push(EventKind::Expire { req: *id });
+                }
             }
             inner.pending_requests -= 1;
         }
@@ -369,6 +400,16 @@ fn execute_batch(
     batch: &Batch,
     inflight: &mut HashMap<u64, Inflight>,
 ) {
+    let obs = shared.cfg.obs.as_deref();
+    if let Some(o) = obs {
+        // The forward below claims `peek_batch()` as its id (the backend
+        // shares this bundle), tying this event to the exec-layer trail.
+        o.trace.push(EventKind::BatchForm {
+            batch: o.peek_batch(),
+            requests: batch.spans.len() as u32,
+            tokens: batch.n_tokens() as u32,
+        });
+    }
     let t0 = Instant::now();
     let result = backend.forward(&batch.tokens);
     let exec = t0.elapsed();
@@ -380,11 +421,44 @@ fn execute_batch(
         if m.batches == 0 {
             m.time_to_first_batch_s =
                 t0.duration_since(shared.started).as_secs_f64();
+            if let Some(o) = obs {
+                o.registry().set_gauge(
+                    o.h.time_to_first_batch_ns,
+                    t0.duration_since(shared.started).as_nanos() as u64,
+                );
+            }
         }
         m.batches += 1;
         m.replans += replans;
         if let Ok((_, stats)) = &result {
             m.merge_forward(stats);
+        }
+    }
+    if let Some(o) = obs {
+        let r = o.registry();
+        r.inc(o.h.batches);
+        r.add(o.h.replans, replans);
+        r.record(o.h.batch_exec_ns, exec.as_nanos() as u64);
+        r.record(o.h.batch_tokens, batch.n_tokens() as u64);
+        o.trace.push(EventKind::BatchExec {
+            batch: o.current_batch(),
+            ns: exec.as_nanos() as u64,
+        });
+        if let Ok((_, stats)) = &result {
+            // Mirror `merge_forward` term by term (same `as u64` casts,
+            // same per-layer walk) so registry counters reconcile `==`
+            // with the lock-guarded `ServingMetrics`.
+            r.add(o.h.tokens, stats.tokens as u64);
+            r.add(
+                o.h.expert_forward_ns,
+                (stats.expert_forward_s * 1e9) as u64,
+            );
+            r.add(o.h.routing_ns, (stats.routing_s * 1e9) as u64);
+            for l in &stats.per_layer {
+                r.add(o.h.dropped_assignments, l.dropped as u64);
+                r.add(o.h.ffn_assignments, l.ffn_assignments as u64);
+                r.add(o.h.zc_assignments, l.zc_assignments as u64);
+            }
         }
     }
     // Release the members' admission slots *before* fulfilling their
@@ -410,6 +484,9 @@ fn execute_batch(
                 if meta.slot.is_cancelled() {
                     meta.slot.fulfill(Err(RequestError::Cancelled));
                     cancelled += 1;
+                    if let Some(o) = obs {
+                        o.trace.push(EventKind::Cancel { req: *id });
+                    }
                     continue;
                 }
                 let req_stats = RequestStats {
@@ -422,6 +499,20 @@ fn execute_batch(
                     batch_tokens: batch.n_tokens(),
                     batch_exec: exec,
                 };
+                if let Some(o) = obs {
+                    let queue_ns =
+                        req_stats.queue_wait.as_nanos() as u64;
+                    let service_ns =
+                        req_stats.service_time.as_nanos() as u64;
+                    o.registry().record(o.h.queue_wait_ns, queue_ns);
+                    o.registry().record(o.h.service_ns, service_ns);
+                    o.trace.push(EventKind::Deliver {
+                        req: *id,
+                        tokens: span.len() as u32,
+                        queue_ns,
+                        service_ns,
+                    });
+                }
                 shared
                     .latency
                     .lock()
@@ -440,6 +531,9 @@ fn execute_batch(
                     meta.slot
                         .fulfill(Err(RequestError::Backend(msg.clone())));
                     failed += 1;
+                    if let Some(o) = obs {
+                        o.trace.push(EventKind::Fail { req: *id });
+                    }
                 }
             }
         }
@@ -448,6 +542,10 @@ fn execute_batch(
         let mut m = shared.metrics.lock().unwrap();
         m.cancelled += cancelled;
         m.failed += failed;
+        if let Some(o) = obs {
+            o.registry().add(o.h.cancelled, cancelled);
+            o.registry().add(o.h.failed, failed);
+        }
     }
 }
 
@@ -511,14 +609,17 @@ fn scheduler_run(
                 inner = shared.cv.wait(inner).unwrap();
             }
             let now = Instant::now();
+            let obs = shared.cfg.obs.as_deref();
             let mut o = transfer_admissions(
                 &mut inner,
                 batcher,
                 inflight,
                 now,
                 shared.cfg.batcher.max_tokens,
+                obs,
             );
-            let swept = sweep_parked(&mut inner, batcher, inflight, now);
+            let swept =
+                sweep_parked(&mut inner, batcher, inflight, now, obs);
             o.cancelled += swept.cancelled;
             o.expired += swept.expired;
             outcome = o;
@@ -530,6 +631,10 @@ fn scheduler_run(
             let mut m = shared.metrics.lock().unwrap();
             m.cancelled += outcome.cancelled;
             m.expired += outcome.expired;
+            if let Some(o) = shared.cfg.obs.as_deref() {
+                o.registry().add(o.h.cancelled, outcome.cancelled);
+                o.registry().add(o.h.expired, outcome.expired);
+            }
         }
         if drained_dry {
             break;
@@ -597,10 +702,16 @@ pub struct MoeService {
 
 impl MoeService {
     /// Start a service over `backend` (moved onto the scheduler thread).
+    /// When `cfg.obs` is set it is installed on the backend first, so the
+    /// service's lifecycle stamps and the backend's per-layer stamps
+    /// share one registry, trace and batch sequence.
     pub fn start<B: ServeBackend + 'static>(
-        backend: B,
+        mut backend: B,
         cfg: ServiceConfig,
     ) -> MoeService {
+        if let Some(obs) = cfg.obs.clone() {
+            backend.set_obs(obs);
+        }
         let backend_label = backend.label();
         let shared = Arc::new(Shared {
             inner: Mutex::new(Inner::default()),
@@ -655,6 +766,7 @@ impl MoeService {
         if n == 0 {
             return Err(AdmissionError::EmptyRequest);
         }
+        let prio = req.priority.index() as u8;
         let cfg = &self.shared.cfg;
         let admitted = {
             let mut inner = self.shared.inner.lock().unwrap();
@@ -696,17 +808,27 @@ impl MoeService {
                     inner.pending_requests += 1;
                     let backlog =
                         inner.queued_tokens + inner.batcher_tokens;
-                    Ok((ResponseHandle::new(slot, id), backlog))
+                    Ok((ResponseHandle::new(slot, id), backlog, id))
                 }
             }
         };
         match admitted {
-            Ok((handle, backlog)) => {
+            Ok((handle, backlog, id)) => {
                 {
                     let mut m = self.shared.metrics.lock().unwrap();
                     m.requests += 1;
                     m.peak_queue_tokens =
                         m.peak_queue_tokens.max(backlog as u64);
+                }
+                if let Some(o) = self.shared.cfg.obs.as_deref() {
+                    o.registry().inc(o.h.requests);
+                    o.registry()
+                        .max_gauge(o.h.peak_queue_tokens, backlog as u64);
+                    o.trace.push(EventKind::Admit {
+                        req: id,
+                        prio,
+                        tokens: n as u32,
+                    });
                 }
                 self.shared.cv.notify_all();
                 Ok(handle)
@@ -720,6 +842,13 @@ impl MoeService {
                         | AdmissionError::TooManyPending { .. }
                 ) {
                     self.shared.metrics.lock().unwrap().rejected += 1;
+                    if let Some(o) = self.shared.cfg.obs.as_deref() {
+                        o.registry().inc(o.h.rejected);
+                        o.trace.push(EventKind::Reject {
+                            prio,
+                            tokens: n as u32,
+                        });
+                    }
                 }
                 Err(e)
             }
@@ -746,6 +875,24 @@ impl MoeService {
     /// Snapshot of the aggregate serving metrics.
     pub fn metrics(&self) -> ServingMetrics {
         self.shared.metrics.lock().unwrap().clone()
+    }
+
+    /// The installed observability bundle, if any.
+    pub fn obs(&self) -> Option<&Arc<Obs>> {
+        self.shared.cfg.obs.as_ref()
+    }
+
+    /// Rebuild [`ServingMetrics`] purely from registry reads — no service
+    /// locks touched. `None` without an obs bundle. Counter fields
+    /// reconcile `==` with [`MoeService::metrics`] at quiescence (the
+    /// registry is mirrored at every metrics update site); the float
+    /// second fields are derived from the integer-nanosecond twins.
+    pub fn metrics_from_registry(&self) -> Option<ServingMetrics> {
+        self.shared
+            .cfg
+            .obs
+            .as_deref()
+            .map(ServingMetrics::from_registry)
     }
 
     /// Snapshot of the request service-time distribution.
@@ -805,6 +952,7 @@ mod tests {
                 max_queued_tokens,
                 max_pending_requests: 64,
                 default_deadline: None,
+                obs: None,
             },
         );
         (cfg, service)
@@ -967,6 +1115,7 @@ mod tests {
                 max_queued_tokens: 4096,
                 max_pending_requests: 1,
                 default_deadline: None,
+                obs: None,
             },
         );
         for i in 0..8 {
@@ -1056,6 +1205,7 @@ mod tests {
             &mut inflight,
             Instant::now(),
             1024,
+            None,
         );
         assert_eq!(out.cancelled + out.expired, 0);
         assert_eq!(inner.queued_tokens, 0);
@@ -1096,6 +1246,7 @@ mod tests {
         // in the Standard queue rather than being drafted FIFO.
         transfer_admissions(
             &mut inner, &mut batcher, &mut inflight, Instant::now(), 4,
+            None,
         );
         assert_eq!(inner.batcher_tokens, 4);
         assert_eq!(
@@ -1115,6 +1266,7 @@ mod tests {
         inner.batcher_tokens = batcher.queued_tokens();
         transfer_admissions(
             &mut inner, &mut batcher, &mut inflight, Instant::now(), 4,
+            None,
         );
         let b1 = batcher.next_batch().unwrap();
         assert_eq!(
@@ -1149,7 +1301,7 @@ mod tests {
             inner.pending_requests += 1;
         }
         let out = transfer_admissions(
-            &mut inner, &mut batcher, &mut inflight, now, 1024,
+            &mut inner, &mut batcher, &mut inflight, now, 1024, None,
         );
         assert_eq!(out.expired, 1);
         assert_eq!(out.cancelled, 1);

@@ -1,22 +1,44 @@
 //! Minimal leveled stderr logger with wall-clock-relative timestamps.
+//!
+//! Levels: error=0, warn=1, info=2, debug=3. The default level is info;
+//! `--verbose` raises it to debug and `--quiet` drops it to error —
+//! which (unlike the old two-level scheme, where warnings logged at
+//! level 0) really does suppress warnings. Every `warn_log!` is also
+//! mirrored into the process-wide [`crate::obs::warnings_total`]
+//! counter, so suppressed warnings stay countable and exportable
+//! (`moepp_warnings_total`).
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
 
-static LEVEL: AtomicU8 = AtomicU8::new(1); // 0=error 1=info 2=debug
+pub const LEVEL_ERROR: u8 = 0;
+pub const LEVEL_WARN: u8 = 1;
+pub const LEVEL_INFO: u8 = 2;
+pub const LEVEL_DEBUG: u8 = 3;
+
+static LEVEL: AtomicU8 = AtomicU8::new(LEVEL_INFO);
 
 static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
 
 pub fn set_verbose(on: bool) {
     // ordering: standalone level flag, no data published alongside it.
-    LEVEL.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+    LEVEL.store(
+        if on { LEVEL_DEBUG } else { LEVEL_INFO },
+        Ordering::Relaxed,
+    );
 }
 
 pub fn set_quiet(on: bool) {
     if on {
         // ordering: standalone level flag, no dependent data.
-        LEVEL.store(0, Ordering::Relaxed);
+        LEVEL.store(LEVEL_ERROR, Ordering::Relaxed);
     }
+}
+
+/// The current threshold (test hook).
+pub fn level() -> u8 {
+    // ordering: standalone level flag.
+    LEVEL.load(Ordering::Relaxed)
 }
 
 fn stamp() -> f64 {
@@ -30,23 +52,72 @@ pub fn log(level: u8, tag: &str, msg: std::fmt::Arguments) {
     }
 }
 
+/// `warn_log!`'s target: counts the warning whether or not it prints.
+pub fn warn(msg: std::fmt::Arguments) {
+    crate::obs::note_warning();
+    log(LEVEL_WARN, "warn", msg);
+}
+
+#[macro_export]
+macro_rules! error_log {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::LEVEL_ERROR,
+            "error",
+            format_args!($($arg)*),
+        )
+    };
+}
+
 #[macro_export]
 macro_rules! info {
     ($($arg:tt)*) => {
-        $crate::util::logging::log(1, "info", format_args!($($arg)*))
+        $crate::util::logging::log(
+            $crate::util::logging::LEVEL_INFO,
+            "info",
+            format_args!($($arg)*),
+        )
     };
 }
 
 #[macro_export]
 macro_rules! debug {
     ($($arg:tt)*) => {
-        $crate::util::logging::log(2, "debug", format_args!($($arg)*))
+        $crate::util::logging::log(
+            $crate::util::logging::LEVEL_DEBUG,
+            "debug",
+            format_args!($($arg)*),
+        )
     };
 }
 
 #[macro_export]
 macro_rules! warn_log {
     ($($arg:tt)*) => {
-        $crate::util::logging::log(0, "warn", format_args!($($arg)*))
+        $crate::util::logging::warn(format_args!($($arg)*))
     };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quiet_suppresses_warns_but_warnings_stay_countable() {
+        // Level bookkeeping: quiet drops below warn, verbose raises to
+        // debug, default sits at info. (Global state — restore after.)
+        let before = level();
+        set_quiet(true);
+        assert!(level() < LEVEL_WARN, "--quiet must suppress warns");
+        set_verbose(true);
+        assert_eq!(level(), LEVEL_DEBUG);
+        set_verbose(false);
+        assert_eq!(level(), LEVEL_INFO);
+        // warn_log! mirrors into the obs counter even while quiet.
+        set_quiet(true);
+        let w0 = crate::obs::warnings_total();
+        crate::warn_log!("suppressed but counted");
+        assert_eq!(crate::obs::warnings_total(), w0 + 1);
+        LEVEL.store(before, Ordering::Relaxed);
+    }
 }

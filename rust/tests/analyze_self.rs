@@ -106,3 +106,48 @@ fn spawn_allowlist_is_the_four_thread_owners() {
         ]
     );
 }
+
+/// The obs modules (DESIGN.md §15) own no threads: none of them is in
+/// the spawn allowlist, so a spawn seeded into any obs file fails the
+/// lint — instrumentation must never bring its own concurrency.
+#[test]
+fn obs_modules_are_not_spawn_allowlisted() {
+    for file in ["mod", "registry", "hist", "trace", "export"] {
+        let path = format!("src/obs/{file}.rs");
+        assert!(
+            !SPAWN_ALLOWLIST.iter().any(|a| path.ends_with(a)),
+            "{path} must not be allowed to spawn threads"
+        );
+        let findings = analyze_source(
+            &path,
+            "std::thread::spawn(|| export());\n",
+        );
+        assert!(
+            findings.iter().any(|f| f.lint == "spawn-sites"),
+            "seeded spawn in {path} produced {findings:?}"
+        );
+    }
+}
+
+/// The obs hot recording paths sit inside `no-alloc` lint regions: an
+/// allocation seeded between a region's markers in `obs/registry.rs` or
+/// `obs/trace.rs` fires, and the real files carry the markers.
+#[test]
+fn obs_recording_paths_are_no_alloc_fenced() {
+    for path in ["src/obs/registry.rs", "src/obs/trace.rs"] {
+        let findings = analyze_source(
+            path,
+            "// lint: no-alloc\nlet s = label.to_string();\n// lint: end\n",
+        );
+        assert!(
+            findings.iter().any(|f| f.lint == "no-alloc"),
+            "seeded alloc in {path} produced {findings:?}"
+        );
+        let real = Path::new(env!("CARGO_MANIFEST_DIR")).join(path);
+        let text = std::fs::read_to_string(&real).expect("read obs file");
+        assert!(
+            text.contains("lint: no-alloc"),
+            "{path} lost its no-alloc region markers"
+        );
+    }
+}

@@ -74,7 +74,7 @@ fn check_preset(preset: &'static str) {
             let mut arena = ExecArena::new();
             let (y_oracle, s_oracle, _) = exec::forward_stack(
                 &mut oracle, &weights, &cfgs, &x, &mut arena,
-                &Executor::serial(),
+                &Executor::serial(), None,
             )
             .map_err(|e| format!("oracle: {e:#}"))?;
 
@@ -158,7 +158,7 @@ fn backends_agree_across_tau() {
         let mut arena = ExecArena::new();
         let (y_oracle, s_oracle, _) = exec::forward_stack(
             &mut oracle, &weights, &cfgs, &x, &mut arena,
-            &Executor::serial(),
+            &Executor::serial(), None,
         )
         .unwrap();
         let mut engine = MoeEngine::native_with_workers(cfg.clone(), 5, 4);

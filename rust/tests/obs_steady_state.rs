@@ -1,0 +1,170 @@
+//! Acceptance gate for `moepp::obs` (ISSUE 8 / DESIGN.md §15): serving
+//! with tracing **enabled** keeps the PR 4/PR 5 steady-state guarantees
+//! — zero heap allocations (`ExecArena::growths`, plus the obs module's
+//! own allocation counter) and zero thread spawns
+//! (`util::pool::thread_spawns`) across ≥24 replayed requests — model
+//! outputs are bitwise-identical with obs on vs off, and trace-derived
+//! aggregates reconcile `==` with `ServingMetrics` and the registry.
+//!
+//! Everything lives in ONE test fn on purpose: `thread_spawns()` and
+//! `obs::alloc_count()` are process-global counters, and integration
+//! test binaries run as separate processes — a single sequential test is
+//! the only way the pinned-flat windows cannot race other obs users.
+
+use std::time::Duration;
+
+use moepp::config::MoeConfig;
+use moepp::coordinator::batcher::BatcherConfig;
+use moepp::coordinator::engine::{ExecutorKind, MoeEngine};
+use moepp::obs::{self, Obs, TraceSummary};
+use moepp::serve::{MoeService, ServiceConfig};
+use moepp::tensor::Tensor;
+use moepp::util::pool::thread_spawns;
+use moepp::util::rng::Rng;
+
+fn drive(svc: &MoeService, cfg: &MoeConfig, seed: u64, n: usize) {
+    let mut rng = Rng::new(seed);
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let t = 16 + (i % 3) * 16; // 16/32/48-token requests
+            let x = Tensor::randn(&mut rng, &[t, cfg.d_model], 1.0);
+            svc.submit_tokens(x).unwrap()
+        })
+        .collect();
+    for h in handles {
+        h.wait().unwrap();
+    }
+}
+
+#[test]
+fn tracing_enabled_serving_stays_alloc_and_spawn_free_and_reconciles() {
+    let cfg = MoeConfig::preset("test");
+    let mut rng = Rng::new(41);
+
+    // ---- 1. bitwise neutrality: obs installed + tracing on changes no
+    // output bit relative to an uninstrumented engine.
+    let x = Tensor::randn(&mut rng, &[48, cfg.d_model], 1.0);
+    let mut plain = MoeEngine::native(cfg.clone(), 0);
+    let mut traced = MoeEngine::native(cfg.clone(), 0);
+    let obs_engine = Obs::shared();
+    obs_engine.trace.set_enabled(true);
+    traced.set_obs(obs_engine.clone());
+    let (y_plain, s_plain) = plain.forward_stack(&x).unwrap();
+    let (y_traced, s_traced) = traced.forward_stack(&x).unwrap();
+    assert_eq!(y_plain.shape, y_traced.shape);
+    for (a, b) in y_plain.data.iter().zip(y_traced.data.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "obs changed model output");
+    }
+    assert_eq!(s_plain.total_counts(), s_traced.total_counts());
+
+    // ---- 2. direct-engine steady state: arena growths AND the obs
+    // allocation counter pinned flat across 24 replayed forwards with
+    // the trace recording every one of them.
+    for _ in 0..3 {
+        let _ = traced.forward_stack(&x).unwrap(); // warm (largest size)
+    }
+    let growths = traced.arena_growths();
+    let allocs = obs::alloc_count();
+    for i in 0..24 {
+        let t = 16 + (i % 3) * 16; // replay below the warmed size
+        let xs = Tensor::randn(&mut rng, &[t, cfg.d_model], 1.0);
+        let _ = traced.forward_stack(&xs).unwrap();
+    }
+    assert_eq!(
+        traced.arena_growths(),
+        growths,
+        "tracing-enabled steady state grew the arena"
+    );
+    assert_eq!(
+        obs::alloc_count(),
+        allocs,
+        "obs recording paths allocated in steady state"
+    );
+
+    // ---- 3. serving steady state: pool executor, obs installed, trace
+    // on — thread spawns and obs allocations pinned flat across 24
+    // replayed requests after a 4-request warmup.
+    let obs_serve = Obs::shared();
+    obs_serve.trace.set_enabled(true);
+    let service = MoeService::start(
+        MoeEngine::native_with_workers(cfg.clone(), 0, 4)
+            .with_executor(ExecutorKind::Pool),
+        ServiceConfig {
+            batcher: BatcherConfig {
+                max_tokens: 64,
+                max_wait: Duration::from_millis(1),
+            },
+            max_queued_tokens: 4096,
+            max_pending_requests: 64,
+            default_deadline: None,
+            obs: Some(obs_serve.clone()),
+        },
+    );
+    drive(&service, &cfg, 2, 4); // warmup: pool + arena built
+    let warmed_spawns = thread_spawns();
+    let warmed_allocs = obs::alloc_count();
+    drive(&service, &cfg, 3, 24); // steady state, fully traced
+    assert_eq!(
+        thread_spawns(),
+        warmed_spawns,
+        "tracing-enabled steady-state serving spawned threads"
+    );
+    assert_eq!(
+        obs::alloc_count(),
+        warmed_allocs,
+        "obs allocated during steady-state serving"
+    );
+
+    // ---- 4. exact reconciliation: ServingMetrics == registry rebuild
+    // == trace-derived aggregates, all on the same run.
+    let from_reg = service.metrics_from_registry().unwrap();
+    let m = service.shutdown();
+    assert_eq!(m.requests, 28);
+    assert_eq!(
+        obs_serve.trace.dropped_events(),
+        0,
+        "ring too small for the run; reconciliation needs every event"
+    );
+    let events = obs_serve.trace.snapshot();
+    let t = TraceSummary::from_events(&events);
+    assert_eq!(t.admits, m.requests);
+    assert_eq!(t.rejects, m.rejected);
+    assert_eq!(t.batches, m.batches);
+    assert_eq!(t.delivers, m.requests);
+    assert_eq!(t.batch_tokens, m.tokens);
+    assert_eq!(t.delivered_tokens, m.tokens);
+    assert_eq!(t.cancels, m.cancelled);
+    assert_eq!(t.expires, m.expired);
+    assert_eq!(t.fails, m.failed);
+    assert_eq!(t.ffn, m.ffn_assignments);
+    assert_eq!(t.zc, m.zc_assignments);
+    assert_eq!(t.dropped, m.dropped_assignments);
+    assert_eq!(from_reg.requests, m.requests);
+    assert_eq!(from_reg.batches, m.batches);
+    assert_eq!(from_reg.tokens, m.tokens);
+    assert_eq!(from_reg.ffn_assignments, m.ffn_assignments);
+    assert_eq!(from_reg.zc_assignments, m.zc_assignments);
+    assert_eq!(from_reg.dropped_assignments, m.dropped_assignments);
+    assert_eq!(from_reg.rejected, m.rejected);
+    assert_eq!(from_reg.cancelled, m.cancelled);
+    assert_eq!(from_reg.expired, m.expired);
+    assert_eq!(from_reg.failed, m.failed);
+    assert_eq!(from_reg.replans, m.replans);
+    // The tokens-per-expert-count distribution covers every token-layer
+    // of the run exactly once: sum over k bins == tokens × layers.
+    let tok_layers: u64 = t.tok_by_k.iter().sum();
+    assert_eq!(tok_layers, m.tokens * cfg.n_layers as u64);
+
+    // ---- 5. the exporters round-trip the same run: the JSONL summary
+    // equals the in-memory one, and the Prometheus text parses.
+    let jsonl = obs::trace_jsonl(&obs_serve);
+    let t2 = obs::summarize_jsonl(&jsonl).unwrap();
+    assert_eq!(t2.admits, t.admits);
+    assert_eq!(t2.batches, t.batches);
+    assert_eq!(t2.ffn, t.ffn);
+    assert_eq!(t2.tok_by_k, t.tok_by_k);
+    assert!(t2.render().contains("trace summary"));
+    let prom = obs::prometheus(&obs_serve);
+    let samples = obs::parse_prometheus(&prom).unwrap();
+    assert!(samples > 0, "empty Prometheus exposition");
+}

@@ -90,6 +90,7 @@ fn sequential_submissions_match_hand_driven_path_bitwise() {
                 max_queued_tokens: 4096,
                 max_pending_requests: 1024,
                 default_deadline: None,
+                obs: None,
             },
         );
         let handles: Vec<_> = inputs
@@ -146,6 +147,7 @@ fn concurrent_submissions_match_direct_forward() {
                 max_queued_tokens: 4096,
                 max_pending_requests: 1024,
                 default_deadline: None,
+                obs: None,
             },
         ));
         let inputs = request_inputs(&cfg, &sizes);

@@ -32,6 +32,7 @@ fn service(engine: MoeEngine) -> MoeService {
             max_queued_tokens: 4096,
             max_pending_requests: 64,
             default_deadline: None,
+            obs: None,
         },
     )
 }
