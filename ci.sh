@@ -64,6 +64,13 @@ run cargo run --release --quiet -- bench --forward --presets sm-8e \
     --workers 1,4 --tokens 96 --batches 2 --executor both \
     --metrics-out "$OBS_DIR/bench_metrics.json"
 
+# Fault-recovery smoke (DESIGN.md §16): a seeded fault schedule against
+# a replicated-everywhere placement must recover bitwise-identical to
+# the fault-free run with nonzero redispatches (asserted by the bench
+# itself — it exits nonzero otherwise).
+run cargo run --release --quiet -- bench faults --seed 7 \
+    --tokens 48 --batches 3
+
 if [ "${1:-}" != "fast" ]; then
     if cargo clippy --version >/dev/null 2>&1; then
         run cargo clippy --all-targets -- -D warnings

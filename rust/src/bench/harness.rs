@@ -428,7 +428,9 @@ pub fn run_placement_sweep(
         workload
             .iter()
             .map(|b| {
-                let (_, rep) = sim.forward(b);
+                let (_, rep) = sim
+                    .forward(b)
+                    .expect("no fault injector installed");
                 profile.observe_stats(&rep.stats, &cfg);
                 rep
             })
@@ -462,8 +464,14 @@ pub fn run_placement_sweep(
                     .with_placement(plan.clone()),
                 seed,
             );
-            let reps =
-                workload.iter().map(|b| sim.forward(b).1).collect();
+            let reps = workload
+                .iter()
+                .map(|b| {
+                    sim.forward(b)
+                        .expect("no fault injector installed")
+                        .1
+                })
+                .collect();
             simulated.push((plan.clone(), reps));
             &simulated.last().expect("just pushed").1
         };

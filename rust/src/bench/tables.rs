@@ -186,7 +186,7 @@ pub fn cluster_rows(preset: &str, devices: &[usize], tokens: usize,
             let x = Tensor::randn(&mut rng, &[tokens, cfg.d_model], 1.0);
             let mut sim =
                 ClusterSim::new(cfg.clone(), Topology::new(nd), seed);
-            let (_, rep) = sim.forward(&x);
+            let (_, rep) = sim.forward(&x)?;
             rows.push(ClusterRow {
                 model: if variant.is_empty() {
                     format!("MoE++ {preset}")

@@ -24,6 +24,19 @@
 //! historical device-major order exactly.
 //! [`ClusterSim::apply_placement`] migrates experts between batches, and
 //! an attached [`Replanner`] does so automatically on the serving path.
+//!
+//! **Fault tolerance** (DESIGN.md §16): `forward` is fallible and
+//! recovers from lost workers. Loss is detected at the reply loop
+//! (channel disconnect, or a reply deadline when a [`FaultInjector`] is
+//! installed); the lost replica's (expert, row-range) units are rebuilt
+//! from the dispatch plan and redispatched to surviving replicas — the
+//! canonical combine order makes the recovered output **bitwise equal**
+//! to the fault-free run — and only when no replica of an expert
+//! survives do its tokens degrade to copy-expert semantics (counted as
+//! `degraded_tokens`). ZC experts run inline on token homes and never
+//! degrade. Dead devices are quarantined in a [`DeviceHealth`] table,
+//! masked out of dispatch and planner candidates, and restored by
+//! [`ClusterSim::rejoin`].
 
 use std::sync::Arc;
 
@@ -31,9 +44,11 @@ use anyhow::Result;
 
 use crate::config::MoeConfig;
 use crate::coordinator::dispatch::DispatchPlan;
+use crate::fault::{ClusterError, DeviceHealth, FaultInjector, FaultPlan};
 use crate::moe::arena::{ExecArena, FfnArena};
 use crate::moe::balance::load_cv;
 use crate::moe::exec::{self, ExpertBackend, FfnLayerReport, ForwardStats};
+use crate::moe::experts::copy_expert_into;
 use crate::moe::weights::StackWeights;
 use crate::obs::{EventKind, Obs};
 use crate::placement::{
@@ -193,6 +208,29 @@ pub struct ClusterSim {
     /// Observability bundle (DESIGN.md §15): forwards stamp per-layer
     /// and replica-split records, `note_batch` stamps the replan trail.
     obs: Option<Arc<Obs>>,
+    /// Deterministic fault injector (DESIGN.md §16). `None` on the
+    /// production path: workers skip the fault check entirely and the
+    /// reply loop uses a plain blocking `recv` — the no-fault fast path
+    /// costs one `Option` branch per work message.
+    injector: Option<Arc<FaultInjector>>,
+    /// Quarantine table: devices whose workers were lost. Down devices
+    /// are masked out of dispatch splits and planner candidates until
+    /// [`ClusterSim::rejoin`] restores them.
+    health: DeviceHealth,
+    /// Set when a device goes down (or rejoins): the next `note_batch`
+    /// pushes the new health mask into the replanner and forces a plan
+    /// task past the interval gate, so placement heals at the next
+    /// boundary rather than a window later.
+    health_dirty: bool,
+    /// Batches executed by this sim — the deterministic `batch`
+    /// coordinate fault specs trigger on (sim-local, independent of the
+    /// obs batch id so fault plans replay identically with or without
+    /// an observability bundle attached).
+    batch_count: u64,
+    /// The last fault `forward` hit, kept as a typed side channel
+    /// because the vendored `anyhow` has no downcast: the serve backend
+    /// reads it via [`ClusterSim::take_fault`] to classify the failure.
+    last_fault: Option<ClusterError>,
 }
 
 impl ClusterSim {
@@ -205,8 +243,9 @@ impl ClusterSim {
             );
         }
         let weights = StackWeights::init(seed, &cfg);
-        let workers = Self::spawn_workers(&weights, &cfg, &topo);
+        let workers = Self::spawn_workers(&weights, &cfg, &topo, None);
         let layer_cfgs = vec![cfg.clone(); cfg.n_layers];
+        let health = DeviceHealth::new(topo.n_devices);
         ClusterSim {
             cfg,
             topo,
@@ -220,6 +259,11 @@ impl ClusterSim {
             arena: ExecArena::new(),
             pool: ExecPool::new(1),
             obs: None,
+            injector: None,
+            health,
+            health_dirty: false,
+            batch_count: 0,
+            last_fault: None,
         }
     }
 
@@ -238,20 +282,96 @@ impl ClusterSim {
         self
     }
 
+    /// Install a deterministic fault plan (DESIGN.md §16) and respawn
+    /// every worker with the shared injector threaded into its loop.
+    /// Faults fire at (batch, layer, device) coordinates — never wall
+    /// clock — so every run of the same plan is reproducible.
+    pub fn with_faults(mut self, plan: FaultPlan) -> ClusterSim {
+        let injector = Arc::new(FaultInjector::new(plan));
+        self.injector = Some(injector);
+        self.workers = Self::spawn_workers(
+            &self.weights,
+            &self.cfg,
+            &self.topo,
+            self.injector.clone(),
+        );
+        self
+    }
+
+    /// The typed fault behind the most recent `forward` error, if any
+    /// (cleared on read and at each forward entry). The serve backend
+    /// uses this instead of downcasting: the vendored `anyhow` carries
+    /// only a string chain.
+    pub fn take_fault(&mut self) -> Option<ClusterError> {
+        self.last_fault.take()
+    }
+
+    /// Quarantine table for the fleet (read-only view).
+    pub fn health(&self) -> &DeviceHealth {
+        &self.health
+    }
+
+    /// Restore a quarantined device: respawn its worker on every layer
+    /// with the experts the *current* placement assigns it, then lift
+    /// the quarantine and mark health dirty so the replanner folds the
+    /// device back into the next plan. After a degrade-only loss (the
+    /// placement never changed), rejoin alone restores full-precision
+    /// outputs. Fails with [`ClusterError::RespawnFailed`] if the
+    /// injector still marks the device as permanently lost (call
+    /// [`FaultInjector::revive`] first in tests).
+    pub fn rejoin(&mut self, dev: usize) -> Result<(), ClusterError> {
+        for (li, (layer, workers)) in self
+            .weights
+            .layers
+            .iter()
+            .zip(&mut self.workers)
+            .enumerate()
+        {
+            workers[dev] = Self::spawn_device_worker(
+                li,
+                layer,
+                &self.cfg,
+                &self.topo,
+                dev,
+                self.injector.clone(),
+            )?;
+        }
+        self.health.mark_up(dev);
+        self.health_dirty = true;
+        Ok(())
+    }
+
+    /// The installed fault injector (tests use it to revive lost
+    /// devices before `rejoin`).
+    pub fn injector(&self) -> Option<&Arc<FaultInjector>> {
+        self.injector.as_ref()
+    }
+
     /// Per-layer, per-device worker threads owning the FFN shards the
-    /// topology's placement assigns them.
+    /// topology's placement assigns them. Infallible at construction: a
+    /// fresh (or absent) injector refuses no device.
     fn spawn_workers(
         weights: &StackWeights,
         cfg: &MoeConfig,
         topo: &Topology,
+        injector: Option<Arc<FaultInjector>>,
     ) -> Vec<Vec<Worker>> {
         weights
             .layers
             .iter()
-            .map(|layer| {
+            .enumerate()
+            .map(|(li, layer)| {
                 (0..topo.n_devices)
                     .map(|dev| {
-                        Self::spawn_device_worker(layer, cfg, topo, dev)
+                        Self::spawn_device_worker(
+                            li,
+                            layer,
+                            cfg,
+                            topo,
+                            dev,
+                            injector.clone(),
+                        )
+                        .expect("initial worker spawn cannot be refused")
                     })
                     .collect()
             })
@@ -261,13 +381,16 @@ impl ClusterSim {
     /// One device's worker for one layer, loaded with every FFN expert
     /// whose replica set includes this device (a replicated expert's
     /// weights live on each of its replicas), running at the topology's
-    /// per-device speed.
+    /// per-device speed. Refused ([`ClusterError::RespawnFailed`]) when
+    /// the injector marks the device permanently lost.
     fn spawn_device_worker(
+        layer_idx: usize,
         layer: &crate::moe::weights::MoeLayerWeights,
         cfg: &MoeConfig,
         topo: &Topology,
         dev: usize,
-    ) -> Worker {
+        injector: Option<Arc<FaultInjector>>,
+    ) -> Result<Worker, ClusterError> {
         let owned: Vec<usize> = (0..cfg.n_ffn_experts)
             .filter(|&e| {
                 (0..topo.ffn_replica_count(e))
@@ -275,7 +398,15 @@ impl ClusterSim {
             })
             .collect();
         let w = owned.iter().map(|&e| layer.ffn[e].clone()).collect();
-        Worker::spawn(dev, owned, w, topo.speed(dev), cfg)
+        Worker::try_spawn(
+            layer_idx,
+            dev,
+            owned,
+            w,
+            topo.speed(dev),
+            cfg,
+            injector,
+        )
     }
 
     /// The effective FFN placement currently executing.
@@ -322,14 +453,46 @@ impl ClusterSim {
             affected[dev] = true;
         }
         self.topo.set_placement(plan.clone());
-        for (layer, workers) in
-            self.weights.layers.iter().zip(&mut self.workers)
+        for (li, (layer, workers)) in self
+            .weights
+            .layers
+            .iter()
+            .zip(&mut self.workers)
+            .enumerate()
         {
             for (dev, worker) in workers.iter_mut().enumerate() {
-                if affected[dev] {
-                    *worker = Self::spawn_device_worker(
-                        layer, &self.cfg, &self.topo, dev,
-                    );
+                // Quarantined devices keep their dead worker handles:
+                // dispatch masks them out, and only `rejoin` respawns
+                // them (a respawn here would be refused anyway while
+                // the injector marks the device lost).
+                if !affected[dev] || self.health.is_down(dev) {
+                    continue;
+                }
+                match Self::spawn_device_worker(
+                    li,
+                    layer,
+                    &self.cfg,
+                    &self.topo,
+                    dev,
+                    self.injector.clone(),
+                ) {
+                    Ok(w) => *worker = w,
+                    Err(e) => {
+                        // A worker refused/died during migration: the
+                        // sim stays usable — quarantine the device so
+                        // dispatch never routes to its stale worker,
+                        // and surface the typed error. The pending
+                        // replan proposal was already invalidated
+                        // above, matching the manual-apply rule.
+                        crate::warn_log!(
+                            "apply_placement respawn failed: {e}; \
+                             device {dev} quarantined"
+                        );
+                        self.health.mark_down(dev);
+                        self.health_dirty = true;
+                        self.last_fault = Some(e.clone());
+                        return Err(e.into());
+                    }
                 }
             }
         }
@@ -361,6 +524,24 @@ impl ClusterSim {
     pub fn note_batch(&mut self, stats: &ForwardStats) {
         let Some(mut rp) = self.replanner.take() else { return };
         rp.observe(stats, &self.cfg);
+        if self.health_dirty {
+            // A device was lost (or rejoined) since the last boundary:
+            // push the new mask into the planner and force a plan task
+            // now, bypassing the interval/gain gates — healing a hole
+            // in the fleet must not wait out a hysteresis window. Any
+            // in-flight proposal was searched against the old fleet and
+            // is abandoned.
+            self.health_dirty = false;
+            rp.set_down_devices(self.health.down_devices());
+            if self.pending_plan.take().is_some() {
+                self.stamp_replan_abandoned();
+            }
+            let task = rp.plan_task_forced(&self.placement());
+            self.pending_plan = Some(self.pool.submit(move || task.run()));
+            self.pending_plan_age = 0;
+            self.replanner = Some(rp);
+            return;
+        }
         if let Some(handle) = self.pending_plan.take() {
             self.pending_plan_age += 1;
             let stale = rp.proposal_stale(self.pending_plan_age);
@@ -494,33 +675,76 @@ impl ClusterSim {
     /// returning the combined hidden states and the simulation report.
     /// `&mut self`: the sim's [`ExecArena`] backs the stack loop's
     /// reusable buffers (DESIGN.md §11).
-    pub fn forward(&mut self, x: &Tensor) -> (Tensor, SimReport) {
+    ///
+    /// Fallible since DESIGN.md §16: a lost worker is recovered by
+    /// redispatching its units to surviving replicas (bitwise-identical
+    /// outputs) or degrading to copy-expert semantics when no replica
+    /// remains — `Err` surfaces only when recovery itself is impossible
+    /// (the redispatch target died too, or every device is gone). The
+    /// typed fault is also kept for [`ClusterSim::take_fault`].
+    pub fn forward(
+        &mut self,
+        x: &Tensor,
+    ) -> Result<(Tensor, SimReport), ClusterError> {
+        self.last_fault = None;
+        let batch = self.batch_count;
+        self.batch_count += 1;
+        if let (Some(inj), Some(o)) =
+            (self.injector.as_deref(), self.obs.as_deref())
+        {
+            // Stamp the faults *scheduled* for this batch up front from
+            // the deterministic plan (the trace uses the obs batch id
+            // `forward_stack` is about to claim).
+            for s in inj.faults_for_batch(batch) {
+                o.registry().inc(o.h.faults);
+                o.trace.push(EventKind::FaultInjected {
+                    batch: o.peek_batch(),
+                    layer: s.layer as u16,
+                    device: s.device as u16,
+                    kind: s.kind.code(),
+                });
+            }
+        }
         let mut backend = ClusterBackend {
             topo: &self.topo,
             workers: &self.workers,
             n_ffn: self.cfg.n_ffn_experts,
             obs: self.obs.as_deref(),
+            injector: self.injector.as_deref(),
+            health: &mut self.health,
+            health_dirty: &mut self.health_dirty,
+            fault: &mut self.last_fault,
+            batch,
         };
-        let (y, stats, execs) = exec::forward_stack(
+        match exec::forward_stack(
             &mut backend, &self.weights, &self.layer_cfgs, x,
             &mut self.arena, &Executor::Pool(&self.pool),
             self.obs.as_deref(),
-        )
-        .expect("cluster execution is infallible");
-        let layers = execs
-            .into_iter()
-            .map(|ex| LayerSimReport {
-                device_compute_s: ex.report.device_compute_s,
-                zc_compute_s: ex.zc_s,
-                comm_s: ex.report.comm_s,
-                comm_bytes: ex.report.comm_bytes,
-                device_load: ex.report.device_load,
-                dropped: ex.stats.dropped,
-            })
-            .collect();
-        let report =
-            SimReport { layers, tokens: stats.tokens, stats };
-        (y, report)
+        ) {
+            Ok((y, stats, execs)) => {
+                let layers = execs
+                    .into_iter()
+                    .map(|ex| LayerSimReport {
+                        device_compute_s: ex.report.device_compute_s,
+                        zc_compute_s: ex.zc_s,
+                        comm_s: ex.report.comm_s,
+                        comm_bytes: ex.report.comm_bytes,
+                        device_load: ex.report.device_load,
+                        dropped: ex.stats.dropped,
+                    })
+                    .collect();
+                let report =
+                    SimReport { layers, tokens: stats.tokens, stats };
+                Ok((y, report))
+            }
+            Err(e) => {
+                let fault = match &self.last_fault {
+                    Some(f) => f.clone(),
+                    None => ClusterError::Internal(format!("{e:#}")),
+                };
+                Err(fault)
+            }
+        }
     }
 }
 
@@ -540,6 +764,243 @@ struct ClusterBackend<'a> {
     /// stamped as [`EventKind::ReplicaSplit`] records (the driver reads
     /// the batch id it claimed at `forward_stack` entry).
     obs: Option<&'a Obs>,
+    /// Fault injector, when installed: switches the reply loop from a
+    /// blocking `recv` to a `recv_timeout` at the plan's reply deadline
+    /// (a hung worker must not hang the batch).
+    injector: Option<&'a FaultInjector>,
+    /// Fleet quarantine table: down devices are excluded from dispatch
+    /// splits entirely (their speed weight never enters `total_w`), and
+    /// devices discovered dead here are marked down for the rest of the
+    /// forward and beyond.
+    health: &'a mut DeviceHealth,
+    /// Raised when this forward changes the health table, so
+    /// `note_batch` forces a replan around the hole.
+    health_dirty: &'a mut bool,
+    /// Typed-fault side channel back to [`ClusterSim::take_fault`].
+    fault: &'a mut Option<ClusterError>,
+    /// The sim-local batch coordinate fault specs trigger on.
+    batch: u64,
+}
+
+impl ClusterBackend<'_> {
+    /// First discovery of a dead device this forward: quarantine it,
+    /// record it in `newly_down` (it *was* dispatched to this layer, so
+    /// its units must be rebuilt), and stamp the trace.
+    fn note_lost(
+        &mut self,
+        dev: usize,
+        layer: usize,
+        newly_down: &mut Vec<usize>,
+    ) {
+        if self.health.mark_down(dev) {
+            newly_down.push(dev);
+            *self.health_dirty = true;
+            if let Some(o) = self.obs {
+                o.trace.push(EventKind::WorkerLost {
+                    batch: o.current_batch(),
+                    layer: layer as u16,
+                    device: dev as u16,
+                });
+            }
+        }
+    }
+
+    fn stamp_redispatch(
+        &self,
+        layer: usize,
+        expert: usize,
+        from: usize,
+        to: usize,
+        rows: usize,
+    ) {
+        if let Some(o) = self.obs {
+            o.registry().inc(o.h.redispatches);
+            o.trace.push(EventKind::Redispatch {
+                batch: o.current_batch(),
+                layer: layer as u16,
+                expert: expert as u16,
+                from: from as u16,
+                to: to as u16,
+                rows: rows as u32,
+            });
+        }
+    }
+
+    fn stamp_degraded(&self, layer: usize, expert: usize, tokens: usize) {
+        if let Some(o) = self.obs {
+            o.registry().add(o.h.degraded_tokens, tokens as u64);
+            o.trace.push(EventKind::Degraded {
+                batch: o.current_batch(),
+                layer: layer as u16,
+                expert: expert as u16,
+                tokens: tokens as u32,
+            });
+        }
+    }
+
+    /// Worker-loss recovery (DESIGN.md §16), entered only when the
+    /// reply loop lost at least one device. Replays the dispatch split
+    /// arithmetic under the *dispatch-time* health mask (down now minus
+    /// `newly_down`) to find the exact (expert, part, row-range) units
+    /// whose results never arrived, rebuilds their wire buffers from
+    /// `h`, and redispatches each to the first currently-healthy
+    /// replica of its expert. The redispatched result fills the same
+    /// `(expert, part)` slot the lost one would have, so the canonical
+    /// combine is untouched and outputs stay bitwise-identical to the
+    /// fault-free run. Units of an expert with no surviving replica are
+    /// appended to `degraded` instead. One redispatch round only: a
+    /// failure inside it is a hard [`ClusterError::WorkerLost`].
+    #[allow(clippy::too_many_arguments)]
+    fn recover(
+        &mut self,
+        layer: usize,
+        plan: &DispatchPlan,
+        h: &Tensor,
+        arena: &mut FfnArena,
+        newly_down: &[usize],
+        expert_results: &mut [Vec<Option<WorkResult>>],
+        degraded: &mut Vec<(usize, usize, usize)>,
+        device_compute: &mut [f64],
+        device_load: &mut [usize],
+        traffic: &mut LayerTraffic,
+    ) -> Result<(), ClusterError> {
+        let (t, d) = h.dims2();
+        let token_bytes = (d * 4) as u64;
+        let n_dev = self.topo.n_devices;
+        let was_up = |health: &DeviceHealth, dev: usize| {
+            !health.is_down(dev) || newly_down.contains(&dev)
+        };
+        let mut redispatch: Vec<Vec<WorkUnit>> =
+            (0..n_dev).map(|_| Vec::new()).collect();
+        for (bi, fb) in plan.ffn_batches.iter().enumerate() {
+            let n_rows = fb.tokens.len();
+            let n_rep = self.topo.ffn_replica_count(fb.expert);
+            // Identical split arithmetic to dispatch, under the
+            // dispatch-time mask.
+            let mut total_w = 0u64;
+            for j in 0..n_rep {
+                let dev = self.topo.ffn_replica(fb.expert, j);
+                if was_up(self.health, dev) {
+                    total_w += speed_weight(self.topo.speed(dev));
+                }
+            }
+            if total_w == 0 {
+                continue; // degraded at dispatch already
+            }
+            let mut prefix_w = 0u64;
+            let mut start = 0usize;
+            for j in 0..n_rep {
+                let dev = self.topo.ffn_replica(fb.expert, j);
+                if !was_up(self.health, dev) {
+                    continue;
+                }
+                let w = speed_weight(self.topo.speed(dev));
+                let len =
+                    weighted_share(n_rows as u64, total_w, prefix_w, w)
+                        as usize;
+                prefix_w += w;
+                if len == 0 {
+                    continue;
+                }
+                if expert_results[fb.expert][j].is_none() {
+                    // This unit's reply never arrived. Its device is in
+                    // `newly_down` (or died before submit); route the
+                    // same rows to a surviving replica, or degrade.
+                    let target = (0..n_rep)
+                        .map(|k| self.topo.ffn_replica(fb.expert, k))
+                        .find(|&dv| !self.health.is_down(dv));
+                    device_load[dev] -= len;
+                    match target {
+                        None => degraded.push((bi, start, len)),
+                        Some(dst) => {
+                            let slice =
+                                &fb.tokens[start..start + len];
+                            let mut xb = arena.wire.take(len, d);
+                            let mut yb = arena.wire.take(len, d);
+                            yb.data.fill(0.0);
+                            for (i, &tok) in slice.iter().enumerate() {
+                                xb.row_mut(i)
+                                    .copy_from_slice(h.row(tok));
+                                let home =
+                                    self.topo.token_home(tok, t);
+                                if home != dst {
+                                    // Recovery traffic is *added* on
+                                    // top of the first attempt's: the
+                                    // lost shipment did move bytes.
+                                    traffic.record_assignment(
+                                        home,
+                                        dst,
+                                        token_bytes,
+                                    );
+                                }
+                            }
+                            device_load[dst] += len;
+                            self.stamp_redispatch(
+                                layer, fb.expert, dev, dst, len,
+                            );
+                            redispatch[dst].push(WorkUnit {
+                                expert: fb.expert,
+                                part: j,
+                                x: xb,
+                                gates: fb.gates[start..start + len]
+                                    .to_vec(),
+                                tokens: slice.to_vec(),
+                                y: yb,
+                            });
+                        }
+                    }
+                }
+                start += len;
+            }
+            debug_assert_eq!(start, n_rows);
+        }
+        // One redispatch round, submitted then collected per target.
+        // A loss here means both the original replica and the recovery
+        // target died within one batch: give up with the typed error.
+        let deadline =
+            self.injector.map(FaultInjector::reply_deadline);
+        for (dst, units) in redispatch.into_iter().enumerate() {
+            if units.is_empty() {
+                continue;
+            }
+            let rx = match self.workers[layer][dst]
+                .submit(self.batch, units)
+            {
+                Ok(rx) => rx,
+                Err(err) => {
+                    for u in err.units {
+                        arena.wire.put(u.x);
+                        arena.wire.put(u.y);
+                    }
+                    self.health.mark_down(dst);
+                    *self.health_dirty = true;
+                    return Err(err.to_cluster_error());
+                }
+            };
+            let results = match deadline {
+                Some(dl) => rx.recv_timeout(dl).map_err(|_| ()),
+                None => rx.recv().map_err(|_| ()),
+            };
+            match results {
+                Ok(results) => {
+                    for r in results {
+                        device_compute[dst] += r.compute_s;
+                        let (e, part) = (r.expert, r.part);
+                        expert_results[e][part] = Some(r);
+                    }
+                }
+                Err(()) => {
+                    self.health.mark_down(dst);
+                    *self.health_dirty = true;
+                    return Err(ClusterError::WorkerLost {
+                        device: dst,
+                        layer,
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 impl ExpertBackend for ClusterBackend<'_> {
@@ -563,24 +1024,41 @@ impl ExpertBackend for ClusterBackend<'_> {
         let mut per_device: Vec<Vec<WorkUnit>> =
             (0..n_dev).map(|_| Vec::new()).collect();
         let mut device_load = vec![0usize; n_dev];
-        for batch in &plan.ffn_batches {
+        // Micro-batch slices degrading to copy-expert semantics:
+        // (ffn_batch index, row start, len). Empty — and heap-free —
+        // unless a fault leaves an expert with no surviving replica.
+        let mut degraded: Vec<(usize, usize, usize)> = Vec::new(); // alloc-ok: empty Vec, heap-free until a fault degrades
+        for (bi, batch) in plan.ffn_batches.iter().enumerate() {
             let n_rows = batch.tokens.len();
             let n_rep = self.topo.ffn_replica_count(batch.expert);
             // Deterministic speed-weighted contiguous split across the
             // expert's replica enumeration: same boundaries as
             // `placement::replica_slices` fed the replica devices'
             // `speed_weight`s, computed inline to stay allocation-free.
-            // Depends only on (n_rows, replica devices' speeds) — never
-            // on workers or partitions.
+            // Depends only on (n_rows, healthy replica devices'
+            // speeds) — never on workers or partitions. Quarantined
+            // replicas are masked out entirely (their weight never
+            // enters `total_w` — `weighted_share` rejects zero
+            // weights); with *no* healthy replica the whole micro-batch
+            // degrades.
             let mut total_w = 0u64;
             for j in 0..n_rep {
                 let dev = self.topo.ffn_replica(batch.expert, j);
-                total_w += speed_weight(self.topo.speed(dev));
+                if !self.health.is_down(dev) {
+                    total_w += speed_weight(self.topo.speed(dev));
+                }
+            }
+            if total_w == 0 {
+                degraded.push((bi, 0, n_rows));
+                continue;
             }
             let mut prefix_w = 0u64;
             let mut start = 0usize;
             for j in 0..n_rep {
                 let dev = self.topo.ffn_replica(batch.expert, j);
+                if self.health.is_down(dev) {
+                    continue;
+                }
                 let w = speed_weight(self.topo.speed(dev));
                 let len =
                     weighted_share(n_rows as u64, total_w, prefix_w, w)
@@ -627,13 +1105,6 @@ impl ExpertBackend for ClusterBackend<'_> {
             debug_assert_eq!(start, n_rows);
         }
 
-        // Submit all devices, then collect (workers run concurrently).
-        let rxs: Vec<_> = per_device
-            .into_iter()
-            .enumerate()
-            .map(|(dev, units)| self.workers[layer][dev].submit(units))
-            .collect();
-
         let mut device_compute = vec![0.0f64; n_dev];
         let mut expert_results: Vec<Vec<Option<WorkResult>>> = (0
             ..self.n_ffn)
@@ -641,11 +1112,81 @@ impl ExpertBackend for ClusterBackend<'_> {
                 (0..self.topo.ffn_replica_count(e)).map(|_| None).collect()
             })
             .collect();
+        // Devices that died during *this* call (submit refusal or lost
+        // reply) — their dispatched units get rebuilt in `recover`.
+        let mut newly_down: Vec<usize> = Vec::new(); // alloc-ok: empty Vec, heap-free on the no-fault path
+        let mut rxs: Vec<
+            Option<std::sync::mpsc::Receiver<Vec<WorkResult>>>,
+        > = Vec::with_capacity(n_dev);
+        // lint: no-alloc — the no-fault submit/collect fast path; fault
+        // handling allocates only after a loss is detected.
+        // Submit, then collect (workers run concurrently). Devices with
+        // no rows this layer get no message — so a scheduled fault fires
+        // only when its device actually holds work, and an idle replica
+        // stays alive as a recovery target. A submit refusal means the
+        // worker is already gone: recycle the unsent buffers and
+        // quarantine — recovery rebuilds the units later.
+        for (dev, units) in per_device.into_iter().enumerate() {
+            if self.health.is_down(dev) || units.is_empty() {
+                debug_assert!(
+                    !self.health.is_down(dev) || units.is_empty()
+                );
+                rxs.push(None);
+                continue;
+            }
+            match self.workers[layer][dev].submit(self.batch, units) {
+                Ok(rx) => rxs.push(Some(rx)),
+                Err(err) => {
+                    for u in err.units {
+                        arena.wire.put(u.x);
+                        arena.wire.put(u.y);
+                    }
+                    self.note_lost(dev, layer, &mut newly_down);
+                    rxs.push(None);
+                }
+            }
+        }
+        // Collect. Loss shows up as a disconnected reply channel (a
+        // panicked/exited worker drops its senders) or, under an
+        // injector, a reply-deadline timeout (a hung worker must not
+        // hang the batch). A timeout false-positive is harmless:
+        // result slots fill at most once and a late straggler's reply
+        // fails silently on the dropped receiver.
+        let deadline =
+            self.injector.map(FaultInjector::reply_deadline);
         for (dev, rx) in rxs.into_iter().enumerate() {
-            for r in rx.recv().expect("worker reply") {
-                device_compute[dev] += r.compute_s;
-                let (e, part) = (r.expert, r.part);
-                expert_results[e][part] = Some(r);
+            let Some(rx) = rx else { continue };
+            let results = match deadline {
+                Some(dl) => rx.recv_timeout(dl).map_err(|_| ()),
+                None => rx.recv().map_err(|_| ()),
+            };
+            match results {
+                Ok(results) => {
+                    for r in results {
+                        device_compute[dev] += r.compute_s;
+                        let (e, part) = (r.expert, r.part);
+                        expert_results[e][part] = Some(r);
+                    }
+                }
+                Err(()) => self.note_lost(dev, layer, &mut newly_down),
+            }
+        }
+        // lint: end
+        if !newly_down.is_empty() {
+            if let Err(e) = self.recover(
+                layer,
+                plan,
+                h,
+                arena,
+                &newly_down,
+                &mut expert_results,
+                &mut degraded,
+                &mut device_compute,
+                &mut device_load,
+                &mut traffic,
+            ) {
+                *self.fault = Some(e.clone());
+                return Err(e.into());
             }
         }
 
@@ -679,11 +1220,35 @@ impl ExpertBackend for ClusterBackend<'_> {
                 e += n_dev;
             }
         }
+        // Graceful degradation (DESIGN.md §16): tokens of an expert
+        // with no surviving FFN replica fall back to copy-expert
+        // semantics — gate × input added to the residual, exactly the
+        // ZC copy arm (`apply_zc_inline`) — applied after the combine
+        // in a deterministic (batch-index, row-start) order. ZC experts
+        // themselves run inline on token homes and never reach here.
+        let mut degraded_tokens = 0u64;
+        if !degraded.is_empty() {
+            degraded.sort_unstable();
+            for &(bi, start, len) in &degraded {
+                let fb = &plan.ffn_batches[bi];
+                for i in start..start + len {
+                    let tok = fb.tokens[i];
+                    copy_expert_into(
+                        h.row(tok),
+                        fb.gates[i],
+                        &mut y.data[tok * d..(tok + 1) * d],
+                    );
+                }
+                degraded_tokens += len as u64;
+                self.stamp_degraded(layer, fb.expert, len);
+            }
+        }
         Ok(FfnLayerReport {
             device_compute_s: device_compute,
             device_load,
             comm_s: traffic.total_time(self.topo),
             comm_bytes: traffic.total_bytes(),
+            degraded_tokens,
         })
     }
 }
@@ -699,7 +1264,7 @@ mod tests {
             ClusterSim::new(cfg.clone(), Topology::new(devices), 0);
         let mut rng = Rng::new(42);
         let x = Tensor::randn(&mut rng, &[t, cfg.d_model], 1.0);
-        sim.forward(&x).1
+        sim.forward(&x).unwrap().1
     }
 
     #[test]
@@ -752,7 +1317,7 @@ mod tests {
         let mut rng = Rng::new(1);
         let x = Tensor::randn(&mut rng, &[32, cfg.d_model], 1.0);
         let (y_engine, stats) = engine.forward_stack(&x).unwrap();
-        let (y_sim, rep) = sim.forward(&x);
+        let (y_sim, rep) = sim.forward(&x).unwrap();
         assert!(y_sim.approx_eq(&y_engine, 1e-5, 1e-5));
         let engine_drops: usize =
             stats.per_layer.iter().map(|l| l.dropped).sum();
@@ -768,7 +1333,7 @@ mod tests {
             ClusterSim::new(cfg.clone(), Topology::new(2), 11);
         let mut rng = Rng::new(5);
         let x = Tensor::randn(&mut rng, &[40, cfg.d_model], 1.0);
-        let (y_before, _) = sim.forward(&x);
+        let (y_before, _) = sim.forward(&x).unwrap();
         assert!(sim.placement().is_round_robin());
 
         let plan =
@@ -776,7 +1341,7 @@ mod tests {
         let moved = sim.apply_placement(&plan).unwrap();
         assert_eq!(moved, 4); // every expert changed owner
         assert_eq!(sim.placement(), plan);
-        let (y_after, rep) = sim.forward(&x);
+        let (y_after, rep) = sim.forward(&x).unwrap();
         // Placement is pure layout: outputs are bit-identical.
         assert_eq!(y_before.data, y_after.data);
         // Per-device load follows the new owners.
@@ -806,7 +1371,7 @@ mod tests {
             ClusterSim::new(cfg.clone(), Topology::new(2), 11);
         let mut rng = Rng::new(5);
         let x = Tensor::randn(&mut rng, &[40, cfg.d_model], 1.0);
-        let (y_before, rep_before) = sim.forward(&x);
+        let (y_before, rep_before) = sim.forward(&x).unwrap();
 
         // Expert 0 on both devices, the rest single-replica.
         let plan = PlacementPlan::from_replicas(
@@ -817,7 +1382,7 @@ mod tests {
         assert!(plan.is_replicated());
         let changed = sim.apply_placement(&plan).unwrap();
         assert_eq!(changed, 1, "only expert 0's replica set changed");
-        let (y_after, rep_after) = sim.forward(&x);
+        let (y_after, rep_after) = sim.forward(&x).unwrap();
         assert_eq!(y_before.data, y_after.data);
         // The split moves load, never loses it: per-layer totals match.
         for (a, b) in rep_before.layers.iter().zip(&rep_after.layers) {
@@ -833,7 +1398,7 @@ mod tests {
         )
         .unwrap();
         sim.apply_placement(&full).unwrap();
-        let (y_full, _) = sim.forward(&x);
+        let (y_full, _) = sim.forward(&x).unwrap();
         assert_eq!(y_before.data, y_full.data);
     }
 
@@ -863,8 +1428,8 @@ mod tests {
         );
         let mut rng = Rng::new(5);
         let x = Tensor::randn(&mut rng, &[40, cfg.d_model], 1.0);
-        let (y_uni, rep_uni) = uniform.forward(&x);
-        let (y_skw, rep_skw) = skewed.forward(&x);
+        let (y_uni, rep_uni) = uniform.forward(&x).unwrap();
+        let (y_skw, rep_skw) = skewed.forward(&x).unwrap();
         assert_eq!(y_uni.data, y_skw.data);
         let (mut fast_uni, mut fast_skw) = (0usize, 0usize);
         for (a, b) in rep_uni.layers.iter().zip(&rep_skw.layers) {
@@ -895,12 +1460,12 @@ mod tests {
         let mut rng = Rng::new(9);
         let x = Tensor::randn(&mut rng, &[32, cfg.d_model], 1.0);
         for _ in 0..3 {
-            sim.forward(&x);
+            sim.forward(&x).unwrap();
         }
         let warm = sim.arena_growths();
         assert!(warm > 0);
         for _ in 0..4 {
-            sim.forward(&x);
+            sim.forward(&x).unwrap();
         }
         assert_eq!(
             sim.arena_growths(),
@@ -936,18 +1501,18 @@ mod tests {
 
         let mut rng = Rng::new(1);
         let x = Tensor::randn(&mut rng, &[16, cfg.d_model], 1.0);
-        let (_, rep) = sim.forward(&x);
+        let (_, rep) = sim.forward(&x).unwrap();
         sim.note_batch(&rep.stats);
         assert!(sim.replan_in_flight(), "window filled: task submitted");
         // Two boundaries age it to the bound (still kept)…
         for _ in 0..2 {
-            let (_, rep) = sim.forward(&x);
+            let (_, rep) = sim.forward(&x).unwrap();
             sim.note_batch(&rep.stats);
         }
         assert!(sim.replan_in_flight(), "age 2 == bound: still polled");
         // …the third goes past it: abandoned, window reset, nothing
         // committed.
-        let (_, rep) = sim.forward(&x);
+        let (_, rep) = sim.forward(&x).unwrap();
         sim.note_batch(&rep.stats);
         assert!(!sim.replan_in_flight(), "age 3 > 2: abandoned");
         assert_eq!(sim.replan_count(), 0);

@@ -3,12 +3,21 @@
 //! micro-batches with measured wall-clock compute time, scaled by the
 //! device's relative speed so heterogeneous fleets report heterogeneous
 //! compute seconds.
+//!
+//! Workers are the only place injected faults *act* (DESIGN.md §16):
+//! each work message carries its batch number, and a worker with an
+//! installed [`FaultInjector`] checks the (batch, layer, device)
+//! coordinate once per message — a single `Option` branch on the
+//! no-fault fast path. Submission and spawning are fallible so the
+//! driver recovers from a dead worker instead of panicking with it.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::config::MoeConfig;
+use crate::fault::{ClusterError, FaultInjector, FaultKind};
 use crate::moe::experts::{FfnExpert, FfnScratch};
 use crate::tensor::Tensor;
 
@@ -45,16 +54,46 @@ pub struct WorkResult {
 }
 
 enum Msg {
-    Work(Vec<WorkUnit>, Sender<Vec<WorkResult>>),
+    /// `batch` is the sim-local batch number — the fault coordinate the
+    /// worker checks against its injector before touching the units.
+    Work { batch: u64, units: Vec<WorkUnit>, reply: Sender<Vec<WorkResult>> },
     Shutdown,
 }
 
-/// Handle to one device worker thread.
+/// A submit that found the worker already dead. Carries the (device,
+/// layer) coordinate for diagnostics and hands the unsent units back
+/// intact so the caller can return their buffers to the pool and
+/// redispatch the work elsewhere.
+pub struct SubmitError {
+    pub device: usize,
+    pub layer: usize,
+    pub units: Vec<WorkUnit>,
+}
+
+impl SubmitError {
+    pub fn to_cluster_error(&self) -> ClusterError {
+        ClusterError::WorkerLost { device: self.device, layer: self.layer }
+    }
+}
+
+impl std::fmt::Debug for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SubmitError")
+            .field("device", &self.device)
+            .field("layer", &self.layer)
+            .field("units", &self.units.len())
+            .finish()
+    }
+}
+
+/// Handle to one device worker thread (one per (layer, device)).
 pub struct Worker {
     tx: Sender<Msg>,
     handle: Option<JoinHandle<()>>,
     pub device: usize,
+    pub layer: usize,
     pub owned_experts: Vec<usize>,
+    injector: Option<Arc<FaultInjector>>,
 }
 
 impl Worker {
@@ -62,17 +101,43 @@ impl Worker {
     /// `speed` is the device's relative compute rate (1.0 = baseline);
     /// reported `compute_s` is wall-clock divided by it, so a 2x device
     /// finishes the same unit in half the modeled time.
+    ///
+    /// Infallible convenience for fault-free contexts (layer 0, no
+    /// injector) — the cluster driver uses [`Worker::try_spawn`].
     pub fn spawn(
         device: usize,
         owned_experts: Vec<usize>,
         weights: Vec<FfnExpert>,
         speed: f64,
-        _cfg: &MoeConfig,
+        cfg: &MoeConfig,
     ) -> Worker {
+        Worker::try_spawn(0, device, owned_experts, weights, speed, cfg, None)
+            .expect("spawn without an injector cannot be refused")
+    }
+
+    /// Fallible spawn: refuses to bring up a device the injector has
+    /// marked permanently lost, so migration-apply and rejoin surface
+    /// [`ClusterError::RespawnFailed`] instead of resurrecting dead
+    /// hardware.
+    pub fn try_spawn(
+        layer: usize,
+        device: usize,
+        owned_experts: Vec<usize>,
+        weights: Vec<FfnExpert>,
+        speed: f64,
+        _cfg: &MoeConfig,
+        injector: Option<Arc<FaultInjector>>,
+    ) -> Result<Worker, ClusterError> {
         assert_eq!(owned_experts.len(), weights.len());
         assert!(speed > 0.0, "device speed must be positive");
+        if let Some(inj) = injector.as_deref() {
+            if inj.is_lost(device) {
+                return Err(ClusterError::RespawnFailed { device, layer });
+            }
+        }
         let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
         let owned = owned_experts.clone();
+        let inj_thread = injector.clone();
         let handle = std::thread::Builder::new()
             .name(format!("moepp-worker-{device}"))
             .spawn(move || {
@@ -87,7 +152,35 @@ impl Worker {
                 while let Ok(msg) = rx.recv() {
                     match msg {
                         Msg::Shutdown => break,
-                        Msg::Work(units, reply) => {
+                        Msg::Work { batch, units, reply } => {
+                            if let Some(inj) = inj_thread.as_deref() {
+                                match inj.fault_at(batch, layer, device) {
+                                    Some(FaultKind::Panic) => panic!(
+                                        "injected fault: worker panic \
+                                         (device {device}, layer {layer}, \
+                                         batch {batch})"
+                                    ),
+                                    Some(FaultKind::Hang) => {
+                                        // Blocks until teardown releases
+                                        // the latch; the driver detects
+                                        // the loss via its reply
+                                        // deadline. The stranded units'
+                                        // buffers are dropped, not
+                                        // pooled — a counted fault-path
+                                        // cost.
+                                        drop(reply);
+                                        drop(units);
+                                        inj.hang_until_released();
+                                        continue;
+                                    }
+                                    Some(FaultKind::DeviceLoss) => {
+                                        // Permanent: refuse respawn too.
+                                        inj.mark_lost(device);
+                                        return;
+                                    }
+                                    None => {}
+                                }
+                            }
                             let results = units
                                 .into_iter()
                                 .map(|mut u| {
@@ -122,7 +215,14 @@ impl Worker {
                 }
             })
             .expect("spawn worker");
-        Worker { tx, handle: Some(handle), device, owned_experts }
+        Ok(Worker {
+            tx,
+            handle: Some(handle),
+            device,
+            layer,
+            owned_experts,
+            injector,
+        })
     }
 
     /// OS thread identity of this worker — stable for the worker's whole
@@ -132,21 +232,44 @@ impl Worker {
         self.handle.as_ref().expect("worker running").thread().id()
     }
 
-    /// Submit micro-batches; returns a receiver for the results.
-    pub fn submit(&self, units: Vec<WorkUnit>)
-        -> Receiver<Vec<WorkResult>> {
+    /// Submit micro-batches for `batch`; returns a receiver for the
+    /// results, or — if the worker is already dead — the units back,
+    /// intact, with the loss coordinate.
+    pub fn submit(
+        &self,
+        batch: u64,
+        units: Vec<WorkUnit>,
+    ) -> Result<Receiver<Vec<WorkResult>>, SubmitError> {
         let (reply_tx, reply_rx) = channel();
-        self.tx
-            .send(Msg::Work(units, reply_tx))
-            .expect("worker alive");
-        reply_rx
+        match self.tx.send(Msg::Work { batch, units, reply: reply_tx }) {
+            Ok(()) => Ok(reply_rx),
+            Err(std::sync::mpsc::SendError(msg)) => {
+                let units = match msg {
+                    Msg::Work { units, .. } => units,
+                    Msg::Shutdown => Vec::new(),
+                };
+                Err(SubmitError {
+                    device: self.device,
+                    layer: self.layer,
+                    units,
+                })
+            }
+        }
     }
 }
 
 impl Drop for Worker {
     fn drop(&mut self) {
+        // Release any hung workers first: a hang fault parks the thread
+        // on the injector latch, and joining it without the release
+        // would deadlock teardown.
+        if let Some(inj) = self.injector.as_deref() {
+            inj.release_hangs();
+        }
         let _ = self.tx.send(Msg::Shutdown);
         if let Some(h) = self.handle.take() {
+            // A panicked (injected-fault) worker makes join return Err;
+            // teardown tolerates it.
             let _ = h.join();
         }
     }
@@ -155,6 +278,7 @@ impl Drop for Worker {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fault::{FaultPlan, FaultSpec};
     use crate::util::rng::Rng;
 
     #[test]
@@ -165,14 +289,16 @@ mod tests {
         let want_raw =
             e.forward(&Tensor::full(&[2, cfg.d_model], 0.5));
         let w = Worker::spawn(0, vec![3], vec![e], 1.0, &cfg);
-        let rx = w.submit(vec![WorkUnit {
-            expert: 3,
-            part: 0,
-            x: Tensor::full(&[2, cfg.d_model], 0.5),
-            gates: vec![1.0, 0.5],
-            tokens: vec![10, 11],
-            y: Tensor::zeros(&[2, cfg.d_model]),
-        }]);
+        let rx = w
+            .submit(0, vec![WorkUnit {
+                expert: 3,
+                part: 0,
+                x: Tensor::full(&[2, cfg.d_model], 0.5),
+                gates: vec![1.0, 0.5],
+                tokens: vec![10, 11],
+                y: Tensor::zeros(&[2, cfg.d_model]),
+            }])
+            .unwrap();
         let results = rx.recv().unwrap();
         assert_eq!(results.len(), 1);
         let r = &results[0];
@@ -195,17 +321,173 @@ mod tests {
         let mut rng = Rng::new(1);
         let e = FfnExpert::init(&mut rng, cfg.d_model, cfg.d_ff);
         let w = Worker::spawn(1, vec![0], vec![e], 2.0, &cfg);
-        for _ in 0..5 {
-            let rx = w.submit(vec![WorkUnit {
-                expert: 0,
-                part: 0,
-                x: Tensor::zeros(&[1, cfg.d_model]),
-                gates: vec![1.0],
-                tokens: vec![0],
-                y: Tensor::zeros(&[1, cfg.d_model]),
-            }]);
+        for b in 0..5 {
+            let rx = w
+                .submit(b, vec![WorkUnit {
+                    expert: 0,
+                    part: 0,
+                    x: Tensor::zeros(&[1, cfg.d_model]),
+                    gates: vec![1.0],
+                    tokens: vec![0],
+                    y: Tensor::zeros(&[1, cfg.d_model]),
+                }])
+                .unwrap();
             let r = rx.recv().unwrap();
             assert_eq!(r.len(), 1);
         }
+    }
+
+    fn unit(cfg: &MoeConfig) -> WorkUnit {
+        WorkUnit {
+            expert: 0,
+            part: 0,
+            x: Tensor::zeros(&[1, cfg.d_model]),
+            gates: vec![1.0],
+            tokens: vec![0],
+            y: Tensor::zeros(&[1, cfg.d_model]),
+        }
+    }
+
+    #[test]
+    fn injected_panic_disconnects_and_submit_returns_units() {
+        let cfg = MoeConfig::preset("test");
+        let mut rng = Rng::new(2);
+        let e = FfnExpert::init(&mut rng, cfg.d_model, cfg.d_ff);
+        let inj = Arc::new(FaultInjector::new(FaultPlan::new(vec![
+            FaultSpec {
+                batch: 1,
+                layer: 0,
+                device: 0,
+                kind: FaultKind::Panic,
+            },
+        ])));
+        let w = Worker::try_spawn(
+            0,
+            0,
+            vec![0],
+            vec![e],
+            1.0,
+            &cfg,
+            Some(inj),
+        )
+        .unwrap();
+        // Batch 0 is clean.
+        let rx = w.submit(0, vec![unit(&cfg)]).unwrap();
+        assert_eq!(rx.recv().unwrap().len(), 1);
+        // Batch 1 trips the fault: the reply channel disconnects.
+        let rx = w.submit(1, vec![unit(&cfg)]).unwrap();
+        assert!(rx.recv().is_err(), "panicked worker must disconnect");
+        // The worker is gone: the next submit hands the units back with
+        // the loss coordinate.
+        let err = w.submit(2, vec![unit(&cfg)]).unwrap_err();
+        assert_eq!((err.device, err.layer), (0, 0));
+        assert_eq!(err.units.len(), 1, "unsent units come back intact");
+        assert_eq!(
+            err.to_cluster_error(),
+            ClusterError::WorkerLost { device: 0, layer: 0 }
+        );
+    }
+
+    #[test]
+    fn device_loss_marks_injector_and_refuses_respawn() {
+        let cfg = MoeConfig::preset("test");
+        let mut rng = Rng::new(3);
+        let e = FfnExpert::init(&mut rng, cfg.d_model, cfg.d_ff);
+        let inj = Arc::new(FaultInjector::new(FaultPlan::new(vec![
+            FaultSpec {
+                batch: 0,
+                layer: 2,
+                device: 5,
+                kind: FaultKind::DeviceLoss,
+            },
+        ])));
+        let w = Worker::try_spawn(
+            2,
+            5,
+            vec![0],
+            vec![e],
+            1.0,
+            &cfg,
+            Some(inj.clone()),
+        )
+        .unwrap();
+        let rx = w.submit(0, vec![unit(&cfg)]).unwrap();
+        assert!(rx.recv().is_err());
+        assert!(inj.is_lost(5), "device loss is recorded as permanent");
+        let mut rng = Rng::new(4);
+        let e2 = FfnExpert::init(&mut rng, cfg.d_model, cfg.d_ff);
+        let refused = Worker::try_spawn(
+            2,
+            5,
+            vec![0],
+            vec![e2],
+            1.0,
+            &cfg,
+            Some(inj.clone()),
+        );
+        assert_eq!(
+            refused.err(),
+            Some(ClusterError::RespawnFailed { device: 5, layer: 2 })
+        );
+        inj.revive(5);
+        let mut rng = Rng::new(5);
+        let e3 = FfnExpert::init(&mut rng, cfg.d_model, cfg.d_ff);
+        assert!(Worker::try_spawn(
+            2,
+            5,
+            vec![0],
+            vec![e3],
+            1.0,
+            &cfg,
+            Some(inj),
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn hung_worker_times_out_and_teardown_does_not_deadlock() {
+        let cfg = MoeConfig::preset("test");
+        let mut rng = Rng::new(6);
+        let e = FfnExpert::init(&mut rng, cfg.d_model, cfg.d_ff);
+        let inj = Arc::new(FaultInjector::new(FaultPlan::new(vec![
+            FaultSpec {
+                batch: 0,
+                layer: 0,
+                device: 1,
+                kind: FaultKind::Hang,
+            },
+        ])));
+        let w = Worker::try_spawn(
+            0,
+            1,
+            vec![0],
+            vec![e],
+            1.0,
+            &cfg,
+            Some(inj),
+        )
+        .unwrap();
+        let rx = w.submit(0, vec![unit(&cfg)]).unwrap();
+        assert!(
+            rx.recv_timeout(std::time::Duration::from_millis(40)).is_err(),
+            "hung worker must miss the deadline"
+        );
+        // Dropping `w` releases the latch then joins — must not hang.
+        drop(w);
+    }
+
+    #[test]
+    fn refused_try_spawn_errs_on_lost_device() {
+        let cfg = MoeConfig::preset("test");
+        let inj = Arc::new(FaultInjector::new(FaultPlan::new(Vec::new())));
+        inj.mark_lost(2);
+        let mut rng = Rng::new(7);
+        let e = FfnExpert::init(&mut rng, cfg.d_model, cfg.d_ff);
+        let r =
+            Worker::try_spawn(1, 2, vec![0], vec![e], 1.0, &cfg, Some(inj));
+        assert_eq!(
+            r.err(),
+            Some(ClusterError::RespawnFailed { device: 2, layer: 1 })
+        );
     }
 }

@@ -21,6 +21,14 @@ pub struct LatencyStats {
     cap: usize,
     pub count: u64,
     pub total_s: f64,
+    /// Requests resubmitted after a `WorkerLost` batch failure
+    /// (DESIGN.md §16). Their eventual service time — recorded on the
+    /// retry's delivery — spans both attempts, so this count explains
+    /// retry-shaped tail latency in the same snapshot.
+    pub retried: u64,
+    /// Delivered requests that rode a batch with degraded (copy-expert
+    /// fallback) tokens.
+    pub degraded: u64,
 }
 
 impl LatencyStats {
@@ -31,6 +39,8 @@ impl LatencyStats {
             cap: cap.max(1),
             count: 0,
             total_s: 0.0,
+            retried: 0,
+            degraded: 0,
         }
     }
 
@@ -111,6 +121,12 @@ pub struct ServingMetrics {
     /// Placement replans the backend applied between batches (cluster
     /// backends with an online `placement::Replanner`; 0 elsewhere).
     pub replans: u64,
+    /// Requests resubmitted exactly once after their batch was lost to a
+    /// worker fault (DESIGN.md §16).
+    pub retried: u64,
+    /// Delivered requests that rode a degraded batch (some expert had no
+    /// surviving replica; its tokens fell back to copy-expert outputs).
+    pub degraded: u64,
 }
 
 impl ServingMetrics {
@@ -161,6 +177,8 @@ impl ServingMetrics {
                 as f64
                 / 1e9,
             replans: r.counter_value(h.replans),
+            retried: r.counter_value(h.retried),
+            degraded: r.counter_value(h.degraded_requests),
         }
     }
 
@@ -192,6 +210,12 @@ impl ServingMetrics {
         ));
         if self.replans > 0 {
             s.push_str(&format!("\nplacement: replans={}", self.replans));
+        }
+        if self.retried > 0 || self.degraded > 0 {
+            s.push_str(&format!(
+                "\nfaults: retried={} degraded={}",
+                self.retried, self.degraded
+            ));
         }
         s
     }
@@ -411,6 +435,8 @@ mod tests {
         assert_eq!(r.failed, m.failed);
         assert_eq!(r.peak_queue_tokens, m.peak_queue_tokens);
         assert_eq!(r.replans, m.replans);
+        assert_eq!(r.retried, m.retried);
+        assert_eq!(r.degraded, m.degraded);
         // Float seconds come from the integer-ns twins: exact up to the
         // sub-nanosecond truncation of one cast per batch.
         let tol = 1e-9 * m.batches as f64 + 1e-12;

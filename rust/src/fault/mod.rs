@@ -1,0 +1,463 @@
+//! `moepp::fault` — deterministic fault injection and typed cluster
+//! errors (DESIGN.md §16).
+//!
+//! Faults are scheduled at **logical coordinates** — `(batch, layer,
+//! device)` — never wall-clock, so a faulted run is exactly as
+//! reproducible as a fault-free one: the same seed and spec produce the
+//! same worker death at the same micro-batch on every machine. The
+//! [`FaultInjector`] is threaded into each cluster worker as an
+//! `Option<Arc<_>>`; the no-fault fast path is a single `None` check
+//! per work message and the injector is absent entirely in production
+//! configurations.
+//!
+//! Three fault kinds cover the failure modes ROADMAP item 2 names:
+//! a worker **panic** (thread dies mid-batch, channels disconnect), a
+//! worker **hang** (thread blocks until teardown; the driver detects it
+//! via the per-batch reply deadline), and permanent **device loss**
+//! (the thread dies *and* the device refuses to respawn until the
+//! injector is told otherwise — exercising the quarantine/replan path
+//! end to end).
+//!
+//! This module deliberately owns no threads and is absent from the
+//! analyzer's `SPAWN_ALLOWLIST`: injection is pure bookkeeping; only
+//! `cluster/worker.rs` acts on it.
+
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// Default per-batch reply deadline used to detect hung workers. Only
+/// consulted when an injector is installed — fault-free sims block on
+/// `recv()` exactly as before.
+pub const DEFAULT_REPLY_DEADLINE: Duration = Duration::from_millis(250);
+
+/// What happens to the worker at the trigger coordinate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The worker thread panics processing the work message: its
+    /// channels disconnect and the driver sees the loss immediately.
+    Panic,
+    /// The worker blocks on the injector's release latch; the driver
+    /// detects the loss when the reply deadline expires. Hung workers
+    /// are released at teardown so drops never deadlock.
+    Hang,
+    /// The worker thread exits *and* the device is marked permanently
+    /// lost: `Worker::try_spawn` refuses to bring it back, so rejoin
+    /// and migration-respawn paths surface `RespawnFailed`.
+    DeviceLoss,
+}
+
+impl FaultKind {
+    /// Stable wire id for trace events (`EventKind::FaultInjected`).
+    pub fn code(self) -> u8 {
+        match self {
+            FaultKind::Panic => 0,
+            FaultKind::Hang => 1,
+            FaultKind::DeviceLoss => 2,
+        }
+    }
+
+    fn parse(s: &str) -> Result<FaultKind, String> {
+        match s {
+            "panic" => Ok(FaultKind::Panic),
+            "hang" => Ok(FaultKind::Hang),
+            "loss" => Ok(FaultKind::DeviceLoss),
+            other => Err(format!(
+                "unknown fault kind '{other}' (expected panic|hang|loss)"
+            )),
+        }
+    }
+}
+
+/// One scheduled fault: the worker for `device` at `layer` is hit when
+/// it receives work for (sim-local) batch number `batch`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub batch: u64,
+    pub layer: usize,
+    pub device: usize,
+    pub kind: FaultKind,
+}
+
+/// A deterministic fault schedule plus the detection deadline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    pub specs: Vec<FaultSpec>,
+    /// How long the driver waits for a worker's reply before declaring
+    /// the device lost. Logical faults fire instantly, so this only
+    /// bounds hang detection; healthy workers answer far sooner.
+    pub reply_deadline: Duration,
+}
+
+impl FaultPlan {
+    pub fn new(specs: Vec<FaultSpec>) -> FaultPlan {
+        FaultPlan { specs, reply_deadline: DEFAULT_REPLY_DEADLINE }
+    }
+
+    /// Parse a CLI spec: comma-separated `kind@batch:layer:device`
+    /// elements (kind ∈ `panic|hang|loss`) plus an optional
+    /// `deadline-ms=N`. Example: `panic@1:0:2,hang@3:1:0,deadline-ms=50`.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::new(Vec::new());
+        for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+            let part = part.trim();
+            if let Some(ms) = part.strip_prefix("deadline-ms=") {
+                let ms: u64 = ms
+                    .parse()
+                    .map_err(|_| format!("bad deadline-ms '{ms}'"))?;
+                plan.reply_deadline = Duration::from_millis(ms);
+                continue;
+            }
+            let (kind, coord) = part.split_once('@').ok_or_else(|| {
+                format!("bad fault '{part}' (want kind@batch:layer:device)")
+            })?;
+            let kind = FaultKind::parse(kind)?;
+            let mut it = coord.split(':');
+            let mut next = |name: &str| -> Result<u64, String> {
+                it.next()
+                    .ok_or_else(|| format!("fault '{part}' missing {name}"))?
+                    .parse()
+                    .map_err(|_| format!("fault '{part}': bad {name}"))
+            };
+            let batch = next("batch")?;
+            let layer = next("layer")? as usize;
+            let device = next("device")? as usize;
+            if it.next().is_some() {
+                return Err(format!("fault '{part}': trailing fields"));
+            }
+            plan.specs.push(FaultSpec { batch, layer, device, kind });
+        }
+        Ok(plan)
+    }
+
+    /// A reproducible schedule for `moepp bench faults`: `n_faults`
+    /// panic/hang faults on **distinct devices** at **distinct batches**
+    /// (so each fault actually fires before its device is quarantined),
+    /// layers drawn from the seed. Never uses more faults than
+    /// `devices - 1`, leaving at least one survivor per expert when the
+    /// placement replicates every expert everywhere.
+    pub fn seeded(
+        seed: u64,
+        n_faults: usize,
+        batches: u64,
+        layers: usize,
+        devices: usize,
+    ) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xfau64.rotate_left(32));
+        let n = n_faults.min(devices.saturating_sub(1)).max(1);
+        let mut order: Vec<usize> = (0..devices).collect();
+        rng.shuffle(&mut order);
+        let specs = (0..n)
+            .map(|i| FaultSpec {
+                // Spread over distinct batches within the run.
+                batch: (i as u64) % batches.max(1),
+                layer: rng.below(layers.max(1)),
+                device: order[i],
+                kind: if i % 2 == 0 {
+                    FaultKind::Panic
+                } else {
+                    FaultKind::Hang
+                },
+            })
+            .collect();
+        FaultPlan::new(specs)
+    }
+}
+
+/// Mutable injector state: permanently lost devices and the hang latch.
+struct InjectorState {
+    lost: Vec<bool>,
+    hangs_released: bool,
+}
+
+/// Shared between the cluster driver and every worker thread. Workers
+/// query [`fault_at`](FaultInjector::fault_at) once per work message
+/// (no lock — the schedule is immutable); the latch and the lost set
+/// are only touched on fault paths and at teardown.
+pub struct FaultInjector {
+    plan: FaultPlan,
+    state: Mutex<InjectorState>,
+    released: Condvar,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        FaultInjector {
+            plan,
+            state: Mutex::new(InjectorState {
+                lost: Vec::new(),
+                hangs_released: false,
+            }),
+            released: Condvar::new(),
+        }
+    }
+
+    /// The scheduled fault for this (batch, layer, device) coordinate,
+    /// if any. Lock-free linear scan of a short immutable schedule.
+    #[inline]
+    pub fn fault_at(
+        &self,
+        batch: u64,
+        layer: usize,
+        device: usize,
+    ) -> Option<FaultKind> {
+        self.plan
+            .specs
+            .iter()
+            .find(|s| {
+                s.batch == batch && s.layer == layer && s.device == device
+            })
+            .map(|s| s.kind)
+    }
+
+    /// All faults scheduled for `batch` — the driver stamps
+    /// `FaultInjected` trace events from this before dispatching.
+    pub fn faults_for_batch(
+        &self,
+        batch: u64,
+    ) -> impl Iterator<Item = &FaultSpec> {
+        self.plan.specs.iter().filter(move |s| s.batch == batch)
+    }
+
+    pub fn reply_deadline(&self) -> Duration {
+        self.plan.reply_deadline
+    }
+
+    /// Mark `device` permanently lost: every subsequent
+    /// `Worker::try_spawn` for it fails until [`revive`](Self::revive).
+    pub fn mark_lost(&self, device: usize) {
+        let mut st = self.state.lock().expect("fault injector lock");
+        if st.lost.len() <= device {
+            st.lost.resize(device + 1, false);
+        }
+        st.lost[device] = true;
+    }
+
+    /// Has `device` been permanently lost?
+    pub fn is_lost(&self, device: usize) -> bool {
+        let st = self.state.lock().expect("fault injector lock");
+        st.lost.get(device).copied().unwrap_or(false)
+    }
+
+    /// Clear a permanent loss (the operator replaced the hardware).
+    pub fn revive(&self, device: usize) {
+        let mut st = self.state.lock().expect("fault injector lock");
+        if let Some(d) = st.lost.get_mut(device) {
+            *d = false;
+        }
+    }
+
+    /// Block the calling worker until hangs are released (teardown).
+    pub fn hang_until_released(&self) {
+        let mut st = self.state.lock().expect("fault injector lock");
+        while !st.hangs_released {
+            st = self.released.wait(st).expect("fault injector lock");
+        }
+    }
+
+    /// Release every hung worker. Called by `Worker::drop` before the
+    /// shutdown/join handshake so a hung worker can never deadlock
+    /// teardown; once released, the latch stays open.
+    pub fn release_hangs(&self) {
+        let mut st = self.state.lock().expect("fault injector lock");
+        st.hangs_released = true;
+        self.released.notify_all();
+    }
+}
+
+impl std::fmt::Debug for FaultInjector {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FaultInjector")
+            .field("specs", &self.plan.specs.len())
+            .field("reply_deadline", &self.plan.reply_deadline)
+            .finish_non_exhaustive()
+    }
+}
+
+/// Typed cluster execution errors. Implements `std::error::Error`, so
+/// it crosses `anyhow` boundaries via the blanket `From` while staying
+/// recoverable in typed form through `ClusterSim::take_fault`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ClusterError {
+    /// A worker died (panic / hang past the deadline / disconnect) and
+    /// the in-batch redispatch round could not complete the batch.
+    WorkerLost { device: usize, layer: usize },
+    /// A worker respawn (migration apply or rejoin) failed because the
+    /// device refused to come back.
+    RespawnFailed { device: usize, layer: usize },
+    /// A non-fault failure surfaced through the cluster path.
+    Internal(String),
+}
+
+impl std::fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClusterError::WorkerLost { device, layer } => write!(
+                f,
+                "worker lost: device {device} at layer {layer}"
+            ),
+            ClusterError::RespawnFailed { device, layer } => write!(
+                f,
+                "worker respawn failed: device {device} at layer {layer}"
+            ),
+            ClusterError::Internal(msg) => {
+                write!(f, "cluster error: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
+
+/// Per-device liveness, owned by the cluster driver. A device marked
+/// down is masked out of dispatch, redispatch targeting and planner
+/// candidates until `rejoin` brings it back.
+#[derive(Clone, Debug, Default)]
+pub struct DeviceHealth {
+    down: Vec<bool>,
+}
+
+impl DeviceHealth {
+    pub fn new(n_devices: usize) -> DeviceHealth {
+        DeviceHealth { down: vec![false; n_devices] }
+    }
+
+    #[inline]
+    pub fn is_down(&self, device: usize) -> bool {
+        self.down.get(device).copied().unwrap_or(false)
+    }
+
+    /// Quarantine `device`; returns true if it was previously up (the
+    /// caller stamps the loss exactly once).
+    pub fn mark_down(&mut self, device: usize) -> bool {
+        if device >= self.down.len() || self.down[device] {
+            return false;
+        }
+        self.down[device] = true;
+        true
+    }
+
+    /// Lift the quarantine (rejoin).
+    pub fn mark_up(&mut self, device: usize) {
+        if let Some(d) = self.down.get_mut(device) {
+            *d = false;
+        }
+    }
+
+    pub fn any_down(&self) -> bool {
+        self.down.iter().any(|&d| d)
+    }
+
+    pub fn n_down(&self) -> usize {
+        self.down.iter().filter(|&&d| d).count()
+    }
+
+    /// Quarantined device ids, ascending (allocates; fault/replan path).
+    pub fn down_devices(&self) -> Vec<usize> {
+        (0..self.down.len()).filter(|&d| self.down[d]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_kinds_coordinates_and_deadline() {
+        let p = FaultPlan::parse("panic@1:0:2, hang@3:1:0,loss@4:2:1")
+            .unwrap();
+        assert_eq!(p.specs.len(), 3);
+        assert_eq!(
+            p.specs[0],
+            FaultSpec {
+                batch: 1,
+                layer: 0,
+                device: 2,
+                kind: FaultKind::Panic
+            }
+        );
+        assert_eq!(p.specs[1].kind, FaultKind::Hang);
+        assert_eq!(p.specs[2].kind, FaultKind::DeviceLoss);
+        assert_eq!(p.reply_deadline, DEFAULT_REPLY_DEADLINE);
+        let p = FaultPlan::parse("deadline-ms=50,panic@0:0:0").unwrap();
+        assert_eq!(p.reply_deadline, Duration::from_millis(50));
+        assert!(FaultPlan::parse("boom@0:0:0").is_err());
+        assert!(FaultPlan::parse("panic@0:0").is_err());
+        assert!(FaultPlan::parse("panic@0:0:0:9").is_err());
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_distinct_and_bounded() {
+        let a = FaultPlan::seeded(7, 2, 4, 2, 3);
+        let b = FaultPlan::seeded(7, 2, 4, 2, 3);
+        assert_eq!(a, b, "same seed must give the same schedule");
+        let c = FaultPlan::seeded(8, 2, 4, 2, 3);
+        assert_ne!(a, c, "different seeds should differ");
+        assert_eq!(a.specs.len(), 2);
+        let mut devs: Vec<usize> =
+            a.specs.iter().map(|s| s.device).collect();
+        devs.dedup();
+        assert_eq!(devs.len(), 2, "faults land on distinct devices");
+        for s in &a.specs {
+            assert!(s.batch < 4 && s.layer < 2 && s.device < 3);
+        }
+        // Never faults every device.
+        let d = FaultPlan::seeded(7, 10, 4, 2, 3);
+        assert!(d.specs.len() <= 2);
+    }
+
+    #[test]
+    fn injector_matches_exact_coordinates_only() {
+        let inj = FaultInjector::new(FaultPlan::new(vec![FaultSpec {
+            batch: 2,
+            layer: 1,
+            device: 0,
+            kind: FaultKind::Panic,
+        }]));
+        assert_eq!(inj.fault_at(2, 1, 0), Some(FaultKind::Panic));
+        assert_eq!(inj.fault_at(2, 1, 1), None);
+        assert_eq!(inj.fault_at(2, 0, 0), None);
+        assert_eq!(inj.fault_at(3, 1, 0), None);
+        assert_eq!(inj.faults_for_batch(2).count(), 1);
+        assert_eq!(inj.faults_for_batch(0).count(), 0);
+    }
+
+    #[test]
+    fn lost_set_and_hang_latch_work() {
+        let inj = FaultInjector::new(FaultPlan::new(Vec::new()));
+        assert!(!inj.is_lost(3));
+        inj.mark_lost(3);
+        assert!(inj.is_lost(3));
+        assert!(!inj.is_lost(0));
+        inj.revive(3);
+        assert!(!inj.is_lost(3));
+        // Released latch does not block.
+        inj.release_hangs();
+        inj.hang_until_released();
+    }
+
+    #[test]
+    fn health_quarantines_and_rejoins() {
+        let mut h = DeviceHealth::new(3);
+        assert!(!h.any_down());
+        assert!(h.mark_down(1), "first down transition reports true");
+        assert!(!h.mark_down(1), "repeat down is idempotent");
+        assert!(h.is_down(1) && !h.is_down(0));
+        assert_eq!(h.down_devices(), vec![1]);
+        assert_eq!(h.n_down(), 1);
+        h.mark_up(1);
+        assert!(!h.any_down());
+        assert!(!h.mark_down(9), "out-of-range device is ignored");
+    }
+
+    #[test]
+    fn cluster_error_displays_and_crosses_anyhow() {
+        let e = ClusterError::WorkerLost { device: 2, layer: 1 };
+        assert_eq!(format!("{e}"), "worker lost: device 2 at layer 1");
+        let a: anyhow::Error = e.clone().into();
+        assert!(format!("{a:#}").contains("worker lost"));
+        let r = ClusterError::RespawnFailed { device: 0, layer: 3 };
+        assert!(format!("{r}").contains("respawn failed"));
+    }
+}

@@ -38,12 +38,17 @@
 //! Observability (metrics registry, span traces, Prometheus/JSON
 //! exporters) lives in [`obs`] — see DESIGN.md §15; recording is
 //! infallible, bitwise-neutral and allocation-free in steady state.
+//! Deterministic fault injection and worker-loss recovery live in
+//! [`fault`] and [`cluster`] — see DESIGN.md §16; a lost worker's work
+//! is redispatched to surviving replicas (bitwise-identical results) or
+//! degraded to copy-expert semantics when no replica remains.
 
 pub mod analyze;
 pub mod bench;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
+pub mod fault;
 pub mod moe;
 pub mod obs;
 pub mod placement;

@@ -61,6 +61,11 @@ pub struct ForwardStats {
     /// ([`crate::serve`], DESIGN.md §9). Row `i` of the input batch owns
     /// index `i` here.
     pub token_counts: TokenCounts,
+    /// Tokens whose FFN expert had no surviving replica and fell back
+    /// to copy-expert semantics (DESIGN.md §16), summed over layers.
+    /// Zero on every fault-free path; only the cluster backend's
+    /// worker-loss degradation produces them.
+    pub degraded_tokens: u64,
 }
 
 /// Per-token assignment counters, one entry per input row, summed across
@@ -200,6 +205,10 @@ pub struct FfnLayerReport {
     pub comm_s: f64,
     /// Off-device bytes moved.
     pub comm_bytes: u64,
+    /// Tokens degraded to copy-expert semantics because no replica of
+    /// their FFN expert survived (DESIGN.md §16) — zero for native
+    /// backends and on every fault-free cluster forward.
+    pub degraded_tokens: u64,
 }
 
 /// Full record of one executed layer.
@@ -467,6 +476,7 @@ pub fn forward_stack(
         stats.ffn_s += ex.ffn_s;
         stats.zc_s += ex.zc_s;
         stats.expert_forward_s += ex.ffn_s + ex.zc_s;
+        stats.degraded_tokens += ex.report.degraded_tokens;
         // alloc-ok: stats are caller-visible output, not hot-loop state.
         stats.per_layer.push(ex.stats.clone());
         execs.push(ex);

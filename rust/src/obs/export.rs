@@ -273,6 +273,41 @@ pub fn event_json(ev: &Event) -> Option<Json> {
                 ("rows", n(rows as u64)),
             ]
         }
+        EventKind::FaultInjected { batch, layer, device, kind } => vec![
+            t,
+            ("ev", Json::str("fault_injected")),
+            ("batch", n(batch)),
+            ("layer", n(layer as u64)),
+            ("device", n(device as u64)),
+            ("kind", n(kind as u64)),
+        ],
+        EventKind::WorkerLost { batch, layer, device } => vec![
+            t,
+            ("ev", Json::str("worker_lost")),
+            ("batch", n(batch)),
+            ("layer", n(layer as u64)),
+            ("device", n(device as u64)),
+        ],
+        EventKind::Redispatch { batch, layer, expert, from, to, rows } => {
+            vec![
+                t,
+                ("ev", Json::str("redispatch")),
+                ("batch", n(batch)),
+                ("layer", n(layer as u64)),
+                ("expert", n(expert as u64)),
+                ("from", n(from as u64)),
+                ("to", n(to as u64)),
+                ("rows", n(rows as u64)),
+            ]
+        }
+        EventKind::Degraded { batch, layer, expert, tokens } => vec![
+            t,
+            ("ev", Json::str("degraded")),
+            ("batch", n(batch)),
+            ("layer", n(layer as u64)),
+            ("expert", n(expert as u64)),
+            ("tokens", n(tokens as u64)),
+        ],
     };
     Some(Json::obj(pairs))
 }
@@ -382,6 +417,31 @@ pub fn event_from_json(v: &Json) -> Option<Event> {
             device: u("device")? as u16,
             rows: u("rows")? as u32,
         },
+        "fault_injected" => EventKind::FaultInjected {
+            batch: u("batch")?,
+            layer: u("layer")? as u16,
+            device: u("device")? as u16,
+            kind: u("kind")? as u8,
+        },
+        "worker_lost" => EventKind::WorkerLost {
+            batch: u("batch")?,
+            layer: u("layer")? as u16,
+            device: u("device")? as u16,
+        },
+        "redispatch" => EventKind::Redispatch {
+            batch: u("batch")?,
+            layer: u("layer")? as u16,
+            expert: u("expert")? as u16,
+            from: u("from")? as u16,
+            to: u("to")? as u16,
+            rows: u("rows")? as u32,
+        },
+        "degraded" => EventKind::Degraded {
+            batch: u("batch")?,
+            layer: u("layer")? as u16,
+            expert: u("expert")? as u16,
+            tokens: u("tokens")? as u32,
+        },
         _ => return None,
     };
     Some(Event { t_ns, kind })
@@ -439,6 +499,10 @@ pub struct TraceSummary {
     pub replan_proposed: u64,
     pub replan_committed: u64,
     pub replan_abandoned: u64,
+    pub faults: u64,
+    pub worker_losses: u64,
+    pub redispatches: u64,
+    pub degraded_tokens: u64,
     pub stages: Vec<StageRow>,
     pub tok_by_k: [u64; TOK_K_BINS],
 }
@@ -526,6 +590,12 @@ impl TraceSummary {
                 }
                 EventKind::DeviceBusy { ns, .. } => note(9, ns),
                 EventKind::ReplicaSplit { .. } => {}
+                EventKind::FaultInjected { .. } => s.faults += 1,
+                EventKind::WorkerLost { .. } => s.worker_losses += 1,
+                EventKind::Redispatch { .. } => s.redispatches += 1,
+                EventKind::Degraded { tokens, .. } => {
+                    s.degraded_tokens += tokens as u64
+                }
             }
         }
         s
@@ -556,8 +626,16 @@ impl TraceSummary {
             self.replan_abandoned
         ));
         out.push_str(&format!(
-            "assignments: ffn {}, zc {}, dropped {}\n\n",
+            "assignments: ffn {}, zc {}, dropped {}\n",
             self.ffn, self.zc, self.dropped
+        ));
+        out.push_str(&format!(
+            "faults:   {} injected, {} workers lost, {} redispatches, \
+             {} tokens degraded\n\n",
+            self.faults,
+            self.worker_losses,
+            self.redispatches,
+            self.degraded_tokens
         ));
         out.push_str(&format!(
             "{:<12} {:>8} {:>12} {:>12} {:>12}\n",
@@ -778,6 +856,43 @@ mod tests {
                     service_ns: 40,
                 },
             },
+            Event {
+                t_ns: 60,
+                kind: EventKind::FaultInjected {
+                    batch: 1,
+                    layer: 0,
+                    device: 2,
+                    kind: 0,
+                },
+            },
+            Event {
+                t_ns: 61,
+                kind: EventKind::WorkerLost {
+                    batch: 1,
+                    layer: 0,
+                    device: 2,
+                },
+            },
+            Event {
+                t_ns: 62,
+                kind: EventKind::Redispatch {
+                    batch: 1,
+                    layer: 0,
+                    expert: 3,
+                    from: 2,
+                    to: 0,
+                    rows: 4,
+                },
+            },
+            Event {
+                t_ns: 63,
+                kind: EventKind::Degraded {
+                    batch: 1,
+                    layer: 0,
+                    expert: 5,
+                    tokens: 2,
+                },
+            },
         ]
     }
 
@@ -805,6 +920,10 @@ mod tests {
         assert_eq!(s.zc, 5);
         assert_eq!(s.tok_by_k[0], 3);
         assert_eq!(s.tok_by_k[2], 5);
+        assert_eq!(s.faults, 1);
+        assert_eq!(s.worker_losses, 1);
+        assert_eq!(s.redispatches, 1);
+        assert_eq!(s.degraded_tokens, 2);
         let queue = &s.stages[0];
         assert_eq!((queue.count, queue.total_ns), (1, 10));
         let rendered = s.render();

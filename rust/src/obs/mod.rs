@@ -101,6 +101,19 @@ pub struct Handles {
     pub replan_committed: CounterH,
     pub replan_abandoned: CounterH,
     pub migration_bytes: CounterH,
+    // --- fault tolerance (DESIGN.md §16) ---
+    /// Faults scheduled by the injection plan (stamped at the batch
+    /// they trigger on).
+    pub faults: CounterH,
+    /// Lost (expert, row-range) units redispatched to a surviving
+    /// replica.
+    pub redispatches: CounterH,
+    /// Tokens degraded to copy-expert semantics (no surviving replica).
+    pub degraded_tokens: CounterH,
+    /// Requests resubmitted once after a `WorkerLost` batch failure.
+    pub retried: CounterH,
+    /// Requests delivered with at least one degraded token.
+    pub degraded_requests: CounterH,
     // --- gauges ---
     pub peak_queue_tokens: GaugeH,
     pub time_to_first_batch_ns: GaugeH,
@@ -145,6 +158,12 @@ impl Handles {
             replan_committed: b.counter("moepp_replan_committed_total"),
             replan_abandoned: b.counter("moepp_replan_abandoned_total"),
             migration_bytes: b.counter("moepp_migration_bytes_total"),
+            faults: b.counter("moepp_faults_total"),
+            redispatches: b.counter("moepp_redispatches_total"),
+            degraded_tokens: b.counter("moepp_degraded_tokens_total"),
+            retried: b.counter("moepp_retried_total"),
+            degraded_requests: b
+                .counter("moepp_degraded_requests_total"),
             peak_queue_tokens: b.gauge("moepp_peak_queue_tokens"),
             time_to_first_batch_ns: b.gauge("moepp_time_to_first_batch_ns"),
             queue_wait_ns: b.hist("moepp_queue_wait_ns"),

@@ -108,6 +108,28 @@ pub enum EventKind {
         device: u16,
         rows: u32,
     },
+    /// A fault scheduled by the deterministic injection plan for this
+    /// batch (DESIGN.md §16). `batch` is the obs batch id; `kind` is
+    /// [`FaultKind::code`]: 0 panic, 1 hang, 2 device loss.
+    ///
+    /// [`FaultKind::code`]: crate::fault::FaultKind::code
+    FaultInjected { batch: u64, layer: u16, device: u16, kind: u8 },
+    /// A device's worker was discovered dead (disconnected reply or
+    /// missed reply deadline) and the device was quarantined.
+    WorkerLost { batch: u64, layer: u16, device: u16 },
+    /// A lost replica's (expert, row-range) unit was redispatched to a
+    /// surviving replica — outputs stay bitwise-identical (§16).
+    Redispatch {
+        batch: u64,
+        layer: u16,
+        expert: u16,
+        from: u16,
+        to: u16,
+        rows: u32,
+    },
+    /// Tokens of an expert with no surviving replica degraded to
+    /// copy-expert semantics.
+    Degraded { batch: u64, layer: u16, expert: u16, tokens: u32 },
 }
 
 /// The preallocated ring. Single-owner mutable state, wrapped by

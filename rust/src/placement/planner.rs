@@ -88,11 +88,22 @@ pub struct Planner {
     /// Replica-set size cap for [`Strategy::Replicated`] (1 disables
     /// replication and makes it identical to refined).
     pub max_replicas: usize,
+    /// Quarantined devices (DESIGN.md §16): no strategy places a
+    /// replica on them — the round-robin baseline is repaired onto the
+    /// healthy devices, LPT/refine skip them as candidates, and
+    /// feasibility is judged on the healthy count. Empty (the default)
+    /// reproduces the historical planner bit-for-bit.
+    pub down_devices: Vec<usize>,
 }
 
 impl Planner {
     pub fn new(cost: CostModel) -> Planner {
-        Planner { cost, mem_budget_bytes: None, max_replicas: 2 }
+        Planner {
+            cost,
+            mem_budget_bytes: None,
+            max_replicas: 2,
+            down_devices: Vec::new(),
+        }
     }
 
     pub fn with_budget(mut self, bytes: u64) -> Planner {
@@ -104,6 +115,15 @@ impl Planner {
         assert!(max_replicas >= 1, "max_replicas must be >= 1");
         self.max_replicas = max_replicas;
         self
+    }
+
+    pub fn with_down_devices(mut self, down: Vec<usize>) -> Planner {
+        self.down_devices = down;
+        self
+    }
+
+    fn is_down(&self, dev: usize) -> bool {
+        self.down_devices.contains(&dev)
     }
 
     /// Max FFN experts one device can hold under the memory budget.
@@ -122,18 +142,38 @@ impl Planner {
         anyhow::ensure!(n_devices > 0, "planner needs >= 1 device");
         let n_ffn = profile.n_ffn_experts();
         let cap = self.max_experts_per_device().unwrap_or(n_ffn.max(1));
+        // Feasibility is judged on the *healthy* fleet: quarantined
+        // devices hold no replicas.
+        let healthy: Vec<usize> = (0..n_devices)
+            .filter(|&d| !self.is_down(d))
+            .collect();
+        let n_healthy = healthy.len();
         anyhow::ensure!(
-            cap * n_devices >= n_ffn,
-            "memory budget infeasible: {n_ffn} FFN experts, \
-             {n_devices} devices x {cap} experts/device"
+            n_healthy > 0,
+            "every device is quarantined: nowhere to place experts"
         );
         anyhow::ensure!(
-            cap >= n_ffn.div_ceil(n_devices),
+            cap * n_healthy >= n_ffn,
+            "memory budget infeasible: {n_ffn} FFN experts, \
+             {n_healthy} healthy devices x {cap} experts/device"
+        );
+        anyhow::ensure!(
+            cap >= n_ffn.div_ceil(n_healthy),
             "memory budget below the balanced minimum \
              ({} experts/device needed, budget allows {cap})",
-            n_ffn.div_ceil(n_devices)
+            n_ffn.div_ceil(n_healthy)
         );
-        let rr = PlacementPlan::round_robin(n_ffn, n_devices);
+        // The baseline: plain round-robin on a whole fleet (the
+        // historical layout, bit-for-bit), repaired round-robin over
+        // the healthy devices when some are quarantined.
+        let rr = if n_healthy == n_devices {
+            PlacementPlan::round_robin(n_ffn, n_devices)
+        } else {
+            let owner: Vec<usize> =
+                (0..n_ffn).map(|e| healthy[e % n_healthy]).collect();
+            PlacementPlan::from_owner(owner, n_devices)
+                .expect("healthy round-robin produces valid owners")
+        };
         match strategy {
             Strategy::RoundRobin => Ok(rr),
             Strategy::Lpt => {
@@ -206,7 +246,7 @@ impl Planner {
         let mut dev_count = vec![0usize; n_devices];
         for &e in &order {
             let dev = (0..n_devices)
-                .filter(|&d| dev_count[d] < cap)
+                .filter(|&d| dev_count[d] < cap && !self.is_down(d))
                 .min_by(|&a, &b| {
                     let fa = (dev_load[a] + totals[e]) as f64
                         * self.cost.compute_s_on(a);
@@ -271,7 +311,7 @@ impl Planner {
                 }
                 let from = scorer.plan().owner(e);
                 for d in 0..n_dev {
-                    if d == from || counts[d] >= cap {
+                    if d == from || counts[d] >= cap || self.is_down(d) {
                         continue;
                     }
                     let edit = Edit::Move { expert: e, to: d };
@@ -303,6 +343,7 @@ impl Planner {
                     if r < max_replicas {
                         for d in 0..n_dev {
                             if counts[d] >= cap
+                                || self.is_down(d)
                                 || scorer
                                     .plan()
                                     .replicas(e)
@@ -461,6 +502,33 @@ mod tests {
             "budget violated: {:?}",
             plan.device_counts()
         );
+    }
+
+    #[test]
+    fn quarantined_devices_hold_no_replicas() {
+        // DESIGN.md §16: every strategy (the repaired round-robin
+        // baseline included) must route around a down device.
+        let profile =
+            LoadProfile::from_counts(vec![vec![100, 1, 100, 1]]).unwrap();
+        let p = planner().with_down_devices(vec![1]);
+        for strat in Strategy::all() {
+            let plan = p.plan(strat, 3, &profile).unwrap();
+            plan.validate().unwrap();
+            for e in 0..4 {
+                assert!(
+                    !plan.replicas(e).contains(&1),
+                    "{strat:?} placed expert {e} on the down device"
+                );
+            }
+        }
+        // An empty mask reproduces the historical baseline exactly.
+        let rr = planner()
+            .plan(Strategy::RoundRobin, 3, &profile)
+            .unwrap();
+        assert_eq!(rr, PlacementPlan::round_robin(4, 3));
+        // A fully-quarantined fleet is infeasible.
+        let dead = planner().with_down_devices(vec![0, 1]);
+        assert!(dead.plan(Strategy::Refined, 2, &profile).is_err());
     }
 
     #[test]

@@ -167,6 +167,17 @@ impl Replanner {
         self.profile.observe_loads(loads);
     }
 
+    /// Update the planner's quarantine mask (DESIGN.md §16): subsequent
+    /// proposals place no replica on `down` devices. The cluster calls
+    /// this whenever its [`DeviceHealth`] table changes — on loss *and*
+    /// on rejoin (with the shrunken mask), so a restored device becomes
+    /// a candidate again.
+    ///
+    /// [`DeviceHealth`]: crate::fault::DeviceHealth
+    pub fn set_down_devices(&mut self, down: Vec<usize>) {
+        self.planner.down_devices = down;
+    }
+
     /// Record one executed batch from its forward stats.
     pub fn observe(&mut self, stats: &ForwardStats, cfg: &MoeConfig) {
         self.profile.observe_stats(stats, cfg);
@@ -210,7 +221,18 @@ impl Replanner {
             cfg: self.cfg.clone(),
             profile: self.profile.clone(),
             current: current.clone(),
+            forced: false,
         }
+    }
+
+    /// A planning attempt that bypasses the hysteresis gates (gain,
+    /// payback — interval too: the caller already decided to plan).
+    /// Used after a device loss (DESIGN.md §16): evacuating a
+    /// quarantined device is mandatory even when the cost model calls
+    /// the migration a loss, so only plan-equals-current suppresses the
+    /// proposal.
+    pub fn plan_task_forced(&self, current: &PlacementPlan) -> PlanTask {
+        PlanTask { forced: true, ..self.plan_task(current) }
     }
 
     /// Propose a migration away from `current`, or `None` while the
@@ -259,6 +281,8 @@ pub struct PlanTask {
     cfg: ReplanConfig,
     profile: LoadProfile,
     current: PlacementPlan,
+    /// Bypass the gain/payback gates ([`Replanner::plan_task_forced`]).
+    forced: bool,
 }
 
 impl PlanTask {
@@ -317,6 +341,11 @@ impl PlanTask {
             predicted_makespan_after_s: after,
             window_batches: self.profile.batches,
         };
+        if self.forced {
+            // Health-forced replans migrate regardless of predicted
+            // gain: the alternative is serving degraded outputs.
+            return Some(mig);
+        }
         if mig.predicted_gain_s() <= 0.0 {
             return None;
         }
@@ -454,6 +483,31 @@ mod tests {
         let mig = rp.maybe_replan(&current).unwrap();
         // Once on the proposed plan, the same profile proposes no move.
         assert!(rp.maybe_replan(&mig.plan).is_none());
+    }
+
+    #[test]
+    fn forced_plan_task_bypasses_gates_to_evacuate_a_down_device() {
+        // Interval not met, load balanced, migration gain negative:
+        // every hysteresis gate would hold — but a health-forced task
+        // must still move experts off the quarantined device.
+        let mut rp = replanner(8);
+        rp.set_down_devices(vec![0]);
+        rp.observe_loads(&[vec![10, 10, 10, 10]]);
+        let current = PlacementPlan::round_robin(4, 2);
+        let mig = rp
+            .plan_task_forced(&current)
+            .run()
+            .expect("evacuation must fire regardless of gain");
+        for e in 0..4 {
+            assert!(
+                !mig.plan.replicas(e).contains(&0),
+                "expert {e} left on the down device"
+            );
+        }
+        // The ungated path still suppresses a no-op proposal.
+        assert!(rp.plan_task_forced(&mig.plan).run().is_none());
+        // The normal (gated) task keeps holding under the same window.
+        assert!(rp.plan_task(&current).run().is_none());
     }
 
     #[test]

@@ -17,6 +17,7 @@ use anyhow::Result;
 
 use crate::cluster::sim::ClusterSim;
 use crate::coordinator::engine::{Backend, MoeEngine};
+use crate::fault::ClusterError;
 use crate::moe::exec::ForwardStats;
 use crate::obs::Obs;
 use crate::tensor::Tensor;
@@ -57,6 +58,14 @@ pub trait ServeBackend: Send {
     /// forwards stamp per-layer/per-shard records into it. Backends
     /// without instrumentation ignore it (default no-op).
     fn set_obs(&mut self, _obs: Arc<Obs>) {}
+
+    /// The typed fault behind the most recent `forward` error, if any
+    /// (DESIGN.md §16). The scheduler reads this after an `Err` to
+    /// decide whether the batch is retryable (`WorkerLost`) or terminal.
+    /// Taking clears it. Backends without fault tolerance report `None`.
+    fn take_fault(&mut self) -> Option<ClusterError> {
+        None
+    }
 }
 
 impl ServeBackend for MoeEngine {
@@ -99,7 +108,7 @@ impl ServeBackend for ClusterSim {
     ///
     /// [`Replanner`]: crate::placement::Replanner
     fn forward(&mut self, tokens: &Tensor) -> Result<(Tensor, ForwardStats)> {
-        let (y, report) = ClusterSim::forward(self, tokens);
+        let (y, report) = ClusterSim::forward(self, tokens)?;
         self.note_batch(&report.stats);
         Ok((y, report.stats))
     }
@@ -114,6 +123,10 @@ impl ServeBackend for ClusterSim {
 
     fn set_obs(&mut self, obs: Arc<Obs>) {
         ClusterSim::set_obs(self, obs);
+    }
+
+    fn take_fault(&mut self) -> Option<ClusterError> {
+        ClusterSim::take_fault(self)
     }
 }
 

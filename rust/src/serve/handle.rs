@@ -21,6 +21,11 @@ pub enum RequestError {
     DeadlineExpired,
     /// The backend failed the batch this request rode in.
     Backend(String),
+    /// A cluster worker died mid-batch and recovery could not complete
+    /// (no surviving replica to redispatch to, or the redispatch target
+    /// died too). The service retries the batch once before surfacing
+    /// this (DESIGN.md §16).
+    WorkerLost { device: usize, layer: usize },
     /// The service stopped without completing the request (should not
     /// happen under graceful shutdown — drain completes everything).
     ServiceStopped,
@@ -36,6 +41,11 @@ impl std::fmt::Display for RequestError {
                 write!(f, "queue deadline expired before execution")
             }
             RequestError::Backend(e) => write!(f, "backend error: {e}"),
+            RequestError::WorkerLost { device, layer } => write!(
+                f,
+                "worker lost on device {device} layer {layer} \
+                 (retry exhausted)"
+            ),
             RequestError::ServiceStopped => {
                 write!(f, "service stopped before completion")
             }

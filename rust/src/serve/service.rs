@@ -38,6 +38,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::{Batch, Batcher, BatcherConfig, Request};
 use crate::coordinator::metrics::{LatencyStats, ServingMetrics};
+use crate::fault::ClusterError;
 use crate::obs::{EventKind, Obs};
 use crate::tensor::Tensor;
 
@@ -222,6 +223,10 @@ struct Inflight {
     slot: Arc<Slot>,
     submitted: Instant,
     deadline: Option<Instant>,
+    /// Times this request's batch was lost to a worker fault and the
+    /// request was resubmitted (DESIGN.md §16). At most 1: a second
+    /// `WorkerLost` fails the handle instead of retrying forever.
+    retries: u8,
 }
 
 /// Earliest deadline among requests sitting in the batcher (entries are
@@ -326,6 +331,7 @@ fn transfer_admissions(
                     slot: p.slot,
                     submitted: p.submitted,
                     deadline: p.deadline,
+                    retries: 0,
                 },
             );
             batcher.push(Request {
@@ -394,11 +400,19 @@ fn sweep_parked(
 }
 
 /// Execute one batch on the backend and complete its member handles.
+///
+/// Fault containment (DESIGN.md §16): a backend failure fails only this
+/// batch's handles, never the scheduler. When the typed fault behind the
+/// error is [`ClusterError::WorkerLost`], each member request is
+/// resubmitted through `batcher` exactly once (its admission slot is
+/// re-taken); a request whose retry also hits a lost worker resolves
+/// [`RequestError::WorkerLost`].
 fn execute_batch(
     shared: &Shared,
     backend: &mut dyn ServeBackend,
     batch: &Batch,
     inflight: &mut HashMap<u64, Inflight>,
+    batcher: &mut Batcher,
 ) {
     let obs = shared.cfg.obs.as_deref();
     if let Some(o) = obs {
@@ -470,8 +484,14 @@ fn execute_batch(
     }
     let mut cancelled = 0u64;
     let mut failed = 0u64;
+    let mut retried = 0u64;
+    let mut degraded = 0u64;
     match result {
         Ok((y, stats)) => {
+            // Requests in a batch that lost all replicas of an expert
+            // rode degraded (copy-expert) outputs — a request-level
+            // quality signal operators alert on (DESIGN.md §16).
+            let batch_degraded = stats.degraded_tokens > 0;
             let done = Instant::now();
             for ((id, span), (sid, out)) in
                 batch.spans.iter().zip(batch.scatter(&y))
@@ -513,6 +533,9 @@ fn execute_batch(
                         service_ns,
                     });
                 }
+                if batch_degraded {
+                    degraded += 1;
+                }
                 shared
                     .latency
                     .lock()
@@ -525,27 +548,89 @@ fn execute_batch(
             }
         }
         Err(e) => {
-            let msg = format!("{e:#}");
-            for (id, _) in &batch.spans {
-                if let Some(meta) = inflight.remove(id) {
-                    meta.slot
-                        .fulfill(Err(RequestError::Backend(msg.clone())));
-                    failed += 1;
-                    if let Some(o) = obs {
-                        o.trace.push(EventKind::Fail { req: *id });
+            let fault = backend.take_fault();
+            if let Some(ClusterError::WorkerLost { device, layer }) = fault
+            {
+                // Resubmit-once: the input rows are still in
+                // `batch.tokens` — slice them back out per span and
+                // requeue. The request keeps its id, slot, submit time
+                // and deadline; only `retries` advances.
+                let mut requeued = 0usize;
+                for ((id, _), (sid, tokens)) in
+                    batch.spans.iter().zip(batch.scatter(&batch.tokens))
+                {
+                    debug_assert_eq!(*id, sid);
+                    let meta = match inflight.get_mut(id) {
+                        Some(m) => m,
+                        None => continue,
+                    };
+                    if meta.slot.is_cancelled() {
+                        let meta = inflight.remove(id).unwrap();
+                        meta.slot.fulfill(Err(RequestError::Cancelled));
+                        cancelled += 1;
+                        if let Some(o) = obs {
+                            o.trace.push(EventKind::Cancel { req: *id });
+                        }
+                    } else if meta.retries == 0 {
+                        meta.retries = 1;
+                        batcher.push(Request {
+                            id: *id,
+                            tokens,
+                            task: None,
+                        });
+                        requeued += 1;
+                        retried += 1;
+                    } else {
+                        let meta = inflight.remove(id).unwrap();
+                        meta.slot.fulfill(Err(
+                            RequestError::WorkerLost { device, layer },
+                        ));
+                        failed += 1;
+                        if let Some(o) = obs {
+                            o.trace.push(EventKind::Fail { req: *id });
+                        }
+                    }
+                }
+                if requeued > 0 {
+                    // Re-take the admission slots released above: the
+                    // requeued requests are in flight again.
+                    let mut inner = shared.inner.lock().unwrap();
+                    inner.pending_requests += requeued;
+                    inner.batcher_tokens = batcher.queued_tokens();
+                }
+            } else {
+                let msg = format!("{e:#}");
+                for (id, _) in &batch.spans {
+                    if let Some(meta) = inflight.remove(id) {
+                        meta.slot.fulfill(Err(RequestError::Backend(
+                            msg.clone(),
+                        )));
+                        failed += 1;
+                        if let Some(o) = obs {
+                            o.trace.push(EventKind::Fail { req: *id });
+                        }
                     }
                 }
             }
         }
     }
-    if cancelled > 0 || failed > 0 {
+    if cancelled > 0 || failed > 0 || retried > 0 || degraded > 0 {
         let mut m = shared.metrics.lock().unwrap();
         m.cancelled += cancelled;
         m.failed += failed;
+        m.retried += retried;
+        m.degraded += degraded;
         if let Some(o) = obs {
             o.registry().add(o.h.cancelled, cancelled);
             o.registry().add(o.h.failed, failed);
+            o.registry().add(o.h.retried, retried);
+            o.registry().add(o.h.degraded_requests, degraded);
         }
+    }
+    if retried > 0 || degraded > 0 {
+        let mut l = shared.latency.lock().unwrap();
+        l.retried += retried;
+        l.degraded += degraded;
     }
 }
 
@@ -682,7 +767,7 @@ fn scheduler_run(
                 let mut inner = shared.inner.lock().unwrap();
                 inner.batcher_tokens = batcher.queued_tokens();
             }
-            execute_batch(shared, backend, &batch, inflight);
+            execute_batch(shared, backend, &batch, inflight, batcher);
         }
     }
 }

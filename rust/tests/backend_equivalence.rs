@@ -120,7 +120,8 @@ fn check_preset(preset: &'static str) {
             // Cluster simulator (same weight seed -> same weights).
             let mut sim =
                 ClusterSim::new(cfg.clone(), Topology::new(3), wseed);
-            let (y_sim, rep) = sim.forward(&x);
+            let (y_sim, rep) =
+                sim.forward(&x).map_err(|e| e.to_string())?;
             if !y_sim.approx_eq(&y_oracle, 1e-5, 1e-5) {
                 return Err("cluster sim diverges from oracle".into());
             }

@@ -1,0 +1,449 @@
+//! Fault-tolerance acceptance tests (ISSUE 9 / DESIGN.md §16):
+//!
+//! (a) a worker death mid-batch recovers **bitwise-identical** outputs
+//!     via a surviving replica (the canonical combine makes redispatch
+//!     invisible);
+//! (b) losing every replica of an expert degrades its tokens to
+//!     copy-expert semantics, with `degraded_tokens` reconciling `==`
+//!     across `ForwardStats`, the registry and the trace summary;
+//! (c) a quarantined device is excluded from the next accepted
+//!     placement (the health-dirty boundary forces a replan past the
+//!     hysteresis gates);
+//! (d) rejoin restores full-precision outputs after a degrade-only
+//!     loss;
+//! (e) at the serve layer a mid-batch fault fails only the affected
+//!     handles — resubmit-once first, typed `WorkerLost` on the second
+//!     loss — while later requests keep succeeding;
+//! (f) with an injector installed but zero faults scheduled, the
+//!     steady-state loop stays zero-allocation and zero-spawn (the
+//!     fault-aware fast path costs one branch, not a heap).
+//!
+//! Tests share process-global counters (`thread_spawns`,
+//! `obs::alloc_count`) and worker threads that panic on purpose, so
+//! every test serialises on one mutex — the pinned-flat windows in (f)
+//! must not race another test's worker spawns or obs traffic.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use moepp::cluster::sim::ClusterSim;
+use moepp::cluster::topology::Topology;
+use moepp::config::MoeConfig;
+use moepp::coordinator::batcher::BatcherConfig;
+use moepp::fault::{
+    ClusterError, FaultKind, FaultPlan, FaultSpec,
+};
+use moepp::obs::{self, Obs, TraceSummary};
+use moepp::placement::{
+    CostModel, PlacementPlan, Planner, ReplanConfig, Replanner, Strategy,
+};
+use moepp::serve::{MoeService, RequestError, ServiceConfig};
+use moepp::tensor::Tensor;
+use moepp::util::pool::thread_spawns;
+use moepp::util::rng::Rng;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    // A worker panicked on purpose while a previous test held the lock;
+    // the guard state is irrelevant to the next test.
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Every FFN expert replicated on every device: any single-device loss
+/// leaves a survivor, so recovery never needs to degrade.
+fn everywhere(n_ffn: usize, devices: usize) -> PlacementPlan {
+    PlacementPlan::from_replicas(
+        (0..n_ffn).map(|_| (0..devices).collect()).collect(),
+        devices,
+    )
+    .unwrap()
+}
+
+fn spec(
+    batch: u64,
+    layer: usize,
+    device: usize,
+    kind: FaultKind,
+) -> FaultSpec {
+    FaultSpec { batch, layer, device, kind }
+}
+
+fn assert_bitwise(a: &Tensor, b: &Tensor, what: &str) {
+    assert_eq!(a.shape, b.shape, "{what}: shape mismatch");
+    for (i, (x, y)) in a.data.iter().zip(b.data.iter()).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: element {i} differs ({x} vs {y})"
+        );
+    }
+}
+
+#[test]
+fn worker_death_mid_batch_recovers_bitwise_via_surviving_replica() {
+    let _guard = serial();
+    let cfg = MoeConfig::preset("test");
+    let mut rng = Rng::new(21);
+    let x = Tensor::randn(&mut rng, &[48, cfg.d_model], 1.0);
+
+    // Fault-free reference: outputs are placement-independent, so the
+    // plain round-robin cluster is the bitwise oracle for any plan.
+    let mut clean = ClusterSim::new(cfg.clone(), Topology::new(3), 11);
+    let y_clean = clean.forward(&x).unwrap().0;
+
+    let obs = Obs::shared();
+    obs.trace.set_enabled(true);
+    let mut sim = ClusterSim::new(
+        cfg.clone(),
+        Topology::new(3)
+            .with_placement(everywhere(cfg.n_ffn_experts, 3)),
+        11,
+    )
+    .with_faults(FaultPlan::new(vec![
+        spec(0, 0, 1, FaultKind::Panic),
+        spec(1, 1, 2, FaultKind::Hang),
+    ]));
+    sim.set_obs(obs.clone());
+
+    // Batch 0: device 1 panics at layer 0; its (expert, row-range)
+    // units redispatch to surviving replicas — bitwise recovery.
+    let (y0, rep0) = sim.forward(&x).unwrap();
+    assert_bitwise(&y0, &y_clean, "panic recovery");
+    assert_eq!(rep0.stats.degraded_tokens, 0);
+    assert!(sim.health().is_down(1), "panicked device quarantined");
+
+    // Batch 1: device 2 hangs at layer 1 — detected, recovered, still
+    // bitwise (device 1 already masked out of the splits).
+    let (y1, rep1) = sim.forward(&x).unwrap();
+    assert_bitwise(&y1, &y_clean, "hang recovery");
+    assert_eq!(rep1.stats.degraded_tokens, 0);
+    assert!(sim.health().is_down(2));
+    assert_eq!(sim.health().n_down(), 2);
+
+    // The obs trail saw both faults, both losses, and real redispatch
+    // work — and nothing degraded.
+    let r = obs.registry();
+    assert_eq!(r.counter_value(obs.h.faults), 2);
+    assert!(r.counter_value(obs.h.redispatches) > 0);
+    assert_eq!(r.counter_value(obs.h.degraded_tokens), 0);
+    let t = TraceSummary::from_events(&obs.trace.snapshot());
+    assert_eq!(t.faults, 2);
+    assert_eq!(t.worker_losses, 2);
+    assert_eq!(t.redispatches, r.counter_value(obs.h.redispatches));
+    assert_eq!(t.degraded_tokens, 0);
+}
+
+#[test]
+fn no_replica_loss_degrades_and_reconciles_degraded_tokens() {
+    let _guard = serial();
+    // Default round-robin on 2 devices: experts 1 and 3 live only on
+    // device 1 — killing it leaves them replica-less, so their tokens
+    // fall back to copy-expert semantics instead of failing the batch.
+    let cfg = MoeConfig::preset("test");
+    let mut rng = Rng::new(5);
+    let x = Tensor::randn(&mut rng, &[40, cfg.d_model], 1.0);
+    let mut clean = ClusterSim::new(cfg.clone(), Topology::new(2), 7);
+    let y_clean = clean.forward(&x).unwrap().0;
+
+    let obs = Obs::shared();
+    obs.trace.set_enabled(true);
+    let mut sim = ClusterSim::new(cfg.clone(), Topology::new(2), 7)
+        .with_faults(FaultPlan::new(vec![spec(
+            0,
+            0,
+            1,
+            FaultKind::Panic,
+        )]));
+    sim.set_obs(obs.clone());
+    let (y, rep) = sim.forward(&x).unwrap();
+
+    // Degraded, not failed: the batch completed, ZC experts untouched,
+    // and the output differs from full precision.
+    assert!(rep.stats.degraded_tokens > 0);
+    assert_ne!(y.data, y_clean.data, "degrade must be observable");
+
+    // Exact reconciliation: ForwardStats == registry == trace summary.
+    let from_stats = rep.stats.degraded_tokens;
+    let from_registry =
+        obs.registry().counter_value(obs.h.degraded_tokens);
+    let t = TraceSummary::from_events(&obs.trace.snapshot());
+    assert_eq!(from_stats, from_registry);
+    assert_eq!(from_stats, t.degraded_tokens);
+    assert_eq!(
+        obs.registry().counter_by_name("moepp_degraded_tokens_total"),
+        Some(from_stats)
+    );
+}
+
+#[test]
+fn quarantined_device_is_excluded_from_next_accepted_plan() {
+    let _guard = serial();
+    let cfg = MoeConfig::preset("test");
+    let replanner = Replanner::new(
+        Planner::new(CostModel::from_config(&cfg)),
+        ReplanConfig {
+            strategy: Strategy::Refined,
+            min_interval_batches: 2,
+            min_gain_frac: 0.01,
+            payback_batches: 1e9,
+            ..ReplanConfig::default()
+        },
+        cfg.n_ffn_experts,
+    );
+    let mut sim = ClusterSim::new(cfg.clone(), Topology::new(2), 3)
+        .with_faults(FaultPlan::new(vec![spec(
+            0,
+            0,
+            1,
+            FaultKind::Panic,
+        )]))
+        .with_replanner(replanner);
+
+    let mut rng = Rng::new(9);
+    let x = Tensor::randn(&mut rng, &[32, cfg.d_model], 1.0);
+    // Batch 0 loses device 1; the health-dirty boundary submits a
+    // forced plan task (bypassing the interval/gain gates) and a later
+    // boundary applies it. Drive a handful of batches and demand the
+    // accepted plan has evacuated the dead device.
+    let mut evacuated = false;
+    for _ in 0..20 {
+        let (_, rep) = sim.forward(&x).unwrap();
+        sim.note_batch(&rep.stats);
+        let plan = sim.placement();
+        if (0..cfg.n_ffn_experts)
+            .all(|e| !plan.replicas(e).contains(&1))
+        {
+            evacuated = true;
+            break;
+        }
+    }
+    assert!(sim.health().is_down(1));
+    assert!(
+        evacuated,
+        "no accepted plan evacuated the quarantined device within 20 \
+         batches: {:?}",
+        sim.placement().owners()
+    );
+    assert!(sim.replan_count() >= 1);
+}
+
+#[test]
+fn rejoin_restores_full_precision_outputs() {
+    let _guard = serial();
+    let cfg = MoeConfig::preset("test");
+    let mut rng = Rng::new(13);
+    let x = Tensor::randn(&mut rng, &[40, cfg.d_model], 1.0);
+    let mut clean = ClusterSim::new(cfg.clone(), Topology::new(2), 17);
+    let y_clean = clean.forward(&x).unwrap().0;
+
+    // Permanent device loss: the worker exits AND the injector refuses
+    // respawn until the operator revives the hardware.
+    let mut sim = ClusterSim::new(cfg.clone(), Topology::new(2), 17)
+        .with_faults(FaultPlan::new(vec![spec(
+            0,
+            0,
+            1,
+            FaultKind::DeviceLoss,
+        )]));
+    let (y_deg, rep) = sim.forward(&x).unwrap();
+    assert!(rep.stats.degraded_tokens > 0);
+    assert_ne!(y_deg.data, y_clean.data);
+    assert!(sim.health().is_down(1));
+
+    // Rejoin is refused while the loss is permanent.
+    assert_eq!(
+        sim.rejoin(1),
+        Err(ClusterError::RespawnFailed { device: 1, layer: 0 })
+    );
+    // Revive + rejoin: the placement never changed (degrade-only loss),
+    // so rejoin alone restores bitwise full-precision outputs.
+    sim.injector().unwrap().revive(1);
+    sim.rejoin(1).unwrap();
+    assert!(!sim.health().is_down(1));
+    let (y_back, rep) = sim.forward(&x).unwrap();
+    assert_eq!(rep.stats.degraded_tokens, 0);
+    assert_bitwise(&y_back, &y_clean, "post-rejoin forward");
+}
+
+#[test]
+fn serve_fault_fails_only_affected_handles_and_later_requests_succeed() {
+    let _guard = serial();
+    // Five devices, every expert everywhere. Devices 2 and 4 run at
+    // ~1e-3 speed: their speed weight is 1 against 1024 per fast
+    // device, so the weighted split hands them zero rows — they sit
+    // idle (no work message, fault dormant) until recovery picks them
+    // as the first healthy replica and their scheduled panic fires on
+    // the redispatched unit itself, exhausting the in-batch recovery:
+    //   batch 0 (request A): devices 0+1 panic -> redispatch to 2 ->
+    //     2 panics -> WorkerLost -> the service resubmits A once;
+    //   batch 1 (A's retry): device 3 panics -> redispatch to 4 ->
+    //     4 panics -> WorkerLost again -> A's handle fails, typed;
+    //   batches 2+ (B, C): every device is down -> fully degraded
+    //     copy-expert outputs -> the handles still succeed.
+    let cfg = MoeConfig::preset("test");
+    let topo = Topology::new(5)
+        .with_device_speeds(vec![1.0, 1.0, 1e-3, 1.0, 1e-3])
+        .with_placement(everywhere(cfg.n_ffn_experts, 5));
+    let sim = ClusterSim::new(cfg.clone(), topo, 23).with_faults(
+        FaultPlan::new(vec![
+            spec(0, 0, 0, FaultKind::Panic),
+            spec(0, 0, 1, FaultKind::Panic),
+            spec(0, 0, 2, FaultKind::Panic),
+            spec(1, 0, 3, FaultKind::Panic),
+            spec(1, 0, 4, FaultKind::Panic),
+        ]),
+    );
+    let obs = Obs::shared();
+    obs.trace.set_enabled(true);
+    let service = MoeService::start(
+        sim,
+        ServiceConfig {
+            batcher: BatcherConfig {
+                max_tokens: 64,
+                max_wait: Duration::from_millis(1),
+            },
+            max_queued_tokens: 4096,
+            max_pending_requests: 64,
+            default_deadline: None,
+            obs: Some(obs.clone()),
+        },
+    );
+    let mut rng = Rng::new(2);
+    let xa = Tensor::randn(&mut rng, &[32, cfg.d_model], 1.0);
+    let err = service
+        .submit_tokens(xa)
+        .unwrap()
+        .wait()
+        .expect_err("both attempts lose a worker: the handle must fail");
+    assert_eq!(err, RequestError::WorkerLost { device: 4, layer: 0 });
+
+    // Later requests ride degraded outputs but succeed — the scheduler
+    // survived the faults and only A's handle was failed.
+    for _ in 0..2 {
+        let xb = Tensor::randn(&mut rng, &[24, cfg.d_model], 1.0);
+        let resp = service.submit_tokens(xb).unwrap().wait().unwrap();
+        assert_eq!(resp.output.shape, vec![24, cfg.d_model]);
+    }
+
+    let from_reg = service.metrics_from_registry().unwrap();
+    let m = service.shutdown();
+    assert_eq!(m.requests, 3);
+    assert_eq!(m.batches, 4, "A + A's retry + B + C");
+    assert_eq!(m.failed, 1, "only A failed");
+    assert_eq!(m.retried, 1, "A was resubmitted exactly once");
+    assert_eq!(m.degraded, 2, "B and C rode degraded outputs");
+    // Single-owner counter discipline: registry rebuild reconciles ==.
+    assert_eq!(from_reg.failed, m.failed);
+    assert_eq!(from_reg.retried, m.retried);
+    assert_eq!(from_reg.degraded, m.degraded);
+    assert!(m.report().contains("retried=1"));
+    // The trace saw every scheduled fault and every fast-path loss.
+    let t = TraceSummary::from_events(&obs.trace.snapshot());
+    assert_eq!(t.faults, 5);
+    assert_eq!(t.worker_losses, 3, "devices 0, 1 and 3 died in-batch");
+    assert_eq!(t.fails, 1);
+}
+
+#[test]
+fn zero_fault_steady_state_stays_alloc_and_spawn_free() {
+    let _guard = serial();
+    // An installed injector with an empty schedule is the fault-aware
+    // fast path: one Option branch per message, recv_timeout instead of
+    // recv — and exactly the PR 4/5 steady-state guarantees.
+    let cfg = MoeConfig::preset("test");
+    let mut rng = Rng::new(41);
+    let x = Tensor::randn(&mut rng, &[48, cfg.d_model], 1.0);
+
+    // Direct-sim half: bitwise-neutral install, arena pinned flat,
+    // no worker ever respawned.
+    let mut plain = ClusterSim::new(cfg.clone(), Topology::new(3), 11);
+    let mut sim = ClusterSim::new(
+        cfg.clone(),
+        Topology::new(3)
+            .with_placement(everywhere(cfg.n_ffn_experts, 3)),
+        11,
+    )
+    .with_faults(FaultPlan::new(Vec::new()));
+    let y_plain = plain.forward(&x).unwrap().0;
+    let y_inj = sim.forward(&x).unwrap().0;
+    assert_bitwise(&y_inj, &y_plain, "injector install");
+    for _ in 0..2 {
+        sim.forward(&x).unwrap(); // warm the arena at the largest size
+    }
+    let growths = sim.arena_growths();
+    let workers = sim.worker_thread_ids();
+    for i in 0..24 {
+        let t = 16 + (i % 3) * 16; // replay below the warmed size
+        let xs = Tensor::randn(&mut rng, &[t, cfg.d_model], 1.0);
+        sim.forward(&xs).unwrap();
+    }
+    assert_eq!(
+        sim.arena_growths(),
+        growths,
+        "fault-aware steady-state forwards grew the arena"
+    );
+    assert_eq!(
+        sim.worker_thread_ids(),
+        workers,
+        "no-fault steady state must never respawn a worker"
+    );
+    assert!(!sim.health().any_down());
+
+    // Serve half: the scheduler loop over the fault-aware cluster
+    // backend, obs installed and tracing — thread spawns and obs
+    // allocations pinned flat across 24 replayed requests.
+    let obs_serve = Obs::shared();
+    obs_serve.trace.set_enabled(true);
+    let backend = ClusterSim::new(
+        cfg.clone(),
+        Topology::new(3)
+            .with_placement(everywhere(cfg.n_ffn_experts, 3)),
+        11,
+    )
+    .with_faults(FaultPlan::new(Vec::new()));
+    let service = MoeService::start(
+        backend,
+        ServiceConfig {
+            batcher: BatcherConfig {
+                max_tokens: 64,
+                max_wait: Duration::from_millis(1),
+            },
+            max_queued_tokens: 4096,
+            max_pending_requests: 64,
+            default_deadline: None,
+            obs: Some(obs_serve.clone()),
+        },
+    );
+    let drive = |seed: u64, n: usize| {
+        let mut rng = Rng::new(seed);
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let t = 16 + (i % 3) * 16;
+                let xs = Tensor::randn(&mut rng, &[t, cfg.d_model], 1.0);
+                service.submit_tokens(xs).unwrap()
+            })
+            .collect();
+        for h in handles {
+            h.wait().unwrap();
+        }
+    };
+    drive(2, 4); // warmup: arena + any lazily-spawned pool worker
+    let warmed_spawns = thread_spawns();
+    let warmed_allocs = obs::alloc_count();
+    drive(3, 24);
+    assert_eq!(
+        thread_spawns(),
+        warmed_spawns,
+        "fault-aware steady-state serving spawned threads"
+    );
+    assert_eq!(
+        obs::alloc_count(),
+        warmed_allocs,
+        "obs allocated during fault-aware steady-state serving"
+    );
+    let m = service.shutdown();
+    assert_eq!(m.requests, 28);
+    assert_eq!(m.retried, 0);
+    assert_eq!(m.degraded, 0);
+}

@@ -36,7 +36,7 @@ fn profile_of(
 ) -> LoadProfile {
     let mut profile = LoadProfile::new(cfg.n_ffn_experts);
     for b in batches {
-        let (_, rep) = sim.forward(b);
+        let (_, rep) = sim.forward(b).unwrap();
         profile.observe_stats(&rep.stats, cfg);
     }
     profile
@@ -57,8 +57,8 @@ fn default_round_robin_plan_is_bitwise_identical_to_unplanned() {
     let mut rng = Rng::new(21);
     for t in [5usize, 32, 48] {
         let x = Tensor::randn(&mut rng, &[t, cfg.d_model], 1.0);
-        let (ya, ra) = plain.forward(&x);
-        let (yb, rb) = planned.forward(&x);
+        let (ya, ra) = plain.forward(&x).unwrap();
+        let (yb, rb) = planned.forward(&x).unwrap();
         assert_eq!(ya.data, yb.data, "outputs diverged at T={t}");
         assert_eq!(ra.total_comm_bytes(), rb.total_comm_bytes());
         for (la, lb) in ra.layers.iter().zip(&rb.layers) {
@@ -82,7 +82,7 @@ fn any_placement_leaves_model_outputs_bitwise_identical() {
     let x = Tensor::randn(&mut rng, &[40, cfg.d_model], 1.0);
     let baseline = {
         let mut sim = ClusterSim::new(cfg.clone(), Topology::new(2), 9);
-        sim.forward(&x)
+        sim.forward(&x).unwrap()
     };
     let plans = [
         PlacementPlan::from_owner(vec![1, 0, 1, 0], 2).unwrap(),
@@ -96,7 +96,7 @@ fn any_placement_leaves_model_outputs_bitwise_identical() {
             Topology::new(2).with_placement(plan.clone()),
             9,
         );
-        let (y, rep) = sim.forward(&x);
+        let (y, rep) = sim.forward(&x).unwrap();
         assert_eq!(
             baseline.0.data, y.data,
             "plan {:?} changed model outputs",
@@ -170,8 +170,8 @@ fn refined_plan_strictly_beats_round_robin_on_skewed_routing() {
     let (mut mk_rr, mut mk_ref) = (0.0, 0.0);
     let (mut cv_rr, mut cv_ref) = (0.0, 0.0);
     for b in &batches {
-        let (y_rr, rep_rr) = sim_rr.forward(b);
-        let (y_ref, rep_ref) = sim_ref.forward(b);
+        let (y_rr, rep_rr) = sim_rr.forward(b).unwrap();
+        let (y_ref, rep_ref) = sim_ref.forward(b).unwrap();
         // Placement may never change math.
         assert_eq!(y_rr.data, y_ref.data);
         mk_rr += rep_rr.modeled_makespan(c);
@@ -204,7 +204,7 @@ fn replicated_plans_are_bitwise_identical_across_replica_counts() {
         let baseline = {
             let mut sim =
                 ClusterSim::new(cfg.clone(), Topology::new(n_dev), 13);
-            sim.forward(&x).0
+            sim.forward(&x).unwrap().0
         };
         let plans = [
             PlacementPlan::from_owner(vec![0, 1, 2, 3], 4).unwrap(),
@@ -227,7 +227,7 @@ fn replicated_plans_are_bitwise_identical_across_replica_counts() {
                 Topology::new(n_dev).with_placement(plan.clone()),
                 13,
             );
-            let (y, rep) = sim.forward(&x);
+            let (y, rep) = sim.forward(&x).unwrap();
             assert_eq!(
                 baseline.data, y.data,
                 "replicated plan changed outputs at T={t}"
@@ -300,9 +300,9 @@ fn replicated_plan_strictly_beats_best_single_owner_on_skewed_routing() {
     let c = cost.compute_s_per_assignment;
     let (mut mk_ref, mut mk_rep) = (0.0, 0.0);
     for b in &batches {
-        let (y_plain, _) = sim_plain.forward(b);
-        let (y_ref, rep_ref) = sim_ref.forward(b);
-        let (y_rep, rep_rep) = sim_rep.forward(b);
+        let (y_plain, _) = sim_plain.forward(b).unwrap();
+        let (y_ref, rep_ref) = sim_ref.forward(b).unwrap();
+        let (y_rep, rep_rep) = sim_rep.forward(b).unwrap();
         // Load-split routing may never change math: bitwise equal to
         // the unplanned cluster (and hence to every other plan).
         assert_eq!(y_plain.data, y_rep.data);
@@ -327,7 +327,7 @@ fn apply_placement_respawns_only_affected_devices() {
     let mut sim = ClusterSim::new(cfg.clone(), Topology::new(3), 11);
     let mut rng = Rng::new(5);
     let x = Tensor::randn(&mut rng, &[40, cfg.d_model], 1.0);
-    let (y_before, _) = sim.forward(&x);
+    let (y_before, _) = sim.forward(&x).unwrap();
     let ids_before = sim.worker_thread_ids();
     // Round-robin owners are [0, 1, 2, 0]; move only expert 1 from
     // device 1 to device 0 — device 2 is untouched.
@@ -352,7 +352,7 @@ fn apply_placement_respawns_only_affected_devices() {
         );
     }
     // Migration never changes math.
-    let (y_after, _) = sim.forward(&x);
+    let (y_after, _) = sim.forward(&x).unwrap();
     assert_eq!(y_before.data, y_after.data);
     // Re-applying the same plan is a no-op: every worker survives.
     assert_eq!(sim.apply_placement(&plan).unwrap(), 0);
@@ -392,7 +392,7 @@ fn replanning_runs_off_thread_and_applies_at_a_later_boundary() {
         let mut submitted_at = None;
         for (i, b) in batches.iter().enumerate() {
             let placement_before = sim.placement();
-            let (_, rep) = sim.forward(b);
+            let (_, rep) = sim.forward(b).unwrap();
             sim.note_batch(&rep.stats);
             if submitted_at.is_none() && sim.replan_in_flight() {
                 submitted_at = Some(i);
@@ -436,7 +436,7 @@ fn drive_direct(
             .with_replanner(test_replanner(cfg));
     let mut outs = Vec::new();
     for b in batches {
-        let (y, rep) = sim.forward(b);
+        let (y, rep) = sim.forward(b).unwrap();
         sim.note_batch(&rep.stats);
         outs.push(y);
     }
@@ -468,7 +468,7 @@ fn online_replanning_migrates_between_batches_and_reports_in_metrics() {
     let mut plain =
         ClusterSim::new(cfg.clone(), Topology::new(n_dev), seed);
     for (b, y_direct) in batches.iter().zip(&direct_outs) {
-        let (y, _) = plain.forward(b);
+        let (y, _) = plain.forward(b).unwrap();
         assert_eq!(y.data, y_direct.data);
     }
 
