@@ -49,11 +49,24 @@ run cargo run --release --quiet -- obs summarize "$OBS_DIR/trace.jsonl"
 run cargo run --release --quiet -- obs prom-check "$OBS_DIR/metrics.prom"
 
 # Placement smoke: capture a skewed profile, plan rr/lpt/refined/
-# replicated, score and re-simulate each (also writes
+# replicated/compressed, score and re-simulate each (also writes
 # BENCH_placement.json). --replicas 2 exercises the multi-replica
-# load-split path end to end.
+# load-split path end to end; --precision mixed with a per-device
+# --budget-mib runs the mixed-precision cluster and the byte-exact
+# compressed-replica accounting end to end (DESIGN.md §17).
 run cargo run --release --quiet -- placement --devices 4 --profile skewed \
     --tokens 128 --batches 2 --replicas 2
+# 9 MiB/device fits the 4-expert round-robin base (~8.25 MiB f32) plus
+# one ~0.53 MiB int8 replica, but no ~2.06 MiB f32 replica — exactly the
+# regime where only the compressed strategy can replicate a hot expert.
+run cargo run --release --quiet -- placement --devices 2 --profile skewed \
+    --tokens 96 --batches 2 --replicas 2 --precision mixed --budget-mib 9
+
+# Quantized-backend smoke (DESIGN.md §17): f32 vs all-int8 throughput
+# and the oracle-vs-quantized error block (writes BENCH_quant.json; the
+# bench itself exits nonzero if the drift escapes the tolerance gates).
+run cargo run --release --quiet -- bench quant --presets sm-8e \
+    --workers 1,2 --tokens 96 --batches 2
 
 # Expert-forward smoke: batch vs shard partitioning AND pool vs scoped
 # executors on uniform + skewed routing (writes BENCH_forward.json — the

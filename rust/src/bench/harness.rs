@@ -11,7 +11,7 @@ use anyhow::Result;
 
 use crate::cluster::sim::{ClusterSim, SimReport};
 use crate::cluster::topology::Topology;
-use crate::config::MoeConfig;
+use crate::config::{MoeConfig, Precision};
 use crate::coordinator::engine::{ExecutorKind, MoeEngine, Partition};
 use crate::moe::exec::AssignmentCounts;
 use crate::placement::{
@@ -23,6 +23,8 @@ use crate::serve::{
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+
+use super::quality::QuantErrorStats;
 
 #[derive(Clone, Debug)]
 pub struct BenchResult {
@@ -98,6 +100,33 @@ pub fn write_bench_json(name: &str, payload: &Json) -> Result<String> {
     Ok(path)
 }
 
+// ----------------------------------------------------------- precision
+
+/// Expand a `--precision` CLI spec into the stack-wide per-expert map
+/// the engines and plans consume (DESIGN.md §17): `"f32"` and `"int8"`
+/// set every FFN expert uniformly; `"mixed"` demotes every odd-indexed
+/// expert to int8 — a deterministic half-and-half split that exercises
+/// the mixed-precision backend without per-expert flags.
+pub fn precision_map(spec: &str, n_ffn: usize) -> Result<Vec<Precision>> {
+    match spec {
+        "mixed" => Ok((0..n_ffn)
+            .map(|e| {
+                if e % 2 == 1 {
+                    Precision::Int8
+                } else {
+                    Precision::F32
+                }
+            })
+            .collect()),
+        one => match Precision::parse(one) {
+            Some(p) => Ok(vec![p; n_ffn]),
+            None => anyhow::bail!(
+                "--precision expects f32|int8|mixed, got '{one}'"
+            ),
+        },
+    }
+}
+
 // ------------------------------------------------------ expert forward
 
 /// One configuration's row in the expert-forward sweep.
@@ -132,10 +161,15 @@ pub struct ForwardSweepRow {
 /// seed), so the shard-vs-batch and pool-vs-scoped ratios isolate one
 /// axis each — outputs are bitwise-identical across every cell by the
 /// §7/§11/§12 equivalence contract, only the schedule changes.
-/// `obs`: optional observability bundle (DESIGN.md §15) installed on
-/// every measured engine, so `moepp bench forward --trace-out` captures
-/// the per-layer dispatch/shard trail of a real sweep. Bitwise-neutral:
-/// rows and outputs are identical with or without it.
+/// `precision`: optional `--precision f32|int8|mixed` spec expanded per
+/// preset by [`precision_map`] and installed on every measured engine;
+/// the §7/§17 equivalence contract holds per map, so outputs stay
+/// bitwise-identical across cells for any fixed map.
+/// `obs`: optional observability bundle
+/// (DESIGN.md §15) installed on every measured engine, so `moepp bench
+/// forward --trace-out` captures the per-layer dispatch/shard trail of a
+/// real sweep. Bitwise-neutral: rows and outputs are identical with or
+/// without it.
 pub fn run_forward_sweep(
     presets: &[&str],
     workers_list: &[usize],
@@ -144,6 +178,7 @@ pub fn run_forward_sweep(
     tokens: usize,
     n_batches: usize,
     seed: u64,
+    precision: Option<&str>,
     obs: Option<&std::sync::Arc<crate::obs::Obs>>,
 ) -> Result<Vec<ForwardSweepRow>> {
     anyhow::ensure!(n_batches > 0, "forward sweep needs >= 1 batch");
@@ -177,6 +212,11 @@ pub fn run_forward_sweep(
                         )
                         .with_partition(partition)
                         .with_executor(executor);
+                        if let Some(spec) = precision {
+                            engine = engine.with_precision(
+                                precision_map(spec, cfg.n_ffn_experts)?,
+                            );
+                        }
                         if let Some(o) = obs {
                             engine.set_obs(o.clone());
                         }
@@ -388,6 +428,13 @@ pub struct PlacementSweepRow {
 /// devices default to 1.0) makes the fleet heterogeneous — it reaches
 /// the cost model, the simulated workers and the modeled makespan alike,
 /// so every row is priced and simulated on the same fleet.
+///
+/// `precision` (optional `--precision f32|int8|mixed` spec, expanded by
+/// [`precision_map`]) is a stack-wide precision *floor*: every expert
+/// the spec marks int8 is demoted in every plan before simulation —
+/// experts the compressed strategy demotes on its own stay demoted too.
+/// The baseline capture runs on the same map, so all rows simulate the
+/// identical quantized stack and differ only in replica layout.
 pub fn run_placement_sweep(
     preset: &str,
     n_devices: usize,
@@ -398,6 +445,7 @@ pub fn run_placement_sweep(
     budget_bytes: Option<u64>,
     max_replicas: usize,
     device_speeds: &[f64],
+    precision: Option<&str>,
 ) -> Result<(LoadProfile, Vec<PlacementSweepRow>)> {
     anyhow::ensure!(n_batches > 0, "placement sweep needs >= 1 batch");
     anyhow::ensure!(max_replicas >= 1, "max_replicas must be >= 1");
@@ -405,6 +453,15 @@ pub fn run_placement_sweep(
         .map(|d| device_speeds.get(d).copied().unwrap_or(1.0))
         .collect();
     let cfg = MoeConfig::preset(preset);
+    let forced: Vec<usize> = match precision {
+        Some(spec) => precision_map(spec, cfg.n_ffn_experts)?
+            .iter()
+            .enumerate()
+            .filter(|(_, &p)| p == Precision::Int8)
+            .map(|(e, _)| e)
+            .collect(),
+        None => Vec::new(),
+    };
     let mut rng = Rng::new(seed ^ 0x9E37);
     let workload = if skewed {
         super::workload::skewed_batches(
@@ -420,11 +477,19 @@ pub fn run_placement_sweep(
     // the identical configuration twice).
     let mut profile = LoadProfile::new(cfg.n_ffn_experts);
     let baseline_reports: Vec<SimReport> = {
-        let mut sim = ClusterSim::new(
-            cfg.clone(),
-            Topology::new(n_devices).with_device_speeds(speeds.clone()),
-            seed,
-        );
+        let mut topo =
+            Topology::new(n_devices).with_device_speeds(speeds.clone());
+        if !forced.is_empty() {
+            let mut rr = PlacementPlan::round_robin(
+                cfg.n_ffn_experts,
+                n_devices,
+            );
+            for &e in &forced {
+                rr.set_precision(e, Precision::Int8);
+            }
+            topo = topo.with_placement(rr);
+        }
+        let mut sim = ClusterSim::new(cfg.clone(), topo, seed);
         workload
             .iter()
             .map(|b| {
@@ -448,7 +513,12 @@ pub fn run_placement_sweep(
     let mut rows = Vec::new();
     let mut simulated: Vec<(PlacementPlan, Vec<SimReport>)> = Vec::new();
     for strategy in Strategy::all() {
-        let plan = planner.plan(strategy, n_devices, &profile)?;
+        let mut plan = planner.plan(strategy, n_devices, &profile)?;
+        // The CLI precision floor: forced demotions stack on top of
+        // whatever the compressed strategy demoted on its own.
+        for &e in &forced {
+            plan.set_precision(e, Precision::Int8);
+        }
         let predicted = cost.score(&plan, &profile);
         let reports: &[SimReport] = if plan.is_round_robin() {
             &baseline_reports
@@ -567,6 +637,211 @@ pub fn placement_sweep_json(
                             (
                                 "extra_replicas",
                                 Json::num(r.extra_replicas as f64),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+// ----------------------------------------------------------- quantized
+
+/// One cell of the quantized-backend sweep.
+#[derive(Clone, Debug)]
+pub struct QuantSweepRow {
+    pub preset: String,
+    /// "f32" (full-precision backend) or "int8" ([`NativeQuant`]).
+    ///
+    /// [`NativeQuant`]: crate::moe::exec::ExpertBackend::NativeQuant
+    pub precision: String,
+    pub workers: usize,
+    /// Mean expert-forward time per batch.
+    pub expert_forward_ms: f64,
+    pub tokens_per_s: f64,
+    /// Stack-wide parameter bytes of one expert slot at this row's
+    /// precision — the placement budget currency (DESIGN.md §17).
+    pub expert_bytes: u64,
+    /// Arena growths after the measured run. Steady state allocates
+    /// nothing on the int8 path too: its quantized scratch is
+    /// arena-owned, so this should match the f32 twin's count.
+    pub arena_growths: u64,
+}
+
+/// The quantized-backend sweep behind `moepp bench quant` and
+/// `BENCH_quant.json`: per preset, the f32 stack against an all-int8
+/// twin (same weight seed, same batches) across worker counts, plus the
+/// oracle-vs-quantized error statistics measured once per preset through
+/// [`super::quality::quant_error_stats`]. Throughput rows isolate the
+/// backend axis; the error block is what the §17 tolerance gates bound.
+pub fn run_quant_sweep(
+    presets: &[&str],
+    workers_list: &[usize],
+    tokens: usize,
+    n_batches: usize,
+    seed: u64,
+) -> Result<(Vec<QuantSweepRow>, Vec<(String, QuantErrorStats)>)> {
+    anyhow::ensure!(n_batches > 0, "quant sweep needs >= 1 batch");
+    anyhow::ensure!(
+        !workers_list.is_empty(),
+        "quant sweep needs >= 1 worker count"
+    );
+    let mut rows = Vec::new();
+    let mut errors = Vec::new();
+    for preset in presets {
+        let cfg = MoeConfig::preset(preset);
+        errors.push((
+            preset.to_string(),
+            super::quality::quant_error_stats(&cfg, seed, tokens)?,
+        ));
+        let cost = CostModel::from_config(&cfg);
+        let mut rng = Rng::new(seed ^ 0x0115);
+        let batches = super::workload::hidden_batches(
+            &mut rng, n_batches, tokens, cfg.d_model,
+        );
+        for precision in [Precision::F32, Precision::Int8] {
+            for &workers in workers_list {
+                let mut engine = MoeEngine::native_with_workers(
+                    cfg.clone(),
+                    seed,
+                    workers,
+                )
+                .with_precision(vec![precision; cfg.n_ffn_experts]);
+                // Warm: arena growth and routing caches settle here.
+                let _ = engine.forward_stack(&batches[0])?;
+                let mut expert_s = 0.0;
+                for b in &batches {
+                    let (_, stats) = engine.forward_stack(b)?;
+                    expert_s += stats.expert_forward_s;
+                }
+                rows.push(QuantSweepRow {
+                    preset: preset.to_string(),
+                    precision: precision.label().to_string(),
+                    workers,
+                    expert_forward_ms: expert_s * 1e3
+                        / n_batches as f64,
+                    tokens_per_s: (tokens * n_batches) as f64
+                        / expert_s.max(1e-12),
+                    expert_bytes: cost.expert_bytes_for(precision),
+                    arena_growths: engine.arena_growths(),
+                });
+            }
+        }
+    }
+    Ok((rows, errors))
+}
+
+/// Int8-over-f32 throughput ratio for a row's (preset, workers) cell,
+/// when both precisions were measured. `None` for f32 rows.
+fn quant_speedup(rows: &[QuantSweepRow], r: &QuantSweepRow)
+    -> Option<f64> {
+    if r.precision == "f32" {
+        return None;
+    }
+    rows.iter()
+        .find(|b| {
+            b.precision == "f32"
+                && b.preset == r.preset
+                && b.workers == r.workers
+        })
+        .map(|b| r.tokens_per_s / b.tokens_per_s.max(1e-12))
+}
+
+pub fn render_quant_sweep(
+    rows: &[QuantSweepRow],
+    errors: &[(String, QuantErrorStats)],
+) -> String {
+    let mut s = format!(
+        "{:<8} {:<5} {:>7} {:>14} {:>12} {:>12} {:>8}\n",
+        "preset", "prec", "workers", "expert fwd(ms)", "tokens/s",
+        "bytes/slot", "vs f32"
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:<8} {:<5} {:>7} {:>14.3} {:>12.0} {:>12} {:>8}\n",
+            r.preset,
+            r.precision,
+            r.workers,
+            r.expert_forward_ms,
+            r.tokens_per_s,
+            r.expert_bytes,
+            quant_speedup(rows, r)
+                .map(|x| format!("{x:.2}x"))
+                .unwrap_or_else(|| "-".into()),
+        ));
+    }
+    for (preset, e) in errors {
+        s.push_str(&format!(
+            "{preset}: int8 vs f32 oracle  max|err| {:.4}  \
+             max rel {:.4}  frob rel {:.4}\n",
+            e.max_abs, e.max_rel, e.frob_rel
+        ));
+    }
+    s
+}
+
+/// JSON payload for `BENCH_quant.json`.
+pub fn quant_sweep_json(
+    tokens: usize,
+    n_batches: usize,
+    rows: &[QuantSweepRow],
+    errors: &[(String, QuantErrorStats)],
+) -> Json {
+    Json::obj(vec![
+        ("bench", Json::str("quant")),
+        ("tokens", Json::num(tokens as f64)),
+        ("batches", Json::num(n_batches as f64)),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        let mut fields = vec![
+                            ("preset", Json::str(r.preset.clone())),
+                            (
+                                "precision",
+                                Json::str(r.precision.clone()),
+                            ),
+                            ("workers", Json::num(r.workers as f64)),
+                            (
+                                "expert_forward_ms",
+                                Json::num(r.expert_forward_ms),
+                            ),
+                            ("tokens_per_s", Json::num(r.tokens_per_s)),
+                            (
+                                "expert_bytes",
+                                Json::num(r.expert_bytes as f64),
+                            ),
+                            (
+                                "arena_growths",
+                                Json::num(r.arena_growths as f64),
+                            ),
+                        ];
+                        if let Some(x) = quant_speedup(rows, r) {
+                            fields.push((
+                                "speedup_vs_f32",
+                                Json::num(x),
+                            ));
+                        }
+                        Json::obj(fields)
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "errors",
+            Json::Arr(
+                errors
+                    .iter()
+                    .map(|(p, e)| {
+                        Json::obj(vec![
+                            ("preset", Json::str(p.clone())),
+                            ("max_abs", Json::num(e.max_abs as f64)),
+                            ("max_rel", Json::num(e.max_rel as f64)),
+                            (
+                                "frob_rel",
+                                Json::num(e.frob_rel as f64),
                             ),
                         ])
                     })
@@ -724,6 +999,7 @@ mod tests {
             2,
             5,
             None,
+            None,
         )
         .unwrap();
         // 1 preset x 2 workloads x 2 partitions x 2 executors x
@@ -782,15 +1058,20 @@ mod tests {
 
     #[test]
     fn placement_sweep_is_internally_consistent() {
-        let (profile, rows) =
-            run_placement_sweep("test", 2, 64, 2, true, 3, None, 2, &[])
-                .unwrap();
+        let (profile, rows) = run_placement_sweep(
+            "test", 2, 64, 2, true, 3, None, 2, &[], None,
+        )
+        .unwrap();
         assert_eq!(profile.batches, 2);
-        assert_eq!(rows.len(), 4);
+        assert_eq!(rows.len(), 5);
         assert_eq!(rows[0].strategy, "round-robin");
         assert_eq!(rows[0].moved_experts, 0);
         assert_eq!(rows[0].extra_replicas, 0);
         assert_eq!(rows[3].strategy, "replicated");
+        // Without a memory budget the compressed strategy has nothing to
+        // compress against and returns the replicated plan verbatim.
+        assert_eq!(rows[4].strategy, "compressed");
+        assert_eq!(rows[4].extra_replicas, rows[3].extra_replicas);
         // The never-worse guarantee is exact on the aggregated profile
         // (predicted); the per-batch modeled sum optimises per-batch
         // maxima the planner never saw, so it gets a small slack band.
@@ -816,7 +1097,7 @@ mod tests {
         let back = Json::parse(&j.to_string()).unwrap();
         assert_eq!(
             back.get("rows").unwrap().as_arr().unwrap().len(),
-            4
+            5
         );
         assert_eq!(back.get("devices").unwrap().as_usize(), Some(2));
         assert!(back.get("rows").unwrap().as_arr().unwrap()[3]
@@ -831,10 +1112,10 @@ mod tests {
         // never-worse guarantee holds on it just like on the uniform
         // one.
         let (_, rows) = run_placement_sweep(
-            "test", 2, 48, 1, true, 7, None, 2, &[2.0, 1.0],
+            "test", 2, 48, 1, true, 7, None, 2, &[2.0, 1.0], None,
         )
         .unwrap();
-        assert_eq!(rows.len(), 4);
+        assert_eq!(rows.len(), 5);
         for r in &rows {
             assert!(r.modeled_makespan_ms > 0.0, "{r:?}");
         }
@@ -846,6 +1127,124 @@ mod tests {
                 rows[0]
             );
         }
+    }
+
+    #[test]
+    fn placement_sweep_with_budget_simulates_compressed_plans() {
+        // A budget with headroom for one int8 slot beyond two f32 slots:
+        // the compressed strategy may go mixed-precision where the other
+        // four cannot, and its plan still simulates (the cluster spawns
+        // int8 workers from the precision map) and never scores worse
+        // than the replicated row.
+        let cfg = MoeConfig::preset("test");
+        let cost = CostModel::from_config(&cfg);
+        let budget = 2 * cost.expert_bytes
+            + cost.expert_bytes_for(Precision::Int8);
+        let (_, rows) = run_placement_sweep(
+            "test", 2, 64, 2, true, 3, Some(budget), 2, &[], None,
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 5);
+        assert_eq!(rows[4].strategy, "compressed");
+        assert!(
+            rows[4].predicted_makespan_ms
+                <= rows[3].predicted_makespan_ms * (1.0 + 1e-9),
+            "{:?} vs {:?}",
+            rows[4],
+            rows[3]
+        );
+        for r in &rows {
+            assert!(r.modeled_makespan_ms > 0.0, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn precision_map_expands_specs() {
+        assert_eq!(
+            precision_map("f32", 4).unwrap(),
+            vec![Precision::F32; 4]
+        );
+        assert_eq!(
+            precision_map("int8", 3).unwrap(),
+            vec![Precision::Int8; 3]
+        );
+        assert_eq!(
+            precision_map("mixed", 4).unwrap(),
+            vec![
+                Precision::F32,
+                Precision::Int8,
+                Precision::F32,
+                Precision::Int8
+            ]
+        );
+        assert!(precision_map("fp16", 4).is_err());
+    }
+
+    #[test]
+    fn placement_sweep_honors_precision_floor() {
+        // A mixed-precision floor reaches every simulated plan: the
+        // sweep still covers all strategies, the quantized stack runs
+        // end to end, and the round-robin baseline simulates on the
+        // same map as every other row.
+        let (_, rows) = run_placement_sweep(
+            "test", 2, 48, 1, true, 7, None, 2, &[], Some("mixed"),
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 5);
+        for r in &rows {
+            assert!(r.modeled_makespan_ms > 0.0, "{r:?}");
+        }
+        for r in &rows[1..] {
+            assert!(
+                r.predicted_makespan_ms
+                    <= rows[0].predicted_makespan_ms * (1.0 + 1e-9),
+                "{r:?} vs {:?}",
+                rows[0]
+            );
+        }
+    }
+
+    #[test]
+    fn quant_sweep_reports_rows_and_error_stats() {
+        let (rows, errors) =
+            run_quant_sweep(&["test"], &[1, 2], 32, 2, 11).unwrap();
+        // 1 preset x 2 precisions x 2 worker counts.
+        assert_eq!(rows.len(), 4);
+        assert_eq!(errors.len(), 1);
+        for r in &rows {
+            assert!(r.tokens_per_s > 0.0, "{r:?}");
+            assert!(r.expert_forward_ms > 0.0, "{r:?}");
+        }
+        // Int8 rows carry the compressed footprint and a throughput
+        // ratio against their f32 twin.
+        let f32_bytes = rows
+            .iter()
+            .find(|r| r.precision == "f32")
+            .unwrap()
+            .expert_bytes;
+        let int8_rows: Vec<_> =
+            rows.iter().filter(|r| r.precision == "int8").collect();
+        assert_eq!(int8_rows.len(), 2);
+        for r in int8_rows {
+            assert!(r.expert_bytes < f32_bytes, "{r:?}");
+            assert!(quant_speedup(&rows, r).is_some(), "{r:?}");
+        }
+        // The measured error block passes the default §17 gates.
+        crate::bench::quality::QuantGates::default()
+            .check(&errors[0].1)
+            .unwrap();
+        let rendered = render_quant_sweep(&rows, &errors);
+        assert!(rendered.contains("int8"));
+        assert!(rendered.contains("frob rel"));
+        let j = quant_sweep_json(32, 2, &rows, &errors);
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            back.get("rows").unwrap().as_arr().unwrap().len(),
+            4
+        );
+        let jerr = back.get("errors").unwrap().as_arr().unwrap();
+        assert_eq!(jerr.len(), 1);
+        assert!(jerr[0].get("frob_rel").and_then(Json::as_f64).is_some());
     }
 
     #[test]

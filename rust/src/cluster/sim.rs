@@ -48,7 +48,9 @@ use crate::fault::{ClusterError, DeviceHealth, FaultInjector, FaultPlan};
 use crate::moe::arena::{ExecArena, FfnArena};
 use crate::moe::balance::load_cv;
 use crate::moe::exec::{self, ExpertBackend, FfnLayerReport, ForwardStats};
-use crate::moe::experts::copy_expert_into;
+use crate::moe::experts::{
+    copy_expert_into, ExpertParams, QuantFfnExpert,
+};
 use crate::moe::weights::StackWeights;
 use crate::obs::{EventKind, Obs};
 use crate::placement::{
@@ -380,9 +382,12 @@ impl ClusterSim {
 
     /// One device's worker for one layer, loaded with every FFN expert
     /// whose replica set includes this device (a replicated expert's
-    /// weights live on each of its replicas), running at the topology's
-    /// per-device speed. Refused ([`ClusterError::RespawnFailed`]) when
-    /// the injector marks the device permanently lost.
+    /// weights live on each of its replicas), at the plan's stack-wide
+    /// per-expert precision — int8 experts are quantized here, once at
+    /// spawn, so the worker's serving loop never touches f32 weights —
+    /// running at the topology's per-device speed. Refused
+    /// ([`ClusterError::RespawnFailed`]) when the injector marks the
+    /// device permanently lost.
     fn spawn_device_worker(
         layer_idx: usize,
         layer: &crate::moe::weights::MoeLayerWeights,
@@ -397,7 +402,17 @@ impl ClusterSim {
                     .any(|j| topo.ffn_replica(e, j) == dev)
             })
             .collect();
-        let w = owned.iter().map(|&e| layer.ffn[e].clone()).collect();
+        let w = owned
+            .iter()
+            .map(|&e| match topo.ffn_precision(e) {
+                crate::config::Precision::Int8 => ExpertParams::Int8(
+                    QuantFfnExpert::from_f32(&layer.ffn[e]),
+                ),
+                crate::config::Precision::F32 => {
+                    ExpertParams::F32(layer.ffn[e].clone())
+                }
+            })
+            .collect();
         Worker::try_spawn(
             layer_idx,
             dev,
@@ -415,14 +430,17 @@ impl ClusterSim {
     }
 
     /// Migrate to `plan`: install it on the topology and respawn **only
-    /// the workers of devices whose resident-expert set changed** (the
-    /// devices of the replica-delta's adds and drops) — the
-    /// between-batch stall scales with the migration (its moved experts
-    /// and bytes), not with cluster size; untouched devices' worker
-    /// threads survive by identity (asserted in
+    /// the workers of devices whose resident-expert set or serving
+    /// precision changed** — the devices of the replica-delta's adds
+    /// and drops, plus every device holding a replica of an expert
+    /// whose precision flipped (the holding worker must requantize,
+    /// locally: precision changes move no bytes over the interconnect,
+    /// see [`PlacementPlan::diff_precision`]). The between-batch stall
+    /// scales with the migration, not with cluster size; untouched
+    /// devices' worker threads survive by identity (asserted in
     /// `tests/cluster_placement.rs`). Returns the number of experts
-    /// whose replica set changed. Call between batches — never during a
-    /// forward.
+    /// whose replica set or precision changed. Call between batches —
+    /// never during a forward.
     pub fn apply_placement(&mut self, plan: &PlacementPlan)
         -> Result<usize> {
         anyhow::ensure!(
@@ -440,7 +458,8 @@ impl ClusterSim {
         plan.validate()?;
         let current = self.placement();
         let changed = current.diff_experts(plan);
-        if changed.is_empty() {
+        let reprecised = current.diff_precision(plan);
+        if changed.is_empty() && reprecised.is_empty() {
             return Ok(0);
         }
         // A manually-applied plan invalidates any in-flight replanner
@@ -451,6 +470,16 @@ impl ClusterSim {
         let mut affected = vec![false; self.topo.n_devices];
         for &(_, dev) in delta.adds.iter().chain(delta.drops.iter()) {
             affected[dev] = true;
+        }
+        // A precision flip re-encodes the expert on every device that
+        // holds (or will hold) a replica: both plans' replica sets are
+        // marked so no worker keeps serving at the stale precision.
+        for &e in &reprecised {
+            for &dev in
+                current.replicas(e).iter().chain(plan.replicas(e))
+            {
+                affected[dev] = true;
+            }
         }
         self.topo.set_placement(plan.clone());
         for (li, (layer, workers)) in self
@@ -496,7 +525,13 @@ impl ClusterSim {
                 }
             }
         }
-        Ok(changed.len())
+        // Union count: an expert that both moved and flipped precision
+        // is one changed expert, not two.
+        let moved = reprecised
+            .iter()
+            .filter(|e| !changed.contains(e))
+            .count();
+        Ok(changed.len() + moved)
     }
 
     /// Feed one executed batch's stats to the attached replanner. The
@@ -1400,6 +1435,95 @@ mod tests {
         sim.apply_placement(&full).unwrap();
         let (y_full, _) = sim.forward(&x).unwrap();
         assert_eq!(y_before.data, y_full.data);
+    }
+
+    #[test]
+    fn mixed_precision_plan_is_deterministic_and_tracks_engine() {
+        // A plan serving expert 0 at int8: the cluster must agree with
+        // the single-process engine under the same stack-wide precision
+        // map, and replicating the quantized expert must stay pure
+        // layout — bitwise-identical outputs (the int8 kernel is
+        // per-token pure, so replica slicing is invisible, DESIGN.md
+        // §17).
+        use crate::config::Precision;
+        let cfg = MoeConfig::preset("test"); // 4 FFN experts
+        let mut rng = Rng::new(5);
+        let x = Tensor::randn(&mut rng, &[40, cfg.d_model], 1.0);
+        let prec = vec![
+            Precision::Int8,
+            Precision::F32,
+            Precision::F32,
+            Precision::F32,
+        ];
+        let mut engine =
+            crate::coordinator::engine::MoeEngine::native(cfg.clone(), 11)
+                .with_precision(prec);
+        let (y_engine, _) = engine.forward_stack(&x).unwrap();
+
+        let mut plan = PlacementPlan::round_robin(4, 2);
+        plan.set_precision(0, Precision::Int8);
+        let mut sim = ClusterSim::new(
+            cfg.clone(),
+            Topology::new(2).with_placement(plan.clone()),
+            11,
+        );
+        let (y_single, _) = sim.forward(&x).unwrap();
+        assert!(y_single.approx_eq(&y_engine, 1e-5, 1e-5));
+
+        // Replicating the int8 expert changes nothing, bitwise.
+        let mut repl = plan.clone();
+        repl.add_replica(0, 1);
+        let mut sim2 = ClusterSim::new(
+            cfg.clone(),
+            Topology::new(2).with_placement(repl),
+            11,
+        );
+        let (y_repl, _) = sim2.forward(&x).unwrap();
+        assert_eq!(y_single.data, y_repl.data);
+
+        // Quantization genuinely changed the math vs the f32 cluster.
+        let mut f32sim =
+            ClusterSim::new(cfg.clone(), Topology::new(2), 11);
+        let (y_f32, _) = f32sim.forward(&x).unwrap();
+        assert_ne!(y_single.data, y_f32.data);
+    }
+
+    #[test]
+    fn precision_only_migration_respawns_and_requantizes() {
+        // Demoting an expert without moving it is a precision-only
+        // diff: apply_placement must respawn the holding workers (they
+        // requantize locally) even though no replica set changed — and
+        // promoting back must restore the f32 outputs bitwise.
+        use crate::config::Precision;
+        let cfg = MoeConfig::preset("test");
+        let mut sim = ClusterSim::new(cfg.clone(), Topology::new(2), 11);
+        let mut rng = Rng::new(5);
+        let x = Tensor::randn(&mut rng, &[40, cfg.d_model], 1.0);
+        let (y_f32, _) = sim.forward(&x).unwrap();
+
+        let mut plan = sim.placement();
+        plan.set_precision(0, Precision::Int8);
+        let changed = sim.apply_placement(&plan).unwrap();
+        assert_eq!(changed, 1, "one expert flipped precision");
+        let (y_q, _) = sim.forward(&x).unwrap();
+        assert_ne!(y_f32.data, y_q.data, "demotion changes the math");
+        // Bitwise-equal to a cluster built on the mixed plan from
+        // scratch: requantize-at-respawn and quantize-at-spawn agree.
+        let mut fresh = ClusterSim::new(
+            cfg.clone(),
+            Topology::new(2).with_placement(plan.clone()),
+            11,
+        );
+        let (y_fresh, _) = fresh.forward(&x).unwrap();
+        assert_eq!(y_q.data, y_fresh.data);
+        // Re-applying the same plan is a no-op.
+        assert_eq!(sim.apply_placement(&plan).unwrap(), 0);
+        // Promotion back to f32 is also a one-expert change.
+        let mut back = plan.clone();
+        back.set_precision(0, Precision::F32);
+        assert_eq!(sim.apply_placement(&back).unwrap(), 1);
+        let (y_back, _) = sim.forward(&x).unwrap();
+        assert_eq!(y_f32.data, y_back.data);
     }
 
     #[test]

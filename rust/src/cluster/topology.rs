@@ -1,6 +1,6 @@
 //! Cluster topology: device count, expert placement, link model.
 
-use crate::config::{ExpertKind, MoeConfig};
+use crate::config::{ExpertKind, MoeConfig, Precision};
 use crate::placement::PlacementPlan;
 
 /// α–β communication model: transferring `b` bytes costs α + β·b seconds.
@@ -130,6 +130,18 @@ impl Topology {
                 debug_assert_eq!(j, 0);
                 expert % self.n_devices
             }
+        }
+    }
+
+    /// Stack-wide serving precision of FFN expert `e` (DESIGN.md §17):
+    /// the installed plan's per-expert map, or `F32` under the
+    /// round-robin default. Uniform across every replica of the expert,
+    /// so dispatch may slice a replicated expert's micro-batch freely
+    /// without outputs depending on which replica ran which slice.
+    pub fn ffn_precision(&self, expert: usize) -> Precision {
+        match &self.placement {
+            Some(p) => p.precision(expert),
+            None => Precision::F32,
         }
     }
 
@@ -309,6 +321,17 @@ mod tests {
     #[should_panic]
     fn non_positive_speed_panics() {
         let _ = Topology::new(2).with_device_speeds(vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn precision_accessor_follows_plan_or_defaults_f32() {
+        let base = Topology::new(4);
+        assert_eq!(base.ffn_precision(2), Precision::F32);
+        let mut plan = PlacementPlan::round_robin(8, 4);
+        plan.set_precision(5, Precision::Int8);
+        let t = Topology::new(4).with_placement(plan);
+        assert_eq!(t.ffn_precision(5), Precision::Int8);
+        assert_eq!(t.ffn_precision(4), Precision::F32);
     }
 
     #[test]

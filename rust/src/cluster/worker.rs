@@ -4,6 +4,11 @@
 //! device's relative speed so heterogeneous fleets report heterogeneous
 //! compute seconds.
 //!
+//! Owned experts arrive as [`ExpertParams`] — f32 or pre-quantized int8
+//! weights, per the placement plan's stack-wide precision map
+//! (DESIGN.md §17) — and the worker keeps one scratch of each kind so
+//! mixed-precision devices stay allocation-free in steady state.
+//!
 //! Workers are the only place injected faults *act* (DESIGN.md §16):
 //! each work message carries its batch number, and a worker with an
 //! installed [`FaultInjector`] checks the (batch, layer, device)
@@ -18,7 +23,7 @@ use std::time::Instant;
 
 use crate::config::MoeConfig;
 use crate::fault::{ClusterError, FaultInjector, FaultKind};
-use crate::moe::experts::{FfnExpert, FfnScratch};
+use crate::moe::experts::{ExpertParams, FfnScratch, QuantScratch};
 use crate::tensor::Tensor;
 
 /// One FFN micro-batch for a worker: (layer-local) expert id placed on
@@ -107,7 +112,7 @@ impl Worker {
     pub fn spawn(
         device: usize,
         owned_experts: Vec<usize>,
-        weights: Vec<FfnExpert>,
+        weights: Vec<ExpertParams>,
         speed: f64,
         cfg: &MoeConfig,
     ) -> Worker {
@@ -123,7 +128,7 @@ impl Worker {
         layer: usize,
         device: usize,
         owned_experts: Vec<usize>,
-        weights: Vec<FfnExpert>,
+        weights: Vec<ExpertParams>,
         speed: f64,
         _cfg: &MoeConfig,
         injector: Option<Arc<FaultInjector>>,
@@ -146,9 +151,11 @@ impl Worker {
                     .enumerate()
                     .map(|(i, &e)| (e, i))
                     .collect();
-                // Persistent scratch: the batched kernel grows it on first
-                // use and the hot loop stays allocation-free thereafter.
+                // Persistent scratch, one per kernel precision: the
+                // batched kernels grow them on first use and the hot
+                // loop stays allocation-free thereafter.
                 let mut scratch = FfnScratch::new(0);
+                let mut qscratch = QuantScratch::new();
                 while let Ok(msg) = rx.recv() {
                     match msg {
                         Msg::Shutdown => break,
@@ -188,11 +195,14 @@ impl Worker {
                                     let w = &weights[index[&u.expert]];
                                     // Gate-scaled batched forward into the
                                     // caller's pre-zeroed buffer: rows
-                                    // arrive back already `g * FFN(x)`.
+                                    // arrive back already `g * FFN(x)`,
+                                    // through the f32 or int8 kernel per
+                                    // this expert's serving precision.
                                     w.forward_batch_into(
                                         &u.x,
                                         Some(u.gates.as_slice()),
                                         &mut scratch,
+                                        &mut qscratch,
                                         &mut u.y.data,
                                         None,
                                     );
@@ -279,6 +289,7 @@ impl Drop for Worker {
 mod tests {
     use super::*;
     use crate::fault::{FaultPlan, FaultSpec};
+    use crate::moe::experts::{FfnExpert, QuantFfnExpert};
     use crate::util::rng::Rng;
 
     #[test]
@@ -288,7 +299,13 @@ mod tests {
         let e = FfnExpert::init(&mut rng, cfg.d_model, cfg.d_ff);
         let want_raw =
             e.forward(&Tensor::full(&[2, cfg.d_model], 0.5));
-        let w = Worker::spawn(0, vec![3], vec![e], 1.0, &cfg);
+        let w = Worker::spawn(
+            0,
+            vec![3],
+            vec![ExpertParams::F32(e)],
+            1.0,
+            &cfg,
+        );
         let rx = w
             .submit(0, vec![WorkUnit {
                 expert: 3,
@@ -316,11 +333,67 @@ mod tests {
     }
 
     #[test]
+    fn int8_worker_tracks_f32_and_is_deterministic() {
+        // A worker serving a pre-quantized expert stays close to its
+        // f32 twin and returns bitwise-identical outputs on repeated
+        // submissions of the same unit (the int8 kernel is per-token
+        // pure — DESIGN.md §17).
+        let cfg = MoeConfig::preset("test");
+        let mut rng = Rng::new(9);
+        let e = FfnExpert::init(&mut rng, cfg.d_model, cfg.d_ff);
+        let x = Tensor::randn(&mut rng, &[4, cfg.d_model], 1.0);
+        let want = e.forward(&x);
+        let q = QuantFfnExpert::from_f32(&e);
+        let w = Worker::spawn(
+            0,
+            vec![1],
+            vec![ExpertParams::Int8(q)],
+            1.0,
+            &cfg,
+        );
+        let run = || {
+            let rx = w
+                .submit(0, vec![WorkUnit {
+                    expert: 1,
+                    part: 0,
+                    x: x.clone(),
+                    gates: vec![1.0; 4],
+                    tokens: vec![0, 1, 2, 3],
+                    y: Tensor::zeros(&[4, cfg.d_model]),
+                }])
+                .unwrap();
+            rx.recv().unwrap().remove(0).y
+        };
+        let y1 = run();
+        let y2 = run();
+        assert_eq!(y1.data, y2.data, "int8 worker must be deterministic");
+        let num: f32 = y1
+            .data
+            .iter()
+            .zip(&want.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        let den: f32 =
+            want.data.iter().map(|v| v * v).sum::<f32>().max(1e-12);
+        assert!(
+            (num / den).sqrt() < 0.1,
+            "int8 worker drifted {} from f32",
+            (num / den).sqrt()
+        );
+    }
+
+    #[test]
     fn multiple_submissions_in_order() {
         let cfg = MoeConfig::preset("test");
         let mut rng = Rng::new(1);
         let e = FfnExpert::init(&mut rng, cfg.d_model, cfg.d_ff);
-        let w = Worker::spawn(1, vec![0], vec![e], 2.0, &cfg);
+        let w = Worker::spawn(
+            1,
+            vec![0],
+            vec![ExpertParams::F32(e)],
+            2.0,
+            &cfg,
+        );
         for b in 0..5 {
             let rx = w
                 .submit(b, vec![WorkUnit {
@@ -365,7 +438,7 @@ mod tests {
             0,
             0,
             vec![0],
-            vec![e],
+            vec![ExpertParams::F32(e)],
             1.0,
             &cfg,
             Some(inj),
@@ -405,7 +478,7 @@ mod tests {
             2,
             5,
             vec![0],
-            vec![e],
+            vec![ExpertParams::F32(e)],
             1.0,
             &cfg,
             Some(inj.clone()),
@@ -420,7 +493,7 @@ mod tests {
             2,
             5,
             vec![0],
-            vec![e2],
+            vec![ExpertParams::F32(e2)],
             1.0,
             &cfg,
             Some(inj.clone()),
@@ -436,7 +509,7 @@ mod tests {
             2,
             5,
             vec![0],
-            vec![e3],
+            vec![ExpertParams::F32(e3)],
             1.0,
             &cfg,
             Some(inj),
@@ -461,7 +534,7 @@ mod tests {
             0,
             1,
             vec![0],
-            vec![e],
+            vec![ExpertParams::F32(e)],
             1.0,
             &cfg,
             Some(inj),
@@ -483,8 +556,15 @@ mod tests {
         inj.mark_lost(2);
         let mut rng = Rng::new(7);
         let e = FfnExpert::init(&mut rng, cfg.d_model, cfg.d_ff);
-        let r =
-            Worker::try_spawn(1, 2, vec![0], vec![e], 1.0, &cfg, Some(inj));
+        let r = Worker::try_spawn(
+            1,
+            2,
+            vec![0],
+            vec![ExpertParams::F32(e)],
+            1.0,
+            &cfg,
+            Some(inj),
+        );
         assert_eq!(
             r.err(),
             Some(ClusterError::RespawnFailed { device: 2, layer: 1 })

@@ -31,6 +31,36 @@ impl ExpertKind {
     }
 }
 
+/// Numeric precision of one FFN expert's stored weights. Precision is
+/// per-expert and **stack-wide**: every layer's copy of expert `e`, and
+/// every replica of it, carries the same precision (DESIGN.md §17).
+/// Routing, capacities, and the canonical combine order are
+/// precision-blind, so a plan's precision vector never affects which
+/// tokens go where — only the bytes a slot costs and which kernel runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Precision {
+    #[default]
+    F32,
+    Int8,
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f32" => Some(Precision::F32),
+            "int8" => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+        }
+    }
+}
+
 /// Model + MoE hyper-parameters (mirror of python MoEConfig).
 #[derive(Clone, Debug, PartialEq)]
 pub struct MoeConfig {
@@ -263,7 +293,22 @@ impl MoeConfig {
     /// owner applies stack-wide, so each expert slot stores (and each
     /// migration moves) one copy per layer.
     pub fn ffn_expert_bytes(&self) -> u64 {
-        (3 * self.d_model * self.d_ff * 4) as u64
+        self.ffn_expert_bytes_at(Precision::F32)
+    }
+
+    /// Bytes of one FFN expert's parameters in ONE layer at the given
+    /// precision. Int8 stores one byte per weight plus f32 per-output-
+    /// channel scales for each of the three projections (w1/w3 have
+    /// `d_ff` output channels each, w2 has `d_model`) — must agree with
+    /// `QuantFfnExpert::bytes()`.
+    pub fn ffn_expert_bytes_at(&self, p: Precision) -> u64 {
+        let n_params = 3 * self.d_model * self.d_ff;
+        match p {
+            Precision::F32 => (n_params * 4) as u64,
+            Precision::Int8 => {
+                (n_params + (2 * self.d_ff + self.d_model) * 4) as u64
+            }
+        }
     }
 
     /// Table 1: expected fraction of top-K slots landing on FFN experts
@@ -352,6 +397,29 @@ mod tests {
     fn ffn_expert_bytes_counts_three_projections() {
         let c = MoeConfig::preset("test"); // d_model 32, d_ff 64
         assert_eq!(c.ffn_expert_bytes(), (3 * 32 * 64 * 4) as u64);
+    }
+
+    #[test]
+    fn int8_expert_bytes_are_codes_plus_scales() {
+        let c = MoeConfig::preset("test"); // d_model 32, d_ff 64
+        assert_eq!(
+            c.ffn_expert_bytes_at(Precision::Int8),
+            (3 * 32 * 64 + (2 * 64 + 32) * 4) as u64
+        );
+        assert_eq!(c.ffn_expert_bytes_at(Precision::F32),
+                   c.ffn_expert_bytes());
+        // int8 is strictly cheaper — the whole point of compression.
+        assert!(c.ffn_expert_bytes_at(Precision::Int8)
+                < c.ffn_expert_bytes());
+    }
+
+    #[test]
+    fn precision_parse_roundtrip() {
+        for p in [Precision::F32, Precision::Int8] {
+            assert_eq!(Precision::parse(p.label()), Some(p));
+        }
+        assert_eq!(Precision::parse("fp16"), None);
+        assert_eq!(Precision::default(), Precision::F32);
     }
 
     #[test]

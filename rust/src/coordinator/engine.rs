@@ -25,10 +25,12 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use super::dispatch::DispatchPlan;
-use crate::config::MoeConfig;
+use crate::config::{MoeConfig, Precision};
 use crate::moe::arena::{ExecArena, FfnArena};
-use crate::moe::exec::{self, ExpertBackend, FfnLayerReport, NativeBatched};
-use crate::moe::weights::StackWeights;
+use crate::moe::exec::{
+    self, ExpertBackend, FfnLayerReport, NativeBatched, NativeQuant,
+};
+use crate::moe::weights::{QuantStackWeights, StackWeights};
 use crate::obs::Obs;
 use crate::runtime::host::HostValue;
 use crate::runtime::{Executable, Runtime};
@@ -81,6 +83,15 @@ pub struct MoeEngine {
     /// stamp per-layer routing/dispatch/expert/combine timing and shard
     /// records into it; recording never changes the math.
     obs: Option<Arc<Obs>>,
+    /// Stack-wide per-expert serving precision (DESIGN.md §17). Empty
+    /// (the default) means every expert serves f32. Indexed by FFN
+    /// expert slot; missing tail entries default to f32.
+    precision: Vec<Precision>,
+    /// Pre-quantized int8 copies of the `Precision::Int8` experts,
+    /// rebuilt whenever the precision map changes — `Some` iff any
+    /// expert is int8, which switches the native backend to
+    /// [`NativeQuant`].
+    qweights: Option<QuantStackWeights>,
 }
 
 impl MoeEngine {
@@ -110,6 +121,8 @@ impl MoeEngine {
             executor: ExecutorKind::default(),
             pool: None,
             obs: None,
+            precision: Vec::new(),
+            qweights: None,
         }
     }
 
@@ -138,6 +151,37 @@ impl MoeEngine {
     /// per-layer/per-shard records into it (DESIGN.md §15).
     pub fn set_obs(&mut self, obs: Arc<Obs>) {
         self.obs = Some(obs);
+    }
+
+    /// Install a stack-wide per-expert precision map (DESIGN.md §17):
+    /// expert slot `e` of *every* layer serves at `precision[e]`
+    /// (missing tail entries default to f32). Int8 experts are
+    /// quantized once here — never on the forward path — and subsequent
+    /// forwards run [`NativeQuant`], dispatching each expert to its
+    /// precision's kernel. An all-f32 map drops the quantized copies
+    /// and restores the plain batched backend. Native backend only
+    /// (PJRT kernels are compiled f32; ignored there).
+    pub fn with_precision(
+        mut self,
+        precision: Vec<Precision>,
+    ) -> MoeEngine {
+        self.set_precision(precision);
+        self
+    }
+
+    /// See [`MoeEngine::with_precision`].
+    pub fn set_precision(&mut self, precision: Vec<Precision>) {
+        let any_int8 =
+            precision.contains(&Precision::Int8)
+                && matches!(self.backend, Backend::Native { .. });
+        self.qweights = any_int8
+            .then(|| QuantStackWeights::build(&self.weights, &precision));
+        self.precision = precision;
+    }
+
+    /// The installed precision map (empty = uniform f32).
+    pub fn precision(&self) -> &[Precision] {
+        &self.precision
     }
 
     /// Arena growth count (see [`ExecArena::growths`]): constant across
@@ -196,6 +240,8 @@ impl MoeEngine {
             executor: ExecutorKind::default(),
             pool: None,
             obs: None,
+            precision: Vec::new(),
+            qweights: None,
         }
     }
 
@@ -254,6 +300,8 @@ impl MoeEngine {
             executor: ExecutorKind::default(),
             pool: None,
             obs: None,
+            precision: Vec::new(),
+            qweights: None,
         })
     }
 
@@ -285,20 +333,35 @@ impl MoeEngine {
             _ => Executor::Scoped { workers },
         };
         let mut native;
+        let mut quantized;
         let mut pjrt;
-        let be: &mut dyn ExpertBackend = match &self.backend {
-            Backend::Native { partition, .. } => {
-                native = NativeBatched {
-                    layers: &self.weights.layers,
-                    partition: *partition,
-                };
-                &mut native
-            }
-            Backend::Pjrt { weight_literals, executables, .. } => {
-                pjrt = PjrtBackend { weight_literals, executables };
-                &mut pjrt
-            }
-        };
+        let be: &mut dyn ExpertBackend =
+            match (&self.backend, &self.qweights) {
+                (Backend::Native { partition, .. }, Some(q)) => {
+                    quantized = NativeQuant {
+                        layers: &self.weights.layers,
+                        qlayers: &q.layers,
+                        partition: *partition,
+                    };
+                    &mut quantized
+                }
+                (Backend::Native { partition, .. }, None) => {
+                    native = NativeBatched {
+                        layers: &self.weights.layers,
+                        partition: *partition,
+                    };
+                    &mut native
+                }
+                (
+                    Backend::Pjrt {
+                        weight_literals, executables, ..
+                    },
+                    _,
+                ) => {
+                    pjrt = PjrtBackend { weight_literals, executables };
+                    &mut pjrt
+                }
+            };
         let (y, stats, _) = exec::forward_stack(
             be,
             &self.weights,
@@ -494,6 +557,45 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn engine_precision_map_selects_backend_and_stays_deterministic() {
+        let cfg = MoeConfig::preset("test"); // 4 FFN experts
+        let mut rng = Rng::new(31);
+        let x = Tensor::randn(&mut rng, &[48, cfg.d_model], 1.0);
+        // An all-f32 map is a bit-exact no-op vs the default engine.
+        let mut plain = MoeEngine::native(cfg.clone(), 6);
+        let (y0, _) = plain.forward_stack(&x).unwrap();
+        let mut f32map = MoeEngine::native(cfg.clone(), 6)
+            .with_precision(vec![Precision::F32; 4]);
+        let (y1, _) = f32map.forward_stack(&x).unwrap();
+        assert_eq!(y0.data, y1.data);
+        // A mixed map is bitwise-reproducible across worker counts and
+        // across repeat forwards on one engine.
+        let mixed = vec![
+            Precision::F32,
+            Precision::Int8,
+            Precision::F32,
+            Precision::Int8,
+        ];
+        let mut serial = MoeEngine::native(cfg.clone(), 6)
+            .with_precision(mixed.clone());
+        let (ym, sm) = serial.forward_stack(&x).unwrap();
+        assert_ne!(ym.data, y0.data, "int8 experts must change outputs");
+        let (ym2, _) = serial.forward_stack(&x).unwrap();
+        assert_eq!(ym.data, ym2.data);
+        for workers in [2, 4] {
+            let mut par =
+                MoeEngine::native_with_workers(cfg.clone(), 6, workers)
+                    .with_precision(mixed.clone());
+            let (yw, sw) = par.forward_stack(&x).unwrap();
+            assert_eq!(ym.data, yw.data, "workers={workers} diverged");
+            for (a, b) in sm.per_layer.iter().zip(&sw.per_layer) {
+                assert_eq!(a.ffn_assignments, b.ffn_assignments);
+            }
+        }
+        assert_eq!(serial.precision(), mixed.as_slice());
     }
 
     #[test]

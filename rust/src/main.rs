@@ -6,8 +6,8 @@
 //!   train     --tag T --steps N             pretrain via train_step artifact
 //!   cluster   --preset P --devices A,B,..   expert-parallel deployment sim
 //!   placement --devices N --profile skewed  plan/score/compare FFN placement
-//!   bench     forward|faults|table1|table3|table3-quality|table4|table5|\
-//!             table6|fig3
+//!   bench     forward|quant|faults|table1|table3|table3-quality|table4|\
+//!             table5|table6|fig3
 //!   analyze   [--json] [path]               static lints over the crate
 //!   analyze   load|tokens|gating            figures 4 / 5 / 6
 //!   obs       summarize <trace.jsonl>       per-stage latency + k-distribution
@@ -17,6 +17,11 @@
 //! text, or JSON when the path ends in .json) and `--trace-out
 //! <file.jsonl>` to capture the observability registry and span trace
 //! (DESIGN.md §15).
+//!
+//! `serve`, `bench forward` and `placement` accept `--precision
+//! f32|int8|mixed` (DESIGN.md §17): a stack-wide per-expert precision
+//! map — `mixed` demotes every odd-indexed FFN expert to int8. `bench
+//! quant` sweeps f32 against all-int8 and gates the measured error.
 //!
 //! Reports are printed and mirrored under reports/; sweeps also emit
 //! machine-readable `BENCH_<name>.json` files for cross-PR tracking.
@@ -177,8 +182,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // selects the work split (token shards by default) and
         // --executor pool|scoped the fan-out machinery (the scoped
         // spawn-per-call baseline is kept for measurement).
-        "native" => MoeService::start(
-            MoeEngine::native_with_workers(
+        "native" => {
+            let mut engine = MoeEngine::native_with_workers(
                 cfg.clone(),
                 0,
                 args.get_usize("workers", 1),
@@ -190,10 +195,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 moepp::coordinator::engine::ExecutorKind::parse(
                     args.get_or("executor", "pool"),
                 )?,
-            ),
-            service_cfg,
-        ),
+            );
+            // --precision f32|int8|mixed: stack-wide per-expert
+            // precision map (DESIGN.md §17).
+            if let Some(spec) = args.get("precision") {
+                engine = engine.with_precision(harness::precision_map(
+                    spec,
+                    cfg.n_ffn_experts,
+                )?);
+            }
+            MoeService::start(engine, service_cfg)
+        }
         "pjrt" => {
+            anyhow::ensure!(
+                args.get("precision").is_none(),
+                "--precision is not supported on the pjrt backend"
+            );
             let rt = std::sync::Arc::new(open_runtime(args)?);
             MoeService::start(
                 MoeEngine::pjrt(cfg.clone(), 0, rt)?,
@@ -201,11 +218,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
             )
         }
         "cluster" => {
+            let devices = args.get_usize("devices", 2);
+            let mut topo =
+                moepp::cluster::topology::Topology::new(devices);
+            // --precision on the cluster backend rides on a placement
+            // plan: round-robin layout, precision map applied per
+            // expert, so the devices spawn int8 workers where asked.
+            if let Some(spec) = args.get("precision") {
+                let mut plan = moepp::placement::PlacementPlan::round_robin(
+                    cfg.n_ffn_experts,
+                    devices,
+                );
+                for (e, p) in harness::precision_map(
+                    spec,
+                    cfg.n_ffn_experts,
+                )?
+                .into_iter()
+                .enumerate()
+                {
+                    plan.set_precision(e, p);
+                }
+                topo = topo.with_placement(plan);
+            }
             let mut sim = moepp::cluster::sim::ClusterSim::new(
                 cfg.clone(),
-                moepp::cluster::topology::Topology::new(
-                    args.get_usize("devices", 2),
-                ),
+                topo,
                 0,
             );
             // --faults: install a deterministic fault schedule
@@ -445,27 +482,46 @@ fn cmd_placement(args: &Args) -> Result<()> {
             Some(s) => vec![Strategy::parse(s)?],
             None => Strategy::all().to_vec(),
         };
+        // --precision: stack-wide floor applied to every plan before
+        // byte accounting (DESIGN.md §17).
+        let forced = match args.get("precision") {
+            Some(spec) => {
+                harness::precision_map(spec, cfg.n_ffn_experts)?
+            }
+            None => Vec::new(),
+        };
         let rr = PlacementPlan::round_robin(cfg.n_ffn_experts, devices);
         let mut body = format!(
             "placement plans from captured profile {profile_arg}\n\
              ({} layers, {} FFN experts, {} batches, total load {})\n\n\
-             {:<12} {:>14} {:>10} {:>8} {:>6}\n",
+             {:<12} {:>14} {:>10} {:>8} {:>6} {:>13}\n",
             profile.n_layers(),
             profile.n_ffn_experts(),
             profile.batches,
             profile.total(),
-            "strategy", "predicted(ms)", "a2a (MiB)", "load cv", "moved",
+            "strategy", "predicted(ms)", "a2a (MiB)", "load cv",
+            "moved", "max dev bytes",
         );
         for strategy in strategies {
-            let plan = planner.plan(strategy, devices, &profile)?;
+            let mut plan = planner.plan(strategy, devices, &profile)?;
+            for (e, &p) in forced.iter().enumerate() {
+                if p == moepp::config::Precision::Int8 {
+                    plan.set_precision(e, p);
+                }
+            }
             let s = cost.score(&plan, &profile);
             body.push_str(&format!(
-                "{:<12} {:>14.3} {:>10.3} {:>8.3} {:>6}\n",
+                "{:<12} {:>14.3} {:>10.3} {:>8.3} {:>6} {:>13}\n",
                 strategy.label(),
                 s.makespan_s * 1e3,
                 s.comm_bytes as f64 / (1 << 20) as f64,
                 s.mean_load_cv(),
                 rr.diff_experts(&plan).len(),
+                planner
+                    .device_bytes(&plan)
+                    .into_iter()
+                    .max()
+                    .unwrap_or(0),
             ));
         }
         return report("placement", &body);
@@ -488,6 +544,7 @@ fn cmd_placement(args: &Args) -> Result<()> {
         budget_bytes,
         max_replicas,
         &device_speeds,
+        args.get("precision"),
     )?;
     if let Some(path) = args.get("capture") {
         std::fs::write(path, format!("{}\n", profile.to_json()))?;
@@ -503,7 +560,8 @@ fn cmd_placement(args: &Args) -> Result<()> {
          {batches}x{tokens}-token {profile_arg} batches (seed {seed})\n\
          ZC experts replicated everywhere; plans move or replicate only \
          FFN experts (<= {max_replicas} replicas) and never change model \
-         outputs\n\n{}",
+         outputs at a fixed precision map (the compressed row may demote \
+         hot experts to int8 under --budget-mib)\n\n{}",
         harness::render_placement_sweep(&rows),
     );
     report("placement", &body)
@@ -579,7 +637,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             let obs = obs_from_args(args);
             let rows = harness::run_forward_sweep(
                 &presets, &workers, &partitions, &executors, tokens,
-                batches, seed, obs.as_ref(),
+                batches, seed, args.get("precision"), obs.as_ref(),
             )?;
             if let Some(o) = obs.as_deref() {
                 write_obs_outputs(args, o)?;
@@ -599,6 +657,47 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 harness::render_forward_sweep(&rows),
             );
             report("bench_forward", &body)
+        }
+        "quant" => {
+            // The ISSUE-10 acceptance bench: f32 vs all-int8 throughput
+            // per worker count, slot bytes at each precision, and the
+            // oracle-vs-quantized error block gated by the DESIGN.md
+            // §17 tolerances — the run fails if the drift escapes them.
+            let presets: Vec<&str> =
+                args.get_or("presets", "sm-8e").split(',').collect();
+            let workers: Vec<usize> = args
+                .get_or("workers", "1,2,4")
+                .split(',')
+                .map(|s| s.parse().context("--workers"))
+                .collect::<Result<_>>()?;
+            let tokens = args.get_usize("tokens", 256);
+            let batches = args.get_usize("batches", 4);
+            let (rows, errors) = harness::run_quant_sweep(
+                &presets, &workers, tokens, batches, seed,
+            )?;
+            for (preset, e) in &errors {
+                quality::QuantGates::default()
+                    .check(e)
+                    .with_context(|| format!("preset {preset}"))?;
+            }
+            let bench_path = harness::write_bench_json(
+                "quant",
+                &harness::quant_sweep_json(
+                    tokens, batches, &rows, &errors,
+                ),
+            )?;
+            info!("wrote {bench_path}");
+            let body = format!(
+                "quantized-backend sweep: {batches}x{tokens}-token \
+                 batches (seed {seed})\n\
+                 int8 rows run every FFN expert through the NativeQuant \
+                 backend (per-channel symmetric weights, deterministic \
+                 i32 accumulation); the error block measures the \
+                 all-int8 stack against the f32 oracle and passed the \
+                 \u{a7}17 tolerance gates\n\n{}",
+                harness::render_quant_sweep(&rows, &errors),
+            );
+            report("bench_quant", &body)
         }
         "table1" => {
             let rows = tables::table1_rows(

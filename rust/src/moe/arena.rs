@@ -24,7 +24,7 @@
 //!   allocation that had to expand, which is what the steady-state
 //!   regression test pins to zero after the first batch.
 
-use crate::moe::experts::{FfnScratch, FFN_TOKEN_BLOCK};
+use crate::moe::experts::{FfnScratch, QuantScratch, FFN_TOKEN_BLOCK};
 use crate::moe::router::{route_into, Routing, RouterWeights};
 use crate::tensor::Tensor;
 
@@ -179,6 +179,9 @@ pub struct FfnArena {
     pub(crate) gather: Tensor,
     /// Serial-path (and oracle) FFN scratch.
     pub(crate) scratch: FfnScratch,
+    /// Serial-path int8 kernel scratch — sized alongside `scratch` so a
+    /// mixed-precision layer runs both kernels allocation-free.
+    pub(crate) qscratch: QuantScratch,
     /// Shard descriptors of the current layer (rebuilt per layer, storage
     /// reused).
     pub(crate) shards: Vec<ShardSpec>,
@@ -207,6 +210,7 @@ impl FfnArena {
         FfnArena {
             gather: Tensor::zeros(&[0, 0]),
             scratch: FfnScratch::new(0),
+            qscratch: QuantScratch::new(),
             shards: Vec::new(),
             last_shards: 0,
             shard_bufs: Vec::new(),
@@ -235,6 +239,19 @@ impl FfnArena {
         }
         self.scratch.f_tile = self.f_tile(f);
     }
+
+    // lint: no-alloc — steady-state mixed-precision sizing: grows only
+    // until both kernels' scratch reach the workload's largest shapes.
+    /// Like [`FfnArena::prepare_serial`] but also sizes the int8 scratch
+    /// — the `NativeQuant` serial path may meet both precisions in one
+    /// layer.
+    pub(crate) fn prepare_serial_mixed(&mut self, f: usize, d: usize) {
+        self.prepare_serial(f, d);
+        if self.qscratch.ensure(d, f) {
+            self.growths += 1;
+        }
+    }
+    // lint: end
 
     /// Grow the shard-buffer pool to at least `n` entries.
     pub(crate) fn ensure_shard_bufs(&mut self, n: usize) {
@@ -318,6 +335,8 @@ pub struct ShardBuf {
     pub(crate) gather: Tensor,
     pub(crate) out: Vec<f32>,
     pub(crate) scratch: FfnScratch,
+    /// Int8 kernel scratch of this shard (mixed-precision layers).
+    pub(crate) qscratch: QuantScratch,
     /// Wall nanoseconds of this shard's last kernel run, written by the
     /// worker that owns the buffer (exclusive `&mut` via
     /// `for_each_mut`), read by the driver when stamping obs — no
@@ -332,6 +351,7 @@ impl ShardBuf {
             gather: Tensor::zeros(&[0, 0]),
             out: Vec::new(),
             scratch: FfnScratch::new(0),
+            qscratch: QuantScratch::new(),
             ns: 0,
             growths: 0,
         }
@@ -345,6 +365,28 @@ impl ShardBuf {
         &mut self,
     ) -> (&Tensor, &mut Vec<f32>, &mut FfnScratch) {
         (&self.gather, &mut self.out, &mut self.scratch)
+    }
+
+    /// Disjoint borrows for a mixed-precision kernel call: gather input
+    /// (shared), output block plus both precisions' scratch (exclusive).
+    pub(crate) fn parts_mixed(
+        &mut self,
+    ) -> (&Tensor, &mut Vec<f32>, &mut FfnScratch, &mut QuantScratch)
+    {
+        (
+            &self.gather,
+            &mut self.out,
+            &mut self.scratch,
+            &mut self.qscratch,
+        )
+    }
+
+    /// Additionally size the int8 scratch (call after `prepare` on the
+    /// `NativeQuant` parallel path; growth counted like every buffer).
+    pub(crate) fn prepare_quant(&mut self, d: usize, f: usize) {
+        if self.qscratch.ensure(d, f) {
+            self.growths += 1;
+        }
     }
 
     /// Shape for `rows` tokens of width `d`, scratch width `n` and the
@@ -448,5 +490,24 @@ mod tests {
         let g = b.growths;
         b.prepare(3, 4, 8, 0);
         assert_eq!(b.growths, g);
+    }
+
+    #[test]
+    fn quant_scratch_growth_is_counted_then_flat() {
+        let mut b = ShardBuf::new();
+        b.prepare(3, 4, 8, 0);
+        let g0 = b.growths;
+        b.prepare_quant(4, 8);
+        assert!(b.growths > g0, "first quant sizing must count a growth");
+        let g1 = b.growths;
+        b.prepare_quant(4, 8);
+        b.prepare_quant(2, 8); // smaller never grows
+        assert_eq!(b.growths, g1);
+
+        let mut a = FfnArena::new();
+        a.prepare_serial_mixed(8, 4);
+        let warm = a.growths;
+        a.prepare_serial_mixed(8, 4);
+        assert_eq!(a.growths, warm);
     }
 }

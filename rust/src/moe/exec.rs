@@ -34,7 +34,7 @@ use crate::coordinator::dispatch::DispatchPlan;
 use crate::moe::arena::{
     gather_rows, pick_f_tile, ExecArena, FfnArena, ShardSpec,
 };
-use crate::moe::experts::{ConstExpert, FFN_TOKEN_BLOCK};
+use crate::moe::experts::{ConstExpert, QuantFfnExpert, FFN_TOKEN_BLOCK};
 use crate::moe::layer::{Assignment, LayerStats};
 use crate::moe::router::Routing;
 use crate::moe::weights::{MoeLayerWeights, StackWeights};
@@ -636,13 +636,15 @@ const SHARD_OVERSUB: usize = 4;
 /// ranges sized by **cost**, not row count: `cost_per_row(bi)` is the
 /// relative per-row FLOP weight of batch `bi` (its expert's `d_ff` — the
 /// `ffn_flops_per_token` ∝ `d_model · d_ff` identity with the shared
-/// `d_model` factored out), so per-expert width differences split into
-/// shards of even *work*, not even row counts. NOTE: today every expert
-/// a stock `MoeLayerWeights` builds shares its layer's `d_ff`, so on
-/// runtime-producible plans the weight is layer-constant and this
-/// reduces exactly to row sizing — the cost hook is the seam for
-/// heterogeneous-width experts (e.g. future quantized experts, ROADMAP)
-/// and is exercised directly by the unit test below. Each batch still
+/// `d_model` factored out), so per-expert cost differences split into
+/// shards of even *work*, not even row counts. For [`NativeBatched`]
+/// every stock expert shares its layer's `d_ff`, so the weight is
+/// layer-constant and splitting stays row-proportional; [`NativeQuant`]
+/// weighs each batch by the expert's streamed **bytes per row**
+/// (`d_ff ×` bytes/weight — 4 for f32, 1 for int8), so a mixed-precision
+/// layer produces genuinely uneven row ranges of even work
+/// (`mixed_precision_costs_split_shards_unevenly` below exercises the
+/// real backend cost; DESIGN.md §11/§17). Each batch still
 /// gets at least one shard and never more than
 /// `ceil(rows / FFN_TOKEN_BLOCK)` (sub-block shards would waste whole
 /// weight-stream passes). Shard boundaries never affect results (§11),
@@ -842,12 +844,187 @@ impl ExpertBackend for NativeBatched<'_> {
         Ok(FfnLayerReport::default())
     }
 }
+
+/// The mixed-precision native backend: structurally identical to
+/// [`NativeBatched`] (same serial arm, same token-parallel shards, same
+/// canonical (batch, shard)-order combine), but each expert runs the
+/// kernel of its **stack-wide precision** — `qlayers[layer][e]` is
+/// `Some` for int8 experts (pre-quantized once at precision-install
+/// time, see [`crate::moe::weights::QuantStackWeights`]) and `None` for
+/// f32 experts, which take exactly the [`NativeBatched`] kernel path.
+///
+/// Determinism (DESIGN.md §17): the int8 kernel is per-token pure — its
+/// per-token quantize → i32-accumulate → dequantize pipeline never mixes
+/// tokens, and i32 addition is exactly associative — so, as with the f32
+/// path, shard boundaries, worker counts, executors and replica splits
+/// cannot change a single output bit. Shard sizing weighs each batch by
+/// streamed bytes per row (`d_ff ×` bytes/weight), the first
+/// runtime-producible plan where `plan_shards` costs are not
+/// layer-constant.
+pub struct NativeQuant<'a> {
+    pub layers: &'a [MoeLayerWeights],
+    /// Per layer, per FFN expert: the int8 copy, `Some` iff the expert
+    /// serves quantized (uniform across layers — precision is
+    /// stack-wide per expert).
+    pub qlayers: &'a [Vec<Option<QuantFfnExpert>>],
+    pub partition: Partition,
+}
+
+impl NativeQuant<'_> {
+    /// Relative per-row cost of `expert` in `layer`: bytes of weight
+    /// stream per token (shared `d_model` factored out).
+    fn row_cost(
+        qlayer: &[Option<QuantFfnExpert>],
+        w: &MoeLayerWeights,
+        expert: usize,
+    ) -> u64 {
+        let f = w.ffn[expert].w1.shape[1] as u64;
+        match qlayer[expert] {
+            Some(_) => f,    // 1 byte/weight
+            None => f * 4,   // 4 bytes/weight
+        }
+    }
+}
+
+impl ExpertBackend for NativeQuant<'_> {
+    fn execute_ffn(
+        &mut self,
+        layer: usize,
+        plan: &DispatchPlan,
+        h: &Tensor,
+        y: &mut Tensor,
+        arena: &mut FfnArena,
+        exec: &Executor,
+    ) -> Result<FfnLayerReport> {
+        let (_, d) = h.dims2();
+        let w = &self.layers[layer];
+        let ql = &self.qlayers[layer];
+        let batches = &plan.ffn_batches;
+        if batches.is_empty() {
+            return Ok(FfnLayerReport::default());
+        }
+        let workers = exec.workers();
+        let mut n_shards = 0;
+        if workers > 1 {
+            let shards_cap = arena.shards.capacity();
+            plan_shards(
+                plan,
+                self.partition,
+                workers,
+                |bi| Self::row_cost(ql, w, batches[bi].expert),
+                &mut arena.shards,
+            );
+            if arena.shards.capacity() > shards_cap {
+                arena.growths += 1;
+            }
+            n_shards = arena.shards.len();
+        }
+        if n_shards <= 1 {
+            // Serial arm (see NativeBatched): one weight stream per
+            // batch, scatter-add straight into y, both precisions'
+            // scratch arena-owned.
+            let d_ff = w.ffn.first().map_or(0, |e| e.w1.shape[1]);
+            arena.prepare_serial_mixed(d_ff, d);
+            for batch in batches {
+                gather_rows(
+                    &mut arena.gather,
+                    h,
+                    &batch.tokens,
+                    d,
+                    &mut arena.growths,
+                );
+                match &ql[batch.expert] {
+                    Some(q) => q.forward_batch_into(
+                        &arena.gather,
+                        Some(batch.gates.as_slice()),
+                        &mut arena.qscratch,
+                        &mut y.data,
+                        Some(batch.tokens.as_slice()),
+                    ),
+                    None => w.ffn[batch.expert].forward_batch_into(
+                        &arena.gather,
+                        Some(batch.gates.as_slice()),
+                        &mut arena.scratch,
+                        &mut y.data,
+                        Some(batch.tokens.as_slice()),
+                    ),
+                }
+            }
+            return Ok(FfnLayerReport::default());
+        }
+
+        // Token-parallel arm: byte-weighted shards over the executor,
+        // then the canonical serial combine (see NativeBatched — the
+        // combine order is precision-blind).
+        arena.ensure_shard_bufs(n_shards);
+        arena.last_shards = n_shards;
+        let l1_budget = arena.l1_budget_bytes;
+        let shards = &arena.shards;
+        exec.for_each_mut(
+            &mut arena.shard_bufs[..n_shards],
+            |idx, buf| {
+                let w0 = Instant::now();
+                let spec = &shards[idx];
+                let batch = &batches[spec.batch];
+                let e = &w.ffn[batch.expert];
+                let f = e.w1.shape[1];
+                buf.prepare(
+                    spec.len,
+                    d,
+                    f.max(d),
+                    pick_f_tile(f, l1_budget),
+                );
+                buf.prepare_quant(d, f);
+                let rows =
+                    &batch.tokens[spec.start..spec.start + spec.len];
+                for (i, &tok) in rows.iter().enumerate() {
+                    buf.gather.data[i * d..(i + 1) * d]
+                        .copy_from_slice(h.row(tok));
+                }
+                let gates =
+                    &batch.gates[spec.start..spec.start + spec.len];
+                let (gather, out, scratch, qscratch) =
+                    buf.parts_mixed();
+                match &ql[batch.expert] {
+                    Some(q) => q.forward_batch_into(
+                        gather,
+                        Some(gates),
+                        qscratch,
+                        &mut out[..spec.len * d],
+                        None,
+                    ),
+                    None => e.forward_batch_into(
+                        gather,
+                        Some(gates),
+                        scratch,
+                        &mut out[..spec.len * d],
+                        None,
+                    ),
+                }
+                buf.ns = w0.elapsed().as_nanos() as u64;
+            },
+        );
+        for (spec, buf) in
+            arena.shards.iter().zip(&arena.shard_bufs[..n_shards])
+        {
+            let batch = &batches[spec.batch];
+            let rows = &batch.tokens[spec.start..spec.start + spec.len];
+            for (i, &tok) in rows.iter().enumerate() {
+                let orow = &mut y.data[tok * d..(tok + 1) * d];
+                axpy(1.0, &buf.out[i * d..(i + 1) * d], orow);
+            }
+        }
+        Ok(FfnLayerReport::default())
+    }
+}
 // lint: end
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Precision;
     use crate::moe::router::route;
+    use crate::moe::weights::QuantStackWeights;
     use crate::util::rng::Rng;
 
     fn setup(
@@ -1018,6 +1195,154 @@ mod tests {
         let n0 = shards.iter().filter(|s| s.batch == 0).count();
         let n1 = shards.iter().filter(|s| s.batch == 1).count();
         assert_eq!(n0, n1);
+    }
+
+    fn quant<'a>(
+        weights: &'a StackWeights,
+        q: &'a QuantStackWeights,
+        partition: Partition,
+    ) -> NativeQuant<'a> {
+        NativeQuant {
+            layers: &weights.layers,
+            qlayers: &q.layers,
+            partition,
+        }
+    }
+
+    #[test]
+    fn mixed_precision_costs_split_shards_unevenly() {
+        // Satellite of the quantization PR: with the *real* NativeQuant
+        // cost (streamed bytes/row), two equal-row batches whose experts
+        // differ only in precision split into genuinely uneven shard
+        // counts — the f32 batch carries 4x the bytes, so ~4x the
+        // shards. This retires the "cost weighting is a row-sizing
+        // no-op" caveat (DESIGN.md §11).
+        use crate::coordinator::dispatch::ExpertBatch;
+        let cfg = MoeConfig::preset("test"); // d_ff = 64
+        let weights = StackWeights::init(2, &cfg);
+        let prec =
+            [Precision::F32, Precision::Int8, Precision::F32, Precision::F32];
+        let q = QuantStackWeights::build(&weights, &prec);
+        let mk = |expert: usize, n: usize| ExpertBatch {
+            expert,
+            tokens: (0..n).collect(),
+            gates: vec![1.0; n],
+        };
+        let plan = DispatchPlan {
+            ffn_batches: vec![mk(0, 64), mk(1, 64)],
+            zc_inline: Vec::new(),
+            dropped: Vec::new(),
+            expert_counts: vec![64, 64],
+        };
+        let w = &weights.layers[0];
+        let ql = &q.layers[0];
+        assert_eq!(NativeQuant::row_cost(ql, w, 0), 64 * 4);
+        assert_eq!(NativeQuant::row_cost(ql, w, 1), 64);
+        let mut shards = Vec::new();
+        plan_shards(
+            &plan,
+            Partition::Shard,
+            4,
+            |bi| NativeQuant::row_cost(ql, w, plan.ffn_batches[bi].expert),
+            &mut shards,
+        );
+        // total cost 64*256 + 64*64 = 20480; 4 workers * oversub 4 ->
+        // target 1280/shard: f32 batch ceil(16384/1280)=13 shards, int8
+        // batch ceil(4096/1280)=4.
+        let n0 = shards.iter().filter(|s| s.batch == 0).count();
+        let n1 = shards.iter().filter(|s| s.batch == 1).count();
+        assert_eq!((n0, n1), (13, 4), "{shards:?}");
+    }
+
+    #[test]
+    fn quant_backend_with_all_f32_is_bitwise_equal_to_batched() {
+        // An all-f32 precision map must make NativeQuant a bit-exact
+        // alias of NativeBatched: same kernel, same blocking, same
+        // combine — and same shard plan (uniform costs are
+        // row-proportional regardless of scale).
+        let (cfg, weights, x) = setup("test", 11, 48);
+        let q = QuantStackWeights::build(
+            &weights,
+            &[Precision::F32; 4],
+        );
+        for workers in [1usize, 4] {
+            let exec = Executor::Scoped { workers };
+            let (yb, _) = run_backend(
+                &mut batched(&weights, Partition::Shard),
+                &cfg, &weights, &x, &exec,
+            );
+            let (yq, _) = run_backend(
+                &mut quant(&weights, &q, Partition::Shard),
+                &cfg, &weights, &x, &exec,
+            );
+            assert_eq!(yb.data, yq.data, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn quant_backend_is_bitwise_deterministic_across_fanout() {
+        // The §17 contract at backend level: int8 outputs never depend
+        // on worker count, partition strategy or executor.
+        let (cfg, weights, x) = setup("test", 13, 64);
+        let q =
+            QuantStackWeights::build(&weights, &[Precision::Int8; 4]);
+        let (y1, _) = run_backend(
+            &mut quant(&weights, &q, Partition::Shard),
+            &cfg, &weights, &x, &Executor::serial(),
+        );
+        for partition in Partition::all() {
+            for workers in [1, 2, 4, 8] {
+                let pool = crate::util::pool::ExecPool::new(workers);
+                for exec in [
+                    Executor::Scoped { workers },
+                    Executor::Pool(&pool),
+                ] {
+                    let (yw, _) = run_backend(
+                        &mut quant(&weights, &q, partition),
+                        &cfg, &weights, &x, &exec,
+                    );
+                    assert_eq!(
+                        y1.data, yw.data,
+                        "workers={workers} partition={} diverged",
+                        partition.label()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_backend_tracks_oracle_on_a_routing_stable_stack() {
+        // Kernel-level tolerance at backend level: on a single layer the
+        // router sees the identical input for both precisions (routing
+        // reads h, quantization only perturbs FFN outputs), so the
+        // comparison is routing-stable and the error is purely the int8
+        // kernel's. Multi-layer stacks can legitimately flip top-k picks
+        // on borderline tokens; those gates live in bench::quality.
+        let mut cfg = MoeConfig::preset("test");
+        cfg.n_layers = 1;
+        let weights = StackWeights::init(17, &cfg);
+        let mut rng = Rng::new(0x51AB);
+        let x = Tensor::randn(&mut rng, &[64, cfg.d_model], 1.0);
+        let (y_f32, _) = run_backend(
+            &mut NativeSingle { layers: &weights.layers },
+            &cfg, &weights, &x, &Executor::serial(),
+        );
+        let q =
+            QuantStackWeights::build(&weights, &[Precision::Int8; 4]);
+        let (y_q, _) = run_backend(
+            &mut quant(&weights, &q, Partition::Shard),
+            &cfg, &weights, &x, &Executor::serial(),
+        );
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (a, b) in y_q.data.iter().zip(&y_f32.data) {
+            num += ((a - b) as f64).powi(2);
+            den += (*b as f64).powi(2);
+        }
+        let rel = (num / den.max(1e-30)).sqrt();
+        assert!(rel < 0.1, "quantized stack diverged: rel {rel}");
+        assert!(den > 0.0);
     }
 
     #[test]

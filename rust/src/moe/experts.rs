@@ -11,7 +11,9 @@
 //! into bucketed micro-batches (possibly on another device), ZC experts are
 //! applied inline where the token already lives.
 
-use crate::tensor::ops::{axpy, dot, silu, softmax_slice};
+use crate::tensor::ops::{
+    axpy, dot, dot_i8, quantize_row_i8, silu, softmax_slice,
+};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -227,6 +229,239 @@ impl FfnScratch {
     }
 }
 
+/// Per-expert symmetric int8 quantization of one SwiGLU expert
+/// (DESIGN.md §17): each weight matrix is stored transposed so every
+/// *output channel* is a contiguous int8 row with its own scale
+/// (`scale_c = max|w_col_c| / 127`), which is what lets the kernel run
+/// the whole reduction in exact i32 arithmetic and dequantize with one
+/// multiply per output scalar. Activations are quantized per token row
+/// with the same symmetric rule at kernel time. Quantization is a pure
+/// per-(expert, channel) / per-token function, so int8 outputs inherit
+/// the f32 path's bitwise determinism across workers × partitions ×
+/// replica counts.
+#[derive(Clone, Debug)]
+pub struct QuantFfnExpert {
+    pub d_model: usize,
+    pub d_ff: usize,
+    /// w1ᵀ codes, [F, D] row-major: row `c` is gate-proj output channel
+    /// `c`.
+    w1q: Vec<i8>,
+    /// w3ᵀ codes, [F, D].
+    w3q: Vec<i8>,
+    /// w2ᵀ codes, [D, F]: row `c` is down-proj output channel `c`.
+    w2q: Vec<i8>,
+    /// Per-output-channel scales (len F / F / D).
+    s1: Vec<f32>,
+    s3: Vec<f32>,
+    s2: Vec<f32>,
+}
+
+impl QuantFfnExpert {
+    /// Quantize a full-precision expert. Build-time only (allocates);
+    /// the forward path below is allocation-free.
+    pub fn from_f32(e: &FfnExpert) -> QuantFfnExpert {
+        let (d, f) = e.w1.dims2();
+        let mut q = QuantFfnExpert {
+            d_model: d,
+            d_ff: f,
+            w1q: vec![0; f * d],
+            w3q: vec![0; f * d],
+            w2q: vec![0; d * f],
+            s1: vec![0.0; f],
+            s3: vec![0.0; f],
+            s2: vec![0.0; d],
+        };
+        let mut col = vec![0.0f32; d.max(f)];
+        for c in 0..f {
+            for k in 0..d {
+                col[k] = e.w1.data[k * f + c];
+            }
+            q.s1[c] =
+                quantize_row_i8(&col[..d], &mut q.w1q[c * d..(c + 1) * d]);
+            for k in 0..d {
+                col[k] = e.w3.data[k * f + c];
+            }
+            q.s3[c] =
+                quantize_row_i8(&col[..d], &mut q.w3q[c * d..(c + 1) * d]);
+        }
+        for c in 0..d {
+            for k in 0..f {
+                col[k] = e.w2.data[k * d + c];
+            }
+            q.s2[c] =
+                quantize_row_i8(&col[..f], &mut q.w2q[c * f..(c + 1) * f]);
+        }
+        q
+    }
+
+    /// Serialized footprint of this expert: int8 codes + f32 scales —
+    /// what placement budgeting and migration pricing charge for an
+    /// int8 replica (~¼ of the f32 expert).
+    pub fn bytes(&self) -> usize {
+        self.w1q.len()
+            + self.w3q.len()
+            + self.w2q.len()
+            + (self.s1.len() + self.s3.len() + self.s2.len()) * 4
+    }
+
+    // lint: no-alloc — the int8 expert kernel is steady-state serving
+    // code: per-token work must stay off the allocator exactly like the
+    // f32 kernel above (DESIGN.md §11, §17).
+    /// Batched int8 forward: the quantized twin of
+    /// [`FfnExpert::forward_batch_into`] — same accumulate-into-`out`
+    /// contract, same gate/scatter semantics, same
+    /// [`FFN_TOKEN_BLOCK`]-token weight streaming. Each token's result
+    /// is a pure function of its row and the codes (the block shares
+    /// only the weight stream, never mixes tokens), so outputs are
+    /// independent of blocking, shard boundaries and replica slicing.
+    pub fn forward_batch_into(
+        &self,
+        x: &Tensor,
+        gates: Option<&[f32]>,
+        scratch: &mut QuantScratch,
+        out: &mut [f32],
+        scatter: Option<&[usize]>,
+    ) {
+        let (b, d) = x.dims2();
+        debug_assert_eq!(d, self.d_model);
+        let f = self.d_ff;
+        let _ = scratch.ensure(d, f);
+        const BLK: usize = FFN_TOKEN_BLOCK;
+        let mut i = 0;
+        while i < b {
+            let blk = (b - i).min(BLK);
+            // 1. Per-token symmetric input quantization.
+            for t in 0..blk {
+                let row = &x.data[(i + t) * d..(i + t + 1) * d];
+                scratch.sx[t] =
+                    quantize_row_i8(row, &mut scratch.xq[t * d..(t + 1) * d]);
+            }
+            // 2. Up-projections: one pass over the int8 weight rows,
+            // shared by the block's token lanes; exact i32 reduction,
+            // one dequantizing multiply per (token, channel) scalar.
+            for c in 0..f {
+                let w1row = &self.w1q[c * d..(c + 1) * d];
+                let w3row = &self.w3q[c * d..(c + 1) * d];
+                for t in 0..blk {
+                    let xrow = &scratch.xq[t * d..(t + 1) * d];
+                    let g = dot_i8(w1row, xrow) as f32
+                        * (self.s1[c] * scratch.sx[t]);
+                    let l = dot_i8(w3row, xrow) as f32
+                        * (self.s3[c] * scratch.sx[t]);
+                    scratch.h[t * f + c] = silu(g) * l;
+                }
+            }
+            // 3. Per-token re-quantization of the hidden activations.
+            for t in 0..blk {
+                scratch.sh[t] = quantize_row_i8(
+                    &scratch.h[t * f..(t + 1) * f],
+                    &mut scratch.hq[t * f..(t + 1) * f],
+                );
+            }
+            // 4. Down-projection (i32 reduction, dequantized once per
+            // output scalar), then gate-scale and scatter like the f32
+            // kernel.
+            for c in 0..d {
+                let w2row = &self.w2q[c * f..(c + 1) * f];
+                for t in 0..blk {
+                    let hrow = &scratch.hq[t * f..(t + 1) * f];
+                    scratch.acc[t * d + c] = dot_i8(w2row, hrow) as f32
+                        * (self.s2[c] * scratch.sh[t]);
+                }
+            }
+            for t in 0..blk {
+                let g = gates.map_or(1.0, |gs| gs[i + t]);
+                let at = scatter.map_or(i + t, |s| s[i + t]);
+                axpy(
+                    g,
+                    &scratch.acc[t * d..(t + 1) * d],
+                    &mut out[at * d..(at + 1) * d],
+                );
+            }
+            i += blk;
+        }
+    }
+    // lint: end
+}
+
+/// Reusable buffers for [`QuantFfnExpert::forward_batch_into`]: int8
+/// code rows for inputs and hidden activations plus the f32 hidden /
+/// output-block intermediates, sized for [`FFN_TOKEN_BLOCK`] lanes.
+/// Lives next to [`FfnScratch`] in the arena so a mixed-precision layer
+/// has both kernels' scratch at hand without allocating (DESIGN.md §11).
+#[derive(Default)]
+pub struct QuantScratch {
+    xq: Vec<i8>,
+    hq: Vec<i8>,
+    h: Vec<f32>,
+    acc: Vec<f32>,
+    sx: [f32; FFN_TOKEN_BLOCK],
+    sh: [f32; FFN_TOKEN_BLOCK],
+}
+
+impl QuantScratch {
+    pub fn new() -> QuantScratch {
+        QuantScratch::default()
+    }
+
+    /// Grow to hold `FFN_TOKEN_BLOCK` lanes of width `d` (model) and `f`
+    /// (hidden); returns whether any backing allocation grew (arena
+    /// growth accounting).
+    pub(crate) fn ensure(&mut self, d: usize, f: usize) -> bool {
+        let mut grew = false;
+        if self.xq.len() < FFN_TOKEN_BLOCK * d {
+            self.xq.resize(FFN_TOKEN_BLOCK * d, 0);
+            self.acc.resize(FFN_TOKEN_BLOCK * d, 0.0);
+            grew = true;
+        }
+        if self.hq.len() < FFN_TOKEN_BLOCK * f {
+            self.hq.resize(FFN_TOKEN_BLOCK * f, 0);
+            self.h.resize(FFN_TOKEN_BLOCK * f, 0.0);
+            grew = true;
+        }
+        grew
+    }
+}
+
+/// One placed expert's weights at its stack-wide serving precision —
+/// what a cluster worker holds per owned expert. Precision is a
+/// per-expert property of the placement plan, uniform across every
+/// replica of the expert (DESIGN.md §17), so dispatch can split a
+/// replicated expert's micro-batch freely without the outputs depending
+/// on which replica ran which slice.
+#[derive(Clone, Debug)]
+pub enum ExpertParams {
+    F32(FfnExpert),
+    Int8(QuantFfnExpert),
+}
+
+impl ExpertParams {
+    // lint: no-alloc — per-unit kernel dispatch on the cluster worker's
+    // steady-state path (DESIGN.md §17).
+    /// Run the batched kernel for this expert's precision. Both arms
+    /// share the accumulate/gate/scatter contract of
+    /// [`FfnExpert::forward_batch_into`].
+    pub fn forward_batch_into(
+        &self,
+        x: &Tensor,
+        gates: Option<&[f32]>,
+        scratch: &mut FfnScratch,
+        qscratch: &mut QuantScratch,
+        out: &mut [f32],
+        scatter: Option<&[usize]>,
+    ) {
+        match self {
+            ExpertParams::F32(e) => {
+                e.forward_batch_into(x, gates, scratch, out, scatter)
+            }
+            ExpertParams::Int8(q) => {
+                q.forward_batch_into(x, gates, qscratch, out, scatter)
+            }
+        }
+    }
+    // lint: end
+}
+
 /// Weights of one constant expert (Eq. 5).
 #[derive(Clone, Debug)]
 pub struct ConstExpert {
@@ -379,6 +614,108 @@ mod tests {
         let x = vec![1.0; d];
         let [a1, a2] = e.alphas(&x);
         assert!((a1 - 0.5).abs() < 1e-6 && (a2 - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quant_expert_tracks_f32_within_tolerance() {
+        // Kernel-level (routing-free) tolerance pin: per-channel int8
+        // weights + per-token int8 activations keep the relative L2
+        // error of each output row small. The bound is generous — it is
+        // a sanity gate, not a precision claim (DESIGN.md §17).
+        use crate::util::proptest::{gen, Prop};
+        Prop::new("quant-vs-f32-tolerance").cases(20).run(
+            |rng| {
+                let d = gen::usize_in(rng, 4, 48);
+                let f = gen::usize_in(rng, 4, 64);
+                let b = gen::usize_in(rng, 1, 9);
+                (d, f, b, rng.next_u64())
+            },
+            |&(d, f, b, seed)| {
+                let mut rng = Rng::new(seed);
+                let e = FfnExpert::init(&mut rng, d, f);
+                let q = QuantFfnExpert::from_f32(&e);
+                let x = Tensor::randn(&mut rng, &[b, d], 1.0);
+                let want = e.forward(&x);
+                let mut got = vec![0.0f32; b * d];
+                let mut qs = QuantScratch::new();
+                q.forward_batch_into(&x, None, &mut qs, &mut got, None);
+                for t in 0..b {
+                    let w = want.row(t);
+                    let g = &got[t * d..(t + 1) * d];
+                    let refn =
+                        w.iter().map(|v| v * v).sum::<f32>().sqrt();
+                    let errn = w
+                        .iter()
+                        .zip(g)
+                        .map(|(a, b)| (a - b) * (a - b))
+                        .sum::<f32>()
+                        .sqrt();
+                    if errn > 0.15 * refn + 1e-4 {
+                        return Err(format!(
+                            "row {t}: err {errn} vs ref norm {refn} \
+                             (d={d} f={f})"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn quant_kernel_is_blocking_and_scatter_invariant() {
+        // Per-token independence: running the same rows as one batch,
+        // token-by-token, or scattered must be bitwise-identical — the
+        // property that makes shard/replica boundaries invisible to the
+        // int8 path (DESIGN.md §17).
+        let mut rng = Rng::new(9);
+        let (d, f, b) = (20, 28, 7);
+        let e = FfnExpert::init(&mut rng, d, f);
+        let q = QuantFfnExpert::from_f32(&e);
+        let x = Tensor::randn(&mut rng, &[b, d], 1.0);
+        let gates: Vec<f32> =
+            (0..b).map(|i| 0.2 + 0.1 * i as f32).collect();
+        let mut whole = vec![0.0f32; b * d];
+        let mut qs = QuantScratch::new();
+        q.forward_batch_into(
+            &x, Some(&gates), &mut qs, &mut whole, None,
+        );
+        // Token at a time, fresh scratch, scattered to its own row.
+        let mut single = vec![0.0f32; b * d];
+        for t in 0..b {
+            let xt =
+                Tensor::from_vec(&[1, d], x.row(t).to_vec());
+            let mut qs2 = QuantScratch::new();
+            let scatter = [t];
+            q.forward_batch_into(
+                &xt,
+                Some(&gates[t..t + 1]),
+                &mut qs2,
+                &mut single,
+                Some(&scatter),
+            );
+        }
+        assert_eq!(whole, single);
+    }
+
+    #[test]
+    fn quant_expert_bytes_are_a_quarter_of_f32() {
+        let mut rng = Rng::new(10);
+        let e = FfnExpert::init(&mut rng, 32, 64);
+        let q = QuantFfnExpert::from_f32(&e);
+        let f32_bytes = e.n_params() * 4;
+        // Codes are 1 byte/weight plus the per-channel f32 scales.
+        assert_eq!(q.bytes(), e.n_params() + (64 + 64 + 32) * 4);
+        assert!(q.bytes() * 3 < f32_bytes, "{} vs {f32_bytes}", q.bytes());
+    }
+
+    #[test]
+    fn quant_scratch_growth_settles() {
+        let mut qs = QuantScratch::new();
+        assert!(qs.ensure(8, 16));
+        assert!(!qs.ensure(8, 16));
+        assert!(!qs.ensure(4, 8), "smaller shapes reuse the buffers");
+        assert!(qs.ensure(8, 32), "wider hidden grows again");
     }
 
     #[test]

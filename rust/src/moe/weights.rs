@@ -2,8 +2,8 @@
 //! native engine's parameters; artifact-driven paths get weights from the
 //! PJRT init artifact instead).
 
-use crate::config::MoeConfig;
-use crate::moe::experts::{ConstExpert, FfnExpert};
+use crate::config::{MoeConfig, Precision};
+use crate::moe::experts::{ConstExpert, FfnExpert, QuantFfnExpert};
 use crate::moe::router::RouterWeights;
 use crate::util::rng::Rng;
 
@@ -87,6 +87,61 @@ impl StackWeights {
     }
 }
 
+/// Pre-quantized copies of the int8-precision experts of a stack —
+/// built once from [`StackWeights`] when a precision map is installed,
+/// so the forward path never quantizes weights per batch.
+/// `layers[l][e]` is `Some` iff expert `e` serves at `Precision::Int8`
+/// (stack-wide, so the same experts are Some in every layer).
+#[derive(Clone, Debug)]
+pub struct QuantStackWeights {
+    pub layers: Vec<Vec<Option<QuantFfnExpert>>>,
+}
+
+impl QuantStackWeights {
+    /// Quantize every expert whose stack-wide precision is `Int8`.
+    /// `precision` is indexed by FFN expert slot; missing entries
+    /// default to `F32` (no quantized copy).
+    pub fn build(
+        stack: &StackWeights,
+        precision: &[Precision],
+    ) -> QuantStackWeights {
+        QuantStackWeights {
+            layers: stack
+                .layers
+                .iter()
+                .map(|l| {
+                    l.ffn
+                        .iter()
+                        .enumerate()
+                        .map(|(e, w)| {
+                            match precision
+                                .get(e)
+                                .copied()
+                                .unwrap_or_default()
+                            {
+                                Precision::Int8 => {
+                                    Some(QuantFfnExpert::from_f32(w))
+                                }
+                                Precision::F32 => None,
+                            }
+                        })
+                        .collect()
+                })
+                .collect(),
+        }
+    }
+
+    /// Total parameter bytes of the quantized copies (all layers).
+    pub fn bytes(&self) -> u64 {
+        self.layers
+            .iter()
+            .flatten()
+            .flatten()
+            .map(|q| q.bytes() as u64)
+            .sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,6 +174,32 @@ mod tests {
         let cfg = MoeConfig::preset("test:vanilla");
         let w = MoeLayerWeights::init(&mut Rng::new(0), &cfg);
         assert!(w.consts.is_empty());
+    }
+
+    #[test]
+    fn quant_stack_quantizes_only_int8_slots() {
+        let cfg = MoeConfig::preset("test"); // 4 FFN experts, 2 layers
+        let w = StackWeights::init(0, &cfg);
+        let prec = vec![
+            Precision::F32,
+            Precision::Int8,
+            Precision::F32,
+            Precision::Int8,
+        ];
+        let q = QuantStackWeights::build(&w, &prec);
+        assert_eq!(q.layers.len(), cfg.n_layers);
+        for l in &q.layers {
+            assert_eq!(l.len(), cfg.n_ffn_experts);
+            assert!(l[0].is_none() && l[2].is_none());
+            assert!(l[1].is_some() && l[3].is_some());
+        }
+        // Bytes match the config-side accounting: 2 experts × n_layers.
+        let per = cfg.ffn_expert_bytes_at(Precision::Int8);
+        assert_eq!(q.bytes(), per * 2 * cfg.n_layers as u64);
+        // A short precision map defaults the tail to f32.
+        let q2 = QuantStackWeights::build(&w, &[Precision::Int8]);
+        assert!(q2.layers[0][0].is_some());
+        assert!(q2.layers[0][1..].iter().all(Option::is_none));
     }
 
     #[test]

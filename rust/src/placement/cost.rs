@@ -28,7 +28,7 @@
 
 use crate::cluster::comm::LayerTraffic;
 use crate::cluster::topology::{LinkModel, Topology};
-use crate::config::MoeConfig;
+use crate::config::{MoeConfig, Precision};
 use crate::moe::balance::load_cv;
 
 use super::plan::{speed_weight, weighted_share, PlacementPlan};
@@ -54,6 +54,13 @@ pub struct CostModel {
     /// adding a replica is priced as one α–β transfer of it (drops are
     /// free — the source keeps its copy).
     pub expert_bytes: u64,
+    /// Stack-wide bytes of one **int8** expert slot (codes + per-channel
+    /// scales, × n_layers) — what a compressed replica charges a
+    /// device's memory budget and what migrating one costs on the wire
+    /// (DESIGN.md §17). Compute seconds stay precision-uniform (a host
+    /// i32 MAC costs what an f32 MAC does): compression buys *bytes*,
+    /// which buy replicas under the budget, which buy makespan.
+    pub expert_bytes_int8: u64,
     /// Relative FFN throughput per device (`flops_per_s / DEVICE_FLOPS`).
     /// Empty means a uniform fleet: `speed(d)` of a missing device is
     /// 1.0, so the homogeneous model is the zero-config special case.
@@ -69,7 +76,19 @@ impl CostModel {
             token_bytes: (cfg.d_model * 4) as u64,
             expert_bytes: cfg.ffn_expert_bytes()
                 * cfg.n_layers.max(1) as u64,
+            expert_bytes_int8: cfg
+                .ffn_expert_bytes_at(Precision::Int8)
+                * cfg.n_layers.max(1) as u64,
             device_speed: Vec::new(),
+        }
+    }
+
+    /// Stack-wide slot bytes of an expert at precision `p` — the figure
+    /// budgets charge per replica and migrations price per add.
+    pub fn expert_bytes_for(&self, p: Precision) -> u64 {
+        match p {
+            Precision::F32 => self.expert_bytes,
+            Precision::Int8 => self.expert_bytes_int8,
         }
     }
 
@@ -657,6 +676,35 @@ mod tests {
         assert_eq!(cost.migration_s(0), 0.0);
         let want = cost.link.alpha_s + cost.link.beta_s_per_byte * 1e6;
         assert!((cost.migration_s(1_000_000) - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn per_precision_slot_bytes_track_config() {
+        let cfg = MoeConfig::preset("test");
+        let cost = model();
+        let n_l = cfg.n_layers as u64;
+        assert_eq!(
+            cost.expert_bytes_for(Precision::F32),
+            cfg.ffn_expert_bytes() * n_l
+        );
+        assert_eq!(
+            cost.expert_bytes_for(Precision::Int8),
+            cfg.ffn_expert_bytes_at(Precision::Int8) * n_l
+        );
+        assert!(cost.expert_bytes_int8 < cost.expert_bytes);
+        // Scoring is precision-blind: the same replica layout scores
+        // identically whatever the plan's precision map says (compute
+        // seconds are uniform across precisions; bytes only gate
+        // budgets and migrations).
+        let profile =
+            LoadProfile::from_counts(vec![vec![50, 10, 10, 10]]).unwrap();
+        let plan = PlacementPlan::round_robin(4, 2);
+        let mut quantized = plan.clone();
+        quantized.set_precision(0, Precision::Int8);
+        let a = cost.score(&plan, &profile);
+        let b = cost.score(&quantized, &profile);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.comm_bytes, b.comm_bytes);
     }
 
     #[test]

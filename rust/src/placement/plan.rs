@@ -21,6 +21,7 @@ use std::ops::Range;
 
 use anyhow::Result;
 
+use crate::config::Precision;
 use crate::util::json::Json;
 
 /// Where each FFN expert lives. ZC experts are implicitly replicated on
@@ -32,6 +33,11 @@ pub struct PlacementPlan {
     /// FFN expert `e`. `replicas[e][0]` is the *primary* (the historical
     /// single owner).
     replicas: Vec<Vec<usize>>,
+    /// `precision[e]` = the stack-wide serving precision of FFN expert
+    /// `e` (DESIGN.md §17). Uniform across every replica and every
+    /// layer: replicas of one expert never mix precisions, so the
+    /// token → replica split stays output-invariant. Defaults to f32.
+    precision: Vec<Precision>,
 }
 
 /// The replica-set difference between two plans, as per-(expert, device)
@@ -129,6 +135,7 @@ impl PlacementPlan {
             replicas: (0..n_ffn_experts)
                 .map(|e| vec![e % n_devices])
                 .collect(),
+            precision: vec![Precision::F32; n_ffn_experts],
         }
     }
 
@@ -147,7 +154,8 @@ impl PlacementPlan {
         replicas: Vec<Vec<usize>>,
         n_devices: usize,
     ) -> Result<PlacementPlan> {
-        let plan = PlacementPlan { n_devices, replicas };
+        let precision = vec![Precision::F32; replicas.len()];
+        let plan = PlacementPlan { n_devices, replicas, precision };
         plan.validate()?;
         Ok(plan)
     }
@@ -175,6 +183,12 @@ impl PlacementPlan {
                 );
             }
         }
+        anyhow::ensure!(
+            self.precision.len() == self.replicas.len(),
+            "precision map length {} != expert count {}",
+            self.precision.len(),
+            self.replicas.len()
+        );
         Ok(())
     }
 
@@ -210,6 +224,44 @@ impl PlacementPlan {
     /// Does any expert have more than one replica?
     pub fn is_replicated(&self) -> bool {
         self.replicas.iter().any(|r| r.len() > 1)
+    }
+
+    /// Stack-wide serving precision of FFN expert `e`.
+    pub fn precision(&self, expert: usize) -> Precision {
+        self.precision[expert]
+    }
+
+    /// The full per-expert precision map (what the engine/cluster feed
+    /// into [`crate::moe::weights::QuantStackWeights::build`]).
+    pub fn precisions(&self) -> &[Precision] {
+        &self.precision
+    }
+
+    /// Set the stack-wide precision of `expert` — every replica of it,
+    /// in every layer, serves at `p` from the next (re)spawn on.
+    pub fn set_precision(&mut self, expert: usize, p: Precision) {
+        self.precision[expert] = p;
+    }
+
+    /// Does any expert serve at a non-f32 precision?
+    pub fn is_mixed_precision(&self) -> bool {
+        self.precision.iter().any(|&p| p != Precision::F32)
+    }
+
+    /// Experts whose precision differs between `self` and `to`. A
+    /// precision change re-encodes the device-resident weights (no
+    /// interconnect traffic — the f32 master copy is local), but the
+    /// holding devices must still swap kernels/replicas, so the cluster
+    /// treats these like replica-set diffs when respawning.
+    pub fn diff_precision(&self, to: &PlacementPlan) -> Vec<usize> {
+        assert_eq!(
+            self.precision.len(),
+            to.precision.len(),
+            "plan size mismatch"
+        );
+        (0..self.precision.len())
+            .filter(|&e| self.precision[e] != to.precision[e])
+            .collect()
     }
 
     /// Replace `expert`'s whole replica set with the single `device`
@@ -334,6 +386,15 @@ impl PlacementPlan {
                         .collect(),
                 ),
             ),
+            (
+                "precision",
+                Json::Arr(
+                    self.precision
+                        .iter()
+                        .map(|p| Json::Str(p.label().to_string()))
+                        .collect(),
+                ),
+            ),
         ])
     }
 
@@ -362,7 +423,31 @@ impl PlacementPlan {
                         .collect::<Result<Vec<usize>>>()
                 })
                 .collect::<Result<Vec<Vec<usize>>>>()?;
-            return PlacementPlan::from_replicas(replicas, n_devices);
+            let mut plan =
+                PlacementPlan::from_replicas(replicas, n_devices)?;
+            // Precision map: optional — plans captured before
+            // mixed-precision placement parse as all-f32.
+            if let Some(prec) = j.get("precision").and_then(Json::as_arr)
+            {
+                anyhow::ensure!(
+                    prec.len() == plan.precision.len(),
+                    "plan json: precision length {} != expert count {}",
+                    prec.len(),
+                    plan.precision.len()
+                );
+                for (e, v) in prec.iter().enumerate() {
+                    let s = v.as_str().ok_or_else(|| {
+                        anyhow::anyhow!("plan json: bad precision entry")
+                    })?;
+                    plan.precision[e] =
+                        Precision::parse(s).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "plan json: unknown precision '{s}'"
+                            )
+                        })?;
+                }
+            }
+            return Ok(plan);
         }
         let owner = j
             .get("owner")
@@ -505,6 +590,41 @@ mod tests {
         let s = replica_slices(1000, &[speed_weight(2.0), 1024]);
         assert!(s[0].len() > s[1].len());
         assert_eq!(s[0].len(), 666, "floor(1000·2048/3072)");
+    }
+
+    #[test]
+    fn precision_map_defaults_diffs_and_roundtrips() {
+        let mut p = PlacementPlan::round_robin(4, 2);
+        assert!(!p.is_mixed_precision());
+        assert!(p.precisions().iter().all(|&x| x == Precision::F32));
+        p.set_precision(2, Precision::Int8);
+        assert!(p.is_mixed_precision());
+        assert_eq!(p.precision(2), Precision::Int8);
+        assert!(p.validate().is_ok());
+        // diff_precision catches precision-only changes that
+        // diff_experts (replica sets) cannot see.
+        let base = PlacementPlan::round_robin(4, 2);
+        assert_eq!(base.diff_precision(&p), vec![2]);
+        assert!(base.diff_experts(&p).is_empty());
+        assert_ne!(base, p, "precision is part of plan identity");
+        // JSON roundtrip preserves the map.
+        let back = PlacementPlan::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+        // Pre-precision JSON (no "precision" key) parses as all-f32.
+        let legacy = Json::parse(
+            "{\"n_devices\": 2, \"replicas\": [[0], [1], [0], [1]]}",
+        )
+        .unwrap();
+        let old = PlacementPlan::from_json(&legacy).unwrap();
+        assert!(!old.is_mixed_precision());
+        assert_eq!(old, base);
+        // Bad precision entries are rejected.
+        let bad = Json::parse(
+            "{\"n_devices\": 2, \"replicas\": [[0]], \
+             \"precision\": [\"fp4\"]}",
+        )
+        .unwrap();
+        assert!(PlacementPlan::from_json(&bad).is_err());
     }
 
     #[test]

@@ -19,6 +19,7 @@ use anyhow::Result;
 use super::cost::{CostModel, DeltaScorer, Edit};
 use super::plan::PlacementPlan;
 use super::profile::LoadProfile;
+use crate::config::Precision;
 
 /// Local-search iteration cap (each iteration applies the single best
 /// improving move or swap; termination well before this in practice).
@@ -41,6 +42,13 @@ pub enum Strategy {
     /// Refined seed + replicate/drop steps: hot experts may be split
     /// across up to `max_replicas` devices (never worse than refined).
     Replicated,
+    /// Replicated seed + compressed-replica steps (DESIGN.md §17):
+    /// byte-exact accounting lets a hot expert gain an *int8* replica —
+    /// demoting it to `Precision::Int8` stack-wide — on a device where
+    /// a full-precision copy does not fit the memory budget. Never
+    /// worse than replicated (strictly improving steps only); without
+    /// a budget it is identical to replicated.
+    Compressed,
 }
 
 impl Strategy {
@@ -52,9 +60,12 @@ impl Strategy {
             "replicated" | "replicate" | "replicas" => {
                 Ok(Strategy::Replicated)
             }
+            "compressed" | "compress" | "int8" => {
+                Ok(Strategy::Compressed)
+            }
             other => anyhow::bail!(
                 "unknown placement strategy '{other}' \
-                 (expected rr|lpt|refined|replicated)"
+                 (expected rr|lpt|refined|replicated|compressed)"
             ),
         }
     }
@@ -65,15 +76,17 @@ impl Strategy {
             Strategy::Lpt => "lpt",
             Strategy::Refined => "refined",
             Strategy::Replicated => "replicated",
+            Strategy::Compressed => "compressed",
         }
     }
 
-    pub fn all() -> [Strategy; 4] {
+    pub fn all() -> [Strategy; 5] {
         [
             Strategy::RoundRobin,
             Strategy::Lpt,
             Strategy::Refined,
             Strategy::Replicated,
+            Strategy::Compressed,
         ]
     }
 }
@@ -201,7 +214,150 @@ impl Planner {
                     self.max_replicas.min(n_devices),
                 ))
             }
+            Strategy::Compressed => {
+                // Extend the replicated chain: monotone seeding again,
+                // so compressed >= replicated >= refined by
+                // construction.
+                let lpt = self.lpt(n_devices, profile, cap);
+                let seed = self.best_of(vec![rr, lpt], profile);
+                let refined = self.refine(seed, profile, cap, 1);
+                let replicated = self.refine(
+                    refined,
+                    profile,
+                    cap,
+                    self.max_replicas.min(n_devices),
+                );
+                Ok(self.compress(replicated, profile, n_devices))
+            }
         }
+    }
+
+    /// Parameter bytes resident on each device under `plan`'s
+    /// per-expert precision map (every replica of expert `e` costs
+    /// [`CostModel::expert_bytes_for`] at `plan.precision(e)`). This is
+    /// the byte-exact accounting [`Strategy::Compressed`] refines
+    /// under, in contrast to the slot-based `budget / expert_bytes` cap
+    /// the full-precision strategies use.
+    pub fn device_bytes(&self, plan: &PlacementPlan) -> Vec<u64> {
+        (0..plan.n_devices())
+            .map(|d| {
+                plan.device_experts(d)
+                    .iter()
+                    .map(|&e| {
+                        self.cost.expert_bytes_for(plan.precision(e))
+                    })
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// Compressed-replica refinement (DESIGN.md §17): greedy replicate
+    /// steps under *byte-exact* per-device accounting. Each candidate
+    /// places a replica of expert `e` on device `d`; when the replica
+    /// fits at `e`'s current precision it is taken as-is, and when only
+    /// the int8 footprint fits, `e` is demoted to `Precision::Int8`
+    /// *stack-wide* (precision is per-expert, never per-replica — the
+    /// bitwise-determinism contract of DESIGN.md §17) and the replica
+    /// is placed at quantized bytes. Demotion frees bytes on every
+    /// device already holding `e` and leaves the modeled makespan
+    /// untouched (the cost model prices int8 and f32 MACs identically;
+    /// the win is bytes -> replicas -> load splitting), so candidates
+    /// are scored by the plain [`Edit::Replicate`] delta. Strictly
+    /// improving steps only: never worse than its replicated seed, and
+    /// with no memory budget it returns the seed unchanged (an
+    /// unbounded fleet never needs to trade accuracy for bytes).
+    fn compress(
+        &self,
+        seed: PlacementPlan,
+        profile: &LoadProfile,
+        n_devices: usize,
+    ) -> PlacementPlan {
+        let Some(budget) = self.mem_budget_bytes else {
+            return seed;
+        };
+        let n_ffn = seed.n_ffn_experts();
+        let max_replicas = self.max_replicas.min(n_devices);
+        let mut precision: Vec<Precision> = seed.precisions().to_vec();
+        let mut scorer = DeltaScorer::new(&self.cost, profile, seed);
+        let mut cur = scorer.makespan();
+        for _ in 0..REFINE_MAX_ROUNDS {
+            // Per-device resident bytes under the current precision
+            // map. Recomputed each round: a demotion in round k frees
+            // bytes every later round gets to spend.
+            let used: Vec<u64> = (0..n_devices)
+                .map(|d| {
+                    scorer
+                        .plan()
+                        .device_experts(d)
+                        .iter()
+                        .map(|&e| self.cost.expert_bytes_for(precision[e]))
+                        .sum()
+                })
+                .collect();
+            // (makespan, expert, device, demote-to-int8-first)
+            let mut best: Option<(f64, usize, usize, bool)> = None;
+            for e in 0..n_ffn {
+                if scorer.plan().replica_count(e) >= max_replicas {
+                    continue;
+                }
+                let p = precision[e];
+                for d in 0..n_devices {
+                    if self.is_down(d)
+                        || scorer
+                            .plan()
+                            .replicas(e)
+                            .binary_search(&d)
+                            .is_ok()
+                    {
+                        continue;
+                    }
+                    // `used[d]` is unaffected by demoting `e`: `d`
+                    // does not hold `e` yet, and demotion only frees
+                    // bytes on devices that do.
+                    let fits_as_is = used[d]
+                        + self.cost.expert_bytes_for(p)
+                        <= budget;
+                    let fits_demoted = p == Precision::F32
+                        && used[d]
+                            + self
+                                .cost
+                                .expert_bytes_for(Precision::Int8)
+                            <= budget;
+                    if !fits_as_is && !fits_demoted {
+                        continue;
+                    }
+                    let m =
+                        scorer.eval(Edit::Replicate { expert: e, on: d });
+                    let better = match best {
+                        None => true,
+                        Some((bm, ..)) => m < bm,
+                    };
+                    if better {
+                        // Full precision is preferred whenever it
+                        // fits; demotion is the fallback that makes
+                        // the replica affordable.
+                        best = Some((m, e, d, !fits_as_is));
+                    }
+                }
+            }
+            match best {
+                Some((m, e, d, demote))
+                    if m < cur * (1.0 - REFINE_MIN_GAIN) =>
+                {
+                    if demote {
+                        precision[e] = Precision::Int8;
+                    }
+                    scorer.apply(Edit::Replicate { expert: e, on: d });
+                    cur = m;
+                }
+                _ => break,
+            }
+        }
+        let mut plan = scorer.into_plan();
+        for (e, &p) in precision.iter().enumerate() {
+            plan.set_precision(e, p);
+        }
+        plan
     }
 
     /// Lowest-makespan plan, earliest wins ties (keeps the baseline when
@@ -449,10 +605,15 @@ mod tests {
             Strategy::parse("replicated").unwrap(),
             Strategy::Replicated
         );
+        assert_eq!(
+            Strategy::parse("compressed").unwrap(),
+            Strategy::Compressed
+        );
         assert!(Strategy::parse("bogus").is_err());
         assert_eq!(Strategy::Refined.label(), "refined");
         assert_eq!(Strategy::Replicated.label(), "replicated");
-        assert_eq!(Strategy::all().len(), 4);
+        assert_eq!(Strategy::Compressed.label(), "compressed");
+        assert_eq!(Strategy::all().len(), 5);
     }
 
     #[test]
@@ -502,6 +663,85 @@ mod tests {
             "budget violated: {:?}",
             plan.device_counts()
         );
+    }
+
+    #[test]
+    fn compressed_replica_beats_full_precision_under_tight_budget() {
+        // The ISSUE 10 acceptance scenario: a skewed workload whose hot
+        // expert wants a second replica, under a per-device byte budget
+        // with room for two f32 experts plus *one int8 copy* — too
+        // tight for a third full-precision slot. Every full-precision
+        // strategy is stuck (the slot cap is 2 and both devices are
+        // full), so the best full-precision plan is the replicated one
+        // (== refined here). Compressed demotes the hot expert to int8
+        // stack-wide, places the cheap replica, and strictly beats the
+        // best full-precision makespan while staying inside the byte
+        // budget.
+        let profile =
+            LoadProfile::from_counts(vec![vec![1000, 10, 10, 10]])
+                .unwrap();
+        let base = planner();
+        let f32b = base.cost.expert_bytes;
+        let i8b = base.cost.expert_bytes_int8;
+        assert!(i8b < f32b);
+        let budget = 2 * f32b + i8b;
+        let p = Planner {
+            mem_budget_bytes: Some(budget),
+            ..base
+        };
+        let mut m_full = f64::INFINITY;
+        for strat in [
+            Strategy::RoundRobin,
+            Strategy::Lpt,
+            Strategy::Refined,
+            Strategy::Replicated,
+        ] {
+            let plan = p.plan(strat, 2, &profile).unwrap();
+            assert!(
+                !plan.is_replicated(),
+                "{strat:?}: no f32 replica can fit a 2-slot device"
+            );
+            assert!(!plan.is_mixed_precision());
+            let m = p.cost.score(&plan, &profile).makespan_s;
+            m_full = m_full.min(m);
+        }
+        let comp = p.plan(Strategy::Compressed, 2, &profile).unwrap();
+        comp.validate().unwrap();
+        assert!(comp.is_mixed_precision());
+        assert_eq!(comp.precision(0), Precision::Int8);
+        assert!(
+            comp.replica_count(0) > 1,
+            "hot expert must gain the compressed replica"
+        );
+        let m_comp = p.cost.score(&comp, &profile).makespan_s;
+        assert!(
+            m_comp < m_full,
+            "compressed {m_comp} must beat best full-precision {m_full}"
+        );
+        // Byte-exact accounting holds even though a device now carries
+        // more replicas than the f32 slot cap allows.
+        let bytes = p.device_bytes(&comp);
+        assert!(
+            bytes.iter().all(|&b| b <= budget),
+            "byte budget {budget} violated: {bytes:?}"
+        );
+        assert!(comp.device_counts().iter().any(|&c| c > 2));
+    }
+
+    #[test]
+    fn compressed_without_budget_is_replicated() {
+        // Unbounded memory never trades accuracy for bytes: the
+        // compressed chain returns the replicated plan unchanged, all
+        // experts at full precision.
+        let profile = LoadProfile::from_counts(vec![vec![
+            1000, 10, 10, 10, 10, 10, 10, 10,
+        ]])
+        .unwrap();
+        let p = planner();
+        let repl = p.plan(Strategy::Replicated, 4, &profile).unwrap();
+        let comp = p.plan(Strategy::Compressed, 4, &profile).unwrap();
+        assert_eq!(comp, repl);
+        assert!(!comp.is_mixed_precision());
     }
 
     #[test]
@@ -734,10 +974,12 @@ mod tests {
                 let m_rr =
                     planner.cost.score(&rr, &profile).makespan_s;
                 let mut m_refined = f64::INFINITY;
+                let mut m_replicated = f64::INFINITY;
                 for strat in [
                     Strategy::Lpt,
                     Strategy::Refined,
                     Strategy::Replicated,
+                    Strategy::Compressed,
                 ] {
                     let plan = planner
                         .plan(strat, *n_dev, &profile)
@@ -750,7 +992,10 @@ mod tests {
                     }
                     let counts = plan.device_counts();
                     let slots: usize = counts.iter().sum();
-                    if strat == Strategy::Replicated {
+                    if matches!(
+                        strat,
+                        Strategy::Replicated | Strategy::Compressed
+                    ) {
                         if slots < n_ffn {
                             return Err(format!(
                                 "replica slots {slots} < {n_ffn}"
@@ -761,7 +1006,20 @@ mod tests {
                             "device counts {counts:?} != {n_ffn}"
                         ));
                     }
-                    if counts.iter().any(|&c| c > cap) {
+                    if strat == Strategy::Compressed {
+                        // Compressed refines under byte-exact
+                        // accounting: replicas may exceed the f32
+                        // slot cap, never the byte budget.
+                        let budget =
+                            planner.mem_budget_bytes.unwrap();
+                        let bytes = planner.device_bytes(&plan);
+                        if bytes.iter().any(|&b| b > budget) {
+                            return Err(format!(
+                                "compressed broke the byte budget \
+                                 {budget}: {bytes:?}"
+                            ));
+                        }
+                    } else if counts.iter().any(|&c| c > cap) {
                         return Err(format!(
                             "{strat:?} violated budget cap {cap}: \
                              {counts:?}"
@@ -781,12 +1039,23 @@ mod tests {
                     // The satellite property: replication never scores
                     // worse than the best single-owner plan under the
                     // same budget (monotone seeding from refined).
-                    if strat == Strategy::Replicated
-                        && m > m_refined * (1.0 + 1e-12)
+                    if strat == Strategy::Replicated {
+                        m_replicated = m;
+                        if m > m_refined * (1.0 + 1e-12) {
+                            return Err(format!(
+                                "replicated makespan {m} worse than \
+                                 refined {m_refined}"
+                            ));
+                        }
+                    }
+                    // And the compressed chain extends it: never
+                    // worse than replicated under the same budget.
+                    if strat == Strategy::Compressed
+                        && m > m_replicated * (1.0 + 1e-12)
                     {
                         return Err(format!(
-                            "replicated makespan {m} worse than \
-                             refined {m_refined}"
+                            "compressed makespan {m} worse than \
+                             replicated {m_replicated}"
                         ));
                     }
                 }

@@ -77,8 +77,9 @@ pub enum DeltaKind {
 
 /// One replica-set change inside a [`MigrationPlan`]: add or drop the
 /// replica of `expert` on `device`. A historical single-owner move
-/// decomposes into one `Add` (priced at `expert_bytes`) plus one `Drop`
-/// (free).
+/// decomposes into one `Add` (priced at the expert's footprint *in the
+/// proposed plan's precision* — an int8 compressed replica ships a
+/// quarter of the f32 bytes) plus one `Drop` (free).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ExpertMove {
     pub expert: usize,
@@ -311,7 +312,12 @@ impl PlanTask {
         // Replica-set deltas: adds ship weights (α–β priced), drops are
         // free. A plain owner move therefore costs exactly one
         // expert-copy, as before; pure replication costs its adds and
-        // nothing on the (kept) source.
+        // nothing on the (kept) source. Adds are priced at the
+        // *proposed* precision's footprint — a compressed int8 replica
+        // crosses the interconnect at quantized bytes — while
+        // stack-wide demotions of already-resident replicas are free:
+        // requantization is local to the holding device
+        // ([`PlacementPlan::diff_precision`]).
         let delta = self.current.delta(&proposed);
         let moves: Vec<ExpertMove> = delta
             .adds
@@ -320,7 +326,10 @@ impl PlanTask {
                 expert,
                 device,
                 kind: DeltaKind::Add,
-                bytes: self.planner.cost.expert_bytes,
+                bytes: self
+                    .planner
+                    .cost
+                    .expert_bytes_for(proposed.precision(expert)),
             })
             .chain(delta.drops.iter().map(|&(expert, device)| {
                 ExpertMove {
@@ -555,5 +564,51 @@ mod tests {
             adds * rp.planner().cost.expert_bytes
         );
         assert!(mig.migration_s > 0.0);
+    }
+
+    #[test]
+    fn compressed_strategy_prices_int8_adds_at_quantized_bytes() {
+        // Under a budget with headroom for one int8 copy but no third
+        // f32 slot, the compressed proposal demotes the hot expert and
+        // ships its new replica at quantized bytes; full-precision adds
+        // (plain moves the chain also found) still price at f32 bytes,
+        // and the stack-wide demotion of resident copies is free.
+        use crate::config::Precision;
+        let cost = CostModel::from_config(&MoeConfig::preset("test"));
+        let f32b = cost.expert_bytes;
+        let i8b = cost.expert_bytes_int8;
+        let planner = Planner::new(cost).with_budget(2 * f32b + i8b);
+        let mut rp = Replanner::new(
+            planner,
+            ReplanConfig {
+                strategy: Strategy::Compressed,
+                min_interval_batches: 1,
+                ..ReplanConfig::default()
+            },
+            4,
+        );
+        let current = PlacementPlan::round_robin(4, 2);
+        rp.observe_loads(&[vec![1000, 2, 2, 2], vec![1000, 2, 2, 2]]);
+        let mig = rp
+            .maybe_replan(&current)
+            .expect("hot expert must justify a compressed replica");
+        assert!(mig.plan.is_mixed_precision());
+        assert_eq!(mig.plan.precision(0), Precision::Int8);
+        assert!(mig.plan.replica_count(0) > 1);
+        let add_bytes: Vec<u64> = mig
+            .moves
+            .iter()
+            .filter(|m| m.kind == DeltaKind::Add)
+            .map(|m| m.bytes)
+            .collect();
+        assert!(
+            add_bytes.contains(&i8b),
+            "int8 replica must ship at quantized bytes: {add_bytes:?}"
+        );
+        assert!(add_bytes.iter().all(|&b| b == i8b || b == f32b));
+        assert_eq!(
+            mig.migration_bytes,
+            add_bytes.iter().sum::<u64>()
+        );
     }
 }

@@ -118,6 +118,62 @@ pub fn axpy(s: f32, x: &[f32], out: &mut [f32]) {
     }
 }
 
+/// Integer dot product over int8 lanes with i32 accumulation — the
+/// quantized twin of [`dot`] (same 4-way unroll). The accumulation order
+/// is fixed, but for the determinism argument (DESIGN.md §17) order does
+/// not even matter: i32 addition is exactly associative, and the worst
+/// case `D·127²` stays far below `i32::MAX` for any model dimension this
+/// crate can represent in memory, so no overflow, no rounding, and the
+/// result is a pure function of the operand values — independent of
+/// partitions, workers and replica slicing by construction.
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0i32; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] as i32 * b[i] as i32;
+        acc[1] += a[i + 1] as i32 * b[i + 1] as i32;
+        acc[2] += a[i + 2] as i32 * b[i + 2] as i32;
+        acc[3] += a[i + 3] as i32 * b[i + 3] as i32;
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] as i32 * b[i] as i32;
+    }
+    s
+}
+
+/// Symmetric int8 quantization of one row: `scale = max|x| / 127`,
+/// `q[i] = round(x[i] / scale)` ∈ [-127, 127]. Returns the scale;
+/// dequantization is `q[i] as f32 * scale`. An all-zero row yields scale
+/// 0.0 with zero codes, so its dequantized value is exactly 0.0. Pure
+/// per-row function — quantizing a token's row never depends on which
+/// batch, shard or replica slice the row arrived in (DESIGN.md §17).
+#[inline]
+pub fn quantize_row_i8(src: &[f32], dst: &mut [i8]) -> f32 {
+    debug_assert_eq!(src.len(), dst.len());
+    let mut m = 0.0f32;
+    for &v in src {
+        let a = v.abs();
+        if a > m {
+            m = a;
+        }
+    }
+    if m == 0.0 {
+        dst.fill(0);
+        return 0.0;
+    }
+    let inv = 127.0 / m;
+    for (q, &v) in dst.iter_mut().zip(src) {
+        // |v|·inv ≤ 127 by construction of `inv`; the clamp only guards
+        // the rounding edge where v·inv lands exactly on ±127.49…
+        *q = (v * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    m / 127.0
+}
+
 /// Numerically-stable in-place softmax over the last axis of a rank-2
 /// tensor.
 pub fn softmax_rows(t: &mut Tensor) {
@@ -413,5 +469,60 @@ mod tests {
         let mut out = vec![1.0, 2.0];
         axpy(2.0, &[3.0, 4.0], &mut out);
         assert_eq!(out, vec![7.0, 10.0]);
+    }
+
+    #[test]
+    fn dot_i8_matches_naive_i32() {
+        let mut rng = Rng::new(11);
+        for len in [0usize, 1, 3, 4, 7, 64, 129] {
+            let a: Vec<i8> = (0..len)
+                .map(|_| (rng.below(255) as i32 - 127) as i8)
+                .collect();
+            let b: Vec<i8> = (0..len)
+                .map(|_| (rng.below(255) as i32 - 127) as i8)
+                .collect();
+            let want: i32 = a
+                .iter()
+                .zip(&b)
+                .map(|(&x, &y)| x as i32 * y as i32)
+                .sum();
+            assert_eq!(dot_i8(&a, &b), want, "len={len}");
+        }
+    }
+
+    #[test]
+    fn quantize_row_round_trips_within_half_step() {
+        let mut rng = Rng::new(12);
+        let src: Vec<f32> =
+            (0..37).map(|_| rng.next_normal() * 3.0).collect();
+        let mut q = vec![0i8; src.len()];
+        let scale = quantize_row_i8(&src, &mut q);
+        assert!(scale > 0.0);
+        for (&v, &c) in src.iter().zip(&q) {
+            let deq = c as f32 * scale;
+            // Symmetric rounding: error bounded by half a quantization
+            // step everywhere in the representable range.
+            assert!(
+                (v - deq).abs() <= scale * 0.5 + 1e-6,
+                "{v} -> {deq} (scale {scale})"
+            );
+        }
+        // The max-|x| element maps to ±127 exactly.
+        let max_idx = src
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(q[max_idx].unsigned_abs(), 127);
+    }
+
+    #[test]
+    fn quantize_zero_row_is_exact() {
+        let src = vec![0.0f32; 9];
+        let mut q = vec![7i8; 9];
+        let scale = quantize_row_i8(&src, &mut q);
+        assert_eq!(scale, 0.0);
+        assert!(q.iter().all(|&c| c == 0));
     }
 }

@@ -93,6 +93,32 @@ fn each_lint_class_fires_on_seeded_fixtures() {
     }
 }
 
+/// The int8 expert kernels (DESIGN.md §17) sit inside `no-alloc` lint
+/// regions: an allocation seeded between the markers in
+/// `moe/experts.rs` fires, and the real file carries the fences — one
+/// around the quantized SwiGLU kernel, one around the mixed-precision
+/// `ExpertParams` dispatch the cluster workers call per unit.
+#[test]
+fn quantized_expert_kernels_are_no_alloc_fenced() {
+    let findings = analyze_source(
+        "src/moe/experts.rs",
+        "// lint: no-alloc\nlet codes = col.to_vec();\n// lint: end\n",
+    );
+    assert!(
+        findings.iter().any(|f| f.lint == "no-alloc"),
+        "seeded alloc on the int8 kernel path produced {findings:?}"
+    );
+    let real = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("src/moe/experts.rs");
+    let text = std::fs::read_to_string(&real).expect("read experts.rs");
+    let fences = text.matches("lint: no-alloc").count();
+    assert!(
+        fences >= 2,
+        "experts.rs must fence both the int8 kernel and the \
+         ExpertParams dispatch (found {fences} no-alloc region(s))"
+    );
+}
+
 /// The spawn allowlist is exactly the four thread-owning modules.
 #[test]
 fn spawn_allowlist_is_the_four_thread_owners() {

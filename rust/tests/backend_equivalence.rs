@@ -4,8 +4,10 @@
 //!
 //! Backends covered: the per-token oracle (`NativeSingle`), the batched
 //! serving backend at workers=1 and workers=4 (`NativeBatched` via
-//! `MoeEngine`), and the expert-parallel cluster simulator. Presets cover
-//! both MoE++ (`test`) and the ZC-free vanilla ablation (`test:vanilla`).
+//! `MoeEngine`), the int8 quantized backend (`NativeQuant` under
+//! all-int8 and mixed precision maps, DESIGN.md §17), and the
+//! expert-parallel cluster simulator. Presets cover both MoE++ (`test`)
+//! and the ZC-free vanilla ablation (`test:vanilla`).
 
 use moepp::cluster::sim::ClusterSim;
 use moepp::cluster::topology::Topology;
@@ -144,6 +146,113 @@ fn backends_agree_on_moepp_preset() {
 #[test]
 fn backends_agree_on_vanilla_preset() {
     check_preset("test:vanilla");
+}
+
+/// ISSUE 10 acceptance, cross-backend half: for any stack-wide precision
+/// map, engine outputs are **bitwise-identical** across workers ×
+/// partitions, the routing accounting matches the map's own serial run,
+/// and the all-int8 stack stays within the DESIGN.md §17 tolerance gates
+/// of the f32 oracle. The cluster simulator running the same map on a
+/// precision-tagged plan agrees with the engine to f32 tolerance, and
+/// replicating a quantized expert cannot change a single bit at a fixed
+/// device count.
+#[test]
+fn quantized_stacks_are_bitwise_deterministic_and_gated() {
+    use moepp::bench::quality::{quant_error_stats, QuantGates};
+    use moepp::config::Precision;
+    use moepp::placement::PlacementPlan;
+
+    let cfg = MoeConfig::preset("test");
+    let wseed = 23u64;
+    let mut rng = Rng::new(41);
+    let x = Tensor::randn(&mut rng, &[48, cfg.d_model], 1.0);
+
+    // Tolerance half: the all-int8 stack genuinely diverges from the
+    // f32 oracle but stays inside the stack-level gates.
+    let stats = quant_error_stats(&cfg, wseed, 48).unwrap();
+    QuantGates::default().check(&stats).unwrap();
+    assert!(
+        stats.frob_rel > 0.0,
+        "int8 stack never diverged — did the quant backend run?"
+    );
+
+    let all_int8 = vec![Precision::Int8; cfg.n_ffn_experts];
+    let mixed: Vec<Precision> = (0..cfg.n_ffn_experts)
+        .map(|e| {
+            if e % 2 == 1 { Precision::Int8 } else { Precision::F32 }
+        })
+        .collect();
+    for map in [all_int8, mixed] {
+        let mut reference: Option<(Tensor, ForwardStats)> = None;
+        for partition in Partition::all() {
+            for workers in [1usize, 2, 4] {
+                let mut engine = MoeEngine::native_with_workers(
+                    cfg.clone(),
+                    wseed,
+                    workers,
+                )
+                .with_partition(partition)
+                .with_precision(map.clone());
+                let (y, s) = engine.forward_stack(&x).unwrap();
+                match &reference {
+                    None => reference = Some((y, s)),
+                    Some((y0, s0)) => {
+                        assert_eq!(
+                            y0.data,
+                            y.data,
+                            "workers={workers} partition={} diverged \
+                             under precision map {map:?}",
+                            partition.label()
+                        );
+                        accounting_matches("quant-cells", s0, &s)
+                            .unwrap();
+                    }
+                }
+            }
+        }
+        let (y_eng, _) = reference.expect("at least one cell ran");
+
+        // Cluster half: the same map rides on a precision-tagged plan.
+        let n_dev = 2;
+        let tag = |mut plan: PlacementPlan| {
+            for (e, &p) in map.iter().enumerate() {
+                plan.set_precision(e, p);
+            }
+            plan
+        };
+        let rr = tag(PlacementPlan::round_robin(
+            cfg.n_ffn_experts,
+            n_dev,
+        ));
+        let mut sim = ClusterSim::new(
+            cfg.clone(),
+            Topology::new(n_dev).with_placement(rr),
+            wseed,
+        );
+        let (y_sim, _) = sim.forward(&x).unwrap();
+        assert!(
+            y_sim.approx_eq(&y_eng, 1e-5, 1e-5),
+            "cluster sim diverges from the engine under the same \
+             precision map {map:?}"
+        );
+        // Replica-count invariance on the quantized path: adding an
+        // int8 replica splits the load but may not change a bit.
+        let mut repl = tag(PlacementPlan::round_robin(
+            cfg.n_ffn_experts,
+            n_dev,
+        ));
+        assert!(repl.add_replica(0, 1));
+        let mut sim2 = ClusterSim::new(
+            cfg.clone(),
+            Topology::new(n_dev).with_placement(repl),
+            wseed,
+        );
+        let (y2, _) = sim2.forward(&x).unwrap();
+        assert_eq!(
+            y_sim.data, y2.data,
+            "replicating a quantized expert changed outputs"
+        );
+    }
 }
 
 #[test]

@@ -9,7 +9,9 @@
 //! * the execution arena stops growing after the first pass over a
 //!   steady-state serve loop's batches: replaying any previously-seen
 //!   batch shape performs zero buffer growths (and reproduces outputs
-//!   bit for bit).
+//!   bit for bit);
+//! * both contracts hold unchanged for the int8 quantized backend
+//!   (ISSUE 10, DESIGN.md §17), under all-int8 and mixed precision maps.
 
 use moepp::bench::workload::skewed_batches;
 use moepp::config::MoeConfig;
@@ -112,6 +114,84 @@ fn single_hot_expert_layer_is_bitwise_identical_for_all_schedules() {
                     partition.label()
                 );
             }
+        }
+    }
+}
+
+#[test]
+fn quantized_path_is_bitwise_across_workers_and_steady_state() {
+    // ISSUE 10 acceptance, scheduling half: the int8 backend obeys the
+    // same two contracts as the f32 path — outputs bitwise-identical
+    // across workers ∈ {1, 2, 4, 8} × partitions × executors on a
+    // skewed workload (for an all-int8 and a mixed map alike), and the
+    // arena (including the int8 scratch it owns) stops growing after
+    // the first pass over the workload.
+    use moepp::config::Precision;
+    let cfg = MoeConfig::preset("test");
+    let all_int8 = vec![Precision::Int8; cfg.n_ffn_experts];
+    let mixed: Vec<Precision> = (0..cfg.n_ffn_experts)
+        .map(|e| {
+            if e % 2 == 1 { Precision::Int8 } else { Precision::F32 }
+        })
+        .collect();
+    for map in [all_int8, mixed] {
+        let mut rng = Rng::new(31);
+        let batches = skewed_batches(&mut rng, 2, 72, cfg.d_model);
+        let mut reference = Vec::new();
+        {
+            let mut engine =
+                MoeEngine::native_with_workers(cfg.clone(), 6, 1)
+                    .with_precision(map.clone());
+            for b in &batches {
+                reference.push(engine.forward_stack(b).unwrap().0);
+            }
+        }
+        for executor in ExecutorKind::all() {
+            for partition in Partition::all() {
+                for workers in [1usize, 2, 4, 8] {
+                    let mut engine = MoeEngine::native_with_workers(
+                        cfg.clone(),
+                        6,
+                        workers,
+                    )
+                    .with_partition(partition)
+                    .with_executor(executor)
+                    .with_precision(map.clone());
+                    for (b, want) in batches.iter().zip(&reference) {
+                        let (y, _) = engine.forward_stack(b).unwrap();
+                        assert_eq!(
+                            y.data,
+                            want.data,
+                            "workers={workers} partition={} executor={} \
+                             diverged on the quantized skewed workload \
+                             (map {map:?})",
+                            partition.label(),
+                            executor.label()
+                        );
+                    }
+                }
+            }
+        }
+        // Steady state: replaying the warmed batches grows nothing on
+        // the quantized path either.
+        let mut engine =
+            MoeEngine::native_with_workers(cfg.clone(), 2, 2)
+                .with_partition(Partition::Shard)
+                .with_precision(map.clone());
+        let mut first = Vec::new();
+        for b in &batches {
+            first.push(engine.forward_stack(b).unwrap().0);
+        }
+        let warmed = engine.arena_growths();
+        assert!(warmed > 0, "warmup must have grown the arena");
+        for (b, want) in batches.iter().zip(&first) {
+            let (y, _) = engine.forward_stack(b).unwrap();
+            assert_eq!(y.data, want.data, "quantized replay diverged");
+            assert_eq!(
+                engine.arena_growths(),
+                warmed,
+                "quantized arena grew in steady state (map {map:?})"
+            );
         }
     }
 }
